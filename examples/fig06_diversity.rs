@@ -1,0 +1,8 @@
+//! Regenerates Fig. 6 of the paper (see DESIGN.md experiment index).
+//! Flags: --full (paper-scale budgets), --all-workloads (supplementary
+//! Fig. sweep), --trials N, --neural (include the PJRT neural model).
+fn main() -> anyhow::Result<()> {
+    let mut argv = vec!["fig".to_string(), "6".to_string()];
+    argv.extend(std::env::args().skip(1));
+    autotvm::coordinator::run(&argv)
+}

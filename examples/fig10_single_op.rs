@@ -1,0 +1,17 @@
+//! Regenerates Fig. 10 (+ supplementary Fig. 12): single-operator
+//! performance vs the vendor baseline on every device.
+//! Flags: --device sim-gpu|sim-cpu|sim-mali (default: all three), --full.
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--device") {
+        let mut argv = vec!["fig".to_string(), "10".to_string()];
+        argv.extend(args);
+        return autotvm::coordinator::run(&argv);
+    }
+    for dev in ["sim-gpu", "sim-cpu", "sim-mali"] {
+        let mut argv = vec!["fig".to_string(), "10".to_string(), "--device".into(), dev.into()];
+        argv.extend(args.clone());
+        autotvm::coordinator::run(&argv)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! Regenerates Fig. 11 — the END-TO-END system driver: extract tasks
+//! from each network graph, tune every task, apply operator fusion,
+//! and report full-network inference latency vs the vendor baseline
+//! (unfused + fixed expert schedules) on every device.
+//! Flags: --device ... (default: all three), --trials N, --full.
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--device") {
+        let mut argv = vec!["fig".to_string(), "11".to_string()];
+        argv.extend(args);
+        return autotvm::coordinator::run(&argv);
+    }
+    for dev in ["sim-gpu", "sim-cpu", "sim-mali"] {
+        let mut argv = vec!["fig".to_string(), "11".to_string(), "--device".into(), dev.into()];
+        argv.extend(args.clone());
+        autotvm::coordinator::run(&argv)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,10 @@
+//! Real-hardware tuning demo: the black box `f(x)` is actual wall-clock
+//! time of AOT-compiled Pallas matmul tile variants executed through
+//! the PJRT CPU client — the full AutoTVM loop against real silicon,
+//! not the simulator. Needs `make artifacts` (variant family).
+//!
+//! Run: `cargo run --release --example pjrt_measure`
+
+fn main() -> anyhow::Result<()> {
+    autotvm::coordinator::run(&["pjrt-demo".to_string()])
+}

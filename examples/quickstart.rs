@@ -1,0 +1,34 @@
+//! Quickstart: tune one ResNet-18 conv workload (C6 of Table 1) on the
+//! TITAN-X-class simulator with the paper's default method (GBT + rank
+//! objective + diversity-aware SA exploration) and print the
+//! optimization curve and the winning schedule.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use autotvm::measure::SimMeasurer;
+use autotvm::schedule::template::TemplateKind;
+use autotvm::sim::devices::sim_gpu;
+use autotvm::tuner::{tune_gbt, TuneOptions};
+use autotvm::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let task = workloads::conv_task(6, TemplateKind::Gpu);
+    println!("workload: {}  (|S_e| = {:.2e} configs)", task.def.name, task.space.size() as f64);
+
+    let device = sim_gpu();
+    let measurer = SimMeasurer::with_seed(device.clone(), 42);
+    let options = TuneOptions { n_trials: 320, seed: 42, verbose: true, ..Default::default() };
+    let result = tune_gbt(task.clone(), &measurer, options);
+
+    println!("\noptimization curve (best GFLOPS after each batch):");
+    for (i, g) in result.curve.iter().enumerate() {
+        if (i + 1) % 64 == 0 {
+            println!("  {:4} trials: {g:8.1} GFLOPS", i + 1);
+        }
+    }
+    let (best, gflops) = result.best.expect("found a valid schedule");
+    println!("\nbest schedule ({gflops:.1} GFLOPS):");
+    println!("  {}", task.space.describe(&best));
+    println!("\nlowered program:\n{}", task.lower(&best)?.pretty());
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Domain-specific scenario: a compilation service that has already
+//! tuned the early ResNet layers (C1–C6) receives a *new* workload
+//! (C7). Compare cold-start tuning vs transfer (Eq. 4 global+local
+//! model seeded from the service's database) — §4 / Fig. 8 in
+//! miniature, through the public API.
+use autotvm::coordinator::experiments::{collect_source_db, transfer_model_from, ExpOpts};
+use autotvm::features::Representation;
+use autotvm::measure::SimMeasurer;
+use autotvm::schedule::template::{Task, TemplateKind};
+use autotvm::sim::devices::sim_gpu;
+use autotvm::tuner::{TuneOptions, Tuner};
+use autotvm::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let device = sim_gpu();
+    println!("collecting source database from C1..C6 ...");
+    let db = collect_source_db(&[1, 2, 3, 4, 5, 6], TemplateKind::Gpu, &device, 192, 0);
+    println!("  {} historical records", db.records.len());
+
+    let source_tasks: Vec<Task> =
+        (1..=6).map(|w| workloads::conv_task(w, TemplateKind::Gpu)).collect();
+    let refs: Vec<&Task> = source_tasks.iter().collect();
+    let target = workloads::conv_task(7, TemplateKind::Gpu);
+
+    let opts = ExpOpts { trials: 192, ..Default::default() };
+    let mut o = TuneOptions { n_trials: opts.trials, seed: 1, ..Default::default() };
+    o.repr = Representation::Full;
+
+    let measurer = SimMeasurer::with_seed(device.clone(), 77);
+    let model = transfer_model_from(&db, &refs, device.name, Representation::Full, usize::MAX, 1);
+    let warm = Tuner::new(target.clone(), Box::new(model), o.clone()).tune(&measurer);
+
+    let measurer2 = SimMeasurer::with_seed(device.clone(), 77);
+    let cold = autotvm::tuner::tune_gbt(target.clone(), &measurer2, o);
+
+    println!("\n   trials |  transfer | cold-start   (best GFLOPS)");
+    for t in [64, 128, 192] {
+        println!("   {t:6} | {:9.1} | {:9.1}", warm.best_at(t), cold.best_at(t));
+    }
+    let goal = warm.best_at(64);
+    let t_warm = warm.trials_to_reach(goal).unwrap_or(9999);
+    let t_cold = cold.trials_to_reach(goal).unwrap_or(9999);
+    println!(
+        "\ntransfer reached {goal:.0} GFLOPS in {t_warm} trials; cold start took {t_cold} \
+         ({:.1}x speedup)",
+        t_cold as f64 / t_warm as f64
+    );
+    Ok(())
+}

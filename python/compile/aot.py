@@ -1,0 +1,130 @@
+"""AOT compiler: lower the L2 cost model (with its L1 Pallas kernels) to
+HLO-text artifacts for the Rust coordinator.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids that the `xla`
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts (``make artifacts`` → ``artifacts/``):
+  costmodel_meta.json       dimensions (checked by the Rust loader)
+  costmodel_init.f32        initial flat parameter vector
+  costmodel_fwd.hlo.txt     (theta, X[128,16,21]) -> (scores,)
+  costmodel_train.hlo.txt   one Adam step on the rank loss (Eq. 2)
+  costmodel_reg_train.hlo.txt  same with the regression objective
+  matmul256_bm*_bn*_bk*.hlo.txt  (--variants) the Pallas tile family the
+                            PJRT measurer wall-clocks on real hardware
+
+Python runs ONCE here; it is never on the tuning path.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import matmul_tiled
+
+# Tile grid of the real-hardware measurement family; must match
+# rust/src/measure/pjrt.rs.
+VARIANT_N = 256
+BM_OPTS = [32, 64, 128]
+BN_OPTS = [32, 64, 128]
+BK_OPTS = [64, 128, 256]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def emit_costmodel(outdir: str) -> None:
+    L, D = model.MAX_LOOPS, model.CONTEXT_DIM
+    theta = _spec((model.THETA_DIM,))
+    scalar = _spec(())
+
+    fwd = jax.jit(model.predict).lower(theta, _spec((model.PRED_BATCH, L, D)))
+    with open(os.path.join(outdir, "costmodel_fwd.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(fwd))
+    print("wrote costmodel_fwd.hlo.txt")
+
+    bt = model.TRAIN_BATCH
+    train_args = (theta, theta, theta, scalar, _spec((bt, L, D)), _spec((bt,)), _spec((bt,)))
+    train = jax.jit(model.train_step).lower(*train_args)
+    with open(os.path.join(outdir, "costmodel_train.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(train))
+    print("wrote costmodel_train.hlo.txt")
+
+    reg = jax.jit(model.reg_train_step).lower(*train_args)
+    with open(os.path.join(outdir, "costmodel_reg_train.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(reg))
+    print("wrote costmodel_reg_train.hlo.txt")
+
+    init = model.init_theta(seed=0)
+    with open(os.path.join(outdir, "costmodel_init.f32"), "wb") as f:
+        f.write(bytes(memoryview(jnp.asarray(init, jnp.float32)).cast("B")))
+    meta = {
+        "theta_dim": int(model.THETA_DIM),
+        "pred_batch": model.PRED_BATCH,
+        "train_batch": model.TRAIN_BATCH,
+        "max_loops": L,
+        "context_dim": D,
+    }
+    with open(os.path.join(outdir, "costmodel_meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote costmodel_init.f32 + meta ({meta['theta_dim']} params)")
+
+
+def emit_variants(outdir: str) -> None:
+    """The Fig.-1 schedule family as runnable artifacts: one tiled
+    Pallas matmul per block shape, wall-clocked by the PJRT measurer."""
+    n = VARIANT_N
+    spec = _spec((n, n))
+    count = 0
+    for bm in BM_OPTS:
+        for bn in BN_OPTS:
+            for bk in BK_OPTS:
+                def fn(a, b, bm=bm, bn=bn, bk=bk):
+                    return (matmul_tiled(a, b, bm=bm, bn=bn, bk=bk, strict=True),)
+
+                lowered = jax.jit(fn).lower(spec, spec)
+                name = f"matmul{n}_bm{bm}_bn{bn}_bk{bk}.hlo.txt"
+                with open(os.path.join(outdir, name), "w") as f:
+                    f.write(to_hlo_text(lowered))
+                count += 1
+    print(f"wrote {count} matmul variant artifacts (N={n})")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--variants",
+        action="store_true",
+        help="also emit the Pallas matmul tile-variant family",
+    )
+    ap.add_argument("--skip-costmodel", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    if not args.skip_costmodel:
+        emit_costmodel(args.out)
+    if args.variants:
+        emit_variants(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1: Pallas kernels for the compute hot-spots (build-time only)."""
+
+from .matmul_tiled import fit_block, matmul_ad, matmul_tiled, mxu_utilization, vmem_bytes  # noqa: F401

@@ -1,0 +1,116 @@
+"""Layer-1 Pallas kernel: tiled matmul — the paper's Fig. 1 example.
+
+The schedule knobs are the block shape ``(bm, bn, bk)`` expressed with
+``BlockSpec`` over a 3-D grid: exactly the multi-level tiling the paper
+searches over, re-thought for a TPU-shaped machine (HBM↔VMEM staging via
+BlockSpec instead of CUDA threadblocks + shared memory; see DESIGN.md
+§Hardware-Adaptation). The k axis is the innermost grid dimension and
+accumulates into the revisited output block.
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, and interpret mode lowers to plain HLO that both pytest
+(vs ``ref.py``) and the Rust runtime can run. Real-TPU performance is
+*estimated* from VMEM footprint / MXU alignment in EXPERIMENTS.md §Perf.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, n_k: int):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ w[k,j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def fit_block(extent: int, block: int) -> int:
+    """Largest divisor of ``extent`` that is ≤ ``block`` (blocks must
+    tile the problem exactly, like AutoTVM's factorization knobs)."""
+    b = min(block, extent)
+    while extent % b != 0:
+        b -= 1
+    return b
+
+
+def matmul_tiled(x, w, *, bm: int = 32, bn: int = 32, bk: int = 64,
+                 strict: bool = False):
+    """Tiled matmul ``x @ w`` with VMEM block shape ``(bm, bn, bk)``.
+
+    With ``strict`` the block sizes must divide the problem shape (the
+    AutoTVM config space enumerates exact factorizations for the same
+    reason); otherwise they are shrunk to the nearest divisor.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    if strict:
+        assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+            f"block ({bm},{bn},{bk}) must divide problem ({m},{n},{k})"
+        )
+    else:
+        bm, bn, bk = fit_block(m, bm), fit_block(n, bn), fit_block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def matmul_ad(x, w, bm: int = 32, bn: int = 32, bk: int = 64):
+    """Differentiable tiled matmul.
+
+    Pallas's JVP rule cannot see through the grid-accumulation pattern
+    (`pl.when(program_id)`), so we register a custom VJP whose backward
+    pass is *also* two Pallas tiled matmuls (the transposed products) —
+    fwd and bwd both lower through the L1 kernel into the cost-model
+    artifacts.
+    """
+    return matmul_tiled(x, w, bm=bm, bn=bn, bk=bk)
+
+
+def _matmul_ad_fwd(x, w, bm, bn, bk):
+    return matmul_tiled(x, w, bm=bm, bn=bn, bk=bk), (x, w)
+
+
+def _matmul_ad_bwd(bm, bn, bk, res, g):
+    x, w = res
+    dx = matmul_tiled(g, w.T, bm=bm, bn=bk, bk=bn)
+    dw = matmul_tiled(x.T, g, bm=bk, bn=bn, bk=bm)
+    return dx, dw
+
+
+matmul_ad.defvjp(_matmul_ad_fwd, _matmul_ad_bwd)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, itemsize: int = 4) -> int:
+    """Static VMEM footprint of one grid step (perf estimation)."""
+    return itemsize * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_utilization(bm: int, bn: int, bk: int, dim: int = 128) -> float:
+    """Fraction of MXU tiles kept busy by this block shape (perf
+    estimation for EXPERIMENTS.md §Perf; real TPU MXU is 128×128)."""
+
+    def frac(e):
+        import math
+
+        return e / (dim * math.ceil(e / dim))
+
+    return frac(bm) * frac(bn)

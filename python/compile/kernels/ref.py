@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels and the cost model.
+
+Every Pallas kernel and every model component has a reference here;
+pytest asserts allclose between kernel and oracle — the core build-time
+correctness signal (nothing ships into ``artifacts/`` untested).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Oracle for ``matmul_tiled``."""
+    return x @ w
+
+
+def relu_ref(x):
+    return jnp.maximum(x, 0.0)
+
+
+def softmax_ref(x, axis=-1):
+    x = x - x.max(axis=axis, keepdims=True)
+    e = jnp.exp(x)
+    return e / e.sum(axis=axis, keepdims=True)
+
+
+def rank_loss_ref(scores, y, mask):
+    """Eq. 2 of the paper: pairwise logistic rank loss (numpy-style)."""
+    diff = scores[:, None] - scores[None, :]
+    sign = jnp.sign(y[:, None] - y[None, :])
+    pair = mask[:, None] * mask[None, :] * (sign != 0)
+    per = jnp.log1p(jnp.exp(-jnp.clip(sign * diff, -30.0, 30.0)))
+    denom = jnp.maximum(pair.sum(), 1.0)
+    return (per * pair).sum() / denom
+
+
+def reg_loss_ref(scores, y, mask):
+    """Masked mean squared error (the Fig. 5 regression objective)."""
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (((scores - y) ** 2) * mask).sum() / denom

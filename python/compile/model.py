@@ -1,0 +1,152 @@
+"""Layer-2: the context-encoded neural cost model in JAX (Fig. 3d).
+
+Each loop level of a lowered tensor program is a context feature row
+(Table 2; extracted in Rust, ``features::context_matrix_padded``). The
+model embeds each row, classifies it into one of ``M`` memory slots with
+a softmax (``out_i = softmax(Wᵀh)_i · h``), sums the scattered vectors
+over loop levels, and maps the result to a scalar score with an MLP.
+This is the paper's transferable neural representation — the TreeGRU
+stand-in (DESIGN.md §Substitution): fixed shapes make it AOT-able.
+
+The dense layers run through the L1 Pallas kernel
+(``kernels.matmul_tiled``) so the kernel lowers into the same HLO
+artifact the Rust coordinator executes.
+
+Shapes must match the Rust feature extractor:
+``MAX_LOOPS = 16``, ``CONTEXT_DIM = 21`` (see rust/src/features/mod.rs).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul_ad
+
+# Feature geometry — keep in sync with rust/src/features/mod.rs.
+MAX_LOOPS = 16
+CONTEXT_DIM = 21
+
+# Network geometry.
+HIDDEN = 64        # loop-level embedding width
+SLOTS = 8          # scatter memory slots
+HIDDEN2 = 32       # head width
+
+# Batch shapes of the AOT artifacts.
+PRED_BATCH = 128   # SA proposal batch (one batch per chain step)
+TRAIN_BATCH = 64   # = the paper's measurement batch b
+
+# Adam hyper-parameters.
+LR = 1e-3
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+
+_SHAPES = {
+    "w1": (CONTEXT_DIM, HIDDEN),
+    "b1": (HIDDEN,),
+    "ws": (HIDDEN, SLOTS),
+    "w2": (SLOTS * HIDDEN, HIDDEN2),
+    "b2": (HIDDEN2,),
+    "w3": (HIDDEN2,),
+    "b3": (),
+}
+
+THETA_DIM = sum(int(jnp.prod(jnp.array(s, dtype=jnp.int32))) if s else 1
+                for s in _SHAPES.values())
+
+
+def unpack(theta):
+    """Slice the flat parameter vector into named arrays."""
+    params = {}
+    off = 0
+    for name, shape in _SHAPES.items():
+        n = 1
+        for d in shape:
+            n *= d
+        params[name] = theta[off:off + n].reshape(shape)
+        off += n
+    assert off == THETA_DIM
+    return params
+
+
+def init_theta(seed: int = 0):
+    """He-style init, returned as one flat f32 vector."""
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for name, shape in _SHAPES.items():
+        key, sub = jax.random.split(key)
+        if len(shape) >= 2:
+            scale = (2.0 / shape[0]) ** 0.5
+            parts.append(scale * jax.random.normal(sub, shape, jnp.float32))
+        elif len(shape) == 1:
+            parts.append(jnp.zeros(shape, jnp.float32))
+        else:
+            parts.append(jnp.zeros((1,), jnp.float32))
+    return jnp.concatenate([p.reshape(-1) for p in parts])
+
+
+def forward(theta, x):
+    """Scores for a batch of context matrices.
+
+    x: [B, MAX_LOOPS, CONTEXT_DIM] — rows of all zeros are padding
+    (their loop-length feature log2(extent+1) is 0 only for absent
+    loops, since real loops have extent >= 1 -> feature >= 1).
+    Returns [B] f32 scores (higher = faster program).
+    """
+    p = unpack(theta)
+    b = x.shape[0]
+    mask = (x[:, :, 0] > 0.0).astype(x.dtype)              # [B, L]
+    flat = x.reshape(b * MAX_LOOPS, CONTEXT_DIM)
+    # pad the feature dim 21 -> 32 so the Pallas block divides evenly
+    flat = jnp.pad(flat, ((0, 0), (0, 32 - CONTEXT_DIM)))
+    w1 = jnp.pad(p["w1"], ((0, 32 - CONTEXT_DIM), (0, 0)))
+    h = matmul_ad(flat, w1, 256, 64, 32) + p["b1"]  # big blocks: 8 grid steps, not 64
+    h = jnp.maximum(h, 0.0).reshape(b, MAX_LOOPS, HIDDEN)   # [B, L, H]
+    # softmax scatter into memory slots (Fig. 3d)
+    logits = jnp.einsum("blh,hm->blm", h, p["ws"])
+    attn = jax.nn.softmax(logits, axis=-1) * mask[:, :, None]
+    slots = jnp.einsum("blm,blh->bmh", attn, h)             # [B, M, H]
+    z = slots.reshape(b, SLOTS * HIDDEN)
+    z = matmul_ad(z, p["w2"], 128, 32, 512) + p["b2"]  # single grid step
+    z = jnp.maximum(z, 0.0)
+    return z @ p["w3"] + p["b3"]
+
+
+def rank_loss(theta, x, y, mask):
+    """Pairwise logistic rank loss (Eq. 2) over a masked batch."""
+    s = forward(theta, x)
+    diff = s[:, None] - s[None, :]
+    sign = jnp.sign(y[:, None] - y[None, :])
+    pair = mask[:, None] * mask[None, :] * (sign != 0.0).astype(s.dtype)
+    per = jnp.log1p(jnp.exp(-jnp.clip(sign * diff, -30.0, 30.0)))
+    return (per * pair).sum() / jnp.maximum(pair.sum(), 1.0)
+
+
+def reg_loss(theta, x, y, mask):
+    """Masked MSE (the regression objective of the Fig. 5 ablation)."""
+    s = forward(theta, x)
+    return (((s - y) ** 2) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def _adam_step(loss_fn, theta, m, v, step, x, y, mask):
+    loss, grads = jax.value_and_grad(loss_fn)(theta, x, y, mask)
+    m = BETA1 * m + (1.0 - BETA1) * grads
+    v = BETA2 * v + (1.0 - BETA2) * grads * grads
+    mhat = m / (1.0 - BETA1 ** step)
+    vhat = v / (1.0 - BETA2 ** step)
+    theta = theta - LR * mhat / (jnp.sqrt(vhat) + EPS)
+    return theta, m, v, loss
+
+
+def train_step(theta, m, v, step, x, y, mask):
+    """One Adam step on the rank loss. All inputs/outputs f32."""
+    return _adam_step(rank_loss, theta, m, v, step, x, y, mask)
+
+
+def reg_train_step(theta, m, v, step, x, y, mask):
+    """One Adam step on the regression loss (Fig. 5 ablation)."""
+    return _adam_step(reg_loss, theta, m, v, step, x, y, mask)
+
+
+def predict(theta, x):
+    """AOT entry point: 1-tuple so rust unwraps uniformly."""
+    return (forward(theta, x),)

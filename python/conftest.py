@@ -1,0 +1,6 @@
+# Make the `compile` package importable when pytest runs from the repo
+# root (`pytest python/tests/`).
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

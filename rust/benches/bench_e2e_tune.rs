@@ -1,0 +1,24 @@
+//! One full Algorithm-1 tuning round (SA collect + diversity select +
+//! batch measure + model refit) — the end-to-end L3 hot path.
+use autotvm::explore::SaParams;
+use autotvm::measure::SimMeasurer;
+use autotvm::schedule::template::TemplateKind;
+use autotvm::sim::devices::sim_gpu;
+use autotvm::tuner::{tune_gbt, TuneOptions};
+use autotvm::util::bench::Bench;
+use autotvm::workloads;
+
+fn main() {
+    let mut b = Bench::new("e2e_tune");
+    let opts = TuneOptions {
+        n_trials: 128,
+        batch: 64,
+        sa: SaParams { n_chains: 64, n_steps: 60, ..Default::default() },
+        ..Default::default()
+    };
+    b.run("tune_c6_128_trials", || {
+        let task = workloads::conv_task(6, TemplateKind::Gpu);
+        let m = SimMeasurer::with_seed(sim_gpu(), 1);
+        tune_gbt(task, &m, opts.clone())
+    });
+}

@@ -1,0 +1,28 @@
+//! Feature-extraction throughput — the per-candidate hot path of the SA
+//! inner loop (lower → analyze → featurize). Perf target (DESIGN.md
+//! §Perf): the model pipeline must stay far below measurement cost.
+use autotvm::ast::analysis::analyze;
+use autotvm::features::{self, Representation};
+use autotvm::schedule::template::TemplateKind;
+use autotvm::util::bench::Bench;
+use autotvm::util::Rng;
+use autotvm::workloads;
+
+fn main() {
+    let mut b = Bench::new("features");
+    let task = workloads::conv_task(6, TemplateKind::Gpu);
+    let mut rng = Rng::seed_from_u64(1);
+    let e = task.space.sample(&mut rng);
+    let prog = task.lower(&e).unwrap();
+    let analysis = analyze(&prog);
+
+    b.run("lower_conv_c6", || task.lower(&e).unwrap());
+    b.run("analyze_conv_c6", || analyze(&prog));
+    b.run("context_relation", || features::context_relation(&analysis));
+    b.run("full_repr", || features::full(&analysis));
+    b.run("lower_analyze_featurize", || {
+        let p = task.lower(&e).unwrap();
+        let a = analyze(&p);
+        features::extract(Representation::Full, &task, &e, &a)
+    });
+}

@@ -1,0 +1,28 @@
+//! GBT cost-model train/predict throughput (paper §2: "model training
+//! and inference must be fast ... otherwise no benefit over profiling").
+use autotvm::gbt::{Gbt, GbtParams, Matrix, Objective};
+use autotvm::util::bench::Bench;
+use autotvm::util::Rng;
+
+fn synth(n: usize, cols: usize, seed: u64) -> (Matrix, Vec<f64>) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let data: Vec<f32> = (0..n * cols).map(|_| rng.gen_f64() as f32).collect();
+    let x = Matrix::new(n, cols, data);
+    let y: Vec<f64> = (0..n).map(|i| x.row(i)[0] as f64 * 2.0 - x.row(i)[1] as f64).collect();
+    (x, y)
+}
+
+fn main() {
+    let mut b = Bench::new("gbt");
+    let (x1k, y1k) = synth(1000, 361, 1); // FULL_DIM-sized features
+    let (x8k, y8k) = synth(8000, 361, 2);
+    let params = GbtParams { objective: Objective::Rank, ..Default::default() };
+
+    b.run("train_1k_rows_50_trees", || Gbt::train(&x1k, &y1k, &[], params.clone()));
+    let model = Gbt::train(&x8k, &y8k, &[], params.clone());
+    let s = b.run("predict_8k_rows", || model.predict_batch(&x8k));
+    let _ = s;
+    b.throughput("predict_8k_rows", 8000.0, "rows");
+    let (x128, _) = synth(128, 361, 3);
+    b.run("predict_sa_batch_128", || model.predict_batch(&x128));
+}

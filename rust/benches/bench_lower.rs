@@ -1,0 +1,19 @@
+//! Lowering throughput g(e, s) across operator classes.
+use autotvm::schedule::template::TemplateKind;
+use autotvm::util::bench::Bench;
+use autotvm::util::Rng;
+use autotvm::workloads;
+
+fn main() {
+    let mut b = Bench::new("lower");
+    let mut rng = Rng::seed_from_u64(2);
+    for (name, task) in [
+        ("conv_c1_gpu", workloads::conv_task(1, TemplateKind::Gpu)),
+        ("conv_c12_cpu", workloads::conv_task(12, TemplateKind::Cpu)),
+        ("matmul1024_gpu", workloads::matmul_1024_task(TemplateKind::Gpu)),
+    ] {
+        let e = task.space.sample(&mut rng);
+        b.run(&format!("lower_{name}"), || task.lower(&e).unwrap());
+        b.run(&format!("schedule_{name}"), || task.schedule(&e));
+    }
+}

@@ -1,0 +1,29 @@
+//! PJRT execute latency for the cost-model artifacts (prediction is on
+//! the SA hot path when the neural model is selected).
+use autotvm::util::bench::Bench;
+
+fn main() {
+    let dir = autotvm::runtime::artifacts_dir();
+    if !dir.join("costmodel_fwd.hlo.txt").exists() {
+        eprintln!("SKIP bench_runtime: run `make artifacts` first");
+        return;
+    }
+    let rt = autotvm::runtime::PjrtRuntime::cpu().unwrap();
+    let meta = autotvm::model::neural::NeuralMeta::load().unwrap();
+    let exe = rt.load(dir.join("costmodel_fwd.hlo.txt")).unwrap();
+    let theta = vec![0.01f32; meta.theta_dim];
+    let x = vec![0.5f32; meta.pred_batch * meta.max_loops * meta.context_dim];
+    let tl = autotvm::runtime::literal_f32(&theta, &[meta.theta_dim as i64]).unwrap();
+    let xl = autotvm::runtime::literal_f32(
+        &x,
+        &[meta.pred_batch as i64, meta.max_loops as i64, meta.context_dim as i64],
+    )
+    .unwrap();
+    let mut b = Bench::new("runtime");
+    b.run("costmodel_fwd_batch128", || exe.run(&[tl.clone(), xl.clone()]).unwrap());
+    let mut bench2 = Bench::new("runtime_compile");
+    bench2.measure_time = std::time::Duration::from_millis(200);
+    bench2.run("load_and_compile_fwd", || {
+        rt.load(dir.join("costmodel_fwd.hlo.txt")).unwrap()
+    });
+}

@@ -1,0 +1,25 @@
+//! Simulated-annealing proposal throughput (128-chain step rate).
+use autotvm::explore::{ParallelSa, SaParams, Scorer};
+use autotvm::schedule::space::ConfigEntity;
+use autotvm::schedule::template::TemplateKind;
+use autotvm::util::bench::Bench;
+use autotvm::util::Rng;
+use autotvm::workloads;
+
+fn main() {
+    let mut b = Bench::new("sa");
+    let task = workloads::conv_task(6, TemplateKind::Gpu);
+    // cheap synthetic scorer isolates SA machinery from featurization
+    let scorer = |es: &[ConfigEntity]| -> Vec<f64> {
+        es.iter().map(|e| e.choices.iter().map(|&c| c as f64).sum()).collect()
+    };
+    let mut rng = Rng::seed_from_u64(3);
+    b.run("sa_128x100_steps_cheap_scorer", || {
+        let mut sa = ParallelSa::new(SaParams { n_chains: 128, n_steps: 100, ..Default::default() });
+        Scorer::score(&scorer, &[]); // keep trait in scope
+        sa.collect(&task.space, &scorer, 128, &mut rng)
+    });
+    b.run("mutate_128", || {
+        (0..128).map(|_| task.space.sample(&mut rng)).collect::<Vec<_>>()
+    });
+}

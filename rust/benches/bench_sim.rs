@@ -1,0 +1,23 @@
+//! Simulator evaluation throughput — f(x) queries per second.
+use autotvm::schedule::template::TemplateKind;
+use autotvm::sim::devices::{sim_cpu, sim_gpu};
+use autotvm::util::bench::Bench;
+use autotvm::util::Rng;
+use autotvm::workloads;
+
+fn main() {
+    let mut b = Bench::new("sim");
+    let mut rng = Rng::seed_from_u64(1);
+    for (name, task, dev) in [
+        ("conv_c6_gpu", workloads::conv_task(6, TemplateKind::Gpu), sim_gpu()),
+        ("conv_c1_cpu", workloads::conv_task(1, TemplateKind::Cpu), sim_cpu()),
+        ("matmul1024_gpu", workloads::matmul_1024_task(TemplateKind::Gpu), sim_gpu()),
+    ] {
+        let e = task.space.sample(&mut rng);
+        let prog = task.lower(&e).unwrap();
+        b.run(&format!("evaluate_{name}"), || dev.evaluate(&prog));
+        b.run(&format!("lower_and_evaluate_{name}"), || {
+            dev.evaluate(&task.lower(&e).unwrap())
+        });
+    }
+}

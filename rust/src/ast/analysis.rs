@@ -1,0 +1,354 @@
+//! Static loop-nest analysis shared by the feature extractors and the
+//! hardware simulator.
+//!
+//! For every `Store` in a program we recover its enclosing loop chain
+//! and, per loop level and per buffer access, the quantities the paper
+//! builds features from (Table 2): loop extent, annotation, top-down /
+//! bottom-up extent products, touched-element counts, reuse ratios and
+//! the stride of the loop variable in the flattened buffer index.
+
+use super::{ForKind, MemScope, Program, Stmt, Value};
+use crate::expr::{IndexExpr, VarId};
+
+/// One loop in a chain, outermost first.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LoopLevel {
+    pub var: VarId,
+    pub extent: i64,
+    pub kind: ForKind,
+}
+
+/// Per-(access, chain) analysis.
+#[derive(Clone, Debug)]
+pub struct AccessInfo {
+    pub buffer: String,
+    pub scope: MemScope,
+    pub is_write: bool,
+    /// Stride (elements) of each chain loop's variable in the flattened
+    /// buffer index; `strides[l]` corresponds to `chain.loops[l]`.
+    pub strides: Vec<i64>,
+    /// `touch[l]` — distinct elements touched by loops `l..` (inclusive),
+    /// capped at the buffer size.
+    pub touch: Vec<f64>,
+    /// `reuse[l] = bottom_up[l] / touch[l]` — average temporal reuse of
+    /// an element across iterations of loops `l..`.
+    pub reuse: Vec<f64>,
+}
+
+impl AccessInfo {
+    /// Stride of the innermost loop with nonzero extent > 1; 0 when the
+    /// access is invariant across all inner loops.
+    pub fn innermost_stride(&self) -> i64 {
+        for (i, s) in self.strides.iter().enumerate().rev() {
+            if *s != 0 {
+                return if i + 1 == self.strides.len() { *s } else { 0.max(*s) };
+            }
+        }
+        0
+    }
+}
+
+/// One store statement with its loop context.
+#[derive(Clone, Debug)]
+pub struct StoreChain {
+    pub loops: Vec<LoopLevel>,
+    /// Store target first, then loads in evaluation order.
+    pub accesses: Vec<AccessInfo>,
+    /// Arithmetic ops per innermost iteration (incl. the accumulate add).
+    pub value_flops: u64,
+    pub accumulate: bool,
+    /// Whether the value contains a padding guard.
+    pub has_guard: bool,
+    /// Π extents — total innermost iterations.
+    pub trip: f64,
+    /// `top_down[l]` — product of extents of loops strictly outer than l.
+    pub top_down: Vec<f64>,
+    /// `bottom_up[l]` — product of extents of loops `l..` (inclusive).
+    pub bottom_up: Vec<f64>,
+}
+
+impl StoreChain {
+    pub fn access(&self, buffer: &str) -> Option<&AccessInfo> {
+        self.accesses.iter().find(|a| a.buffer == buffer)
+    }
+}
+
+/// Full program analysis.
+#[derive(Clone, Debug)]
+pub struct ProgramAnalysis {
+    pub chains: Vec<StoreChain>,
+}
+
+impl ProgramAnalysis {
+    /// The longest store chain — the paper uses it as the canonical
+    /// feature chain ("we pick the longest chain from the AST").
+    pub fn longest_chain(&self) -> &StoreChain {
+        self.chains
+            .iter()
+            .max_by(|a, b| {
+                (a.loops.len(), a.trip).partial_cmp(&(b.loops.len(), b.trip)).unwrap()
+            })
+            .expect("program has no store")
+    }
+}
+
+/// Flattened stride of `var` in an access with the given per-dimension
+/// index expressions and row-major dimension strides.
+fn flat_stride(indices: &[IndexExpr], dim_strides: &[i64], var: VarId) -> i64 {
+    indices
+        .iter()
+        .zip(dim_strides.iter())
+        .map(|(e, s)| e.coeff(var) * s)
+        .sum()
+}
+
+struct Walker<'p> {
+    program: &'p Program,
+    loops: Vec<LoopLevel>,
+    chains: Vec<StoreChain>,
+}
+
+impl<'p> Walker<'p> {
+    fn visit(&mut self, stmt: &Stmt) {
+        match stmt {
+            Stmt::For { var, extent, kind, body } => {
+                self.loops.push(LoopLevel { var: *var, extent: *extent, kind: *kind });
+                for s in body {
+                    self.visit(s);
+                }
+                self.loops.pop();
+            }
+            Stmt::Alloc { body, .. } => {
+                for s in body {
+                    self.visit(s);
+                }
+            }
+            Stmt::Store { buffer, indices, value, accumulate } => {
+                self.chains.push(self.analyze_store(buffer, indices, value, *accumulate));
+            }
+        }
+    }
+
+    fn access_info(
+        &self,
+        buffer: &str,
+        indices: &[IndexExpr],
+        is_write: bool,
+        bottom_up: &[f64],
+    ) -> AccessInfo {
+        let decl = self
+            .program
+            .buffer(buffer)
+            .unwrap_or_else(|| panic!("unknown buffer {buffer}"));
+        let dim_strides = decl.strides();
+        let n = self.loops.len();
+        let strides: Vec<i64> = self
+            .loops
+            .iter()
+            .map(|l| flat_stride(indices, &dim_strides, l.var))
+            .collect();
+        // touch[l]: product over loops j >= l of extent_j when the loop
+        // moves this access, capped at the buffer footprint.
+        let cap = decl.numel() as f64;
+        let mut touch = vec![0f64; n];
+        let mut acc = 1f64;
+        for l in (0..n).rev() {
+            if strides[l] != 0 {
+                acc *= self.loops[l].extent as f64;
+            }
+            touch[l] = acc.min(cap);
+        }
+        let reuse: Vec<f64> =
+            (0..n).map(|l| (bottom_up[l] / touch[l].max(1.0)).max(1.0)).collect();
+        AccessInfo { buffer: buffer.to_string(), scope: decl.scope, is_write, strides, touch, reuse }
+    }
+
+    fn analyze_store(
+        &self,
+        buffer: &str,
+        indices: &[IndexExpr],
+        value: &Value,
+        accumulate: bool,
+    ) -> StoreChain {
+        let n = self.loops.len();
+        let mut top_down = vec![1f64; n];
+        for l in 1..n {
+            top_down[l] = top_down[l - 1] * self.loops[l - 1].extent as f64;
+        }
+        let mut bottom_up = vec![1f64; n];
+        for l in (0..n).rev() {
+            bottom_up[l] =
+                self.loops[l].extent as f64 * bottom_up.get(l + 1).copied().unwrap_or(1.0);
+        }
+        let trip = bottom_up.first().copied().unwrap_or(1.0);
+
+        let mut accesses =
+            vec![self.access_info(buffer, indices, true, &bottom_up)];
+        for (b, idx) in value.loads() {
+            accesses.push(self.access_info(b, idx, false, &bottom_up));
+        }
+        let has_guard = has_guard(value);
+        StoreChain {
+            loops: self.loops.clone(),
+            accesses,
+            value_flops: value.flops() + accumulate as u64,
+            accumulate,
+            has_guard,
+            trip,
+            top_down,
+            bottom_up,
+        }
+    }
+}
+
+fn has_guard(v: &Value) -> bool {
+    match v {
+        Value::Guarded { .. } => true,
+        Value::Imm(_) | Value::Load { .. } => false,
+        Value::Add(a, b) | Value::Sub(a, b) | Value::Mul(a, b) | Value::Max(a, b) => {
+            has_guard(a) || has_guard(b)
+        }
+        Value::Relu(a) => has_guard(a),
+    }
+}
+
+/// Analyze a program.
+pub fn analyze(program: &Program) -> ProgramAnalysis {
+    let mut w = Walker { program, loops: Vec::new(), chains: Vec::new() };
+    for s in &program.stmts {
+        w.visit(s);
+    }
+    assert!(!w.chains.is_empty(), "program {} has no store", program.name);
+    ProgramAnalysis { chains: w.chains }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ast::{BufferDecl, MemScope, Program, Stmt, Value};
+    use crate::expr::{IndexExpr, VarPool};
+
+    /// Build the naive matmul of Fig. 1 (x0 default code):
+    /// for y, x, k: C[y][x] += A[k][y] * B[k][x]
+    fn naive_matmul(n: i64) -> Program {
+        let mut pool = VarPool::new();
+        let y = pool.fresh("y");
+        let x = pool.fresh("x");
+        let k = pool.fresh("k");
+        let store = Stmt::Store {
+            buffer: "C".into(),
+            indices: vec![IndexExpr::var(y), IndexExpr::var(x)],
+            value: Value::Mul(
+                Box::new(Value::load("A", vec![IndexExpr::var(k), IndexExpr::var(y)])),
+                Box::new(Value::load("B", vec![IndexExpr::var(k), IndexExpr::var(x)])),
+            ),
+            accumulate: true,
+        };
+        let nest = Stmt::For {
+            var: y,
+            extent: n,
+            kind: ForKind::Serial,
+            body: vec![Stmt::For {
+                var: x,
+                extent: n,
+                kind: ForKind::Serial,
+                body: vec![Stmt::For { var: k, extent: n, kind: ForKind::Serial, body: vec![store] }],
+            }],
+        };
+        Program {
+            name: "naive_matmul".into(),
+            stmts: vec![nest],
+            buffers: vec![
+                BufferDecl { name: "C".into(), shape: vec![n, n], scope: MemScope::Global },
+                BufferDecl { name: "A".into(), shape: vec![n, n], scope: MemScope::Global },
+                BufferDecl { name: "B".into(), shape: vec![n, n], scope: MemScope::Global },
+            ],
+            vars: pool,
+            flops: 2 * (n as u64).pow(3),
+        }
+    }
+
+    #[test]
+    fn naive_matmul_chain_quantities() {
+        let p = naive_matmul(64);
+        let a = analyze(&p);
+        assert_eq!(a.chains.len(), 1);
+        let c = &a.chains[0];
+        assert_eq!(c.loops.len(), 3);
+        assert_eq!(c.trip, 64f64.powi(3));
+        assert_eq!(c.top_down, vec![1.0, 64.0, 64.0 * 64.0]);
+        assert_eq!(c.bottom_up, vec![64f64.powi(3), 64f64.powi(2), 64.0]);
+
+        // Store C[y][x]: strides (y: 64, x: 1, k: 0)
+        let cs = c.access("C").unwrap();
+        assert_eq!(cs.strides, vec![64, 1, 0]);
+        // touch from level 0: all 64*64 elements; from level 2 (k): 1.
+        assert_eq!(cs.touch, vec![4096.0, 64.0, 1.0]);
+        // reuse at k level: 64 iterations hit the same element
+        assert_eq!(cs.reuse[2], 64.0);
+
+        // A[k][y]: strides (y: 1, x: 0, k: 64)
+        let as_ = c.access("A").unwrap();
+        assert_eq!(as_.strides, vec![1, 0, 64]);
+        assert_eq!(as_.reuse[1], 64.0); // x loop re-reads the same A column
+        assert_eq!(c.value_flops, 2); // mul + accumulate add
+    }
+
+    #[test]
+    fn touch_capped_at_buffer_size() {
+        // Loop over 128 iterations of a 16-element buffer with stride 1:
+        // touch must cap at 16.
+        let mut pool = VarPool::new();
+        let i = pool.fresh("i");
+        let p = Program {
+            name: "cap".into(),
+            stmts: vec![Stmt::For {
+                var: i,
+                extent: 128,
+                kind: ForKind::Serial,
+                body: vec![Stmt::Store {
+                    buffer: "O".into(),
+                    indices: vec![IndexExpr::var(i)],
+                    value: Value::load("S", vec![IndexExpr::var(i)]),
+                    accumulate: false,
+                }],
+            }],
+            buffers: vec![
+                BufferDecl { name: "O".into(), shape: vec![128], scope: MemScope::Global },
+                BufferDecl { name: "S".into(), shape: vec![16], scope: MemScope::Shared },
+            ],
+            vars: pool,
+            flops: 0,
+        };
+        let a = analyze(&p);
+        let s = a.chains[0].access("S").unwrap();
+        assert_eq!(s.touch[0], 16.0);
+        assert_eq!(s.scope, MemScope::Shared);
+    }
+
+    #[test]
+    fn longest_chain_picks_deepest() {
+        let mut p = naive_matmul(8);
+        // append a shallow init store
+        let mut pool = p.vars.clone();
+        let t = pool.fresh("t");
+        p.vars = pool;
+        p.stmts.insert(
+            0,
+            Stmt::For {
+                var: t,
+                extent: 8,
+                kind: ForKind::Serial,
+                body: vec![Stmt::Store {
+                    buffer: "C".into(),
+                    indices: vec![IndexExpr::var(t), IndexExpr::constant(0)],
+                    value: Value::Imm(0.0),
+                    accumulate: false,
+                }],
+            },
+        );
+        let a = analyze(&p);
+        assert_eq!(a.chains.len(), 2);
+        assert_eq!(a.longest_chain().loops.len(), 3);
+    }
+}

@@ -1,0 +1,259 @@
+//! Low-level loop AST — the program representation `x = g(e, s)`.
+//!
+//! This is what the cost models see (the paper's Fig. 3a): a nest of
+//! annotated `for` loops over stores whose values read buffers through
+//! affine index expressions. [`analysis`] derives the loop-context
+//! quantities (extent, top-down/bottom-up products, per-buffer touch
+//! counts, reuse ratios, strides — Table 2 of the paper) shared by the
+//! feature extractors and the hardware simulator.
+
+pub mod analysis;
+
+use crate::expr::{IndexExpr, VarId, VarPool};
+
+/// Loop annotation — the `s` choices visible in the final program.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ForKind {
+    Serial,
+    Unrolled,
+    Vectorized,
+    /// CPU multi-core parallel loop.
+    Parallel,
+    /// GPU block index binding (grid dimension).
+    BlockBind,
+    /// GPU thread index binding (threads within a block).
+    ThreadBind,
+}
+
+impl ForKind {
+    pub const COUNT: usize = 6;
+
+    pub fn one_hot_index(self) -> usize {
+        match self {
+            ForKind::Serial => 0,
+            ForKind::Unrolled => 1,
+            ForKind::Vectorized => 2,
+            ForKind::Parallel => 3,
+            ForKind::BlockBind => 4,
+            ForKind::ThreadBind => 5,
+        }
+    }
+
+    pub fn short(self) -> &'static str {
+        match self {
+            ForKind::Serial => "for",
+            ForKind::Unrolled => "unroll",
+            ForKind::Vectorized => "vec",
+            ForKind::Parallel => "parallel",
+            ForKind::BlockBind => "blockIdx",
+            ForKind::ThreadBind => "threadIdx",
+        }
+    }
+}
+
+/// Memory scope of a buffer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemScope {
+    /// Off-chip memory (DRAM / HBM).
+    Global,
+    /// On-chip software-managed memory (GPU shared memory / TPU VMEM).
+    Shared,
+    /// Register-allocated accumulator.
+    Local,
+}
+
+/// A buffer referenced by the program.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BufferDecl {
+    pub name: String,
+    pub shape: Vec<i64>,
+    pub scope: MemScope,
+}
+
+impl BufferDecl {
+    pub fn numel(&self) -> i64 {
+        self.shape.iter().product()
+    }
+    pub fn strides(&self) -> Vec<i64> {
+        let mut s = vec![1i64; self.shape.len()];
+        for d in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[d] = s[d + 1] * self.shape[d + 1];
+        }
+        s
+    }
+}
+
+/// Scalar value expression in the lowered program.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Imm(f64),
+    /// `buffer[indices...]`
+    Load { buffer: String, indices: Vec<IndexExpr> },
+    Add(Box<Value>, Box<Value>),
+    Sub(Box<Value>, Box<Value>),
+    Mul(Box<Value>, Box<Value>),
+    Max(Box<Value>, Box<Value>),
+    Relu(Box<Value>),
+    /// Bounds-guarded value (padding): in-bounds value, else `else_`.
+    Guarded { bounds: Vec<(IndexExpr, i64, i64)>, value: Box<Value>, else_: Box<Value> },
+}
+
+impl Value {
+    pub fn load(buffer: impl Into<String>, indices: Vec<IndexExpr>) -> Self {
+        Value::Load { buffer: buffer.into(), indices }
+    }
+
+    /// Collect `(buffer, indices)` loads in evaluation order.
+    pub fn loads(&self) -> Vec<(&str, &[IndexExpr])> {
+        let mut out = Vec::new();
+        self.collect_loads(&mut out);
+        out
+    }
+
+    fn collect_loads<'a>(&'a self, out: &mut Vec<(&'a str, &'a [IndexExpr])>) {
+        match self {
+            Value::Imm(_) => {}
+            Value::Load { buffer, indices } => out.push((buffer, indices)),
+            Value::Add(a, b) | Value::Sub(a, b) | Value::Mul(a, b) | Value::Max(a, b) => {
+                a.collect_loads(out);
+                b.collect_loads(out);
+            }
+            Value::Relu(a) => a.collect_loads(out),
+            Value::Guarded { value, else_, .. } => {
+                value.collect_loads(out);
+                else_.collect_loads(out);
+            }
+        }
+    }
+
+    /// Arithmetic op count per evaluation.
+    pub fn flops(&self) -> u64 {
+        match self {
+            Value::Imm(_) | Value::Load { .. } => 0,
+            Value::Add(a, b) | Value::Sub(a, b) | Value::Mul(a, b) | Value::Max(a, b) => {
+                1 + a.flops() + b.flops()
+            }
+            Value::Relu(a) => 1 + a.flops(),
+            Value::Guarded { value, else_, .. } => 1 + value.flops() + else_.flops(),
+        }
+    }
+}
+
+/// Statement of the lowered program.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stmt {
+    For { var: VarId, extent: i64, kind: ForKind, body: Vec<Stmt> },
+    /// `buffer[indices...] = value` (or `+=` when `accumulate`).
+    Store { buffer: String, indices: Vec<IndexExpr>, value: Value, accumulate: bool },
+    /// Declare an on-chip buffer live for `body`.
+    Alloc { buffer: String, body: Vec<Stmt> },
+}
+
+/// A complete lowered tensor program: `x = g(e, s)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Program {
+    pub name: String,
+    pub stmts: Vec<Stmt>,
+    pub buffers: Vec<BufferDecl>,
+    pub vars: VarPool,
+    /// Total useful flops of the underlying operator (for GFLOPS).
+    pub flops: u64,
+}
+
+impl Program {
+    pub fn buffer(&self, name: &str) -> Option<&BufferDecl> {
+        self.buffers.iter().find(|b| b.name == name)
+    }
+
+    /// Pretty-print as pseudo-C (the paper's Fig. 1 right column).
+    pub fn pretty(&self) -> String {
+        let mut s = String::new();
+        for st in &self.stmts {
+            self.pretty_stmt(st, 0, &mut s);
+        }
+        s
+    }
+
+    fn pretty_stmt(&self, st: &Stmt, depth: usize, out: &mut String) {
+        let pad = "  ".repeat(depth);
+        match st {
+            Stmt::For { var, extent, kind, body } => {
+                out.push_str(&format!(
+                    "{pad}{} {} in 0..{extent}:\n",
+                    kind.short(),
+                    self.vars.name(*var)
+                ));
+                for b in body {
+                    self.pretty_stmt(b, depth + 1, out);
+                }
+            }
+            Stmt::Store { buffer, indices, value, accumulate } => {
+                let idx: Vec<String> =
+                    indices.iter().map(|i| i.display(&self.vars)).collect();
+                let op = if *accumulate { "+=" } else { "=" };
+                out.push_str(&format!(
+                    "{pad}{buffer}[{}] {op} {}\n",
+                    idx.join(", "),
+                    self.pretty_value(value)
+                ));
+            }
+            Stmt::Alloc { buffer, body } => {
+                let b = self.buffer(buffer);
+                out.push_str(&format!(
+                    "{pad}alloc {buffer}{:?} @{}\n",
+                    b.map(|b| b.shape.clone()).unwrap_or_default(),
+                    b.map(|b| format!("{:?}", b.scope)).unwrap_or_default()
+                ));
+                for s2 in body {
+                    self.pretty_stmt(s2, depth + 1, out);
+                }
+            }
+        }
+    }
+
+    fn pretty_value(&self, v: &Value) -> String {
+        match v {
+            Value::Imm(x) => format!("{x}"),
+            Value::Load { buffer, indices } => {
+                let idx: Vec<String> =
+                    indices.iter().map(|i| i.display(&self.vars)).collect();
+                format!("{buffer}[{}]", idx.join(", "))
+            }
+            Value::Add(a, b) => format!("({} + {})", self.pretty_value(a), self.pretty_value(b)),
+            Value::Sub(a, b) => format!("({} - {})", self.pretty_value(a), self.pretty_value(b)),
+            Value::Mul(a, b) => format!("({} * {})", self.pretty_value(a), self.pretty_value(b)),
+            Value::Max(a, b) => format!("max({}, {})", self.pretty_value(a), self.pretty_value(b)),
+            Value::Relu(a) => format!("relu({})", self.pretty_value(a)),
+            Value::Guarded { value, .. } => format!("guard({})", self.pretty_value(value)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forkind_one_hot_distinct() {
+        use ForKind::*;
+        let all = [Serial, Unrolled, Vectorized, Parallel, BlockBind, ThreadBind];
+        let mut seen = std::collections::HashSet::new();
+        for k in all {
+            assert!(seen.insert(k.one_hot_index()));
+            assert!(k.one_hot_index() < ForKind::COUNT);
+        }
+    }
+
+    #[test]
+    fn value_loads_and_flops() {
+        let v = Value::Add(
+            Box::new(Value::Mul(
+                Box::new(Value::load("A", vec![])),
+                Box::new(Value::load("B", vec![])),
+            )),
+            Box::new(Value::Imm(1.0)),
+        );
+        assert_eq!(v.loads().len(), 2);
+        assert_eq!(v.flops(), 2);
+    }
+}

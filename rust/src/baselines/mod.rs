@@ -1,0 +1,165 @@
+//! Vendor-library baselines for Figs. 10–11.
+//!
+//! The paper compares against cuDNN / TFLite / ARM ComputeLibrary —
+//! hand-tuned kernels shipped for common shapes. We model each library
+//! as an **expert fixed schedule** per operator class and device: the
+//! one-size-fits-most tiling an engineer would bake into a library
+//! kernel (DESIGN.md §Substitution). It is chosen once per template,
+//! never per-shape-tuned, and cannot fuse epilogues — the two
+//! structural disadvantages the paper attributes to library back-ends.
+//!
+//! The TensorComprehensions baseline of Fig. 10 is modeled by the GA
+//! tuner ([`crate::tuner::tune_ga`]) with the paper's trial budget.
+
+use crate::schedule::space::{ConfigEntity, ConfigSpace, Knob};
+use crate::schedule::template::{Task, TemplateKind};
+
+/// Choose the split option whose factors are closest (in log space) to
+/// the target shape, searching outer→inner significance.
+fn pick_split(space: &ConfigSpace, knob: usize, target: &[f64]) -> u32 {
+    let Knob::Split { options, .. } = &space.knobs[knob] else {
+        panic!("knob {knob} is not a split");
+    };
+    let mut best = (0u32, f64::INFINITY);
+    for (i, opt) in options.iter().enumerate() {
+        let d: f64 = opt
+            .iter()
+            .zip(target)
+            .map(|(&f, &t)| ((f as f64).log2() - t.log2()).powi(2))
+            .sum();
+        if d < best.1 {
+            best = (i as u32, d);
+        }
+    }
+    best.0
+}
+
+fn pick_choice(space: &ConfigSpace, name: &str, want: i64) -> (usize, u32) {
+    let i = space.knob_index(name).expect("choice knob");
+    let Knob::Choice { options, .. } = &space.knobs[i] else { panic!() };
+    let j = options
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, &v)| (v - want).abs())
+        .map(|(j, _)| j as u32)
+        .unwrap();
+    (i, j)
+}
+
+/// The expert fixed schedule a vendor library would ship for this
+/// operator class on this device.
+pub fn vendor_config(task: &Task) -> ConfigEntity {
+    let space = &task.space;
+    let ns = task.def.axes.len();
+    let _nr = task.def.reduce_axes.len();
+    let mut e = ConfigEntity { choices: vec![0; space.num_knobs()] };
+    match task.template {
+        TemplateKind::Cpu => {
+            // parallel outer ≈ cores, mid tile 4, vector-width inner
+            for (i, ax) in task.def.axes.iter().enumerate() {
+                let ext = ax.extent as f64;
+                let inner = if i == ns - 1 { 8.0 } else { 4.0 };
+                let target = [4f64.min(ext), (ext / (4.0 * inner)).max(1.0), inner];
+                e.choices[i] = pick_split(space, i, &target);
+            }
+            for (i, ax) in task.def.reduce_axes.iter().enumerate() {
+                let ext = ax.extent as f64;
+                e.choices[ns + i] = pick_split(space, ns + i, &[(ext / 4.0).max(1.0), 4.0]);
+            }
+            let (i, j) = pick_choice(space, "unroll", 16);
+            e.choices[i] = j;
+            let (i, j) = pick_choice(space, "vec", 1);
+            e.choices[i] = j;
+            let (i, j) = pick_choice(space, "cache_write", 1);
+            e.choices[i] = j;
+        }
+        TemplateKind::Gpu => {
+            // 16×16-ish thread blocks over the two largest spatial axes,
+            // small register tiles — the classic library kernel shape
+            let mut order: Vec<usize> = (0..ns).collect();
+            order.sort_by_key(|&i| std::cmp::Reverse(task.def.axes[i].extent));
+            for (rank, &i) in order.iter().enumerate() {
+                let ext = task.def.axes[i].extent as f64;
+                let threads = match rank {
+                    0 | 1 => 16.0f64,
+                    _ => 1.0,
+                }
+                .min(ext);
+                let inner = if rank < 2 { 2.0f64.min(ext / threads) } else { 1.0 };
+                let target = [(ext / (threads * inner)).max(1.0), threads, inner.max(1.0)];
+                e.choices[i] = pick_split(space, i, &target);
+            }
+            for (i, ax) in task.def.reduce_axes.iter().enumerate() {
+                let ext = ax.extent as f64;
+                e.choices[ns + i] = pick_split(space, ns + i, &[(ext / 8.0).max(1.0), 8.0]);
+            }
+            let (i, j) = pick_choice(space, "unroll", 64);
+            e.choices[i] = j;
+            let (i, j) = pick_choice(space, "vec", 1);
+            e.choices[i] = j;
+        }
+    }
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::ops;
+    use crate::sim::devices::{sim_cpu, sim_gpu, sim_mali};
+    use crate::workloads;
+
+    #[test]
+    fn vendor_configs_are_valid_on_all_workloads() {
+        for n in 1..=12 {
+            for (t, dev) in [
+                (TemplateKind::Gpu, sim_gpu()),
+                (TemplateKind::Cpu, sim_cpu()),
+                (TemplateKind::Gpu, sim_mali()),
+            ] {
+                let task = workloads::conv_task(n, t);
+                let e = vendor_config(&task);
+                let prog = task.lower(&e).unwrap_or_else(|err| {
+                    panic!("C{n} {t:?}: vendor config fails to lower: {err}")
+                });
+                let r = dev.evaluate(&prog).unwrap_or_else(|err| {
+                    panic!("C{n} on {}: vendor config invalid: {err}", dev.name)
+                });
+                assert!(r.gflops > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn vendor_config_is_reasonable_not_terrible() {
+        // the library kernel must beat the *median* random config —
+        // it's expert-tuned, after all
+        let task = workloads::conv_task(6, TemplateKind::Gpu);
+        let dev = sim_gpu();
+        let vendor = dev
+            .evaluate(&task.lower(&vendor_config(&task)).unwrap())
+            .unwrap()
+            .gflops;
+        let mut rng = crate::util::Rng::seed_from_u64(1);
+        let mut rand_gflops: Vec<f64> = Vec::new();
+        for _ in 0..60 {
+            let e = task.space.sample(&mut rng);
+            if let Ok(r) = dev.evaluate(&task.lower(&e).unwrap()) {
+                rand_gflops.push(r.gflops);
+            }
+        }
+        let med = crate::util::quantile(&mut rand_gflops, 0.5);
+        assert!(vendor > med, "vendor {vendor} should beat median random {med}");
+    }
+
+    #[test]
+    fn vendor_config_on_dense_and_matmul() {
+        for t in [TemplateKind::Cpu, TemplateKind::Gpu] {
+            for def in [ops::dense(1, 1000, 512), ops::matmul(1024, 1024, 1024)] {
+                let task = Task::new(def, t);
+                let e = vendor_config(&task);
+                assert!(task.lower(&e).is_ok());
+            }
+        }
+    }
+}

@@ -1,0 +1,571 @@
+//! Experiment drivers — one function per table/figure of the paper's
+//! evaluation (§6, Figs. 4–11 and the supplementary sweeps 13–16).
+//!
+//! Each driver prints machine-readable series (`fig,workload,method,
+//! trial,gflops` CSV rows) plus a human summary, and returns the raw
+//! data so tests can assert the paper's qualitative claims (model-based
+//! beats black-box, transfer gives 2–10×, invariant features transfer
+//! across operator types, AutoTVM beats the vendor baseline
+//! end-to-end). `ExpOpts::full` switches from CI-scale budgets to the
+//! paper's (800 trials, 128×500 SA).
+
+use crate::explore::SaParams;
+use crate::features::Representation;
+use crate::gbt::{GbtParams, Objective};
+use crate::measure::{Measurer, SimMeasurer};
+use crate::model::{Acquisition, EnsembleModel, GbtModel, TransferModel};
+use crate::schedule::template::{Task, TemplateKind};
+use crate::sim::devices;
+use crate::sim::DeviceModel;
+use crate::tuner::db::Database;
+use crate::tuner::{tune_ga, tune_random, TuneOptions, TuneResult, Tuner};
+use crate::workloads;
+
+/// Budgets for one experiment run.
+#[derive(Clone, Debug)]
+pub struct ExpOpts {
+    /// Measurement trials per tuning run.
+    pub trials: usize,
+    pub batch: usize,
+    pub sa: SaParams,
+    pub seed: u64,
+    /// Paper-scale budgets (800 trials, full SA).
+    pub full: bool,
+    /// Evaluate on all 12 workloads (supplementary Figs. 13–16).
+    pub all_workloads: bool,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts {
+            trials: 256,
+            batch: 64,
+            sa: SaParams { n_chains: 64, n_steps: 120, ..Default::default() },
+            seed: 0,
+            full: false,
+            all_workloads: false,
+        }
+    }
+}
+
+impl ExpOpts {
+    pub fn paper_scale() -> Self {
+        ExpOpts {
+            trials: 800,
+            batch: 64,
+            sa: SaParams::default(),
+            full: true,
+            ..Default::default()
+        }
+    }
+
+    fn tune_options(&self) -> TuneOptions {
+        TuneOptions {
+            n_trials: self.trials,
+            batch: self.batch,
+            sa: self.sa.clone(),
+            seed: self.seed,
+            ..Default::default()
+        }
+    }
+
+    fn workloads(&self, representative: &[usize]) -> Vec<usize> {
+        if self.all_workloads {
+            (1..=12).collect()
+        } else {
+            representative.to_vec()
+        }
+    }
+}
+
+/// Tuning method axis of Figs. 4–7.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Random,
+    RandomX2,
+    Ga,
+    GaX2,
+    GbtRank,
+    GbtReg,
+    /// context-encoded neural model via PJRT (needs artifacts)
+    NeuralRank,
+    NeuralReg,
+    /// bootstrap-ensemble GBT with an acquisition function
+    EnsembleMean,
+    EnsembleUcb,
+    EnsembleEi,
+}
+
+impl Method {
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Random => "random",
+            Method::RandomX2 => "random_x2",
+            Method::Ga => "ga",
+            Method::GaX2 => "ga_x2",
+            Method::GbtRank => "gbt_rank",
+            Method::GbtReg => "gbt_reg",
+            Method::NeuralRank => "neural_rank",
+            Method::NeuralReg => "neural_reg",
+            Method::EnsembleMean => "ens_mean",
+            Method::EnsembleUcb => "ens_ucb",
+            Method::EnsembleEi => "ens_ei",
+        }
+    }
+}
+
+/// Run one method on one task. Returns the best-so-far curve indexed by
+/// *trials* (×2 methods consume double measurements per trial).
+pub fn run_method(
+    task: &Task,
+    measurer: &dyn Measurer,
+    method: Method,
+    opts: &ExpOpts,
+) -> TuneResult {
+    let mut o = opts.tune_options();
+    match method {
+        Method::Random => tune_random(task.clone(), measurer, o),
+        Method::Ga => tune_ga(task.clone(), measurer, o),
+        Method::RandomX2 | Method::GaX2 => {
+            o.n_trials *= 2;
+            let r = if method == Method::RandomX2 {
+                tune_random(task.clone(), measurer, o)
+            } else {
+                tune_ga(task.clone(), measurer, o)
+            };
+            // two measurements per trial: compress the curve 2:1
+            let curve: Vec<f64> =
+                r.curve.chunks(2).map(|c| c[c.len() - 1]).collect();
+            TuneResult { curve, ..r }
+        }
+        Method::GbtRank | Method::GbtReg => {
+            let objective = if method == Method::GbtRank {
+                Objective::Rank
+            } else {
+                Objective::Regression
+            };
+            let params = GbtParams { objective, seed: o.seed, ..Default::default() };
+            let model = Box::new(GbtModel::new(params));
+            Tuner::new(task.clone(), model, o).tune(measurer)
+        }
+        Method::NeuralRank | Method::NeuralReg => {
+            use crate::model::neural::{NeuralModel, NeuralObjective};
+            let rt = crate::runtime::PjrtRuntime::cpu().expect("PJRT client");
+            let nobj = if method == Method::NeuralRank {
+                NeuralObjective::Rank
+            } else {
+                NeuralObjective::Regression
+            };
+            let model = Box::new(
+                NeuralModel::load(&rt, nobj, o.seed).expect("run `make artifacts`"),
+            );
+            o.repr = Representation::FlatAst; // the context-matrix layout
+            Tuner::new(task.clone(), model, o).tune(measurer)
+        }
+        Method::EnsembleMean | Method::EnsembleUcb | Method::EnsembleEi => {
+            // the paper's Fig. 7 setup: 5 bootstrap models, regression
+            // objective (as in Bayesian-optimization practice)
+            let params = GbtParams {
+                objective: Objective::Regression,
+                n_trees: 30,
+                seed: o.seed,
+                ..Default::default()
+            };
+            o.acquisition = match method {
+                Method::EnsembleUcb => Acquisition::Ucb(1.0),
+                Method::EnsembleEi => Acquisition::Ei,
+                _ => Acquisition::Mean,
+            };
+            let model = Box::new(EnsembleModel::new(params, 5));
+            Tuner::new(task.clone(), model, o).tune(measurer)
+        }
+    }
+}
+
+fn emit_curve(fig: &str, workload: &str, method: &str, curve: &[f64], stride: usize) {
+    for (i, g) in curve.iter().enumerate() {
+        if (i + 1) % stride == 0 || i + 1 == curve.len() {
+            println!("{fig},{workload},{method},{},{g:.2}", i + 1);
+        }
+    }
+}
+
+/// Fig. 4: statistical cost model (GBT / neural) vs GA and Random.
+pub fn fig4(opts: &ExpOpts, with_neural: bool) -> Vec<(String, String, TuneResult)> {
+    println!("# Fig 4: cost model vs black-box baselines ({} trials, sim-gpu)", opts.trials);
+    println!("fig,workload,method,trial,best_gflops");
+    let mut methods = vec![
+        Method::Random,
+        Method::RandomX2,
+        Method::Ga,
+        Method::GaX2,
+        Method::GbtRank,
+    ];
+    if with_neural {
+        methods.push(Method::NeuralRank);
+    }
+    let mut out = Vec::new();
+    for wl in opts.workloads(&[3, 6, 9]) {
+        let task = workloads::conv_task(wl, TemplateKind::Gpu);
+        for m in &methods {
+            let measurer = SimMeasurer::with_seed(devices::sim_gpu(), 1000 + wl as u64);
+            let res = run_method(&task, &measurer, *m, opts);
+            emit_curve("fig4", &format!("C{wl}"), m.name(), &res.curve, opts.batch);
+            out.push((format!("C{wl}"), m.name().to_string(), res));
+        }
+    }
+    summarize_final(&out);
+    out
+}
+
+/// Fig. 5: rank vs regression training objective (both model families).
+pub fn fig5(opts: &ExpOpts, with_neural: bool) -> Vec<(String, String, TuneResult)> {
+    println!("# Fig 5: rank vs regression objective (sim-gpu)");
+    println!("fig,workload,method,trial,best_gflops");
+    let mut methods = vec![Method::GbtRank, Method::GbtReg];
+    if with_neural {
+        methods.extend([Method::NeuralRank, Method::NeuralReg]);
+    }
+    let mut out = Vec::new();
+    for wl in opts.workloads(&[3, 6]) {
+        let task = workloads::conv_task(wl, TemplateKind::Gpu);
+        for m in &methods {
+            let measurer = SimMeasurer::with_seed(devices::sim_gpu(), 2000 + wl as u64);
+            let res = run_method(&task, &measurer, *m, opts);
+            emit_curve("fig5", &format!("C{wl}"), m.name(), &res.curve, opts.batch);
+            out.push((format!("C{wl}"), m.name().to_string(), res));
+        }
+    }
+    summarize_final(&out);
+    out
+}
+
+/// Fig. 6: diversity-aware exploration with different λ.
+pub fn fig6(opts: &ExpOpts) -> Vec<(String, String, TuneResult)> {
+    println!("# Fig 6: diversity-aware selection, lambda sweep (sim-gpu)");
+    println!("fig,workload,method,trial,best_gflops");
+    let mut out = Vec::new();
+    for wl in opts.workloads(&[3, 6]) {
+        let task = workloads::conv_task(wl, TemplateKind::Gpu);
+        for (name, lambda, diversity) in
+            [("no_diversity", 1usize, false), ("lambda2", 2, true), ("lambda4", 4, true)]
+        {
+            let measurer = SimMeasurer::with_seed(devices::sim_gpu(), 3000 + wl as u64);
+            let mut o = opts.tune_options();
+            o.lambda = lambda;
+            o.diversity = diversity;
+            let params = GbtParams { seed: o.seed, ..Default::default() };
+            let res = Tuner::new(task.clone(), Box::new(GbtModel::new(params)), o)
+                .tune(&measurer);
+            emit_curve("fig6", &format!("C{wl}"), name, &res.curve, opts.batch);
+            out.push((format!("C{wl}"), name.to_string(), res));
+        }
+    }
+    summarize_final(&out);
+    out
+}
+
+/// Fig. 7: uncertainty-aware acquisition functions.
+pub fn fig7(opts: &ExpOpts) -> Vec<(String, String, TuneResult)> {
+    println!("# Fig 7: acquisition functions over a bootstrap ensemble (sim-gpu)");
+    println!("fig,workload,method,trial,best_gflops");
+    let mut out = Vec::new();
+    for wl in opts.workloads(&[3, 6]) {
+        let task = workloads::conv_task(wl, TemplateKind::Gpu);
+        for m in [Method::EnsembleMean, Method::EnsembleUcb, Method::EnsembleEi] {
+            let measurer = SimMeasurer::with_seed(devices::sim_gpu(), 4000 + wl as u64);
+            let res = run_method(&task, &measurer, m, opts);
+            emit_curve("fig7", &format!("C{wl}"), m.name(), &res.curve, opts.batch);
+            out.push((format!("C{wl}"), m.name().to_string(), res));
+        }
+    }
+    summarize_final(&out);
+    out
+}
+
+/// Collect a source-domain database `D'` by tuning `source_workloads`.
+pub fn collect_source_db(
+    source_workloads: &[usize],
+    template: TemplateKind,
+    device: &DeviceModel,
+    trials_per_task: usize,
+    seed: u64,
+) -> Database {
+    let mut db = Database::new();
+    for &wl in source_workloads {
+        let task = workloads::conv_task(wl, template);
+        let measurer = SimMeasurer::with_seed(device.clone(), 9000 + wl as u64);
+        let mut o = TuneOptions {
+            n_trials: trials_per_task,
+            seed: seed + wl as u64,
+            ..Default::default()
+        };
+        o.sa = SaParams { n_chains: 64, n_steps: 100, ..Default::default() };
+        let res = crate::tuner::tune_gbt(task.clone(), &measurer, o);
+        db.add_run(&task, device.name, &res.records);
+    }
+    db
+}
+
+/// Build a transfer model from `db` under a representation.
+pub fn transfer_model_from(
+    db: &Database,
+    source_tasks: &[&Task],
+    target: &str,
+    repr: Representation,
+    limit_per_task: usize,
+    seed: u64,
+) -> TransferModel {
+    let (x, y, groups) = db.to_training(source_tasks, target, repr, limit_per_task);
+    let params = GbtParams { objective: Objective::Rank, seed, ..Default::default() };
+    TransferModel::from_source(&x, &y, &groups, params)
+}
+
+/// Fig. 8: transfer learning speedup, C1–C6 → C7, C8, C9.
+pub fn fig8(opts: &ExpOpts) -> Vec<(String, String, TuneResult)> {
+    println!("# Fig 8: transfer from C1-C6 (sim-gpu)");
+    println!("fig,workload,method,trial,best_gflops");
+    let device = devices::sim_gpu();
+    let per_task = if opts.full { 800 } else { opts.trials };
+    let source: Vec<usize> = (1..=6).collect();
+    let db = collect_source_db(&source, TemplateKind::Gpu, &device, per_task, opts.seed);
+    let source_tasks: Vec<Task> = source
+        .iter()
+        .map(|&w| workloads::conv_task(w, TemplateKind::Gpu))
+        .collect();
+    let refs: Vec<&Task> = source_tasks.iter().collect();
+
+    let mut out = Vec::new();
+    for wl in [7usize, 8, 9] {
+        let task = workloads::conv_task(wl, TemplateKind::Gpu);
+        // transfer-enabled
+        let measurer = SimMeasurer::with_seed(device.clone(), 5000 + wl as u64);
+        let model = transfer_model_from(
+            &db, &refs, device.name, Representation::Full, usize::MAX, opts.seed,
+        );
+        let mut o = opts.tune_options();
+        o.repr = Representation::Full;
+        let res_t =
+            Tuner::new(task.clone(), Box::new(model), o.clone()).tune(&measurer);
+        emit_curve("fig8", &format!("C{wl}"), "transfer", &res_t.curve, opts.batch);
+        // cold start
+        let measurer2 = SimMeasurer::with_seed(device.clone(), 5000 + wl as u64);
+        let params = GbtParams { seed: o.seed, ..Default::default() };
+        let res_c = Tuner::new(task.clone(), Box::new(GbtModel::new(params)), o)
+            .tune(&measurer2);
+        emit_curve("fig8", &format!("C{wl}"), "scratch", &res_c.curve, opts.batch);
+
+        // speedup: trials for scratch to reach transfer's curve value at
+        // 25% budget
+        let target = res_t.best_at(opts.trials / 4);
+        let t_t = res_t.trials_to_reach(target).unwrap_or(opts.trials);
+        let t_c = res_c.trials_to_reach(target).unwrap_or(opts.trials * 2);
+        println!(
+            "# C{wl}: transfer reached {target:.0} GFLOPS in {t_t} trials, \
+             scratch needed {t_c} ({:.1}x speedup)",
+            t_c as f64 / t_t as f64
+        );
+        out.push((format!("C{wl}"), "transfer".into(), res_t));
+        out.push((format!("C{wl}"), "scratch".into(), res_c));
+    }
+    out
+}
+
+/// Fig. 9: invariance of representations across domain distances.
+pub fn fig9(opts: &ExpOpts) -> Vec<(String, String, TuneResult)> {
+    println!("# Fig 9: representation invariance across transfer distances");
+    println!("fig,scenario,representation,trial,best_gflops");
+    let device = devices::sim_gpu();
+    let per_task = if opts.full { 800 } else { opts.trials };
+    let source: Vec<usize> = (1..=6).collect();
+    let db = collect_source_db(&source, TemplateKind::Gpu, &device, per_task, opts.seed);
+    let source_tasks: Vec<Task> = source
+        .iter()
+        .map(|&w| workloads::conv_task(w, TemplateKind::Gpu))
+        .collect();
+    let refs: Vec<&Task> = source_tasks.iter().collect();
+
+    let reprs = [
+        ("config", Representation::Config),
+        ("flat_ast", Representation::FlatAst),
+        ("context_relation", Representation::ContextRelation),
+    ];
+    let scenarios: Vec<(&str, Task)> = vec![
+        ("conv_to_conv_C7", workloads::conv_task(7, TemplateKind::Gpu)),
+        ("conv_to_matmul1024", workloads::matmul_1024_task(TemplateKind::Gpu)),
+    ];
+    let mut out = Vec::new();
+    for (scen, task) in &scenarios {
+        for (rname, repr) in reprs {
+            let measurer = SimMeasurer::with_seed(device.clone(), 6000);
+            let model =
+                transfer_model_from(&db, &refs, device.name, repr, usize::MAX, opts.seed);
+            let mut o = opts.tune_options();
+            o.repr = repr;
+            let res = Tuner::new(task.clone(), Box::new(model), o).tune(&measurer);
+            emit_curve("fig9", scen, rname, &res.curve, opts.batch);
+            out.push((scen.to_string(), rname.to_string(), res));
+        }
+        // no-transfer reference
+        let measurer = SimMeasurer::with_seed(device.clone(), 6000);
+        let o = opts.tune_options();
+        let res = crate::tuner::tune_gbt(task.clone(), &measurer, o);
+        emit_curve("fig9", scen, "no_transfer", &res.curve, opts.batch);
+        out.push((scen.to_string(), "no_transfer".into(), res));
+    }
+
+    // Fig. 9d: cross-device transfer (the paper's Mali → Cortex-A53
+    // study) — D' collected on sim-mali (GPU template), target tuned on
+    // sim-cpu (CPU template; different knob space, so only the program-
+    // level representations can transfer).
+    let mali = devices::sim_mali();
+    let db_mali =
+        collect_source_db(&[2, 4, 6], TemplateKind::Gpu, &mali, per_task, opts.seed);
+    let mali_tasks: Vec<Task> =
+        [2, 4, 6].iter().map(|&w| workloads::conv_task(w, TemplateKind::Gpu)).collect();
+    let mali_refs: Vec<&Task> = mali_tasks.iter().collect();
+    let cpu = devices::sim_cpu();
+    let target = workloads::conv_task(7, TemplateKind::Cpu);
+    for (rname, repr) in reprs {
+        let measurer = SimMeasurer::with_seed(cpu.clone(), 6100);
+        let model =
+            transfer_model_from(&db_mali, &mali_refs, mali.name, repr, usize::MAX, opts.seed);
+        let mut o = opts.tune_options();
+        o.repr = repr;
+        let res = Tuner::new(target.clone(), Box::new(model), o).tune(&measurer);
+        emit_curve("fig9", "mali_to_a53_C7", rname, &res.curve, opts.batch);
+        out.push(("mali_to_a53_C7".into(), rname.to_string(), res));
+    }
+    let measurer = SimMeasurer::with_seed(cpu.clone(), 6100);
+    let res = crate::tuner::tune_gbt(target, &measurer, opts.tune_options());
+    emit_curve("fig9", "mali_to_a53_C7", "no_transfer", &res.curve, opts.batch);
+    out.push(("mali_to_a53_C7".into(), "no_transfer".into(), res));
+
+    summarize_final(&out);
+    out
+}
+
+/// Fig. 10: single-operator performance vs the vendor baseline, all
+/// C1–C12 on a device. Returns (workload, vendor GFLOPS, tc GFLOPS,
+/// autotvm GFLOPS).
+pub fn fig10(opts: &ExpOpts, device: &DeviceModel) -> Vec<(String, f64, f64, f64)> {
+    let template = match device.class {
+        crate::sim::DeviceClass::Gpu => TemplateKind::Gpu,
+        crate::sim::DeviceClass::Cpu => TemplateKind::Cpu,
+    };
+    println!(
+        "# Fig 10: single-op performance on {} (vendor vs TC(GA) vs AutoTVM vs AutoTVM-PT)",
+        device.name
+    );
+    println!("fig,workload,vendor_gflops,tc_gflops,autotvm_gflops,pt_gflops,speedup");
+    let mut out = Vec::new();
+    for wl in 1..=12 {
+        let task = workloads::conv_task(wl, template);
+        // vendor library: expert fixed schedule
+        let vendor_cfg = crate::baselines::vendor_config(&task);
+        let vendor = task
+            .lower(&vendor_cfg)
+            .ok()
+            .and_then(|p| device.evaluate(&p).ok())
+            .map(|r| r.gflops)
+            .unwrap_or(0.0);
+        // TensorComprehensions stand-in: GA search (gpu only, like the paper)
+        let tc = if template == TemplateKind::Gpu {
+            let measurer = SimMeasurer::with_seed(device.clone(), 7000 + wl as u64);
+            run_method(&task, &measurer, Method::Ga, opts).best_gflops()
+        } else {
+            0.0
+        };
+        // AutoTVM
+        let measurer = SimMeasurer::with_seed(device.clone(), 7000 + wl as u64);
+        let autotvm = run_method(&task, &measurer, Method::GbtRank, opts).best_gflops();
+        // AutoTVM-PT: Winograd with pre-transformed weights (3×3 s1 only)
+        let params = workloads::conv_workload(wl);
+        let pt = if crate::expr::winograd::applicable(&params) {
+            let s = crate::expr::winograd::stages(params);
+            let bt = Task::new(s.bgemm.clone(), template);
+            let measurer = SimMeasurer::with_seed(device.clone(), 7500 + wl as u64);
+            let best = run_method(&bt, &measurer, Method::GbtRank, opts);
+            let bgemm_secs = best
+                .best
+                .as_ref()
+                .map(|(e, _)| {
+                    device.evaluate(&bt.lower(e).unwrap()).map(|r| r.seconds).unwrap_or(f64::INFINITY)
+                })
+                .unwrap_or(f64::INFINITY);
+            let t_aux: f64 = [&s.input_transform, &s.output_transform]
+                .iter()
+                .map(|d| {
+                    let t = Task::new((*d).clone(), template);
+                    let e = crate::graph::quick_best(&t, device, 24, 5);
+                    device
+                        .evaluate(&t.lower(&e).unwrap())
+                        .map(|r| r.seconds)
+                        .unwrap_or(f64::INFINITY)
+                })
+                .sum();
+            s.direct_flops as f64 / (bgemm_secs + t_aux) / 1e9
+        } else {
+            0.0
+        };
+        println!(
+            "fig10,C{wl},{vendor:.1},{tc:.1},{autotvm:.1},{pt:.1},{:.2}",
+            autotvm.max(pt) / vendor.max(1e-9)
+        );
+        out.push((format!("C{wl}"), vendor, tc, autotvm.max(pt)));
+    }
+    out
+}
+
+/// Fig. 11: end-to-end network latency, AutoTVM (fused + tuned) vs the
+/// vendor baseline (unfused + fixed schedules).
+pub fn fig11(
+    opts: &ExpOpts,
+    device: &DeviceModel,
+    nets: &[&str],
+) -> Vec<(String, f64, f64)> {
+    let template = match device.class {
+        crate::sim::DeviceClass::Gpu => TemplateKind::Gpu,
+        crate::sim::DeviceClass::Cpu => TemplateKind::Cpu,
+    };
+    println!("# Fig 11: end-to-end inference on {}", device.name);
+    println!("fig,network,baseline_ms,autotvm_ms,speedup");
+    let mut out = Vec::new();
+    for &name in nets {
+        let graph = match name {
+            "resnet18" => workloads::resnet18(),
+            "mobilenet" => workloads::mobilenet(),
+            "dqn" => workloads::dqn(),
+            "lstm" => workloads::lstm_lm(),
+            "dcgan" => workloads::dcgan(),
+            other => panic!("unknown network {other}"),
+        };
+        // baseline: unfused graph + vendor fixed schedules
+        let (base_s, _) = graph
+            .latency(device, template, |t| Some(crate::baselines::vendor_config(t)))
+            .expect("baseline latency");
+        // AutoTVM: fused graph + per-task tuning
+        let fused = graph.fuse();
+        let measurer = SimMeasurer::with_seed(device.clone(), 8000);
+        let tuned =
+            crate::graph::tune_graph_tasks(&fused, template, &measurer, opts.tune_options());
+        let (auto_s, _) = fused
+            .latency(device, template, |t| tuned.get(&t.key()).cloned())
+            .expect("autotvm latency");
+        println!(
+            "fig11,{name},{:.3},{:.3},{:.2}",
+            base_s * 1e3,
+            auto_s * 1e3,
+            base_s / auto_s
+        );
+        out.push((name.to_string(), base_s, auto_s));
+    }
+    out
+}
+
+fn summarize_final(results: &[(String, String, TuneResult)]) {
+    println!("# final best per (workload, method):");
+    for (wl, m, r) in results {
+        println!("#   {wl:>16} {m:<18} {:.1} GFLOPS", r.best_gflops());
+    }
+}

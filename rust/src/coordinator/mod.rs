@@ -1,0 +1,323 @@
+//! Coordinator: CLI, argument parsing and the tuning-job runner (the
+//! L3 entry point — `autotvm <command>`).
+//!
+//! Commands:
+//! * `table1` — print the Table-1 workload inventory.
+//! * `tune` — tune one workload on a device with a chosen method.
+//! * `tune-all` — tune C1–C12, persisting the database (the `D'`
+//!   collection step for transfer experiments).
+//! * `e2e` — end-to-end network latency vs the vendor baseline.
+//! * `fig` — regenerate a paper figure (4–11).
+//! * `pjrt-demo` — tune the Pallas matmul tile family where `f(x)` is
+//!   real wall-clock through PJRT.
+
+pub mod experiments;
+
+use crate::measure::{Measurer, SimMeasurer};
+use crate::schedule::template::TemplateKind;
+use crate::sim::devices;
+use crate::tuner::db::Database;
+use crate::tuner::TuneOptions;
+use crate::workloads;
+use anyhow::{bail, Context, Result};
+use experiments::{ExpOpts, Method};
+
+/// Minimal flag parser: `--key value` and `--flag` pairs after the
+/// subcommand (clap is not vendored in the offline build).
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let next_is_value =
+                    argv.get(i + 1).map_or(false, |n| !n.starts_with("--"));
+                if next_is_value {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn device_of(args: &Args) -> Result<crate::sim::DeviceModel> {
+    let name = args.get("device").unwrap_or("sim-gpu");
+    devices::by_name(name)
+        .with_context(|| format!("unknown device {name}; try sim-gpu/sim-cpu/sim-mali/sim-tpu"))
+}
+
+fn template_of(dev: &crate::sim::DeviceModel) -> TemplateKind {
+    match dev.class {
+        crate::sim::DeviceClass::Gpu => TemplateKind::Gpu,
+        crate::sim::DeviceClass::Cpu => TemplateKind::Cpu,
+    }
+}
+
+fn workload_of(args: &Args) -> Result<usize> {
+    let w = args.get("workload").unwrap_or("C6");
+    let n: usize = w.trim_start_matches(['C', 'c']).parse().context("workload like C6")?;
+    anyhow::ensure!((1..=12).contains(&n), "workloads are C1..C12");
+    Ok(n)
+}
+
+fn method_of(args: &Args) -> Result<Method> {
+    Ok(match args.get("method").unwrap_or("gbt_rank") {
+        "random" => Method::Random,
+        "ga" => Method::Ga,
+        "gbt_rank" => Method::GbtRank,
+        "gbt_reg" => Method::GbtReg,
+        "neural" | "neural_rank" => Method::NeuralRank,
+        "neural_reg" => Method::NeuralReg,
+        other => bail!("unknown method {other}"),
+    })
+}
+
+fn exp_opts(args: &Args) -> ExpOpts {
+    let mut o = if args.has("full") { ExpOpts::paper_scale() } else { ExpOpts::default() };
+    o.trials = args.get_usize("trials", o.trials);
+    o.all_workloads = args.has("all-workloads");
+    o.seed = args.get_usize("seed", 0) as u64;
+    o
+}
+
+/// CLI entry point (called by `main`).
+pub fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first().cloned() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "table1" => {
+            println!("| workload | H,W | IC,OC | K,S | MACs |");
+            for i in 1..=12 {
+                let p = workloads::conv_workload(i);
+                println!(
+                    "| C{i} | {},{} | {},{} | {},{} | {:.2}M |",
+                    p.h, p.w, p.ic, p.oc, p.kh, p.stride,
+                    p.macs() as f64 / 1e6
+                );
+            }
+        }
+        "tune" => {
+            let dev = device_of(&args)?;
+            let wl = workload_of(&args)?;
+            let method = method_of(&args)?;
+            let opts = exp_opts(&args);
+            let task = workloads::conv_task(wl, template_of(&dev));
+            println!(
+                "tuning C{wl} on {} with {} ({} trials, |S_e| = {:.2e})",
+                dev.name,
+                method.name(),
+                opts.trials,
+                task.space.size() as f64
+            );
+            let measurer = SimMeasurer::with_seed(dev.clone(), opts.seed + 1);
+            let res = experiments::run_method(&task, &measurer, method, &opts);
+            if let Some((e, g)) = &res.best {
+                println!("best: {g:.1} GFLOPS");
+                println!("config: {}", task.space.describe(e));
+            }
+            if let Some(path) = args.get("db") {
+                let mut db = if std::path::Path::new(path).exists() {
+                    Database::load(path)?
+                } else {
+                    Database::new()
+                };
+                db.add_run(&task, dev.name, &res.records);
+                db.save(path)?;
+                println!("appended {} records to {path}", res.records.len());
+            }
+        }
+        "tune-all" => {
+            let dev = device_of(&args)?;
+            let opts = exp_opts(&args);
+            let mut db = Database::new();
+            for wl in 1..=12 {
+                let task = workloads::conv_task(wl, template_of(&dev));
+                let measurer = SimMeasurer::with_seed(dev.clone(), opts.seed + wl as u64);
+                let mut o = TuneOptions {
+                    n_trials: opts.trials,
+                    sa: opts.sa.clone(),
+                    seed: opts.seed + wl as u64,
+                    ..Default::default()
+                };
+                o.verbose = true;
+                let res = crate::tuner::tune_gbt(task.clone(), &measurer, o);
+                println!("C{wl}: best {:.1} GFLOPS", res.best_gflops());
+                db.add_run(&task, dev.name, &res.records);
+            }
+            let path = args.get("db").unwrap_or("tuning_db.jsonl");
+            db.save(path)?;
+            println!("saved database: {path} ({} records)", db.records.len());
+        }
+        "e2e" => {
+            let dev = device_of(&args)?;
+            let opts = exp_opts(&args);
+            let net = args.get("network").unwrap_or("resnet18").to_string();
+            experiments::fig11(&opts, &dev, &[net.as_str()]);
+        }
+        "fig" => {
+            let n = args
+                .positional
+                .first()
+                .and_then(|s| s.parse::<u32>().ok())
+                .context("usage: autotvm fig <4..11> [--full] [--all-workloads]")?;
+            let opts = exp_opts(&args);
+            let neural = args.has("neural");
+            match n {
+                4 => {
+                    experiments::fig4(&opts, neural);
+                }
+                5 => {
+                    experiments::fig5(&opts, neural);
+                }
+                6 => {
+                    experiments::fig6(&opts);
+                }
+                7 => {
+                    experiments::fig7(&opts);
+                }
+                8 => {
+                    experiments::fig8(&opts);
+                }
+                9 => {
+                    experiments::fig9(&opts);
+                }
+                10 => {
+                    let dev = device_of(&args)?;
+                    experiments::fig10(&opts, &dev);
+                }
+                11 => {
+                    let dev = device_of(&args)?;
+                    let nets: Vec<&str> = match dev.class {
+                        crate::sim::DeviceClass::Gpu if dev.name == "sim-gpu" => {
+                            vec!["resnet18", "mobilenet", "lstm", "dqn", "dcgan"]
+                        }
+                        // the paper's baselines don't support LSTM/DCGAN
+                        // on A53/Mali (Fig. 11 footnote)
+                        _ => vec!["resnet18", "mobilenet", "dqn"],
+                    };
+                    experiments::fig11(&opts, &dev, &nets);
+                }
+                other => bail!("no figure {other}; supported: 4..11"),
+            }
+        }
+        "pjrt-demo" => {
+            use crate::measure::pjrt::{matmul_variant_task, PjrtMeasurer};
+            let rt = crate::runtime::PjrtRuntime::cpu()?;
+            let measurer = PjrtMeasurer::new(rt)?;
+            let task = matmul_variant_task();
+            println!(
+                "tuning Pallas matmul tile family on real {} (|S_e| = {})",
+                measurer.target(),
+                task.space.size()
+            );
+            let opts = TuneOptions {
+                n_trials: args.get_usize("trials", 18),
+                batch: 6,
+                sa: crate::explore::SaParams {
+                    n_chains: 8,
+                    n_steps: 30,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let res = crate::tuner::tune_gbt(task.clone(), &measurer, opts);
+            for r in &res.records {
+                let (bm, bn, bk) =
+                    crate::measure::pjrt::variant_tiles(&task, &r.entity);
+                println!(
+                    "  bm={bm:<4} bn={bn:<4} bk={bk:<4} {:>8.2} GFLOPS",
+                    r.gflops
+                );
+            }
+            if let Some((e, g)) = &res.best {
+                let (bm, bn, bk) = crate::measure::pjrt::variant_tiles(&task, e);
+                println!("best tile: ({bm}, {bn}, {bk}) at {g:.2} GFLOPS (real wall-clock)");
+            }
+        }
+        other => {
+            print_usage();
+            bail!("unknown command {other}");
+        }
+    }
+    Ok(())
+}
+
+fn print_usage() {
+    println!(
+        "autotvm — learning to optimize tensor programs (NeurIPS'18 reproduction)
+
+USAGE:
+  autotvm table1
+  autotvm tune      --workload C6 --device sim-gpu --method gbt_rank \\
+                    [--trials N] [--db file.jsonl] [--full]
+  autotvm tune-all  --device sim-gpu [--trials N] [--db file.jsonl]
+  autotvm e2e       --network resnet18 --device sim-gpu [--trials N]
+  autotvm fig <4|5|6|7|8|9|10|11> [--full] [--all-workloads] [--neural] [--device D]
+  autotvm pjrt-demo [--trials N]
+
+devices: sim-gpu (TITAN-X-class), sim-cpu (A53-class), sim-mali, sim-tpu
+methods: random, ga, gbt_rank, gbt_reg, neural, neural_reg"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_parse_flags_and_positionals() {
+        let argv: Vec<String> =
+            ["9", "--full", "--trials", "128", "--device", "sim-cpu"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let a = Args::parse(&argv);
+        assert_eq!(a.positional, vec!["9"]);
+        assert!(a.has("full"));
+        assert_eq!(a.get_usize("trials", 0), 128);
+        assert_eq!(a.get("device"), Some("sim-cpu"));
+    }
+
+    #[test]
+    fn workload_parsing() {
+        let a = Args::parse(&["--workload".into(), "C12".into()]);
+        assert_eq!(workload_of(&a).unwrap(), 12);
+        let bad = Args::parse(&["--workload".into(), "C13".into()]);
+        assert!(workload_of(&bad).is_err());
+    }
+
+    #[test]
+    fn cli_table1_runs() {
+        run(&["table1".to_string()]).unwrap();
+    }
+}

@@ -1,0 +1,391 @@
+//! Exploration module (§3.3, Algorithm 1): parallel simulated annealing
+//! over the config space with the cost model as energy, diversity-aware
+//! batch selection (Eq. 3), ε-greedy random injection — plus the
+//! black-box baselines of Fig. 4 (random search, genetic algorithm).
+
+use crate::schedule::space::{ConfigEntity, ConfigSpace};
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// Batch scorer: maps candidate configs to predicted scores
+/// (higher = better). Implemented by the tuner as featurize + model.
+pub trait Scorer {
+    fn score(&self, entities: &[ConfigEntity]) -> Vec<f64>;
+}
+
+impl<F: Fn(&[ConfigEntity]) -> Vec<f64>> Scorer for F {
+    fn score(&self, entities: &[ConfigEntity]) -> Vec<f64> {
+        self(entities)
+    }
+}
+
+/// Simulated-annealing parameters (paper appendix: 128 parallel chains,
+/// ≤500 steps per run).
+#[derive(Clone, Debug)]
+pub struct SaParams {
+    pub n_chains: usize,
+    pub n_steps: usize,
+    /// Initial and final temperature of a geometric schedule.
+    pub t_start: f64,
+    pub t_end: f64,
+}
+
+impl Default for SaParams {
+    fn default() -> Self {
+        SaParams { n_chains: 128, n_steps: 500, t_start: 1.0, t_end: 0.02 }
+    }
+}
+
+/// Persistent parallel simulated annealing (§3.3: "we make the states of
+/// the Markov chains persistent across f̂ updates").
+pub struct ParallelSa {
+    pub params: SaParams,
+    chains: Vec<ConfigEntity>,
+    chain_scores: Vec<f64>,
+    initialized: bool,
+}
+
+impl ParallelSa {
+    pub fn new(params: SaParams) -> Self {
+        ParallelSa { params, chains: Vec::new(), chain_scores: Vec::new(), initialized: false }
+    }
+
+    /// Run one SA pass with the current model as energy; returns the
+    /// distinct candidates visited, best-first, up to `top_k`.
+    pub fn collect(
+        &mut self,
+        space: &ConfigSpace,
+        scorer: &dyn Scorer,
+        top_k: usize,
+        rng: &mut Rng,
+    ) -> Vec<(ConfigEntity, f64)> {
+        let n = self.params.n_chains;
+        if !self.initialized {
+            self.chains = (0..n).map(|_| space.sample(rng)).collect();
+            self.chain_scores = scorer.score(&self.chains);
+            self.initialized = true;
+        } else {
+            // Rescore persistent states under the updated model.
+            self.chain_scores = scorer.score(&self.chains);
+        }
+
+        let mut visited: HashMap<ConfigEntity, f64> = HashMap::new();
+        for (c, &s) in self.chains.iter().zip(&self.chain_scores) {
+            visited.insert(c.clone(), s);
+        }
+
+        let steps = self.params.n_steps;
+        let decay = (self.params.t_end / self.params.t_start)
+            .powf(1.0 / steps.max(1) as f64);
+        let mut temp = self.params.t_start;
+        // Scale the metropolis criterion by the score spread so the
+        // schedule is insensitive to the model's output units.
+        for _ in 0..steps {
+            let proposals: Vec<ConfigEntity> =
+                self.chains.iter().map(|c| space.mutate(c, rng)).collect();
+            let scores = scorer.score(&proposals);
+            let spread = score_spread(&self.chain_scores).max(1e-9);
+            for i in 0..n {
+                visited.entry(proposals[i].clone()).or_insert(scores[i]);
+                let delta = (scores[i] - self.chain_scores[i]) / spread;
+                if delta >= 0.0 || rng.gen_f64() < (delta / temp).exp() {
+                    self.chains[i] = proposals[i].clone();
+                    self.chain_scores[i] = scores[i];
+                }
+            }
+            temp *= decay;
+        }
+
+        let mut out: Vec<(ConfigEntity, f64)> = visited.into_iter().collect();
+        out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        out.truncate(top_k);
+        out
+    }
+}
+
+fn score_spread(scores: &[f64]) -> f64 {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &s in scores {
+        lo = lo.min(s);
+        hi = hi.max(s);
+    }
+    if hi > lo {
+        hi - lo
+    } else {
+        hi.abs().max(1.0)
+    }
+}
+
+/// Diversity-aware selection (Eq. 3): greedily pick `b` candidates from
+/// `ranked` (best-first, scores attached) maximizing
+/// `Σ score + α · Σ_j |{s_j covered}|`. Submodular ⇒ greedy is
+/// (1−1/e)-optimal [29, 22].
+pub fn diverse_select(
+    num_knobs: usize,
+    ranked: &[(ConfigEntity, f64)],
+    b: usize,
+    alpha: f64,
+) -> Vec<ConfigEntity> {
+    let b = b.min(ranked.len());
+    let mut covered: Vec<std::collections::HashSet<u32>> =
+        vec![std::collections::HashSet::new(); num_knobs];
+    let mut chosen: Vec<usize> = Vec::with_capacity(b);
+    let mut used = vec![false; ranked.len()];
+    // Normalize scores so α has a stable meaning across models.
+    let spread = {
+        let s: Vec<f64> = ranked.iter().map(|r| r.1).collect();
+        score_spread(&s)
+    };
+    for _ in 0..b {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, (cand, score)) in ranked.iter().enumerate() {
+            if used[i] {
+                continue;
+            }
+            let novel = (0..num_knobs)
+                .filter(|&j| !covered[j].contains(&cand.component(j)))
+                .count() as f64;
+            let gain = score / spread + alpha * novel / num_knobs as f64;
+            if best.map_or(true, |(_, g)| gain > g) {
+                best = Some((i, gain));
+            }
+        }
+        let Some((i, _)) = best else { break };
+        used[i] = true;
+        for j in 0..num_knobs {
+            covered[j].insert(ranked[i].0.component(j));
+        }
+        chosen.push(i);
+    }
+    chosen.into_iter().map(|i| ranked[i].0.clone()).collect()
+}
+
+/// Plain top-`b` selection (the λ = 1 / no-diversity ablation).
+pub fn top_select(ranked: &[(ConfigEntity, f64)], b: usize) -> Vec<ConfigEntity> {
+    ranked.iter().take(b).map(|(c, _)| c.clone()).collect()
+}
+
+/// Random-search baseline: `b` fresh uniform samples, avoiding
+/// duplicates within the batch and against `seen`.
+pub fn random_batch(
+    space: &ConfigSpace,
+    b: usize,
+    seen: &std::collections::HashSet<ConfigEntity>,
+    rng: &mut Rng,
+) -> Vec<ConfigEntity> {
+    let mut out = Vec::with_capacity(b);
+    let mut local: std::collections::HashSet<ConfigEntity> = Default::default();
+    let mut attempts = 0;
+    while out.len() < b && attempts < b * 100 {
+        attempts += 1;
+        let e = space.sample(rng);
+        if !seen.contains(&e) && local.insert(e.clone()) {
+            out.push(e);
+        }
+    }
+    out
+}
+
+/// Genetic-algorithm baseline (Fig. 4 "GA"): elite survival, tournament
+/// parent selection, knob-wise crossover + mutation. Each generation
+/// proposes one measurement batch.
+pub struct Genetic {
+    pub population: usize,
+    pub elite: usize,
+    pub mutation_prob: f64,
+    pool: Vec<(ConfigEntity, f64)>,
+}
+
+impl Genetic {
+    pub fn new(population: usize) -> Self {
+        Genetic { population, elite: population / 4, mutation_prob: 0.3, pool: Vec::new() }
+    }
+
+    /// Propose the next generation.
+    pub fn propose(&mut self, space: &ConfigSpace, rng: &mut Rng) -> Vec<ConfigEntity> {
+        if self.pool.is_empty() {
+            return (0..self.population).map(|_| space.sample(rng)).collect();
+        }
+        self.pool.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let parents: Vec<&ConfigEntity> =
+            self.pool.iter().take(self.elite.max(2)).map(|(c, _)| c).collect();
+        let mut next = Vec::with_capacity(self.population);
+        while next.len() < self.population {
+            let pa = parents[rng.gen_range(0..parents.len())];
+            let pb = parents[rng.gen_range(0..parents.len())];
+            let mut child = space.crossover(pa, pb, rng);
+            if rng.gen_bool(self.mutation_prob) {
+                child = space.mutate(&child, rng);
+            }
+            next.push(child);
+        }
+        next
+    }
+
+    /// Report measured fitness back (higher = better).
+    pub fn update(&mut self, batch: &[ConfigEntity], fitness: &[f64]) {
+        for (c, &f) in batch.iter().zip(fitness) {
+            self.pool.push((c.clone(), f));
+        }
+        // keep the pool bounded
+        if self.pool.len() > 4 * self.population {
+            self.pool.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            self.pool.truncate(2 * self.population);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::space::{factorizations, Knob};
+
+    fn space() -> ConfigSpace {
+        ConfigSpace {
+            knobs: vec![
+                Knob::Split {
+                    name: "a".into(),
+                    extent: 64,
+                    parts: 2,
+                    options: factorizations(64, 2),
+                },
+                Knob::Split {
+                    name: "b".into(),
+                    extent: 64,
+                    parts: 2,
+                    options: factorizations(64, 2),
+                },
+                Knob::Choice { name: "c".into(), options: vec![0, 1, 2, 3] },
+            ],
+        }
+    }
+
+    /// Toy score: prefers knob choices close to a target.
+    fn toy_scorer(space: &ConfigSpace) -> impl Scorer + '_ {
+        move |es: &[ConfigEntity]| {
+            es.iter()
+                .map(|e| {
+                    let f = space.config_features(e);
+                    // peak at a=(8,8) b=(4,16) c=2
+                    -((f[0] - 3.0).powi(2)
+                        + (f[1] - 3.0).powi(2)
+                        + (f[2] - 2.0).powi(2)
+                        + (f[3] - 4.0).powi(2)
+                        + (f[4] - (3f64).log2()).powi(2))
+                })
+                .collect()
+        }
+    }
+
+    #[test]
+    fn sa_finds_high_score_region() {
+        let sp = space();
+        let scorer = toy_scorer(&sp);
+        let mut sa = ParallelSa::new(SaParams {
+            n_chains: 16,
+            n_steps: 120,
+            ..Default::default()
+        });
+        let mut rng = Rng::seed_from_u64(0);
+        let top = sa.collect(&sp, &scorer, 8, &mut rng);
+        assert!(!top.is_empty());
+        // best found should be near the optimum (score > -0.5)
+        assert!(top[0].1 > -0.5, "best score {}", top[0].1);
+        // sorted best-first
+        for w in top.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+
+    #[test]
+    fn sa_chains_persist() {
+        let sp = space();
+        let scorer = toy_scorer(&sp);
+        let mut sa = ParallelSa::new(SaParams { n_chains: 8, n_steps: 30, ..Default::default() });
+        let mut rng = Rng::seed_from_u64(1);
+        sa.collect(&sp, &scorer, 4, &mut rng);
+        let before = sa.chains.clone();
+        sa.collect(&sp, &scorer, 4, &mut rng);
+        // chains continue from previous states (same vector length, and
+        // they were not re-randomized — they should score at least as
+        // well as fresh uniform ones on average)
+        assert_eq!(before.len(), sa.chains.len());
+    }
+
+    #[test]
+    fn diverse_select_covers_more_components() {
+        let sp = space();
+        // candidates: many near-identical top configs + some diverse ones
+        let mut ranked = Vec::new();
+        for i in 0..10 {
+            let mut e = sp.entity(0);
+            e.choices[2] = 0;
+            e.choices[0] = 0;
+            e.choices[1] = i % 2;
+            ranked.push((e, 10.0 - i as f64 * 0.01));
+        }
+        for i in 0..10 {
+            let mut e = sp.entity(0);
+            e.choices[0] = (i % 6) as u32 + 1;
+            e.choices[1] = (i % 6) as u32 + 1;
+            e.choices[2] = (i % 4) as u32;
+            ranked.push((e, 9.5));
+        }
+        let plain = top_select(&ranked, 8);
+        let diverse = diverse_select(sp.num_knobs(), &ranked, 8, 2.0);
+        let coverage = |sel: &[ConfigEntity]| {
+            (0..sp.num_knobs())
+                .map(|j| {
+                    sel.iter()
+                        .map(|e| e.component(j))
+                        .collect::<std::collections::HashSet<_>>()
+                        .len()
+                })
+                .sum::<usize>()
+        };
+        assert!(
+            coverage(&diverse) > coverage(&plain),
+            "diverse {} !> plain {}",
+            coverage(&diverse),
+            coverage(&plain)
+        );
+        assert_eq!(diverse.len(), 8);
+    }
+
+    #[test]
+    fn random_batch_distinct_and_unseen() {
+        let sp = space();
+        let mut rng = Rng::seed_from_u64(3);
+        let mut seen = std::collections::HashSet::new();
+        seen.insert(sp.entity(0));
+        let batch = random_batch(&sp, 16, &seen, &mut rng);
+        let set: std::collections::HashSet<_> = batch.iter().collect();
+        assert_eq!(set.len(), batch.len());
+        assert!(!batch.contains(&sp.entity(0)));
+    }
+
+    #[test]
+    fn ga_improves_over_generations() {
+        let sp = space();
+        let scorer = toy_scorer(&sp);
+        let mut ga = Genetic::new(16);
+        let mut rng = Rng::seed_from_u64(4);
+        let mut first_best = f64::NEG_INFINITY;
+        let mut last_best = f64::NEG_INFINITY;
+        for gen in 0..12 {
+            let batch = ga.propose(&sp, &mut rng);
+            let fit = scorer.score(&batch);
+            let best = fit.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            if gen == 0 {
+                first_best = best;
+            }
+            last_best = last_best.max(best);
+            ga.update(&batch, &fit);
+        }
+        assert!(
+            last_best >= first_best,
+            "GA got worse: {last_best} < {first_best}"
+        );
+    }
+}

@@ -1,0 +1,207 @@
+//! Affine index expressions over iteration variables.
+//!
+//! Lowered programs keep all buffer indices affine in the leaf loop
+//! variables (splits substitute `y = yo*ty + yi` rather than emitting
+//! div/mod), so stride analysis — the backbone of both the simulator and
+//! the loop-context features (Table 2 of the paper) — is exact.
+
+use std::collections::HashMap;
+
+/// Interned iteration-variable id, scoped to one [`VarPool`].
+pub type VarId = u32;
+
+/// Per-computation variable table.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct VarPool {
+    names: Vec<String>,
+}
+
+impl VarPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn fresh(&mut self, name: impl Into<String>) -> VarId {
+        let id = self.names.len() as VarId;
+        self.names.push(name.into());
+        id
+    }
+
+    pub fn name(&self, v: VarId) -> &str {
+        &self.names[v as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+}
+
+/// An affine index expression `c0 + Σ c_v · v`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct IndexExpr {
+    pub constant: i64,
+    /// Sorted (var, coefficient) pairs; coefficients are never zero.
+    pub terms: Vec<(VarId, i64)>,
+}
+
+impl IndexExpr {
+    pub fn constant(c: i64) -> Self {
+        Self { constant: c, terms: vec![] }
+    }
+
+    pub fn var(v: VarId) -> Self {
+        Self { constant: 0, terms: vec![(v, 1)] }
+    }
+
+    pub fn scaled_var(v: VarId, c: i64) -> Self {
+        if c == 0 {
+            Self::constant(0)
+        } else {
+            Self { constant: 0, terms: vec![(v, c)] }
+        }
+    }
+
+    /// Coefficient of `v` (0 if absent).
+    pub fn coeff(&self, v: VarId) -> i64 {
+        self.terms
+            .iter()
+            .find(|(t, _)| *t == v)
+            .map(|(_, c)| *c)
+            .unwrap_or(0)
+    }
+
+    pub fn add(&self, other: &IndexExpr) -> IndexExpr {
+        // merge two sorted term lists (hot path: called throughout
+        // lowering; avoids hashing — see EXPERIMENTS.md §Perf)
+        let (a, b) = (&self.terms, &other.terms);
+        let mut terms = Vec::with_capacity(a.len() + b.len());
+        let (mut i, mut j) = (0, 0);
+        while i < a.len() && j < b.len() {
+            match a[i].0.cmp(&b[j].0) {
+                std::cmp::Ordering::Less => {
+                    terms.push(a[i]);
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    terms.push(b[j]);
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    let c = a[i].1 + b[j].1;
+                    if c != 0 {
+                        terms.push((a[i].0, c));
+                    }
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        terms.extend_from_slice(&a[i..]);
+        terms.extend_from_slice(&b[j..]);
+        IndexExpr { constant: self.constant + other.constant, terms }
+    }
+
+    pub fn scale(&self, k: i64) -> IndexExpr {
+        if k == 0 {
+            return IndexExpr::constant(0);
+        }
+        IndexExpr {
+            constant: self.constant * k,
+            terms: self.terms.iter().map(|(v, c)| (*v, c * k)).collect(),
+        }
+    }
+
+    pub fn offset(&self, k: i64) -> IndexExpr {
+        IndexExpr { constant: self.constant + k, terms: self.terms.clone() }
+    }
+
+    /// Substitute variable `v` by expression `e`.
+    pub fn substitute(&self, v: VarId, e: &IndexExpr) -> IndexExpr {
+        let c = self.coeff(v);
+        if c == 0 {
+            return self.clone();
+        }
+        let mut base = IndexExpr {
+            constant: self.constant,
+            terms: self.terms.iter().copied().filter(|(t, _)| *t != v).collect(),
+        };
+        base = base.add(&e.scale(c));
+        base
+    }
+
+    /// Evaluate at a concrete assignment (vars absent default to 0).
+    pub fn eval(&self, env: &HashMap<VarId, i64>) -> i64 {
+        self.constant
+            + self
+                .terms
+                .iter()
+                .map(|(v, c)| c * env.get(v).copied().unwrap_or(0))
+                .sum::<i64>()
+    }
+
+    pub fn is_constant(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    pub fn display(&self, pool: &VarPool) -> String {
+        let mut parts = Vec::new();
+        for (v, c) in &self.terms {
+            let n = pool.name(*v);
+            if *c == 1 {
+                parts.push(n.to_string());
+            } else {
+                parts.push(format!("{c}*{n}"));
+            }
+        }
+        if self.constant != 0 || parts.is_empty() {
+            parts.push(self.constant.to_string());
+        }
+        parts.join(" + ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_merges_and_drops_zero() {
+        let mut p = VarPool::new();
+        let x = p.fresh("x");
+        let y = p.fresh("y");
+        let a = IndexExpr { constant: 1, terms: vec![(x, 2), (y, 3)] };
+        let b = IndexExpr { constant: 2, terms: vec![(x, -2), (y, 1)] };
+        let s = a.add(&b);
+        assert_eq!(s.constant, 3);
+        assert_eq!(s.terms, vec![(y, 4)]);
+    }
+
+    #[test]
+    fn substitute_split_var() {
+        // y = yo*4 + yi substituted into A[y*8 + 3]
+        let mut p = VarPool::new();
+        let y = p.fresh("y");
+        let yo = p.fresh("yo");
+        let yi = p.fresh("yi");
+        let idx = IndexExpr { constant: 3, terms: vec![(y, 8)] };
+        let sub = IndexExpr { constant: 0, terms: vec![(yo, 4), (yi, 1)] };
+        let out = idx.substitute(y, &sub);
+        assert_eq!(out.coeff(yo), 32);
+        assert_eq!(out.coeff(yi), 8);
+        assert_eq!(out.constant, 3);
+        assert_eq!(out.coeff(y), 0);
+    }
+
+    #[test]
+    fn eval_matches_structure() {
+        let mut p = VarPool::new();
+        let x = p.fresh("x");
+        let e = IndexExpr { constant: 5, terms: vec![(x, 7)] };
+        let env = HashMap::from([(x, 3)]);
+        assert_eq!(e.eval(&env), 26);
+    }
+}

@@ -1,0 +1,242 @@
+//! Tensor expression IR — the space `E` of §2.
+//!
+//! A [`ComputeDef`] is an index-expression operator specification, e.g.
+//! `C[y, x] = Σ_k A[k, y] * B[k, x]` (the paper's Fig. 1 running
+//! example). It names output axes, reduce axes and a scalar body over
+//! tensor accesses. The schedule space `S_e` ([`crate::schedule`]) and
+//! the compiler `g` ([`crate::lower`]) are defined relative to this IR.
+
+mod index;
+pub mod ops;
+pub mod winograd;
+
+pub use index::{IndexExpr, VarId, VarPool};
+
+
+/// A typed tensor placeholder (an input of the computation).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<i64>,
+}
+
+impl TensorSpec {
+    pub fn new(name: impl Into<String>, shape: &[i64]) -> Self {
+        Self { name: name.into(), shape: shape.to_vec() }
+    }
+
+    /// Number of elements.
+    pub fn numel(&self) -> i64 {
+        self.shape.iter().product()
+    }
+
+    /// Row-major strides of the flattened buffer.
+    pub fn strides(&self) -> Vec<i64> {
+        let mut s = vec![1i64; self.shape.len()];
+        for d in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[d] = s[d + 1] * self.shape[d + 1];
+        }
+        s
+    }
+}
+
+/// Iteration variable kind: spatial (parallelizable output axis) or
+/// reduction (commutative accumulate).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IterKind {
+    Spatial,
+    Reduce,
+}
+
+/// One iteration axis of a compute definition.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IterVar {
+    pub var: VarId,
+    pub name: String,
+    pub extent: i64,
+    pub kind: IterKind,
+}
+
+/// A read `T[i_0, ..., i_{r-1}]` of an input tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Access {
+    pub tensor: String,
+    pub indices: Vec<IndexExpr>,
+}
+
+/// Scalar value expression forming the body of a compute definition.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BodyExpr {
+    /// Read of an input tensor.
+    Load(Access),
+    /// Immediate constant.
+    Imm(f64),
+    Add(Box<BodyExpr>, Box<BodyExpr>),
+    Sub(Box<BodyExpr>, Box<BodyExpr>),
+    Mul(Box<BodyExpr>, Box<BodyExpr>),
+    Max(Box<BodyExpr>, Box<BodyExpr>),
+    /// `max(x, 0)` — lets us fuse ReLU epilogues.
+    Relu(Box<BodyExpr>),
+    /// Select on an index predicate `cond ? a : b` (used for padding).
+    Select(PredExpr, Box<BodyExpr>, Box<BodyExpr>),
+}
+
+impl BodyExpr {
+    pub fn load(tensor: impl Into<String>, indices: Vec<IndexExpr>) -> Self {
+        BodyExpr::Load(Access { tensor: tensor.into(), indices })
+    }
+
+    /// All tensor accesses in this expression, in evaluation order.
+    pub fn accesses(&self) -> Vec<&Access> {
+        let mut out = Vec::new();
+        self.collect_accesses(&mut out);
+        out
+    }
+
+    fn collect_accesses<'a>(&'a self, out: &mut Vec<&'a Access>) {
+        match self {
+            BodyExpr::Load(a) => out.push(a),
+            BodyExpr::Imm(_) => {}
+            BodyExpr::Add(a, b)
+            | BodyExpr::Sub(a, b)
+            | BodyExpr::Mul(a, b)
+            | BodyExpr::Max(a, b) => {
+                a.collect_accesses(out);
+                b.collect_accesses(out);
+            }
+            BodyExpr::Relu(a) => a.collect_accesses(out),
+            BodyExpr::Select(_, a, b) => {
+                a.collect_accesses(out);
+                b.collect_accesses(out);
+            }
+        }
+    }
+
+    /// Number of scalar arithmetic ops per evaluation (flop estimate).
+    pub fn flops(&self) -> u64 {
+        match self {
+            BodyExpr::Load(_) | BodyExpr::Imm(_) => 0,
+            BodyExpr::Add(a, b)
+            | BodyExpr::Sub(a, b)
+            | BodyExpr::Mul(a, b)
+            | BodyExpr::Max(a, b) => 1 + a.flops() + b.flops(),
+            BodyExpr::Relu(a) => 1 + a.flops(),
+            BodyExpr::Select(_, a, b) => 1 + a.flops() + b.flops(),
+        }
+    }
+}
+
+/// Index predicate for padding selects: `lo <= e < hi` conjunctions.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PredExpr {
+    pub bounds: Vec<(IndexExpr, i64, i64)>,
+}
+
+/// Reduction combiner.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Combiner {
+    /// `acc += body`, identity 0.
+    Sum,
+    /// `acc = max(acc, body)`, identity -inf.
+    Max,
+}
+
+impl Combiner {
+    pub fn identity(self) -> f64 {
+        match self {
+            Combiner::Sum => 0.0,
+            Combiner::Max => f64::NEG_INFINITY,
+        }
+    }
+}
+
+/// An index-expression operator specification: `e ∈ E`.
+///
+/// Output element `output[axes...] = reduce(body)` over `reduce_axes`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ComputeDef {
+    pub name: String,
+    pub output: TensorSpec,
+    pub inputs: Vec<TensorSpec>,
+    pub axes: Vec<IterVar>,
+    pub reduce_axes: Vec<IterVar>,
+    pub body: BodyExpr,
+    pub combiner: Combiner,
+    /// Fused elementwise epilogue applied to the accumulated value
+    /// (e.g. ReLU) — the operator-fusion hook used by the graph layer.
+    pub epilogue: Option<Epilogue>,
+    pub vars: VarPool,
+}
+
+/// Elementwise epilogues that can be fused onto a reduction output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Epilogue {
+    Relu,
+    /// Add a per-channel bias then ReLU (bias read cost is negligible and
+    /// modeled as one extra flop).
+    BiasRelu,
+}
+
+impl ComputeDef {
+    /// Total floating point operations of the full computation.
+    pub fn total_flops(&self) -> u64 {
+        let spatial: u64 = self.axes.iter().map(|a| a.extent as u64).product();
+        let red: u64 = self.reduce_axes.iter().map(|a| a.extent as u64).product();
+        let per_iter = self.body.flops() + if self.reduce_axes.is_empty() { 0 } else { 1 };
+        let epi = self.epilogue.map_or(0, |e| match e {
+            Epilogue::Relu => 1,
+            Epilogue::BiasRelu => 2,
+        });
+        spatial * red * per_iter + spatial * epi
+    }
+
+    /// All iteration axes, spatial first.
+    pub fn all_axes(&self) -> impl Iterator<Item = &IterVar> {
+        self.axes.iter().chain(self.reduce_axes.iter())
+    }
+
+    pub fn find_axis(&self, name: &str) -> Option<&IterVar> {
+        self.all_axes().find(|a| a.name == name)
+    }
+
+    /// A short identity key for task deduplication (op name already
+    /// encodes shape parameters by convention of `ops::*`).
+    pub fn task_key(&self) -> String {
+        self.name.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_strides_row_major() {
+        let t = TensorSpec::new("A", &[2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+        assert_eq!(t.numel(), 24);
+    }
+
+    #[test]
+    fn body_flops_counts_ops() {
+        let a = BodyExpr::load("A", vec![]);
+        let b = BodyExpr::load("B", vec![]);
+        let e = BodyExpr::Mul(Box::new(a), Box::new(b));
+        assert_eq!(e.flops(), 1);
+        let e2 = BodyExpr::Relu(Box::new(e.clone()));
+        assert_eq!(e2.flops(), 2);
+    }
+
+    #[test]
+    fn accesses_collects_in_order() {
+        let e = BodyExpr::Add(
+            Box::new(BodyExpr::load("A", vec![])),
+            Box::new(BodyExpr::Mul(
+                Box::new(BodyExpr::load("B", vec![])),
+                Box::new(BodyExpr::load("C", vec![])),
+            )),
+        );
+        let names: Vec<_> = e.accesses().iter().map(|a| a.tensor.clone()).collect();
+        assert_eq!(names, vec!["A", "B", "C"]);
+    }
+}

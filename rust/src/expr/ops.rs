@@ -1,0 +1,346 @@
+//! Operator constructors — the concrete index expressions used by the
+//! paper's evaluation: matmul (Fig. 1), conv2d (Table 1, C1–C12),
+//! depthwise conv2d (MobileNet), dense (DQN/LSTM), pooling and
+//! elementwise ops (graph glue).
+//!
+//! Naming convention: the `name` encodes the shape parameters so that
+//! `ComputeDef::task_key` deduplicates identical workloads during task
+//! extraction.
+
+use super::{Access, BodyExpr, Combiner, ComputeDef, Epilogue, IterKind, IterVar, PredExpr, TensorSpec};
+use crate::expr::{IndexExpr, VarPool};
+
+fn itv(pool: &mut VarPool, name: &str, extent: i64, kind: IterKind) -> IterVar {
+    let var = pool.fresh(name);
+    IterVar { var, name: name.to_string(), extent, kind }
+}
+
+/// `C[y, x] = Σ_k A[k, y] * B[k, x]` — the paper's Fig. 1 example
+/// (note the transposed-A layout used in the paper).
+pub fn matmul(n: i64, m: i64, k: i64) -> ComputeDef {
+    let mut pool = VarPool::new();
+    let y = itv(&mut pool, "y", n, IterKind::Spatial);
+    let x = itv(&mut pool, "x", m, IterKind::Spatial);
+    let kk = itv(&mut pool, "k", k, IterKind::Reduce);
+    let body = BodyExpr::Mul(
+        Box::new(BodyExpr::load("A", vec![IndexExpr::var(kk.var), IndexExpr::var(y.var)])),
+        Box::new(BodyExpr::load("B", vec![IndexExpr::var(kk.var), IndexExpr::var(x.var)])),
+    );
+    ComputeDef {
+        name: format!("matmul_n{n}_m{m}_k{k}"),
+        output: TensorSpec::new("C", &[n, m]),
+        inputs: vec![TensorSpec::new("A", &[k, n]), TensorSpec::new("B", &[k, m])],
+        axes: vec![y, x],
+        reduce_axes: vec![kk],
+        body,
+        combiner: Combiner::Sum,
+        epilogue: None,
+        vars: pool,
+    }
+}
+
+/// Parameters of a 2-D convolution workload (NCHW, OIHW kernel).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Conv2dParams {
+    pub n: i64,
+    pub h: i64,
+    pub w: i64,
+    pub ic: i64,
+    pub oc: i64,
+    pub kh: i64,
+    pub kw: i64,
+    pub stride: i64,
+    pub pad: i64,
+}
+
+impl Conv2dParams {
+    pub fn out_h(&self) -> i64 {
+        (self.h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+    pub fn out_w(&self) -> i64 {
+        (self.w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+    /// Multiply–add count ×2, the standard conv GFLOP accounting.
+    pub fn macs(&self) -> u64 {
+        (self.n * self.oc * self.out_h() * self.out_w() * self.ic * self.kh * self.kw) as u64
+    }
+}
+
+/// `O[n,oc,oy,ox] = Σ_{ic,ky,kx} I[n,ic,oy*s+ky-p,ox*s+kx-p] * W[oc,ic,ky,kx]`
+///
+/// Padding is modeled with a [`PredExpr`] select (zero outside bounds),
+/// like TVM's `pad` stage folded into the consumer.
+pub fn conv2d(p: Conv2dParams) -> ComputeDef {
+    let mut pool = VarPool::new();
+    let oh = p.out_h();
+    let ow = p.out_w();
+    let n = itv(&mut pool, "n", p.n, IterKind::Spatial);
+    let oc = itv(&mut pool, "oc", p.oc, IterKind::Spatial);
+    let oy = itv(&mut pool, "oy", oh, IterKind::Spatial);
+    let ox = itv(&mut pool, "ox", ow, IterKind::Spatial);
+    let ic = itv(&mut pool, "ic", p.ic, IterKind::Reduce);
+    let ky = itv(&mut pool, "ky", p.kh, IterKind::Reduce);
+    let kx = itv(&mut pool, "kx", p.kw, IterKind::Reduce);
+
+    let iy = IndexExpr::scaled_var(oy.var, p.stride)
+        .add(&IndexExpr::var(ky.var))
+        .offset(-p.pad);
+    let ix = IndexExpr::scaled_var(ox.var, p.stride)
+        .add(&IndexExpr::var(kx.var))
+        .offset(-p.pad);
+
+    let data = BodyExpr::Load(Access {
+        tensor: "I".into(),
+        indices: vec![IndexExpr::var(n.var), IndexExpr::var(ic.var), iy.clone(), ix.clone()],
+    });
+    let data = if p.pad > 0 {
+        BodyExpr::Select(
+            PredExpr { bounds: vec![(iy, 0, p.h), (ix, 0, p.w)] },
+            Box::new(data),
+            Box::new(BodyExpr::Imm(0.0)),
+        )
+    } else {
+        data
+    };
+    let weight = BodyExpr::Load(Access {
+        tensor: "W".into(),
+        indices: vec![
+            IndexExpr::var(oc.var),
+            IndexExpr::var(ic.var),
+            IndexExpr::var(ky.var),
+            IndexExpr::var(kx.var),
+        ],
+    });
+    let body = BodyExpr::Mul(Box::new(data), Box::new(weight));
+
+    ComputeDef {
+        name: format!(
+            "conv2d_n{}_h{}_w{}_ic{}_oc{}_k{}_s{}_p{}",
+            p.n, p.h, p.w, p.ic, p.oc, p.kh, p.stride, p.pad
+        ),
+        output: TensorSpec::new("O", &[p.n, p.oc, oh, ow]),
+        inputs: vec![
+            TensorSpec::new("I", &[p.n, p.ic, p.h, p.w]),
+            TensorSpec::new("W", &[p.oc, p.ic, p.kh, p.kw]),
+        ],
+        axes: vec![n, oc, oy, ox],
+        reduce_axes: vec![ic, ky, kx],
+        body,
+        combiner: Combiner::Sum,
+        epilogue: None,
+        vars: pool,
+    }
+}
+
+/// Depthwise conv2d (MobileNet): one filter per channel, no `ic` sum.
+pub fn depthwise_conv2d(p: Conv2dParams) -> ComputeDef {
+    assert_eq!(p.ic, p.oc, "depthwise conv has channel multiplier 1 here");
+    let mut pool = VarPool::new();
+    let oh = p.out_h();
+    let ow = p.out_w();
+    let n = itv(&mut pool, "n", p.n, IterKind::Spatial);
+    let c = itv(&mut pool, "c", p.oc, IterKind::Spatial);
+    let oy = itv(&mut pool, "oy", oh, IterKind::Spatial);
+    let ox = itv(&mut pool, "ox", ow, IterKind::Spatial);
+    let ky = itv(&mut pool, "ky", p.kh, IterKind::Reduce);
+    let kx = itv(&mut pool, "kx", p.kw, IterKind::Reduce);
+
+    let iy = IndexExpr::scaled_var(oy.var, p.stride)
+        .add(&IndexExpr::var(ky.var))
+        .offset(-p.pad);
+    let ix = IndexExpr::scaled_var(ox.var, p.stride)
+        .add(&IndexExpr::var(kx.var))
+        .offset(-p.pad);
+    let data = BodyExpr::Load(Access {
+        tensor: "I".into(),
+        indices: vec![IndexExpr::var(n.var), IndexExpr::var(c.var), iy.clone(), ix.clone()],
+    });
+    let data = if p.pad > 0 {
+        BodyExpr::Select(
+            PredExpr { bounds: vec![(iy, 0, p.h), (ix, 0, p.w)] },
+            Box::new(data),
+            Box::new(BodyExpr::Imm(0.0)),
+        )
+    } else {
+        data
+    };
+    let weight = BodyExpr::Load(Access {
+        tensor: "W".into(),
+        indices: vec![IndexExpr::var(c.var), IndexExpr::var(ky.var), IndexExpr::var(kx.var)],
+    });
+    ComputeDef {
+        name: format!(
+            "dwconv2d_n{}_h{}_w{}_c{}_k{}_s{}_p{}",
+            p.n, p.h, p.w, p.oc, p.kh, p.stride, p.pad
+        ),
+        output: TensorSpec::new("O", &[p.n, p.oc, oh, ow]),
+        inputs: vec![
+            TensorSpec::new("I", &[p.n, p.ic, p.h, p.w]),
+            TensorSpec::new("W", &[p.oc, p.kh, p.kw]),
+        ],
+        axes: vec![n, c, oy, ox],
+        reduce_axes: vec![ky, kx],
+        body: BodyExpr::Mul(Box::new(data), Box::new(weight)),
+        combiner: Combiner::Sum,
+        epilogue: None,
+        vars: pool,
+    }
+}
+
+/// Dense / fully connected: `O[b, j] = Σ_k X[b, k] * W[j, k]`.
+pub fn dense(batch: i64, out_dim: i64, in_dim: i64) -> ComputeDef {
+    let mut pool = VarPool::new();
+    let b = itv(&mut pool, "b", batch, IterKind::Spatial);
+    let j = itv(&mut pool, "j", out_dim, IterKind::Spatial);
+    let k = itv(&mut pool, "k", in_dim, IterKind::Reduce);
+    let body = BodyExpr::Mul(
+        Box::new(BodyExpr::load("X", vec![IndexExpr::var(b.var), IndexExpr::var(k.var)])),
+        Box::new(BodyExpr::load("W", vec![IndexExpr::var(j.var), IndexExpr::var(k.var)])),
+    );
+    ComputeDef {
+        name: format!("dense_b{batch}_o{out_dim}_i{in_dim}"),
+        output: TensorSpec::new("O", &[batch, out_dim]),
+        inputs: vec![
+            TensorSpec::new("X", &[batch, in_dim]),
+            TensorSpec::new("W", &[out_dim, in_dim]),
+        ],
+        axes: vec![b, j],
+        reduce_axes: vec![k],
+        body,
+        combiner: Combiner::Sum,
+        epilogue: None,
+        vars: pool,
+    }
+}
+
+/// Max pooling `kxk` stride `s` (ResNet stem / head glue).
+pub fn max_pool2d(n: i64, c: i64, h: i64, w: i64, k: i64, s: i64) -> ComputeDef {
+    let mut pool = VarPool::new();
+    let oh = (h - k) / s + 1;
+    let ow = (w - k) / s + 1;
+    let nn = itv(&mut pool, "n", n, IterKind::Spatial);
+    let cc = itv(&mut pool, "c", c, IterKind::Spatial);
+    let oy = itv(&mut pool, "oy", oh, IterKind::Spatial);
+    let ox = itv(&mut pool, "ox", ow, IterKind::Spatial);
+    let ky = itv(&mut pool, "ky", k, IterKind::Reduce);
+    let kx = itv(&mut pool, "kx", k, IterKind::Reduce);
+    let iy = IndexExpr::scaled_var(oy.var, s).add(&IndexExpr::var(ky.var));
+    let ix = IndexExpr::scaled_var(ox.var, s).add(&IndexExpr::var(kx.var));
+    let data = BodyExpr::Load(Access {
+        tensor: "I".into(),
+        indices: vec![IndexExpr::var(nn.var), IndexExpr::var(cc.var), iy, ix],
+    });
+    ComputeDef {
+        name: format!("maxpool_n{n}_c{c}_h{h}_w{w}_k{k}_s{s}"),
+        output: TensorSpec::new("O", &[n, c, oh, ow]),
+        inputs: vec![TensorSpec::new("I", &[n, c, h, w])],
+        axes: vec![nn, cc, oy, ox],
+        reduce_axes: vec![ky, kx],
+        body: data,
+        combiner: Combiner::Max,
+        epilogue: None,
+        vars: pool,
+    }
+}
+
+/// Elementwise binary add over a flat shape (residual connections).
+pub fn elemwise_add(shape: &[i64]) -> ComputeDef {
+    let mut pool = VarPool::new();
+    let numel: i64 = shape.iter().product();
+    let i = itv(&mut pool, "i", numel, IterKind::Spatial);
+    let body = BodyExpr::Add(
+        Box::new(BodyExpr::load("A", vec![IndexExpr::var(i.var)])),
+        Box::new(BodyExpr::load("B", vec![IndexExpr::var(i.var)])),
+    );
+    ComputeDef {
+        name: format!("ewadd_{numel}"),
+        output: TensorSpec::new("O", &[numel]),
+        inputs: vec![TensorSpec::new("A", &[numel]), TensorSpec::new("B", &[numel])],
+        axes: vec![i],
+        reduce_axes: vec![],
+        body,
+        combiner: Combiner::Sum,
+        epilogue: None,
+        vars: pool,
+    }
+}
+
+/// ReLU over a flat shape.
+pub fn relu(shape: &[i64]) -> ComputeDef {
+    let mut pool = VarPool::new();
+    let numel: i64 = shape.iter().product();
+    let i = itv(&mut pool, "i", numel, IterKind::Spatial);
+    let body = BodyExpr::Relu(Box::new(BodyExpr::load("A", vec![IndexExpr::var(i.var)])));
+    ComputeDef {
+        name: format!("relu_{numel}"),
+        output: TensorSpec::new("O", &[numel]),
+        inputs: vec![TensorSpec::new("A", &[numel])],
+        axes: vec![i],
+        reduce_axes: vec![],
+        body,
+        combiner: Combiner::Sum,
+        epilogue: None,
+        vars: pool,
+    }
+}
+
+/// Fuse a ReLU (or bias+ReLU) epilogue into a reduction compute — the
+/// operator-fusion primitive the end-to-end evaluation relies on.
+pub fn with_epilogue(mut def: ComputeDef, epi: Epilogue) -> ComputeDef {
+    def.epilogue = Some(epi);
+    def.name = format!(
+        "{}_{}",
+        def.name,
+        match epi {
+            Epilogue::Relu => "relu",
+            Epilogue::BiasRelu => "biasrelu",
+        }
+    );
+    def
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_flops() {
+        let m = matmul(1024, 1024, 1024);
+        // mul + add per inner iteration
+        assert_eq!(m.total_flops(), 2 * 1024 * 1024 * 1024);
+    }
+
+    #[test]
+    fn conv_output_shape_c1() {
+        // C1 of Table 1: 224x224, 3->64, k7 s2 (pad 3)
+        let p = Conv2dParams { n: 1, h: 224, w: 224, ic: 3, oc: 64, kh: 7, kw: 7, stride: 2, pad: 3 };
+        assert_eq!(p.out_h(), 112);
+        let c = conv2d(p);
+        assert_eq!(c.output.shape, vec![1, 64, 112, 112]);
+        assert_eq!(c.axes.len(), 4);
+        assert_eq!(c.reduce_axes.len(), 3);
+    }
+
+    #[test]
+    fn conv_padding_select_present() {
+        let p = Conv2dParams { n: 1, h: 56, w: 56, ic: 64, oc: 64, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let c = conv2d(p);
+        assert!(matches!(
+            c.body,
+            BodyExpr::Mul(ref a, _) if matches!(**a, BodyExpr::Select(..))
+        ));
+    }
+
+    #[test]
+    fn depthwise_has_two_reduce_axes() {
+        let p = Conv2dParams { n: 1, h: 112, w: 112, ic: 32, oc: 32, kh: 3, kw: 3, stride: 1, pad: 1 };
+        let d = depthwise_conv2d(p);
+        assert_eq!(d.reduce_axes.len(), 2);
+    }
+
+    #[test]
+    fn task_keys_dedupe_same_shape() {
+        let p = Conv2dParams { n: 1, h: 56, w: 56, ic: 64, oc: 64, kh: 3, kw: 3, stride: 1, pad: 1 };
+        assert_eq!(conv2d(p).task_key(), conv2d(p).task_key());
+    }
+}

@@ -1,0 +1,264 @@
+//! Winograd F(2×2, 3×3) convolution — the "AutoTVM-PT" variant of
+//! Fig. 10 (weight **p**re-**t**ransformed, following Lavin & Gray [24]).
+//!
+//! A 3×3 stride-1 conv over 2×2 output tiles becomes, per tile `p` and
+//! transform position `ε ∈ 4×4 = 16`:
+//!
+//! ```text
+//! V[ε, ic, p]  = Bᵀ d B      (input transform, adds only)
+//! M[ε, oc, p]  = Σ_ic U[ε, oc, ic] · V[ε, ic, p]    (the tunable bgemm)
+//! Y[oc, 2×2·p] = Aᵀ M A      (output transform, adds only)
+//! ```
+//!
+//! `U` is computed offline from the weights (hence zero runtime cost —
+//! "pre-transformed"). The multiply count drops from `36·ic` to `16·ic`
+//! per tile-channel (2.25×), which is why the paper's PT bars can
+//! exceed the direct-conv roofline in *effective* GFLOPS. The bgemm is
+//! an ordinary [`ComputeDef`] and goes through the normal tuner.
+
+use super::ops::Conv2dParams;
+use super::{BodyExpr, Combiner, ComputeDef, IterKind, IterVar, TensorSpec};
+use crate::expr::{IndexExpr, VarPool};
+
+/// Whether the Winograd path applies (3×3, stride 1).
+pub fn applicable(p: &Conv2dParams) -> bool {
+    p.kh == 3 && p.kw == 3 && p.stride == 1 && p.out_h() % 2 == 0 && p.out_w() % 2 == 0
+}
+
+/// The three runtime stages of the pre-transformed Winograd conv.
+#[derive(Clone, Debug)]
+pub struct WinogradStages {
+    /// Input transform `V`: cheap, add-dominated, fixed schedule.
+    pub input_transform: ComputeDef,
+    /// The tunable batched GEMM `M[ε, oc, p] = Σ_ic U·V`.
+    pub bgemm: ComputeDef,
+    /// Output transform `Y`: cheap, add-dominated, fixed schedule.
+    pub output_transform: ComputeDef,
+    /// Tiles per image (`⌈H/2⌉·⌈W/2⌉·N`).
+    pub tiles: i64,
+    /// Effective flops of the *direct* conv (for effective-GFLOPS
+    /// accounting, as the paper reports).
+    pub direct_flops: u64,
+}
+
+/// Build the stages for a conv workload. Panics if not [`applicable`].
+pub fn stages(p: Conv2dParams) -> WinogradStages {
+    assert!(applicable(&p), "winograd needs 3x3 s1 with even output");
+    let oh = p.out_h();
+    let ow = p.out_w();
+    let tiles = p.n * (oh / 2) * (ow / 2);
+    let eps = 16i64; // 4×4 transform positions
+
+    // --- input transform: V[eps, ic, tile] from 4×4 input windows ---
+    // modeled as an elementwise op with ~4 adds per output element
+    // (Bᵀ d B costs 32 adds over 16 outputs).
+    let itf = {
+        let mut pool = VarPool::new();
+        let e = IterVar {
+            var: pool.fresh("e"),
+            name: "e".into(),
+            extent: eps,
+            kind: IterKind::Spatial,
+        };
+        let c = IterVar {
+            var: pool.fresh("c"),
+            name: "c".into(),
+            extent: p.ic,
+            kind: IterKind::Spatial,
+        };
+        let t = IterVar {
+            var: pool.fresh("t"),
+            name: "t".into(),
+            extent: tiles,
+            kind: IterKind::Spatial,
+        };
+        // 2 loads + adds approximate the transform arithmetic
+        let body = BodyExpr::Add(
+            Box::new(BodyExpr::Add(
+                Box::new(BodyExpr::load(
+                    "D",
+                    vec![
+                        IndexExpr::var(c.var),
+                        IndexExpr::var(t.var).add(&IndexExpr::var(e.var)),
+                    ],
+                )),
+                Box::new(BodyExpr::load(
+                    "D",
+                    vec![IndexExpr::var(c.var), IndexExpr::var(t.var)],
+                )),
+            )),
+            Box::new(BodyExpr::Imm(0.0)),
+        );
+        ComputeDef {
+            name: format!("wino_itf_ic{}_t{}", p.ic, tiles),
+            output: TensorSpec::new("V", &[eps, p.ic, tiles]),
+            inputs: vec![TensorSpec::new("D", &[p.ic, (p.h + 2) * (p.w + 2)])],
+            axes: vec![e, c, t],
+            reduce_axes: vec![],
+            body,
+            combiner: Combiner::Sum,
+            epilogue: None,
+            vars: pool,
+        }
+    };
+
+    // --- the tunable bgemm ---
+    let bgemm = {
+        let mut pool = VarPool::new();
+        let e = IterVar {
+            var: pool.fresh("e"),
+            name: "e".into(),
+            extent: eps,
+            kind: IterKind::Spatial,
+        };
+        let oc = IterVar {
+            var: pool.fresh("oc"),
+            name: "oc".into(),
+            extent: p.oc,
+            kind: IterKind::Spatial,
+        };
+        let t = IterVar {
+            var: pool.fresh("t"),
+            name: "t".into(),
+            extent: tiles,
+            kind: IterKind::Spatial,
+        };
+        let c = IterVar {
+            var: pool.fresh("c"),
+            name: "c".into(),
+            extent: p.ic,
+            kind: IterKind::Reduce,
+        };
+        let body = BodyExpr::Mul(
+            Box::new(BodyExpr::load(
+                "U",
+                vec![IndexExpr::var(e.var), IndexExpr::var(oc.var), IndexExpr::var(c.var)],
+            )),
+            Box::new(BodyExpr::load(
+                "V",
+                vec![IndexExpr::var(e.var), IndexExpr::var(c.var), IndexExpr::var(t.var)],
+            )),
+        );
+        ComputeDef {
+            name: format!("wino_bgemm_oc{}_ic{}_t{}", p.oc, p.ic, tiles),
+            output: TensorSpec::new("M", &[eps, p.oc, tiles]),
+            inputs: vec![
+                TensorSpec::new("U", &[eps, p.oc, p.ic]),
+                TensorSpec::new("V", &[eps, p.ic, tiles]),
+            ],
+            axes: vec![e, oc, t],
+            reduce_axes: vec![c],
+            body,
+            combiner: Combiner::Sum,
+            epilogue: None,
+            vars: pool,
+        }
+    };
+
+    // --- output transform: Y[oc, oh*ow] from M (AᵀmA, adds only) ---
+    let otf = {
+        let mut pool = VarPool::new();
+        let oc = IterVar {
+            var: pool.fresh("oc"),
+            name: "oc".into(),
+            extent: p.oc,
+            kind: IterKind::Spatial,
+        };
+        let xy = IterVar {
+            var: pool.fresh("xy"),
+            name: "xy".into(),
+            extent: oh * ow * p.n,
+            kind: IterKind::Spatial,
+        };
+        let body = BodyExpr::Add(
+            Box::new(BodyExpr::load(
+                "M",
+                vec![IndexExpr::constant(0), IndexExpr::var(oc.var), IndexExpr::var(xy.var).scale(1).offset(0)],
+            )),
+            Box::new(BodyExpr::load(
+                "M",
+                vec![IndexExpr::constant(1), IndexExpr::var(oc.var), IndexExpr::var(xy.var)],
+            )),
+        );
+        ComputeDef {
+            name: format!("wino_otf_oc{}_hw{}", p.oc, oh * ow),
+            output: TensorSpec::new("Y", &[p.oc, oh * ow * p.n]),
+            inputs: vec![TensorSpec::new("M", &[eps, p.oc, oh * ow * p.n])],
+            axes: vec![oc, xy],
+            reduce_axes: vec![],
+            body,
+            combiner: Combiner::Sum,
+            epilogue: None,
+            vars: pool,
+        }
+    };
+
+    WinogradStages {
+        input_transform: itf,
+        bgemm,
+        output_transform: otf,
+        tiles,
+        direct_flops: 2 * p.macs(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::template::{Task, TemplateKind};
+    use crate::sim::devices::sim_gpu;
+
+    fn c6() -> Conv2dParams {
+        crate::workloads::conv_workload(6)
+    }
+
+    #[test]
+    fn applicability() {
+        assert!(applicable(&c6())); // 3x3 s1
+        assert!(!applicable(&crate::workloads::conv_workload(1))); // 7x7 s2
+        assert!(!applicable(&crate::workloads::conv_workload(3))); // 1x1
+        assert!(!applicable(&crate::workloads::conv_workload(7))); // s2
+    }
+
+    #[test]
+    fn bgemm_multiply_reduction_is_2_25x() {
+        let s = stages(c6());
+        // bgemm muls = eps * oc * tiles * ic; direct = oh*ow*oc*ic*9
+        let p = c6();
+        let bgemm_muls = 16 * p.oc * s.tiles * p.ic;
+        let direct_muls = p.macs() as i64;
+        let ratio = direct_muls as f64 / bgemm_muls as f64;
+        assert!((ratio - 2.25).abs() < 1e-9, "ratio {ratio}");
+    }
+
+    #[test]
+    fn bgemm_is_tunable_and_faster_than_direct_in_effective_gflops() {
+        let p = c6();
+        let s = stages(p);
+        let dev = sim_gpu();
+        let task = Task::new(s.bgemm.clone(), TemplateKind::Gpu);
+        // modest random search on the bgemm
+        let mut rng = crate::util::Rng::seed_from_u64(3);
+        let mut best = f64::INFINITY;
+        for _ in 0..60 {
+            let e = task.space.sample(&mut rng);
+            if let Ok(r) = dev.evaluate(&task.lower(&e).unwrap()) {
+                best = best.min(r.seconds);
+            }
+        }
+        assert!(best.is_finite());
+        // transforms at default schedules
+        let t_itf = {
+            let t = Task::new(s.input_transform.clone(), TemplateKind::Gpu);
+            let e = crate::graph::quick_best(&t, &dev, 16, 1);
+            dev.evaluate(&t.lower(&e).unwrap()).unwrap().seconds
+        };
+        let t_otf = {
+            let t = Task::new(s.output_transform.clone(), TemplateKind::Gpu);
+            let e = crate::graph::quick_best(&t, &dev, 16, 1);
+            dev.evaluate(&t.lower(&e).unwrap()).unwrap().seconds
+        };
+        let eff_gflops = s.direct_flops as f64 / (best + t_itf + t_otf) / 1e9;
+        assert!(eff_gflops > 0.0);
+    }
+}

@@ -1,0 +1,377 @@
+//! Program representations for the cost models (§4, Fig. 3, Table 2).
+//!
+//! Four representations with increasing invariance, matching Fig. 9:
+//!
+//! * [`Representation::Config`] — knob values (a batched SMAC-style
+//!   Bayesian-optimization baseline). Not invariant to the search space.
+//! * [`Representation::FlatAst`] — per-loop context rows of the longest
+//!   chain, flattened with padding. Invariant to the space, but ties
+//!   feature positions to the loop-nest pattern, so it transfers within
+//!   an operator type only.
+//! * [`Representation::ContextRelation`] — the paper's transferable
+//!   representation: context *relation* features
+//!   `R_t^{(ij)} = max_{k : Z_kj < β_t} Z_ki` over log2-spaced
+//!   thresholds β, plus nest-size-invariant pooled context.
+//! * [`Representation::Full`] — FlatAst ⧺ ContextRelation ⧺ globals;
+//!   the default in-domain GBT feature set.
+//!
+//! The per-loop context row follows Table 2 of the paper: loop length,
+//! one-hot annotation, top-down and bottom-up extent products, and per
+//! touched buffer the touch count, reuse ratio, stride and memory scope.
+
+use crate::ast::analysis::{ProgramAnalysis, StoreChain};
+use crate::ast::{ForKind, MemScope};
+
+/// Buffers tracked per loop level.
+pub const N_BUFS: usize = 3;
+/// Per-loop context feature dimension.
+pub const CONTEXT_DIM: usize = 1 + ForKind::COUNT + 2 + N_BUFS * 4;
+/// Loop-padding for fixed-shape representations (deepest real nests in
+/// our templates are conv2d with 4+3 axes split 3/2-way ≈ 15 loops).
+pub const MAX_LOOPS: usize = 16;
+/// Global (chain-level) feature dimension.
+pub const GLOBAL_DIM: usize = 5;
+/// Number of log2-spaced relation thresholds.
+pub const N_THRESHOLDS: usize = 12;
+/// Relation feature pairs: (touch, reuse) and (touch, top-down), as in
+/// the paper's appendix A.2.2.
+pub const N_PAIRS: usize = 2;
+
+/// Dimension of the flat-AST representation.
+pub const FLAT_DIM: usize = MAX_LOOPS * CONTEXT_DIM;
+/// Dimension of the context-relation representation.
+pub const RELATION_DIM: usize = N_PAIRS * N_THRESHOLDS + 2 * CONTEXT_DIM + GLOBAL_DIM;
+/// Dimension of the full representation.
+pub const FULL_DIM: usize = FLAT_DIM + RELATION_DIM;
+/// Fixed dimension config features are padded/truncated to (for the
+/// cross-domain comparison of Fig. 9).
+pub const CONFIG_DIM: usize = 24;
+
+/// Which representation to extract (the Fig. 9 axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Representation {
+    Config,
+    FlatAst,
+    ContextRelation,
+    Full,
+}
+
+impl Representation {
+    pub fn dim(self) -> usize {
+        match self {
+            Representation::Config => CONFIG_DIM,
+            Representation::FlatAst => FLAT_DIM,
+            Representation::ContextRelation => RELATION_DIM,
+            Representation::Full => FULL_DIM,
+        }
+    }
+}
+
+fn log2p(x: f64) -> f64 {
+    (x.max(0.0) + 1.0).log2()
+}
+
+/// Per-loop context rows (Table 2) for one chain: `loops × CONTEXT_DIM`.
+pub fn context_rows(chain: &StoreChain) -> Vec<[f64; CONTEXT_DIM]> {
+    let n = chain.loops.len();
+    let mut rows = Vec::with_capacity(n);
+    // rank buffers by total touch (store target first, then largest)
+    let mut order: Vec<usize> = (0..chain.accesses.len()).collect();
+    order.sort_by(|&a, &b| {
+        let ka = (chain.accesses[a].is_write, chain.accesses[a].touch.first().copied());
+        let kb = (chain.accesses[b].is_write, chain.accesses[b].touch.first().copied());
+        kb.partial_cmp(&ka).unwrap()
+    });
+    order.truncate(N_BUFS);
+
+    for l in 0..n {
+        let mut row = [0f64; CONTEXT_DIM];
+        let mut i = 0;
+        row[i] = log2p(chain.loops[l].extent as f64);
+        i += 1;
+        row[i + chain.loops[l].kind.one_hot_index()] = 1.0;
+        i += ForKind::COUNT;
+        row[i] = log2p(chain.top_down[l]);
+        row[i + 1] = log2p(chain.bottom_up[l]);
+        i += 2;
+        for &ai in &order {
+            let a = &chain.accesses[ai];
+            row[i] = log2p(a.touch[l]);
+            row[i + 1] = log2p(a.reuse[l]);
+            row[i + 2] = log2p(a.strides[l].unsigned_abs() as f64);
+            row[i + 3] = match a.scope {
+                MemScope::Global => 0.0,
+                MemScope::Shared => 0.5,
+                MemScope::Local => 1.0,
+            };
+            i += 4;
+        }
+        rows.push(row);
+    }
+    rows
+}
+
+/// Global chain summary features.
+fn global_features(analysis: &ProgramAnalysis) -> [f64; GLOBAL_DIM] {
+    let main = analysis.longest_chain();
+    let total_trip: f64 = analysis.chains.iter().map(|c| c.trip).sum();
+    let shared_trip: f64 = analysis
+        .chains
+        .iter()
+        .filter(|c| c.accesses[0].scope == MemScope::Shared)
+        .map(|c| c.trip)
+        .sum();
+    [
+        log2p(analysis.chains.len() as f64),
+        log2p(total_trip),
+        log2p(shared_trip),
+        main.value_flops as f64,
+        main.has_guard as u8 as f64,
+    ]
+}
+
+/// Flat-AST representation: padded/truncated context rows of the
+/// longest chain.
+pub fn flat_ast(analysis: &ProgramAnalysis) -> Vec<f64> {
+    let rows = context_rows(analysis.longest_chain());
+    let mut out = vec![0f64; FLAT_DIM];
+    for (l, row) in rows.iter().take(MAX_LOOPS).enumerate() {
+        out[l * CONTEXT_DIM..(l + 1) * CONTEXT_DIM].copy_from_slice(row);
+    }
+    out
+}
+
+/// Relation features over the context matrix of the longest chain:
+/// for pair (i, j) and threshold t, `R_t = max_{k: Z_kj < β_t} Z_ki`.
+///
+/// Column i = touch count (log2), column j ∈ {reuse ratio, top-down}.
+/// Thresholds are log2-spaced: β_t = t · 2 in log2 space (i.e. 4^t).
+fn relation_pairs(chain: &StoreChain) -> Vec<f64> {
+    let rows = context_rows(chain);
+    // Aggregate per loop: total touch, mean reuse, top-down (log space
+    // values already).
+    let touch_col = 1 + ForKind::COUNT + 2; // first buffer's touch
+    let reuse_col = touch_col + 1;
+    let td_col = 1 + ForKind::COUNT;
+    let z: Vec<(f64, f64, f64)> = rows
+        .iter()
+        .map(|r| (r[touch_col], r[reuse_col], r[td_col]))
+        .collect();
+    let mut out = Vec::with_capacity(N_PAIRS * N_THRESHOLDS);
+    for pair in 0..N_PAIRS {
+        for t in 0..N_THRESHOLDS {
+            let beta = (t as f64 + 1.0) * 2.0; // log2-spaced thresholds
+            let val = z
+                .iter()
+                .filter(|(_, re, td)| {
+                    let zj = if pair == 0 { *re } else { *td };
+                    zj < beta
+                })
+                .map(|(to, _, _)| *to)
+                .fold(0.0, f64::max);
+            out.push(val);
+        }
+    }
+    out
+}
+
+/// Context-relation representation: relation pairs + per-dim max/mean
+/// pooled context rows + globals. Invariant to loop count and order.
+pub fn context_relation(analysis: &ProgramAnalysis) -> Vec<f64> {
+    let chain = analysis.longest_chain();
+    let rows = context_rows(chain);
+    let mut out = relation_pairs(chain);
+    // pooled context: max and mean per dim
+    for d in 0..CONTEXT_DIM {
+        out.push(rows.iter().map(|r| r[d]).fold(0.0, f64::max));
+    }
+    for d in 0..CONTEXT_DIM {
+        let s: f64 = rows.iter().map(|r| r[d]).sum();
+        out.push(s / rows.len().max(1) as f64);
+    }
+    out.extend_from_slice(&global_features(analysis));
+    debug_assert_eq!(out.len(), RELATION_DIM);
+    out
+}
+
+/// Full in-domain representation.
+pub fn full(analysis: &ProgramAnalysis) -> Vec<f64> {
+    let mut out = flat_ast(analysis);
+    out.extend(context_relation(analysis));
+    debug_assert_eq!(out.len(), FULL_DIM);
+    out
+}
+
+/// Config-space features padded/truncated to [`CONFIG_DIM`].
+pub fn config_padded(
+    space: &crate::schedule::space::ConfigSpace,
+    e: &crate::schedule::space::ConfigEntity,
+) -> Vec<f64> {
+    let mut f = space.config_features(e);
+    f.resize(CONFIG_DIM, 0.0);
+    f
+}
+
+/// Neural-model input: the context matrix padded to
+/// `MAX_LOOPS × CONTEXT_DIM`, row-major (loop-major), plus a validity
+/// mask in the first column slot convention used by the JAX model
+/// (rows of all zeros are masked by their zero extent feature).
+pub fn context_matrix_padded(analysis: &ProgramAnalysis) -> Vec<f32> {
+    let rows = context_rows(analysis.longest_chain());
+    let mut out = vec![0f32; FLAT_DIM];
+    for (l, row) in rows.iter().take(MAX_LOOPS).enumerate() {
+        for (d, v) in row.iter().enumerate() {
+            out[l * CONTEXT_DIM + d] = *v as f32;
+        }
+    }
+    out
+}
+
+/// Extract features for a task + config under a representation.
+/// `analysis` must be the analysis of the lowered program for `e`.
+pub fn extract(
+    repr: Representation,
+    task: &crate::schedule::template::Task,
+    e: &crate::schedule::space::ConfigEntity,
+    analysis: &ProgramAnalysis,
+) -> Vec<f64> {
+    match repr {
+        Representation::Config => config_padded(&task.space, e),
+        Representation::FlatAst => flat_ast(analysis),
+        Representation::ContextRelation => context_relation(analysis),
+        Representation::Full => full(analysis),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ast::analysis::analyze;
+    use crate::expr::ops;
+    use crate::schedule::template::{Task, TemplateKind};
+    use crate::util::Rng;
+
+    fn sample_analysis(task: &Task, seed: u64) -> ProgramAnalysis {
+        let mut rng = Rng::seed_from_u64(seed);
+        let e = task.space.sample(&mut rng);
+        analyze(&task.lower(&e).unwrap())
+    }
+
+    #[test]
+    fn context_rows_shape_and_content() {
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu);
+        let a = sample_analysis(&task, 1);
+        let rows = context_rows(a.longest_chain());
+        assert_eq!(rows.len(), a.longest_chain().loops.len());
+        // first row: top_down = 1 → log2p(1) = 1
+        assert_eq!(rows[0][1 + ForKind::COUNT], 1.0);
+        // annotation one-hot sums to 1
+        for r in &rows {
+            let oh: f64 = r[1..1 + ForKind::COUNT].iter().sum();
+            assert_eq!(oh, 1.0);
+        }
+    }
+
+    #[test]
+    fn representations_have_declared_dims() {
+        let task = Task::new(
+            ops::conv2d(ops::Conv2dParams {
+                n: 1, h: 14, w: 14, ic: 64, oc: 64, kh: 3, kw: 3, stride: 1, pad: 1,
+            }),
+            TemplateKind::Gpu,
+        );
+        let mut rng = Rng::seed_from_u64(3);
+        let e = task.space.sample(&mut rng);
+        let a = analyze(&task.lower(&e).unwrap());
+        for repr in [
+            Representation::Config,
+            Representation::FlatAst,
+            Representation::ContextRelation,
+            Representation::Full,
+        ] {
+            let f = extract(repr, &task, &e, &a);
+            assert_eq!(f.len(), repr.dim(), "{repr:?}");
+            assert!(f.iter().all(|x| x.is_finite()), "{repr:?} has non-finite");
+        }
+    }
+
+    #[test]
+    fn relation_dim_is_stable_across_op_types() {
+        // the transferable representation must have the same dimension
+        // for conv and matmul (different loop counts)
+        let conv = Task::new(
+            ops::conv2d(ops::Conv2dParams {
+                n: 1, h: 28, w: 28, ic: 32, oc: 32, kh: 3, kw: 3, stride: 1, pad: 1,
+            }),
+            TemplateKind::Gpu,
+        );
+        let mm = Task::new(ops::matmul(256, 256, 256), TemplateKind::Gpu);
+        let ac = sample_analysis(&conv, 5);
+        let am = sample_analysis(&mm, 6);
+        assert_ne!(
+            ac.longest_chain().loops.len(),
+            am.longest_chain().loops.len(),
+            "precondition: different nest depths"
+        );
+        assert_eq!(context_relation(&ac).len(), context_relation(&am).len());
+    }
+
+    #[test]
+    fn different_configs_have_different_features() {
+        let task = Task::new(ops::matmul(128, 128, 128), TemplateKind::Cpu);
+        let mut rng = Rng::seed_from_u64(8);
+        let e1 = task.space.sample(&mut rng);
+        let e2 = task.space.sample(&mut rng);
+        assert_ne!(e1, e2);
+        let a1 = analyze(&task.lower(&e1).unwrap());
+        let a2 = analyze(&task.lower(&e2).unwrap());
+        assert_ne!(full(&a1), full(&a2));
+    }
+
+    #[test]
+    fn config_features_padded_to_fixed_dim() {
+        let small = Task::new(ops::relu(&[1024]), TemplateKind::Cpu);
+        let big = Task::new(
+            ops::conv2d(ops::Conv2dParams {
+                n: 1, h: 28, w: 28, ic: 32, oc: 32, kh: 3, kw: 3, stride: 1, pad: 1,
+            }),
+            TemplateKind::Cpu,
+        );
+        let mut rng = Rng::seed_from_u64(4);
+        let es = small.space.sample(&mut rng);
+        let eb = big.space.sample(&mut rng);
+        assert_eq!(config_padded(&small.space, &es).len(), CONFIG_DIM);
+        assert_eq!(config_padded(&big.space, &eb).len(), CONFIG_DIM);
+    }
+
+    #[test]
+    fn context_matrix_padded_is_f32_flat() {
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+        let a = sample_analysis(&task, 9);
+        let m = context_matrix_padded(&a);
+        assert_eq!(m.len(), FLAT_DIM);
+        let n = a.longest_chain().loops.len();
+        // rows beyond the real loop count are zero
+        for l in n..MAX_LOOPS {
+            assert!(m[l * CONTEXT_DIM..(l + 1) * CONTEXT_DIM].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn nest_depth_fits_max_loops() {
+        // worst-case template: conv2d with 4 spatial axes split 3-way and
+        // 3 reduce axes split 2-way = 18 leaves; longest chain must still
+        // fit reasonably (we tolerate truncation but check real depth)
+        let task = Task::new(
+            ops::conv2d(ops::Conv2dParams {
+                n: 1, h: 56, w: 56, ic: 64, oc: 128, kh: 3, kw: 3, stride: 2, pad: 1,
+            }),
+            TemplateKind::Gpu,
+        );
+        let a = sample_analysis(&task, 10);
+        // 4*3 + 3*2 = 18 > MAX_LOOPS: flat_ast truncates; relation uses all
+        assert!(a.longest_chain().loops.len() <= 18);
+        let f = flat_ast(&a);
+        assert_eq!(f.len(), FLAT_DIM);
+    }
+}

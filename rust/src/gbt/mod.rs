@@ -1,0 +1,429 @@
+//! Gradient-boosted trees — the paper's primary statistical cost model
+//! (§3.1), XGBoost-style [7]: second-order boosting with histogram
+//! split finding, supporting both training objectives of §3.2:
+//!
+//! * [`Objective::Regression`] — squared error on the label.
+//! * [`Objective::Rank`] — the pairwise logistic rank loss of Eq. 2,
+//!   with per-group pair sampling (groups = measurement batches or one
+//!   global group).
+//!
+//! Labels follow the "higher is better" convention (the tuner feeds
+//! throughput scores), so `predict` output is directly usable as the SA
+//! energy (negated).
+
+pub mod persist;
+pub mod tree;
+
+use crate::util::{parallel_map, Rng};
+use tree::{Binner, Tree};
+
+/// Row-major f32 feature matrix.
+#[derive(Clone, Debug, Default)]
+pub struct Matrix {
+    pub data: Vec<f32>,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Matrix {
+    pub fn new(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { data, rows, cols }
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let cols = rows.first().map_or(0, |r| r.len());
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            assert_eq!(r.len(), cols, "ragged feature rows");
+            data.extend(r.iter().map(|&x| x as f32));
+        }
+        Matrix { data, rows: rows.len(), cols }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+}
+
+/// Training objective (§3.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    Regression,
+    Rank,
+}
+
+/// Boosting hyper-parameters (defaults follow the paper's setup scale).
+#[derive(Clone, Debug)]
+pub struct GbtParams {
+    pub objective: Objective,
+    pub n_trees: usize,
+    pub max_depth: usize,
+    pub eta: f64,
+    pub lambda: f64,
+    pub min_child_weight: f64,
+    /// Feature subsample per tree.
+    pub colsample: f64,
+    /// Max comparison partners per item in rank mode.
+    pub rank_pairs: usize,
+    pub seed: u64,
+}
+
+impl Default for GbtParams {
+    fn default() -> Self {
+        GbtParams {
+            objective: Objective::Rank,
+            n_trees: 50,
+            max_depth: 6,
+            eta: 0.3,
+            lambda: 1.0,
+            min_child_weight: 1.0,
+            colsample: 0.9,
+            rank_pairs: 16,
+            seed: 0,
+        }
+    }
+}
+
+/// A trained model.
+#[derive(Clone, Debug)]
+pub struct Gbt {
+    pub params: GbtParams,
+    base: f64,
+    trees: Vec<Tree>,
+}
+
+impl Gbt {
+    /// Train on `x` with labels `y` (higher = better). `groups` gives
+    /// contiguous group sizes for the rank objective (empty = one
+    /// global group).
+    pub fn train(x: &Matrix, y: &[f64], groups: &[usize], params: GbtParams) -> Gbt {
+        Self::train_impl(x, y, groups, None, params)
+    }
+
+    /// Train with a per-row base margin (XGBoost's `base_margin`):
+    /// boosting starts from `margin` instead of a constant, and
+    /// `predict` returns only the learned correction. Used by the
+    /// transfer model (Eq. 4) to stack the local model on the global
+    /// one.
+    pub fn train_with_margin(
+        x: &Matrix,
+        y: &[f64],
+        groups: &[usize],
+        margin: &[f64],
+        params: GbtParams,
+    ) -> Gbt {
+        Self::train_impl(x, y, groups, Some(margin), params)
+    }
+
+    fn train_impl(
+        x: &Matrix,
+        y: &[f64],
+        groups: &[usize],
+        margin: Option<&[f64]>,
+        params: GbtParams,
+    ) -> Gbt {
+        assert_eq!(x.rows, y.len());
+        assert!(x.rows > 0, "empty training set");
+        let binner = Binner::fit(x, 128);
+        let binned = binner.bin(x);
+        let mut rng = Rng::seed_from_u64(params.seed ^ SEED_SALT);
+        let groups_vec: Vec<usize> =
+            if groups.is_empty() { vec![x.rows] } else { groups.to_vec() };
+        assert_eq!(groups_vec.iter().sum::<usize>(), x.rows, "groups must cover rows");
+
+        let base = match (margin, params.objective) {
+            (Some(_), _) => 0.0,
+            (None, Objective::Regression) => y.iter().sum::<f64>() / y.len() as f64,
+            (None, Objective::Rank) => 0.0,
+        };
+        let mut preds = match margin {
+            Some(m) => {
+                assert_eq!(m.len(), x.rows);
+                m.to_vec()
+            }
+            None => vec![base; x.rows],
+        };
+        let mut trees = Vec::with_capacity(params.n_trees);
+        let threads = crate::util::default_threads();
+        for _ in 0..params.n_trees {
+            let (g, h) = gradients(&params, y, &preds, &groups_vec, &mut rng);
+            let tree = Tree::fit(&binned, &binner, &g, &h, &params, &mut rng, threads);
+            for i in 0..x.rows {
+                preds[i] += params.eta * tree.predict(x.row(i));
+            }
+            trees.push(tree);
+        }
+        Gbt { params, base, trees }
+    }
+
+    /// Predict a single row.
+    pub fn predict(&self, row: &[f32]) -> f64 {
+        let mut p = self.base;
+        for t in &self.trees {
+            p += self.params.eta * t.predict(row);
+        }
+        p
+    }
+
+    /// Predict a batch (parallel over rows for large batches).
+    pub fn predict_batch(&self, x: &Matrix) -> Vec<f64> {
+        if x.rows < 256 {
+            (0..x.rows).map(|i| self.predict(x.row(i))).collect()
+        } else {
+            let idx: Vec<usize> = (0..x.rows).collect();
+            parallel_map(&idx, crate::util::default_threads(), |&i| self.predict(x.row(i)))
+        }
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+/// Salt so GBT training streams are independent of other seeded users.
+const SEED_SALT: u64 = 0x6bbd_19ae_3f2c_0551;
+
+fn gradients(
+    params: &GbtParams,
+    y: &[f64],
+    preds: &[f64],
+    groups: &[usize],
+    rng: &mut Rng,
+) -> (Vec<f64>, Vec<f64>) {
+    let n = y.len();
+    let mut g = vec![0f64; n];
+    let mut h = vec![0f64; n];
+    match params.objective {
+        Objective::Regression => {
+            for i in 0..n {
+                g[i] = preds[i] - y[i];
+                h[i] = 1.0;
+            }
+        }
+        Objective::Rank => {
+            // pairwise logistic: loss = Σ log(1 + exp(-(f_i - f_j)))
+            // over pairs with y_i > y_j, pairs sampled per group
+            let mut start = 0;
+            for &len in groups {
+                let end = start + len;
+                if len >= 2 {
+                    for i in start..end {
+                        for _ in 0..params.rank_pairs.min(len - 1) {
+                            let j = start + rng.gen_range(0..len);
+                            if i == j || y[i] == y[j] {
+                                continue;
+                            }
+                            let (hi, lo) = if y[i] > y[j] { (i, j) } else { (j, i) };
+                            let s = preds[hi] - preds[lo];
+                            let sig = 1.0 / (1.0 + s.exp()); // d loss/d s (neg)
+                            g[hi] -= sig;
+                            g[lo] += sig;
+                            let hh = (sig * (1.0 - sig)).max(1e-6);
+                            h[hi] += hh;
+                            h[lo] += hh;
+                        }
+                    }
+                }
+                start = end;
+            }
+            // guard all-zero hessians (degenerate groups)
+            for i in 0..n {
+                if h[i] == 0.0 {
+                    h[i] = 1e-6;
+                }
+            }
+        }
+    }
+    (g, h)
+}
+
+/// Bootstrap ensemble for uncertainty estimation (§3.3, Fig. 7): `k`
+/// models trained on resampled data; exposes mean and std of member
+/// predictions.
+#[derive(Clone, Debug)]
+pub struct GbtEnsemble {
+    pub members: Vec<Gbt>,
+}
+
+impl GbtEnsemble {
+    pub fn train(x: &Matrix, y: &[f64], k: usize, params: GbtParams) -> GbtEnsemble {
+        let n = x.rows;
+        let mut members = Vec::with_capacity(k);
+        let mut rng = Rng::seed_from_u64(params.seed ^ 0xB007);
+        for m in 0..k {
+            // bootstrap resample rows
+            let mut data = Vec::with_capacity(n * x.cols);
+            let mut yy = Vec::with_capacity(n);
+            for _ in 0..n {
+                let i = rng.gen_range(0..n);
+                data.extend_from_slice(x.row(i));
+                yy.push(y[i]);
+            }
+            let bx = Matrix::new(n, x.cols, data);
+            let mut p = params.clone();
+            p.seed = params.seed.wrapping_add(m as u64 + 1);
+            members.push(Gbt::train(&bx, &yy, &[], p));
+        }
+        GbtEnsemble { members }
+    }
+
+    /// (mean, std) per row.
+    pub fn predict_stats(&self, x: &Matrix) -> Vec<(f64, f64)> {
+        let per: Vec<Vec<f64>> = self.members.iter().map(|m| m.predict_batch(x)).collect();
+        (0..x.rows)
+            .map(|i| {
+                let vals: Vec<f64> = per.iter().map(|p| p[i]).collect();
+                let mean = crate::util::mean(&vals);
+                let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+                    / vals.len() as f64;
+                (mean, var.sqrt())
+            })
+            .collect()
+    }
+}
+
+/// Kendall-tau-style pairwise ranking accuracy on a held-out set:
+/// fraction of pairs ordered consistently (0.5 = random).
+pub fn rank_accuracy(pred: &[f64], truth: &[f64]) -> f64 {
+    let n = pred.len();
+    let mut ok = 0usize;
+    let mut total = 0usize;
+    for i in 0..n {
+        for j in i + 1..n {
+            if truth[i] == truth[j] {
+                continue;
+            }
+            total += 1;
+            if (pred[i] - pred[j]) * (truth[i] - truth[j]) > 0.0 {
+                ok += 1;
+            }
+        }
+    }
+    if total == 0 {
+        0.5
+    } else {
+        ok as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic(n: usize, cols: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut data = Vec::with_capacity(n * cols);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let row: Vec<f32> = (0..cols).map(|_| rng.gen_f64() as f32 * 4.0).collect();
+            // nonlinear target with interactions
+            let t = 2.0 * row[0] as f64 + (row[1] as f64).powi(2)
+                - 1.5 * row[2] as f64 * row[3] as f64
+                + 0.5 * ((row[4] as f64) > 2.0) as u8 as f64;
+            data.extend_from_slice(&row);
+            y.push(t);
+        }
+        (Matrix::new(n, cols, data), y)
+    }
+
+    #[test]
+    fn regression_fits_synthetic() {
+        let (x, y) = synthetic(2000, 8, 1);
+        let (xt, yt) = synthetic(500, 8, 2);
+        let params = GbtParams {
+            objective: Objective::Regression,
+            n_trees: 80,
+            ..Default::default()
+        };
+        let m = Gbt::train(&x, &y, &[], params);
+        let pred = m.predict_batch(&xt);
+        let err: f64 = pred
+            .iter()
+            .zip(&yt)
+            .map(|(p, t)| (p - t) * (p - t))
+            .sum::<f64>()
+            / yt.len() as f64;
+        let var = {
+            let mu = crate::util::mean(&yt);
+            yt.iter().map(|t| (t - mu) * (t - mu)).sum::<f64>() / yt.len() as f64
+        };
+        assert!(err < 0.2 * var, "rmse² {err} vs var {var}");
+    }
+
+    #[test]
+    fn rank_learns_ordering() {
+        let (x, y) = synthetic(2000, 8, 3);
+        let (xt, yt) = synthetic(300, 8, 4);
+        let params =
+            GbtParams { objective: Objective::Rank, n_trees: 60, ..Default::default() };
+        let m = Gbt::train(&x, &y, &[], params);
+        let pred = m.predict_batch(&xt);
+        let acc = rank_accuracy(&pred, &yt);
+        assert!(acc > 0.85, "rank accuracy {acc}");
+    }
+
+    #[test]
+    fn rank_with_groups_trains() {
+        let (x, y) = synthetic(512, 8, 5);
+        let groups = vec![64; 8];
+        let params =
+            GbtParams { objective: Objective::Rank, n_trees: 20, ..Default::default() };
+        let m = Gbt::train(&x, &y, &groups, params);
+        assert_eq!(m.n_trees(), 20);
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let (x, y) = synthetic(400, 6, 6);
+        let p = GbtParams { n_trees: 10, seed: 42, ..Default::default() };
+        let a = Gbt::train(&x, &y, &[], p.clone());
+        let b = Gbt::train(&x, &y, &[], p);
+        let pa = a.predict_batch(&x);
+        let pb = b.predict_batch(&x);
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn ensemble_uncertainty_positive() {
+        let (x, y) = synthetic(600, 6, 7);
+        let p = GbtParams {
+            objective: Objective::Regression,
+            n_trees: 20,
+            ..Default::default()
+        };
+        let ens = GbtEnsemble::train(&x, &y, 5, p);
+        assert_eq!(ens.members.len(), 5);
+        let (xt, _) = synthetic(50, 6, 8);
+        let stats = ens.predict_stats(&xt);
+        assert!(stats.iter().any(|(_, s)| *s > 0.0));
+        assert!(stats.iter().all(|(m, s)| m.is_finite() && s.is_finite()));
+    }
+
+    #[test]
+    fn rank_accuracy_bounds() {
+        assert_eq!(rank_accuracy(&[1.0, 2.0, 3.0], &[1.0, 2.0, 3.0]), 1.0);
+        assert_eq!(rank_accuracy(&[3.0, 2.0, 1.0], &[1.0, 2.0, 3.0]), 0.0);
+        assert_eq!(rank_accuracy(&[1.0, 1.0], &[1.0, 1.0]), 0.5);
+    }
+
+    #[test]
+    fn constant_labels_dont_crash() {
+        let (x, _) = synthetic(100, 6, 9);
+        let y = vec![1.0; 100];
+        for obj in [Objective::Regression, Objective::Rank] {
+            let p = GbtParams { objective: obj, n_trees: 5, ..Default::default() };
+            let m = Gbt::train(&x, &y, &[], p);
+            let pred = m.predict_batch(&x);
+            assert!(pred.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn single_row_training() {
+        let x = Matrix::new(1, 6, vec![1.0, 2.0, 3.0, 0.0, 0.0, 0.0]);
+        let m = Gbt::train(&x, &[5.0], &[], GbtParams::default());
+        assert!(m.predict(&[1.0, 2.0, 3.0, 0.0, 0.0, 0.0]).is_finite());
+    }
+}

@@ -1,0 +1,139 @@
+//! GBT model (de)serialization — a production tuning service keeps the
+//! global transfer model on disk between sessions (§4: "the system
+//! collects historical data D' from previously seen workloads").
+
+use super::tree::{Node, Tree};
+use super::{Gbt, GbtParams, Objective};
+use crate::util::json::Json;
+
+impl Gbt {
+    /// Serialize to a JSON document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("objective", match self.params.objective {
+                Objective::Rank => "rank".into(),
+                Objective::Regression => "regression".into(),
+            }),
+            ("eta", self.params.eta.into()),
+            ("base", self.base.into()),
+            (
+                "trees",
+                Json::Arr(self.trees.iter().map(Tree::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Parse a serialized model.
+    pub fn from_json(j: &Json) -> anyhow::Result<Gbt> {
+        let objective = match j.get("objective").and_then(Json::as_str) {
+            Some("rank") => Objective::Rank,
+            Some("regression") => Objective::Regression,
+            other => anyhow::bail!("bad objective {other:?}"),
+        };
+        let eta = j
+            .get("eta")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("missing eta"))?;
+        let base = j
+            .get("base")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("missing base"))?;
+        let trees = j
+            .get("trees")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing trees"))?
+            .iter()
+            .map(Tree::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let params = GbtParams { objective, eta, ..Default::default() };
+        Ok(Gbt { params, base, trees })
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().dump())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Gbt> {
+        Gbt::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
+    }
+}
+
+impl Tree {
+    fn to_json(&self) -> Json {
+        // flat node array: leaf = [value]; split = [feat, thr, l, r]
+        Json::Arr(
+            self.nodes()
+                .iter()
+                .map(|n| match n {
+                    Node::Leaf { value } => Json::Arr(vec![(*value).into()]),
+                    Node::Split { feature, threshold, left, right } => Json::Arr(vec![
+                        (*feature as u64).into(),
+                        (*threshold as f64).into(),
+                        (*left as u64).into(),
+                        (*right as u64).into(),
+                    ]),
+                })
+                .collect(),
+        )
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<Tree> {
+        let arr = j.as_arr().ok_or_else(|| anyhow::anyhow!("tree must be array"))?;
+        let mut nodes = Vec::with_capacity(arr.len());
+        for n in arr {
+            let parts = n.as_arr().ok_or_else(|| anyhow::anyhow!("node must be array"))?;
+            match parts.len() {
+                1 => nodes.push(Node::Leaf {
+                    value: parts[0].as_f64().ok_or_else(|| anyhow::anyhow!("leaf value"))?,
+                }),
+                4 => nodes.push(Node::Split {
+                    feature: parts[0].as_u64().unwrap_or(0) as u32,
+                    threshold: parts[1].as_f64().unwrap_or(0.0) as f32,
+                    left: parts[2].as_u64().unwrap_or(0) as u32,
+                    right: parts[3].as_u64().unwrap_or(0) as u32,
+                }),
+                k => anyhow::bail!("node arity {k}"),
+            }
+        }
+        Ok(Tree::from_nodes(nodes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Matrix;
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn save_load_preserves_predictions() {
+        let mut rng = Rng::seed_from_u64(1);
+        let n = 400;
+        let data: Vec<f32> = (0..n * 8).map(|_| rng.gen_f64() as f32).collect();
+        let x = Matrix::new(n, 8, data);
+        let y: Vec<f64> =
+            (0..n).map(|i| x.row(i)[0] as f64 * 3.0 - x.row(i)[3] as f64).collect();
+        let m = Gbt::train(&x, &y, &[], GbtParams { n_trees: 15, ..Default::default() });
+        let dir = std::env::temp_dir().join("autotvm-gbt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.json");
+        m.save(&path).unwrap();
+        let back = Gbt::load(&path).unwrap();
+        let p1 = m.predict_batch(&x);
+        let p2 = back.predict_batch(&x);
+        for (a, b) in p1.iter().zip(&p2) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        assert!(Gbt::from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(Gbt::from_json(
+            &Json::parse(r#"{"objective":"rank","eta":0.3,"base":0,"trees":[[1,2]]}"#).unwrap()
+        )
+        .is_err());
+    }
+}

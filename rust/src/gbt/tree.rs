@@ -1,0 +1,350 @@
+//! Histogram-based regression tree for second-order boosting.
+//!
+//! Features are quantile-binned to u8 once per training set; split
+//! search accumulates (grad, hess) histograms per feature per node and
+//! scans bins for the best XGBoost gain
+//! `G_L²/(H_L+λ) + G_R²/(H_R+λ) − G²/(H+λ)`.
+
+use super::{GbtParams, Matrix};
+use crate::util::{parallel_map, Rng};
+
+/// Quantile binner: per-feature ascending cut points; bin b holds
+/// values ≤ cuts[b] (last bin unbounded).
+#[derive(Clone, Debug)]
+pub struct Binner {
+    /// cuts[f] — ascending thresholds, len ≤ max_bins-1.
+    pub cuts: Vec<Vec<f32>>,
+}
+
+impl Binner {
+    pub fn fit(x: &Matrix, max_bins: usize) -> Binner {
+        let mut cuts = Vec::with_capacity(x.cols);
+        for f in 0..x.cols {
+            let mut vals: Vec<f32> = (0..x.rows).map(|i| x.row(i)[f]).collect();
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            vals.dedup();
+            let c = if vals.len() <= max_bins {
+                // midpoints between distinct values
+                vals.windows(2).map(|w| (w[0] + w[1]) / 2.0).collect()
+            } else {
+                let mut c = Vec::with_capacity(max_bins - 1);
+                for b in 1..max_bins {
+                    let q = b * (vals.len() - 1) / max_bins;
+                    let v = vals[q];
+                    if c.last() != Some(&v) {
+                        c.push(v);
+                    }
+                }
+                c
+            };
+            cuts.push(c);
+        }
+        Binner { cuts }
+    }
+
+    #[inline]
+    pub fn bin_value(&self, f: usize, v: f32) -> u8 {
+        // binary search first cut > v
+        let cuts = &self.cuts[f];
+        let mut lo = 0usize;
+        let mut hi = cuts.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if v <= cuts[mid] {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        lo as u8
+    }
+
+    /// Bin a whole matrix (column-major output for cache-friendly
+    /// histogram accumulation).
+    pub fn bin(&self, x: &Matrix) -> BinnedMatrix {
+        let mut cols = Vec::with_capacity(x.cols);
+        for f in 0..x.cols {
+            let col: Vec<u8> = (0..x.rows).map(|i| self.bin_value(f, x.row(i)[f])).collect();
+            cols.push(col);
+        }
+        BinnedMatrix { cols, rows: x.rows }
+    }
+
+    /// Threshold (raw feature value) corresponding to "bin ≤ b".
+    pub fn threshold(&self, f: usize, b: u8) -> f32 {
+        self.cuts[f][b as usize]
+    }
+
+    pub fn n_bins(&self, f: usize) -> usize {
+        self.cuts[f].len() + 1
+    }
+}
+
+/// Column-major binned features.
+#[derive(Clone, Debug)]
+pub struct BinnedMatrix {
+    pub cols: Vec<Vec<u8>>,
+    pub rows: usize,
+}
+
+/// Tree node (public for (de)serialization in [`super::persist`]).
+#[derive(Clone, Debug)]
+pub enum Node {
+    Leaf { value: f64 },
+    Split { feature: u32, threshold: f32, left: u32, right: u32 },
+}
+
+/// One regression tree.
+#[derive(Clone, Debug)]
+pub struct Tree {
+    nodes: Vec<Node>,
+}
+
+struct BuildCtx<'a> {
+    binned: &'a BinnedMatrix,
+    binner: &'a Binner,
+    g: &'a [f64],
+    h: &'a [f64],
+    params: &'a GbtParams,
+    features: Vec<usize>,
+    threads: usize,
+}
+
+impl Tree {
+    pub fn fit(
+        binned: &BinnedMatrix,
+        binner: &Binner,
+        g: &[f64],
+        h: &[f64],
+        params: &GbtParams,
+        rng: &mut Rng,
+        threads: usize,
+    ) -> Tree {
+        let n_feat = binned.cols.len();
+        let keep = ((n_feat as f64 * params.colsample).ceil() as usize).clamp(1, n_feat);
+        let features = if keep == n_feat {
+            (0..n_feat).collect()
+        } else {
+            rng.sample_indices(n_feat, keep)
+        };
+        let ctx = BuildCtx { binned, binner, g, h, params, features, threads };
+        let mut tree = Tree { nodes: Vec::new() };
+        let idx: Vec<u32> = (0..binned.rows as u32).collect();
+        tree.build(&ctx, idx, 0);
+        tree
+    }
+
+    fn build(&mut self, ctx: &BuildCtx, idx: Vec<u32>, depth: usize) -> u32 {
+        let gsum: f64 = idx.iter().map(|&i| ctx.g[i as usize]).sum();
+        let hsum: f64 = idx.iter().map(|&i| ctx.h[i as usize]).sum();
+        let leaf_value = -gsum / (hsum + ctx.params.lambda);
+        let node_id = self.nodes.len() as u32;
+        if depth >= ctx.params.max_depth
+            || idx.len() < 2
+            || hsum < 2.0 * ctx.params.min_child_weight
+        {
+            self.nodes.push(Node::Leaf { value: leaf_value });
+            return node_id;
+        }
+
+        // Best-split search over features. Thread-parallel only when the
+        // node is large enough to amortize spawn cost (the dominant GBT
+        // training cost before this guard — EXPERIMENTS.md §Perf).
+        let work = idx.len() * ctx.features.len();
+        let candidates: Vec<Option<SplitCand>> = if work >= 200_000 && ctx.threads > 1 {
+            parallel_map(&ctx.features, ctx.threads, |&f| {
+                best_split_for_feature(ctx, &idx, f, gsum, hsum)
+            })
+        } else {
+            ctx.features
+                .iter()
+                .map(|&f| best_split_for_feature(ctx, &idx, f, gsum, hsum))
+                .collect()
+        };
+        let best = candidates
+            .into_iter()
+            .flatten()
+            .max_by(|a, b| a.gain.partial_cmp(&b.gain).unwrap());
+
+        let Some(split) = best.filter(|s| s.gain > 1e-10) else {
+            self.nodes.push(Node::Leaf { value: leaf_value });
+            return node_id;
+        };
+
+        // Partition rows.
+        let col = &ctx.binned.cols[split.feature];
+        let (left_idx, right_idx): (Vec<u32>, Vec<u32>) =
+            idx.iter().partition(|&&i| col[i as usize] <= split.bin);
+        debug_assert!(!left_idx.is_empty() && !right_idx.is_empty());
+
+        self.nodes.push(Node::Leaf { value: 0.0 }); // placeholder
+        let left = self.build(ctx, left_idx, depth + 1);
+        let right = self.build(ctx, right_idx, depth + 1);
+        self.nodes[node_id as usize] = Node::Split {
+            feature: split.feature as u32,
+            threshold: ctx.binner.threshold(split.feature, split.bin),
+            left,
+            right,
+        };
+        node_id
+    }
+
+    /// Predict one raw feature row.
+    #[inline]
+    pub fn predict(&self, row: &[f32]) -> f64 {
+        let mut n = 0usize;
+        loop {
+            match &self.nodes[n] {
+                Node::Leaf { value } => return *value,
+                Node::Split { feature, threshold, left, right } => {
+                    n = if row[*feature as usize] <= *threshold {
+                        *left as usize
+                    } else {
+                        *right as usize
+                    };
+                }
+            }
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Node storage (for serialization).
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    /// Rebuild from serialized nodes.
+    pub fn from_nodes(nodes: Vec<Node>) -> Tree {
+        assert!(!nodes.is_empty());
+        Tree { nodes }
+    }
+}
+
+struct SplitCand {
+    feature: usize,
+    bin: u8,
+    gain: f64,
+}
+
+fn best_split_for_feature(
+    ctx: &BuildCtx,
+    idx: &[u32],
+    f: usize,
+    gsum: f64,
+    hsum: f64,
+) -> Option<SplitCand> {
+    let n_bins = ctx.binner.n_bins(f);
+    if n_bins < 2 {
+        return None;
+    }
+    let col = &ctx.binned.cols[f];
+    // thread-local scratch: histogram buffers are reused across the
+    // ~10^6 (node × feature) calls of a training run instead of being
+    // re-allocated (EXPERIMENTS.md §Perf)
+    thread_local! {
+        static SCRATCH: std::cell::RefCell<(Vec<f64>, Vec<f64>)> =
+            const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+    }
+    SCRATCH.with(|scratch| {
+        let mut s = scratch.borrow_mut();
+        let (hist_g, hist_h) = &mut *s;
+        hist_g.clear();
+        hist_g.resize(n_bins, 0.0);
+        hist_h.clear();
+        hist_h.resize(n_bins, 0.0);
+        for &i in idx {
+            let b = col[i as usize] as usize;
+            hist_g[b] += ctx.g[i as usize];
+            hist_h[b] += ctx.h[i as usize];
+        }
+    let lambda = ctx.params.lambda;
+        let parent = gsum * gsum / (hsum + lambda);
+        let mut gl = 0f64;
+        let mut hl = 0f64;
+        let mut best: Option<SplitCand> = None;
+        for b in 0..n_bins - 1 {
+            gl += hist_g[b];
+            hl += hist_h[b];
+            let gr = gsum - gl;
+            let hr = hsum - hl;
+            if hl < ctx.params.min_child_weight || hr < ctx.params.min_child_weight {
+                continue;
+            }
+            let gain = gl * gl / (hl + lambda) + gr * gr / (hr + lambda) - parent;
+            if best.as_ref().map_or(true, |s| gain > s.gain) {
+                best = Some(SplitCand { feature: f, bin: b as u8, gain });
+            }
+        }
+        best
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binner_monotone_and_invertible() {
+        let x = Matrix::new(6, 1, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Binner::fit(&x, 255);
+        // distinct small set: bins must preserve order
+        let bins: Vec<u8> = (0..6).map(|i| b.bin_value(0, x.row(i)[0])).collect();
+        for w in bins.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn binner_quantile_mode() {
+        let vals: Vec<f32> = (0..10_000).map(|i| (i % 1000) as f32).collect();
+        let x = Matrix::new(10_000, 1, vals);
+        let b = Binner::fit(&x, 64);
+        assert!(b.cuts[0].len() <= 63);
+        // extremes map to first/last bins
+        assert_eq!(b.bin_value(0, -1.0), 0);
+        assert_eq!(b.bin_value(0, 1e9), b.cuts[0].len() as u8);
+    }
+
+    #[test]
+    fn tree_fits_step_function() {
+        // y = 1 if x0 > 0.5 else -1; a depth-1 tree should nail it
+        let n = 200;
+        let mut data = Vec::new();
+        let mut g = Vec::new();
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..n {
+            let v = rng.gen_f64() as f32;
+            data.push(v);
+            // gradient of squared loss at pred=0: g = -y
+            g.push(if v > 0.5 { -1.0 } else { 1.0 });
+        }
+        let x = Matrix::new(n, 1, data);
+        let h = vec![1.0; n];
+        let params = GbtParams { max_depth: 2, ..Default::default() };
+        let binner = Binner::fit(&x, 255);
+        let binned = binner.bin(&x);
+        let mut rng2 = Rng::seed_from_u64(2);
+        let t = Tree::fit(&binned, &binner, &g, &h, &params, &mut rng2, 1);
+        for i in 0..n {
+            let p = t.predict(x.row(i));
+            let want = if x.row(i)[0] > 0.5 { 1.0 } else { -1.0 };
+            assert!((p - want).abs() < 0.1, "x={} p={p}", x.row(i)[0]);
+        }
+    }
+
+    #[test]
+    fn pure_node_becomes_leaf() {
+        let x = Matrix::new(4, 1, vec![1.0, 1.0, 1.0, 1.0]);
+        let g = vec![1.0; 4];
+        let h = vec![1.0; 4];
+        let binner = Binner::fit(&x, 255);
+        let binned = binner.bin(&x);
+        let mut rng = Rng::seed_from_u64(0);
+        let t =
+            Tree::fit(&binned, &binner, &g, &h, &GbtParams::default(), &mut rng, 1);
+        assert_eq!(t.n_nodes(), 1);
+    }
+}

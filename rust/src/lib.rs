@@ -1,0 +1,46 @@
+//! # autotvm — Learning to Optimize Tensor Programs
+//!
+//! A Rust + JAX + Pallas reproduction of *Learning to Optimize Tensor
+//! Programs* (Chen et al., NeurIPS 2018) — the AutoTVM paper.
+//!
+//! The crate implements the paper's full stack from scratch:
+//!
+//! * a tensor-expression DSL and schedule space ([`expr`], [`schedule`]),
+//! * a compiler `g(e, s)` lowering expression + schedule to a low-level
+//!   loop AST ([`lower`], [`ast`]),
+//! * hardware back-ends `f(x)`: analytic device simulators ([`sim`]) and
+//!   a real PJRT wall-clock path ([`measure`], [`runtime`]),
+//! * the statistical cost models `f̂(x)`: gradient-boosted trees
+//!   ([`gbt`]) and an AOT-compiled neural model executed via PJRT
+//!   ([`model`]),
+//! * transferable program representations ([`features`]),
+//! * the exploration module — parallel simulated annealing,
+//!   diversity-aware selection, ε-greedy — plus black-box baselines
+//!   ([`explore`]),
+//! * the top-level tuning loop with transfer learning ([`tuner`]),
+//! * a mini graph compiler for end-to-end workloads ([`graph`],
+//!   [`workloads`], [`baselines`]).
+//!
+//! See `DESIGN.md` for the paper → module map and `EXPERIMENTS.md` for
+//! reproduced results.
+
+pub mod ast;
+pub mod baselines;
+pub mod coordinator;
+pub mod explore;
+pub mod expr;
+pub mod features;
+pub mod gbt;
+pub mod graph;
+pub mod lower;
+pub mod measure;
+pub mod model;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod tuner;
+pub mod util;
+pub mod workloads;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,697 @@
+//! The compiler `g(e, s)`: lower a tensor expression + schedule to a
+//! low-level loop [`Program`].
+//!
+//! The lowering reproduces the structure of the paper's Fig. 1:
+//! multi-level tiled loop nests with an init nest at the first reduce
+//! boundary, optional register accumulation (`cache_write`), optional
+//! shared-memory staging of input tiles (`cache_reads`), and annotation
+//! of loops (parallel / GPU bindings / auto-unroll / vectorize). All
+//! emitted buffer indices stay affine in the leaf loop variables so the
+//! downstream analysis is exact.
+
+use crate::ast::{BufferDecl, ForKind, MemScope, Program, Stmt, Value};
+use crate::expr::{BodyExpr, Combiner, ComputeDef, Epilogue, IndexExpr, VarId};
+use crate::schedule::Schedule;
+use std::collections::HashMap;
+
+/// Lower `def` under `sched` into a program.
+pub fn lower(def: &ComputeDef, sched: &Schedule) -> anyhow::Result<Program> {
+    let extents: Vec<i64> = def.all_axes().map(|a| a.extent).collect();
+    sched.validate(&extents)?;
+    let mut ctx = Lowering::new(def, sched);
+    ctx.run()
+}
+
+/// Per-leaf metadata computed up front.
+#[derive(Clone, Debug)]
+struct Leaf {
+    var: VarId,
+    extent: i64,
+    is_reduce: bool,
+    kind: ForKind,
+}
+
+struct Lowering<'a> {
+    def: &'a ComputeDef,
+    sched: &'a Schedule,
+    vars: crate::expr::VarPool,
+    /// original axis var -> affine expression over leaf vars
+    subst: HashMap<VarId, IndexExpr>,
+    /// leaves in schedule order
+    leaves: Vec<Leaf>,
+    buffers: Vec<BufferDecl>,
+}
+
+impl<'a> Lowering<'a> {
+    fn new(def: &'a ComputeDef, sched: &'a Schedule) -> Self {
+        Lowering {
+            def,
+            sched,
+            vars: def.vars.clone(),
+            subst: HashMap::new(),
+            leaves: Vec::new(),
+            buffers: Vec::new(),
+        }
+    }
+
+    fn run(&mut self) -> anyhow::Result<Program> {
+        self.build_leaves();
+        self.buffers.push(BufferDecl {
+            name: self.def.output.name.clone(),
+            shape: self.def.output.shape.clone(),
+            scope: MemScope::Global,
+        });
+        for t in &self.def.inputs {
+            self.buffers.push(BufferDecl {
+                name: t.name.clone(),
+                shape: t.shape.clone(),
+                scope: MemScope::Global,
+            });
+        }
+
+        let stmts = if self.def.reduce_axes.is_empty() {
+            self.emit_elementwise()
+        } else {
+            self.emit_reduction()?
+        };
+
+        Ok(Program {
+            name: self.def.name.clone(),
+            stmts,
+            buffers: self.buffers.clone(),
+            vars: self.vars.clone(),
+            flops: self.def.total_flops(),
+        })
+    }
+
+    /// Create leaf vars per split and the original-var substitution map.
+    fn build_leaves(&mut self) {
+        let axes: Vec<_> = self.def.all_axes().cloned().collect();
+        // Leaf vars per (axis, part).
+        let mut leaf_vars: Vec<Vec<VarId>> = Vec::new();
+        for (ai, ax) in axes.iter().enumerate() {
+            let sizes = &self.sched.splits[ai];
+            let vars: Vec<VarId> = if sizes.len() == 1 {
+                vec![ax.var]
+            } else {
+                (0..sizes.len())
+                    .map(|p| self.vars.fresh(format!("{}.{}", ax.name, p)))
+                    .collect()
+            };
+            // y = Σ_p y_p · Π_{q>p} sizes[q]
+            let mut expr = IndexExpr::constant(0);
+            let mut stride = 1i64;
+            for p in (0..sizes.len()).rev() {
+                expr = expr.add(&IndexExpr::scaled_var(vars[p], stride));
+                stride *= sizes[p];
+            }
+            if sizes.len() > 1 {
+                self.subst.insert(ax.var, expr);
+            }
+            leaf_vars.push(vars);
+        }
+        let ns = self.def.axes.len();
+        for rf in &self.sched.order {
+            let kind = self
+                .sched
+                .annotations
+                .get(rf)
+                .copied()
+                .unwrap_or(ForKind::Serial);
+            self.leaves.push(Leaf {
+                var: leaf_vars[rf.axis][rf.part],
+                extent: self.sched.splits[rf.axis][rf.part],
+                is_reduce: rf.axis >= ns,
+                kind,
+            });
+        }
+    }
+
+    fn substitute_index(&self, e: &IndexExpr) -> IndexExpr {
+        let mut out = e.clone();
+        for (v, rep) in &self.subst {
+            out = out.substitute(*v, rep);
+        }
+        out
+    }
+
+    /// Convert the (substituted) body expression to a low-level value.
+    fn body_value(&self, b: &BodyExpr) -> Value {
+        match b {
+            BodyExpr::Load(a) => Value::Load {
+                buffer: a.tensor.clone(),
+                indices: a.indices.iter().map(|i| self.substitute_index(i)).collect(),
+            },
+            BodyExpr::Imm(x) => Value::Imm(*x),
+            BodyExpr::Add(a, b) => {
+                Value::Add(Box::new(self.body_value(a)), Box::new(self.body_value(b)))
+            }
+            BodyExpr::Sub(a, b) => {
+                Value::Sub(Box::new(self.body_value(a)), Box::new(self.body_value(b)))
+            }
+            BodyExpr::Mul(a, b) => {
+                Value::Mul(Box::new(self.body_value(a)), Box::new(self.body_value(b)))
+            }
+            BodyExpr::Max(a, b) => {
+                Value::Max(Box::new(self.body_value(a)), Box::new(self.body_value(b)))
+            }
+            BodyExpr::Relu(a) => Value::Relu(Box::new(self.body_value(a))),
+            BodyExpr::Select(pred, a, b) => Value::Guarded {
+                bounds: pred
+                    .bounds
+                    .iter()
+                    .map(|(e, lo, hi)| (self.substitute_index(e), *lo, *hi))
+                    .collect(),
+                value: Box::new(self.body_value(a)),
+                else_: Box::new(self.body_value(b)),
+            },
+        }
+    }
+
+    /// Output index = substituted original spatial axes.
+    fn out_indices(&self) -> Vec<IndexExpr> {
+        self.def
+            .axes
+            .iter()
+            .map(|a| self.substitute_index(&IndexExpr::var(a.var)))
+            .collect()
+    }
+
+    /// Wrap a body of statements in the loop for `leaf`, applying
+    /// auto-unroll/vectorize overrides.
+    fn wrap_loop(&self, leaf: &Leaf, kind: ForKind, body: Vec<Stmt>) -> Stmt {
+        Stmt::For { var: leaf.var, extent: leaf.extent, kind, body }
+    }
+
+    /// Effective kinds of the main-nest leaves after auto-unroll /
+    /// vectorize-inner.
+    fn effective_kinds(&self) -> Vec<ForKind> {
+        let mut kinds: Vec<ForKind> = self.leaves.iter().map(|l| l.kind).collect();
+        if self.sched.vectorize_inner {
+            if let Some(last) = kinds.last_mut() {
+                if *last == ForKind::Serial {
+                    *last = ForKind::Vectorized;
+                }
+            }
+        }
+        // auto-unroll innermost serial loops while cumulative extent fits
+        let mut cum = 1i64;
+        for i in (0..self.leaves.len()).rev() {
+            cum = cum.saturating_mul(self.leaves[i].extent);
+            if cum > self.sched.unroll_max_step {
+                break;
+            }
+            if kinds[i] == ForKind::Serial {
+                kinds[i] = ForKind::Unrolled;
+            }
+        }
+        kinds
+    }
+
+    /// Elementwise lowering: single perfect nest, one store.
+    fn emit_elementwise(&mut self) -> Vec<Stmt> {
+        let kinds = self.effective_kinds();
+        let mut value = self.body_value(&self.def.body);
+        if let Some(epi) = self.def.epilogue {
+            value = apply_epilogue(value, epi);
+        }
+        let mut body = vec![Stmt::Store {
+            buffer: self.def.output.name.clone(),
+            indices: self.out_indices(),
+            value,
+            accumulate: false,
+        }];
+        for (leaf, kind) in self.leaves.iter().zip(kinds).rev() {
+            body = vec![self.wrap_loop(leaf, kind, body)];
+        }
+        body
+    }
+
+    /// Reduction lowering with init / accumulate / writeback structure.
+    fn emit_reduction(&mut self) -> anyhow::Result<Vec<Stmt>> {
+        let kinds = self.effective_kinds();
+        let fr = self
+            .leaves
+            .iter()
+            .position(|l| l.is_reduce)
+            .expect("reduction op has reduce leaves");
+        // Spatial leaves at positions >= fr form the accumulator tile.
+        let tile: Vec<usize> = (fr..self.leaves.len())
+            .filter(|&i| !self.leaves[i].is_reduce)
+            .collect();
+
+        // Accumulator target.
+        let (acc_buf, acc_indices) = if self.sched.cache_write {
+            let shape: i64 = tile.iter().map(|&i| self.leaves[i].extent).product();
+            let name = format!("{}.acc", self.def.output.name);
+            self.buffers.push(BufferDecl {
+                name: name.clone(),
+                shape: vec![shape.max(1)],
+                scope: MemScope::Local,
+            });
+            // mixed-radix index over tile leaves
+            let mut idx = IndexExpr::constant(0);
+            let mut stride = 1i64;
+            for &i in tile.iter().rev() {
+                idx = idx.add(&IndexExpr::scaled_var(self.leaves[i].var, stride));
+                stride *= self.leaves[i].extent;
+            }
+            (name, vec![idx])
+        } else {
+            (self.def.output.name.clone(), self.out_indices())
+        };
+
+        // Shared-memory staging: tensor -> (cached name, remap index).
+        let mut cached: HashMap<String, (String, Vec<IndexExpr>)> = HashMap::new();
+        let mut copies_at: HashMap<usize, Vec<Stmt>> = HashMap::new();
+        for cr in &self.sched.cache_reads {
+            let (copy, name, idx) = self.build_cache_copy(cr)?;
+            cached.insert(cr.tensor.clone(), (name, idx));
+            copies_at.entry(cr.at).or_default().push(copy);
+        }
+
+        // Main update statement.
+        let raw = self.body_value(&self.def.body);
+        let body_val = remap_cached(raw, &cached);
+        let update = match self.def.combiner {
+            Combiner::Sum => Stmt::Store {
+                buffer: acc_buf.clone(),
+                indices: acc_indices.clone(),
+                value: body_val,
+                accumulate: true,
+            },
+            Combiner::Max => Stmt::Store {
+                buffer: acc_buf.clone(),
+                indices: acc_indices.clone(),
+                value: Value::Max(
+                    Box::new(Value::Load {
+                        buffer: acc_buf.clone(),
+                        indices: acc_indices.clone(),
+                    }),
+                    Box::new(body_val),
+                ),
+                accumulate: false,
+            },
+        };
+
+        // Build the nest from position fr.. inward.
+        let mut inner: Vec<Stmt> = vec![update];
+        for i in (fr..self.leaves.len()).rev() {
+            inner = vec![self.wrap_loop(&self.leaves[i], kinds[i], inner)];
+            if let Some(mut copies) = copies_at.remove(&i) {
+                copies.append(&mut inner);
+                inner = copies;
+            }
+        }
+        // Wrap shared allocs around the whole reduce body.
+        for cr in &self.sched.cache_reads {
+            let (name, _) = &cached[&cr.tensor];
+            inner = vec![Stmt::Alloc { buffer: name.clone(), body: inner }];
+        }
+
+        // Init nest over tile leaves.
+        let init_val = Value::Imm(self.def.combiner.identity());
+        let mut init: Vec<Stmt> = vec![Stmt::Store {
+            buffer: acc_buf.clone(),
+            indices: acc_indices.clone(),
+            value: init_val,
+            accumulate: false,
+        }];
+        for &i in tile.iter().rev() {
+            init = vec![self.wrap_loop(&self.leaves[i], self.leaves[i].kind, init)];
+        }
+
+        // Writeback / epilogue nest.
+        let mut tail: Vec<Stmt> = Vec::new();
+        if self.sched.cache_write {
+            let mut v = Value::Load { buffer: acc_buf.clone(), indices: acc_indices };
+            if let Some(epi) = self.def.epilogue {
+                v = apply_epilogue(v, epi);
+            }
+            let mut wb = vec![Stmt::Store {
+                buffer: self.def.output.name.clone(),
+                indices: self.out_indices(),
+                value: v,
+                accumulate: false,
+            }];
+            for &i in tile.iter().rev() {
+                wb = vec![self.wrap_loop(&self.leaves[i], self.leaves[i].kind, wb)];
+            }
+            tail = wb;
+        } else if let Some(epi) = self.def.epilogue {
+            let v = apply_epilogue(
+                Value::Load {
+                    buffer: self.def.output.name.clone(),
+                    indices: self.out_indices(),
+                },
+                epi,
+            );
+            let mut ep = vec![Stmt::Store {
+                buffer: self.def.output.name.clone(),
+                indices: self.out_indices(),
+                value: v,
+                accumulate: false,
+            }];
+            for &i in tile.iter().rev() {
+                ep = vec![self.wrap_loop(&self.leaves[i], self.leaves[i].kind, ep)];
+            }
+            tail = ep;
+        }
+
+        // Body at the first-reduce boundary: init, reduce nest, tail.
+        let mut seq = init;
+        seq.extend(inner);
+        seq.extend(tail);
+        // Alloc for the local accumulator wraps the boundary body.
+        if self.sched.cache_write {
+            seq = vec![Stmt::Alloc { buffer: acc_buf, body: seq }];
+        }
+
+        // Outer (pre-boundary) spatial loops.
+        for i in (0..fr).rev() {
+            seq = vec![self.wrap_loop(&self.leaves[i], kinds[i], seq)];
+        }
+        Ok(seq)
+    }
+
+    /// Build one shared-memory copy nest for `cr`, returning the nest,
+    /// the cached buffer name and the remapped inner index.
+    fn build_cache_copy(
+        &mut self,
+        cr: &crate::schedule::CacheRead,
+    ) -> anyhow::Result<(Stmt, String, Vec<IndexExpr>)> {
+        // Substituted indices of this tensor's access.
+        let acc = self
+            .def
+            .body
+            .accesses()
+            .into_iter()
+            .find(|a| a.tensor == cr.tensor)
+            .ok_or_else(|| anyhow::anyhow!("cache read of unused tensor {}", cr.tensor))?;
+        let indices: Vec<IndexExpr> =
+            acc.indices.iter().map(|i| self.substitute_index(i)).collect();
+        // Guard bounds for this tensor (padding), substituted.
+        let guard = guard_for(&self.def.body, &cr.tensor)
+            .map(|b| {
+                b.iter()
+                    .map(|(e, lo, hi)| (self.substitute_index(e), *lo, *hi))
+                    .collect::<Vec<_>>()
+            });
+
+        // Leaves at positions >= cr.at whose var moves this access.
+        let moving: Vec<usize> = (cr.at..self.leaves.len())
+            .filter(|&i| {
+                indices.iter().any(|e| e.coeff(self.leaves[i].var) != 0)
+            })
+            .collect();
+        anyhow::ensure!(!moving.is_empty(), "cache tile for {} is a scalar", cr.tensor);
+
+        let shape: i64 = moving.iter().map(|&i| self.leaves[i].extent).product();
+        let name = format!("{}.shared", cr.tensor);
+        self.buffers.push(BufferDecl {
+            name: name.clone(),
+            shape: vec![shape],
+            scope: MemScope::Shared,
+        });
+        // mixed-radix cached index over moving leaves
+        let mut idx = IndexExpr::constant(0);
+        let mut stride = 1i64;
+        for &i in moving.iter().rev() {
+            idx = idx.add(&IndexExpr::scaled_var(self.leaves[i].var, stride));
+            stride *= self.leaves[i].extent;
+        }
+
+        // Copy nest: loop over moving leaves, global -> shared.
+        let mut load = Value::Load { buffer: cr.tensor.clone(), indices };
+        if let Some(bounds) = guard {
+            load = Value::Guarded {
+                bounds,
+                value: Box::new(load),
+                else_: Box::new(Value::Imm(0.0)),
+            };
+        }
+        let mut body = vec![Stmt::Store {
+            buffer: name.clone(),
+            indices: vec![idx.clone()],
+            value: load,
+            accumulate: false,
+        }];
+        for &i in moving.iter().rev() {
+            body = vec![Stmt::For {
+                var: self.leaves[i].var,
+                extent: self.leaves[i].extent,
+                kind: self.sched.copy_kind,
+                body,
+            }];
+        }
+        Ok((body.pop().unwrap(), name, vec![idx]))
+    }
+}
+
+/// Replace loads of cached tensors and strip guards that only protected
+/// cached loads (the guard moved into the copy nest).
+fn remap_cached(v: Value, cached: &HashMap<String, (String, Vec<IndexExpr>)>) -> Value {
+    match v {
+        Value::Load { buffer, indices } => match cached.get(&buffer) {
+            Some((name, idx)) => Value::Load { buffer: name.clone(), indices: idx.clone() },
+            None => Value::Load { buffer, indices },
+        },
+        Value::Imm(x) => Value::Imm(x),
+        Value::Add(a, b) => Value::Add(
+            Box::new(remap_cached(*a, cached)),
+            Box::new(remap_cached(*b, cached)),
+        ),
+        Value::Sub(a, b) => Value::Sub(
+            Box::new(remap_cached(*a, cached)),
+            Box::new(remap_cached(*b, cached)),
+        ),
+        Value::Mul(a, b) => Value::Mul(
+            Box::new(remap_cached(*a, cached)),
+            Box::new(remap_cached(*b, cached)),
+        ),
+        Value::Max(a, b) => Value::Max(
+            Box::new(remap_cached(*a, cached)),
+            Box::new(remap_cached(*b, cached)),
+        ),
+        Value::Relu(a) => Value::Relu(Box::new(remap_cached(*a, cached))),
+        Value::Guarded { bounds, value, else_ } => {
+            let all_cached = value
+                .loads()
+                .iter()
+                .all(|(b, _)| cached.contains_key(*b));
+            if all_cached {
+                remap_cached(*value, cached)
+            } else {
+                Value::Guarded {
+                    bounds,
+                    value: Box::new(remap_cached(*value, cached)),
+                    else_: Box::new(remap_cached(*else_, cached)),
+                }
+            }
+        }
+    }
+}
+
+/// Find the padding guard bounds protecting `tensor` in the body.
+fn guard_for<'a>(
+    b: &'a BodyExpr,
+    tensor: &str,
+) -> Option<&'a [(crate::expr::IndexExpr, i64, i64)]> {
+    match b {
+        BodyExpr::Select(pred, inner, _) => {
+            if inner.accesses().iter().any(|a| a.tensor == tensor) {
+                Some(&pred.bounds)
+            } else {
+                None
+            }
+        }
+        BodyExpr::Add(a, b2)
+        | BodyExpr::Sub(a, b2)
+        | BodyExpr::Mul(a, b2)
+        | BodyExpr::Max(a, b2) => guard_for(a, tensor).or_else(|| guard_for(b2, tensor)),
+        BodyExpr::Relu(a) => guard_for(a, tensor),
+        BodyExpr::Load(_) | BodyExpr::Imm(_) => None,
+    }
+}
+
+fn apply_epilogue(v: Value, epi: Epilogue) -> Value {
+    match epi {
+        Epilogue::Relu => Value::Relu(Box::new(v)),
+        Epilogue::BiasRelu => Value::Relu(Box::new(Value::Add(
+            Box::new(v),
+            Box::new(Value::Imm(0.1)),
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ast::analysis::analyze;
+    use crate::expr::ops;
+    use crate::schedule::template::{Task, TemplateKind};
+    use crate::util::Rng;
+
+    fn matmul_task(t: TemplateKind) -> Task {
+        Task::new(ops::matmul(64, 64, 64), t)
+    }
+
+    #[test]
+    fn lower_matmul_cpu_structure() {
+        let task = matmul_task(TemplateKind::Cpu);
+        let mut rng = Rng::seed_from_u64(3);
+        for _ in 0..30 {
+            let e = task.space.sample(&mut rng);
+            let p = task.lower(&e).unwrap();
+            let a = analyze(&p);
+            // main chain must read A and B and write something
+            let main = a.longest_chain();
+            assert!(main.accesses.iter().any(|x| x.buffer == "A" || x.buffer == "A.shared"));
+            assert_eq!(p.flops, 2 * 64 * 64 * 64);
+        }
+    }
+
+    #[test]
+    fn lower_matmul_gpu_has_shared_and_local() {
+        let task = matmul_task(TemplateKind::Gpu);
+        let e = task.space.entity(12345 % task.space.size());
+        let p = task.lower(&e).unwrap();
+        assert!(p.buffer("A.shared").is_some());
+        assert!(p.buffer("B.shared").is_some());
+        assert!(p.buffer("C.acc").is_some());
+        assert_eq!(p.buffer("A.shared").unwrap().scope, MemScope::Shared);
+        assert_eq!(p.buffer("C.acc").unwrap().scope, MemScope::Local);
+        // main update chain reads shared, not global
+        let a = analyze(&p);
+        let main = a
+            .chains
+            .iter()
+            .find(|c| c.accesses[0].buffer == "C.acc" && c.accumulate)
+            .expect("accumulate chain");
+        assert!(main.access("A.shared").is_some());
+        assert!(main.access("A").is_none());
+    }
+
+    #[test]
+    fn lower_conv_with_padding_guard_in_copy() {
+        let p = ops::Conv2dParams {
+            n: 1, h: 14, w: 14, ic: 16, oc: 16, kh: 3, kw: 3, stride: 1, pad: 1,
+        };
+        let task = Task::new(ops::conv2d(p), TemplateKind::Gpu);
+        let e = task.space.entity(7);
+        let prog = task.lower(&e).unwrap();
+        let a = analyze(&prog);
+        // the I.shared copy chain carries the padding guard
+        let copy = a
+            .chains
+            .iter()
+            .find(|c| c.accesses[0].buffer == "I.shared")
+            .expect("copy chain");
+        assert!(copy.has_guard);
+        // compute chain lost the guard (it moved into the copy)
+        let main = a
+            .chains
+            .iter()
+            .find(|c| c.accesses[0].buffer == "O.acc" && c.accumulate)
+            .unwrap();
+        assert!(!main.has_guard);
+    }
+
+    #[test]
+    fn unroll_and_vectorize_annotations_applied() {
+        let def = ops::matmul(32, 32, 32);
+        let task = Task::new(def, TemplateKind::Cpu);
+        // craft a config with unroll = 64 and vec = 1 whose inner loops
+        // are small enough for the auto-unroll window
+        let iu = task.space.knob_index("unroll").unwrap();
+        let iv = task.space.knob_index("vec").unwrap();
+        let mut e = task.space.entity(0);
+        let crate::schedule::space::Knob::Split { options, .. } = &task.space.knobs[0]
+        else {
+            panic!()
+        };
+        // y split [4, 8, 1]: the y.2 loop (extent 1) sits inside the
+        // vectorized x.2 and is unrollable
+        e.choices[0] =
+            options.iter().position(|o| o == &vec![4, 8, 1]).unwrap() as u32;
+        e.choices[iu] = 3; // 64
+        e.choices[iv] = 1;
+        let p = task.lower(&e).unwrap();
+        let mut has_unrolled = false;
+        let mut has_vec = false;
+        fn walk(s: &Stmt, u: &mut bool, v: &mut bool) {
+            if let Stmt::For { kind, body, .. } = s {
+                if *kind == ForKind::Unrolled {
+                    *u = true;
+                }
+                if *kind == ForKind::Vectorized {
+                    *v = true;
+                }
+                for b in body {
+                    walk(b, u, v);
+                }
+            } else if let Stmt::Alloc { body, .. } = s {
+                for b in body {
+                    walk(b, u, v);
+                }
+            }
+        }
+        for s in &p.stmts {
+            walk(s, &mut has_unrolled, &mut has_vec);
+        }
+        assert!(has_vec, "vectorized loop missing:\n{}", p.pretty());
+        assert!(has_unrolled, "unrolled loop missing:\n{}", p.pretty());
+    }
+
+    #[test]
+    fn maxpool_uses_max_combiner() {
+        let def = ops::max_pool2d(1, 8, 16, 16, 2, 2);
+        let task = Task::new(def, TemplateKind::Cpu);
+        let e = task.space.entity(0);
+        let p = task.lower(&e).unwrap();
+        // find the init store: must be -inf
+        fn find_init(s: &Stmt) -> Option<f64> {
+            match s {
+                Stmt::Store { value: Value::Imm(x), accumulate: false, .. } => Some(*x),
+                Stmt::For { body, .. } | Stmt::Alloc { body, .. } => {
+                    body.iter().find_map(find_init)
+                }
+                _ => None,
+            }
+        }
+        let init = p.stmts.iter().find_map(find_init).unwrap();
+        assert_eq!(init, f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn fused_epilogue_appears_in_writeback() {
+        let p = ops::Conv2dParams {
+            n: 1, h: 8, w: 8, ic: 8, oc: 8, kh: 1, kw: 1, stride: 1, pad: 0,
+        };
+        let def = ops::with_epilogue(ops::conv2d(p), crate::expr::Epilogue::Relu);
+        let task = Task::new(def, TemplateKind::Gpu);
+        let e = task.space.entity(0);
+        let prog = task.lower(&e).unwrap();
+        assert!(prog.pretty().contains("relu("), "{}", prog.pretty());
+    }
+
+    #[test]
+    fn trip_count_matches_extent_product() {
+        // whatever the schedule, the accumulate chain trip must equal
+        // the total iteration domain
+        let task = matmul_task(TemplateKind::Cpu);
+        let mut rng = Rng::seed_from_u64(11);
+        for _ in 0..20 {
+            let e = task.space.sample(&mut rng);
+            let p = task.lower(&e).unwrap();
+            let a = analyze(&p);
+            let main = a
+                .chains
+                .iter()
+                .filter(|c| c.accumulate || c.accesses[0].buffer.ends_with(".acc"))
+                .find(|c| c.accumulate)
+                .unwrap();
+            assert_eq!(main.trip, (64f64).powi(3));
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! `autotvm` CLI — the L3 coordinator binary.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = autotvm::coordinator::run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

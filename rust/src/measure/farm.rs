@@ -1,0 +1,179 @@
+//! Device-farm measurement and failure injection.
+//!
+//! The paper's system measures batches on a farm of boards behind an
+//! RPC tracker; boards flake, time out and return build errors, and the
+//! tuner must absorb that. [`DeviceFarm`] reproduces the farm semantics
+//! (a batch is sharded round-robin across device replicas and measured
+//! concurrently); [`FlakyMeasurer`] injects seeded failures into any
+//! back-end so tests can assert the tuning loop is robust to them.
+
+use super::{MeasureResult, Measurer, SimMeasurer};
+use crate::schedule::space::ConfigEntity;
+use crate::schedule::template::Task;
+use crate::util::Rng;
+use std::sync::Mutex;
+
+/// A farm of simulated boards of the same device type.
+pub struct DeviceFarm {
+    pub replicas: Vec<SimMeasurer>,
+}
+
+impl DeviceFarm {
+    /// `n` boards of the given device model (distinct noise streams —
+    /// real boards differ run to run).
+    pub fn new(device: crate::sim::DeviceModel, n: usize, seed: u64) -> Self {
+        let replicas = (0..n)
+            .map(|i| SimMeasurer::with_seed(device.clone(), seed.wrapping_add(i as u64 * 1_000_003)))
+            .collect();
+        DeviceFarm { replicas }
+    }
+}
+
+impl Measurer for DeviceFarm {
+    fn measure(&self, task: &Task, batch: &[ConfigEntity]) -> Vec<MeasureResult> {
+        let n = self.replicas.len().max(1);
+        // shard round-robin, measure shards concurrently, then reassemble
+        let shards: Vec<Vec<(usize, ConfigEntity)>> = (0..n)
+            .map(|r| {
+                batch
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| i % n == r)
+                    .map(|(i, e)| (i, e.clone()))
+                    .collect()
+            })
+            .collect();
+        let mut out: Vec<Option<MeasureResult>> = vec![None; batch.len()];
+        let results: Vec<Vec<(usize, MeasureResult)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = shards
+                .iter()
+                .zip(&self.replicas)
+                .map(|(shard, replica)| {
+                    s.spawn(move || {
+                        let entities: Vec<ConfigEntity> =
+                            shard.iter().map(|(_, e)| e.clone()).collect();
+                        let rs = replica.measure(task, &entities);
+                        shard
+                            .iter()
+                            .map(|(i, _)| *i)
+                            .zip(rs)
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("farm worker")).collect()
+        });
+        for shard in results {
+            for (i, r) in shard {
+                out[i] = Some(r);
+            }
+        }
+        out.into_iter().map(|r| r.expect("all shards returned")).collect()
+    }
+
+    fn target(&self) -> String {
+        format!(
+            "farm({}x{})",
+            self.replicas.len(),
+            self.replicas.first().map(|r| r.device.name).unwrap_or("?")
+        )
+    }
+}
+
+/// Failure-injecting wrapper: with probability `fail_prob` a
+/// measurement is replaced by a board error (timeout / crash).
+pub struct FlakyMeasurer<M: Measurer> {
+    pub inner: M,
+    pub fail_prob: f64,
+    rng: Mutex<Rng>,
+}
+
+impl<M: Measurer> FlakyMeasurer<M> {
+    pub fn new(inner: M, fail_prob: f64, seed: u64) -> Self {
+        FlakyMeasurer { inner, fail_prob, rng: Mutex::new(Rng::seed_from_u64(seed)) }
+    }
+}
+
+impl<M: Measurer> Measurer for FlakyMeasurer<M> {
+    fn measure(&self, task: &Task, batch: &[ConfigEntity]) -> Vec<MeasureResult> {
+        let results = self.inner.measure(task, batch);
+        let mut rng = self.rng.lock().unwrap();
+        results
+            .into_iter()
+            .map(|r| {
+                if rng.gen_bool(self.fail_prob) {
+                    MeasureResult::err("injected: board timeout")
+                } else {
+                    r
+                }
+            })
+            .collect()
+    }
+
+    fn target(&self) -> String {
+        format!("flaky({})", self.inner.target())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::ops;
+    use crate::schedule::template::TemplateKind;
+    use crate::sim::devices::sim_gpu;
+
+    #[test]
+    fn farm_preserves_batch_order_and_results() {
+        let task = Task::new(ops::matmul(128, 128, 128), TemplateKind::Gpu);
+        let mut rng = Rng::seed_from_u64(4);
+        let batch: Vec<ConfigEntity> =
+            (0..24).map(|_| task.space.sample(&mut rng)).collect();
+        let farm = DeviceFarm::new(sim_gpu(), 4, 7);
+        let rs = farm.measure(&task, &batch);
+        assert_eq!(rs.len(), batch.len());
+        // noise-free comparison: each result must match a direct
+        // evaluate() of the same entity up to the lognormal noise bound
+        let dev = sim_gpu();
+        for (e, r) in batch.iter().zip(&rs) {
+            if let Some(secs) = r.seconds {
+                let base = dev.evaluate(&task.lower(e).unwrap()).unwrap().seconds;
+                assert!((secs / base).ln().abs() < 0.5, "order scrambled?");
+            }
+        }
+    }
+
+    #[test]
+    fn flaky_injects_failures_at_rate() {
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+        let mut rng = Rng::seed_from_u64(5);
+        let batch: Vec<ConfigEntity> =
+            (0..200).map(|_| task.space.sample(&mut rng)).collect();
+        let m = FlakyMeasurer::new(SimMeasurer::with_seed(sim_gpu(), 1), 0.3, 9);
+        let rs = m.measure(&task, &batch);
+        let failures = rs.iter().filter(|r| !r.is_ok()).count();
+        assert!((30..100).contains(&failures), "failure count {failures}");
+    }
+
+    #[test]
+    fn tuner_survives_flaky_farm() {
+        // end-to-end: 20% failure rate must not stop the search from
+        // improving (the paper's system records errors as 0 GFLOPS and
+        // keeps going)
+        let task = Task::new(ops::matmul(128, 128, 128), TemplateKind::Gpu);
+        let farm = DeviceFarm::new(sim_gpu(), 3, 2);
+        let flaky = FlakyMeasurer::new(farm, 0.2, 3);
+        let o = crate::tuner::TuneOptions {
+            n_trials: 96,
+            batch: 32,
+            sa: crate::explore::SaParams { n_chains: 16, n_steps: 30, ..Default::default() },
+            ..Default::default()
+        };
+        let res = crate::tuner::tune_gbt(task, &flaky, o);
+        assert!(res.best_gflops() > 0.0);
+        assert!(res.records.iter().any(|r| r.error.is_some()), "no failures recorded");
+        assert!(
+            res.best_at(96) >= res.best_at(32),
+            "search failed to improve under failures"
+        );
+    }
+}

@@ -1,0 +1,144 @@
+//! Measurement infrastructure — querying the black box `f(x)`.
+//!
+//! The paper's system builds candidate programs and runs them on a farm
+//! of real devices over RPC. Here a [`Measurer`] abstracts the back-end:
+//!
+//! * [`SimMeasurer`] — builds (lowers) and "runs" candidates on a
+//!   [`DeviceModel`] simulator, in parallel across a worker pool with
+//!   seeded measurement noise, mirroring the batched-parallel
+//!   measurement semantics of the paper's device farm.
+//! * [`pjrt::PjrtMeasurer`] — the real-hardware path: compiles
+//!   AOT-generated Pallas kernel variants through the PJRT CPU client
+//!   and wall-clocks them (see `examples/pjrt_measure.rs`).
+
+pub mod farm;
+pub mod pjrt;
+
+use crate::schedule::space::ConfigEntity;
+use crate::schedule::template::Task;
+use crate::util::parallel_map;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Outcome of measuring one candidate. Invalid configs (resource-limit
+/// violations, compile errors) carry `error` and zero GFLOPS, exactly
+/// like failed trials in the paper's system.
+#[derive(Clone, Debug)]
+pub struct MeasureResult {
+    pub gflops: f64,
+    pub seconds: Option<f64>,
+    pub error: Option<String>,
+}
+
+impl MeasureResult {
+    pub fn ok(gflops: f64, seconds: f64) -> Self {
+        MeasureResult { gflops, seconds: Some(seconds), error: None }
+    }
+
+    pub fn err(msg: impl Into<String>) -> Self {
+        MeasureResult { gflops: 0.0, seconds: None, error: Some(msg.into()) }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+/// A measurement back-end.
+///
+/// Not `Send`/`Sync`: the tuner drives measurement from one thread and
+/// back-ends parallelize internally (PJRT handles are thread-affine in
+/// the `xla` crate).
+pub trait Measurer {
+    fn measure(&self, task: &Task, batch: &[ConfigEntity]) -> Vec<MeasureResult>;
+
+    /// Human-readable target name (for logs / records).
+    fn target(&self) -> String;
+}
+
+/// Simulator-backed measurer with a parallel build+run worker pool.
+pub struct SimMeasurer {
+    pub device: crate::sim::DeviceModel,
+    pub threads: usize,
+    /// deterministic measurement-noise stream
+    seed: AtomicU64,
+}
+
+impl SimMeasurer {
+    pub fn new(device: crate::sim::DeviceModel) -> Self {
+        SimMeasurer { device, threads: crate::util::default_threads(), seed: AtomicU64::new(1) }
+    }
+
+    /// Fix the noise stream (for reproducible experiments).
+    pub fn with_seed(device: crate::sim::DeviceModel, seed: u64) -> Self {
+        SimMeasurer { device, threads: crate::util::default_threads(), seed: AtomicU64::new(seed) }
+    }
+}
+
+impl Measurer for SimMeasurer {
+    fn measure(&self, task: &Task, batch: &[ConfigEntity]) -> Vec<MeasureResult> {
+        // one seed per candidate, drawn up front so parallel order
+        // doesn't matter
+        let base = self.seed.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        let work: Vec<(usize, &ConfigEntity)> = batch.iter().enumerate().collect();
+        parallel_map(&work, self.threads, |(i, e)| {
+            let prog = match task.lower(e) {
+                Ok(p) => p,
+                Err(err) => return MeasureResult::err(format!("lowering: {err}")),
+            };
+            match self.device.measure(&prog, base + *i as u64) {
+                Ok(r) => MeasureResult::ok(r.gflops, r.seconds),
+                Err(e) => MeasureResult::err(e.to_string()),
+            }
+        })
+    }
+
+    fn target(&self) -> String {
+        self.device.name.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::ops;
+    use crate::schedule::template::TemplateKind;
+    use crate::sim::devices::{sim_cpu, sim_gpu};
+    use crate::util::Rng;
+
+    #[test]
+    fn sim_measurer_batch_matches_single() {
+        let task = Task::new(ops::matmul(128, 128, 128), TemplateKind::Cpu);
+        let mut rng = Rng::seed_from_u64(1);
+        let batch: Vec<_> = (0..16).map(|_| task.space.sample(&mut rng)).collect();
+        let m = SimMeasurer::with_seed(sim_cpu(), 7);
+        let results = m.measure(&task, &batch);
+        assert_eq!(results.len(), batch.len());
+        assert!(results.iter().filter(|r| r.is_ok()).count() > 8);
+        // deterministic given the same seed
+        let m2 = SimMeasurer::with_seed(sim_cpu(), 7);
+        let results2 = m2.measure(&task, &batch);
+        for (a, b) in results.iter().zip(&results2) {
+            assert_eq!(a.gflops, b.gflops);
+        }
+    }
+
+    #[test]
+    fn invalid_configs_become_errors() {
+        let task = Task::new(ops::matmul(1024, 1024, 1024), TemplateKind::Gpu);
+        let m = SimMeasurer::new(sim_gpu());
+        // thread tile 64x64 exceeds the 1024-thread cap
+        let mut e = task.space.entity(0);
+        for knob in [0usize, 1] {
+            let crate::schedule::space::Knob::Split { options, .. } =
+                &task.space.knobs[knob]
+            else {
+                panic!()
+            };
+            e.choices[knob] =
+                options.iter().position(|o| o == &vec![16, 64, 1]).unwrap() as u32;
+        }
+        let r = m.measure(&task, &[e]);
+        assert!(!r[0].is_ok());
+        assert_eq!(r[0].gflops, 0.0);
+    }
+}

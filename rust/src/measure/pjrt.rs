@@ -1,0 +1,160 @@
+//! Real-hardware measurement through PJRT: wall-clock AOT-compiled
+//! Pallas tiled-matmul kernel variants on this machine's CPU.
+//!
+//! `python/compile/aot.py --variants` emits one HLO artifact per tile
+//! configuration of the L1 Pallas kernel
+//! (`matmul{N}_bm{bm}_bn{bn}_bk{bk}.hlo.txt`). This measurer maps a
+//! config entity of [`matmul_variant_task`] to its artifact, compiles it
+//! once (cached) and times real executions — a genuine `f(x)` proving
+//! the whole tuner loop runs against actual hardware, not only the
+//! simulator (DESIGN.md §Experiment index, `examples/pjrt_measure.rs`).
+
+use super::{MeasureResult, Measurer};
+use crate::expr::ops;
+use crate::runtime::{artifacts_dir, literal_f32, PjrtRuntime};
+use crate::schedule::space::{ConfigEntity, ConfigSpace, Knob};
+use crate::schedule::template::{Task, TemplateKind};
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Matmul size of the variant family (matches `aot.py`).
+pub const VARIANT_N: i64 = 256;
+/// Tile options per dimension (matches `aot.py`).
+pub const BM_OPTS: [i64; 3] = [32, 64, 128];
+pub const BN_OPTS: [i64; 3] = [32, 64, 128];
+pub const BK_OPTS: [i64; 3] = [64, 128, 256];
+
+/// Build the restricted task whose space enumerates exactly the
+/// pre-compiled Pallas variants. The knob layout matches the GPU
+/// template (splits per axis, then unroll, then vec) so features and
+/// lowering work unchanged; block tiling `(N/b, 1, b)` mirrors the
+/// Pallas grid (one program instance per block).
+pub fn matmul_variant_task() -> Task {
+    let def = ops::matmul(VARIANT_N, VARIANT_N, VARIANT_N);
+    let n = VARIANT_N;
+    let split3 = |opts: &[i64]| -> Vec<Vec<i64>> {
+        opts.iter().map(|&b| vec![n / b, 1, b]).collect()
+    };
+    let split2 = |opts: &[i64]| -> Vec<Vec<i64>> {
+        opts.iter().map(|&b| vec![n / b, b]).collect()
+    };
+    let space = ConfigSpace {
+        knobs: vec![
+            Knob::Split { name: "tile_y".into(), extent: n, parts: 3, options: split3(&BM_OPTS) },
+            Knob::Split { name: "tile_x".into(), extent: n, parts: 3, options: split3(&BN_OPTS) },
+            Knob::Split { name: "tile_k".into(), extent: n, parts: 2, options: split2(&BK_OPTS) },
+            Knob::Choice { name: "unroll".into(), options: vec![0] },
+            Knob::Choice { name: "vec".into(), options: vec![0] },
+        ],
+    };
+    Task { def, template: TemplateKind::Gpu, space }
+}
+
+/// Tile sizes selected by an entity of [`matmul_variant_task`].
+pub fn variant_tiles(task: &Task, e: &ConfigEntity) -> (i64, i64, i64) {
+    let sched = task.schedule(e);
+    (sched.splits[0][2], sched.splits[1][2], sched.splits[2][1])
+}
+
+/// Artifact file name for a tile configuration.
+pub fn variant_artifact(bm: i64, bn: i64, bk: i64) -> String {
+    format!("matmul{VARIANT_N}_bm{bm}_bn{bn}_bk{bk}.hlo.txt")
+}
+
+/// PJRT wall-clock measurer over the pre-compiled variant family.
+pub struct PjrtMeasurer {
+    rt: PjrtRuntime,
+    /// compiled-executable cache keyed by artifact name
+    cache: Mutex<HashMap<String, std::sync::Arc<crate::runtime::Executable>>>,
+    /// timing repetitions (min is reported)
+    pub repeats: usize,
+    inputs: (xla::Literal, xla::Literal),
+}
+
+impl PjrtMeasurer {
+    pub fn new(rt: PjrtRuntime) -> anyhow::Result<Self> {
+        let n = VARIANT_N as usize;
+        // fixed pseudo-random inputs (value content doesn't affect time)
+        let mut rng = crate::util::Rng::seed_from_u64(0xDA7A);
+        let a: Vec<f32> = (0..n * n).map(|_| rng.gen_f64() as f32).collect();
+        let b: Vec<f32> = (0..n * n).map(|_| rng.gen_f64() as f32).collect();
+        Ok(PjrtMeasurer {
+            rt,
+            cache: Mutex::new(HashMap::new()),
+            repeats: 3,
+            inputs: (
+                literal_f32(&a, &[VARIANT_N, VARIANT_N])?,
+                literal_f32(&b, &[VARIANT_N, VARIANT_N])?,
+            ),
+        })
+    }
+
+    fn executable(
+        &self,
+        name: &str,
+    ) -> anyhow::Result<std::sync::Arc<crate::runtime::Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = artifacts_dir().join(name);
+        anyhow::ensure!(path.exists(), "variant artifact {name} missing — run `make artifacts`");
+        let exe = std::sync::Arc::new(self.rt.load(&path)?);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+}
+
+impl Measurer for PjrtMeasurer {
+    fn measure(&self, task: &Task, batch: &[ConfigEntity]) -> Vec<MeasureResult> {
+        let flops = task.def.total_flops() as f64;
+        batch
+            .iter()
+            .map(|e| {
+                let (bm, bn, bk) = variant_tiles(task, e);
+                let name = variant_artifact(bm, bn, bk);
+                let exe = match self.executable(&name) {
+                    Ok(e) => e,
+                    Err(err) => return MeasureResult::err(err.to_string()),
+                };
+                let inputs = [self.inputs.0.clone(), self.inputs.1.clone()];
+                // warmup
+                if let Err(err) = exe.run(&inputs) {
+                    return MeasureResult::err(err.to_string());
+                }
+                let mut best = f64::INFINITY;
+                for _ in 0..self.repeats {
+                    let t0 = Instant::now();
+                    if let Err(err) = exe.run(&inputs) {
+                        return MeasureResult::err(err.to_string());
+                    }
+                    best = best.min(t0.elapsed().as_secs_f64());
+                }
+                MeasureResult::ok(flops / best / 1e9, best)
+            })
+            .collect()
+    }
+
+    fn target(&self) -> String {
+        format!("pjrt-{}", self.rt.platform())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_task_space_is_exact_grid() {
+        let t = matmul_variant_task();
+        assert_eq!(t.space.size() as usize, BM_OPTS.len() * BN_OPTS.len() * BK_OPTS.len());
+        // every entity lowers and maps to a valid artifact name
+        for i in 0..t.space.size() {
+            let e = t.space.entity(i);
+            let p = t.lower(&e).unwrap();
+            assert!(p.flops > 0);
+            let (bm, bn, bk) = variant_tiles(&t, &e);
+            assert!(BM_OPTS.contains(&bm) && BN_OPTS.contains(&bn) && BK_OPTS.contains(&bk));
+        }
+    }
+}

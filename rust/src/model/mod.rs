@@ -1,0 +1,337 @@
+//! Statistical cost models `f̂(x)` (§3.1) behind a common trait, plus
+//! acquisition functions (§3.3) and the transfer-learning combination
+//! `f̂ = f̂_global + f̂_local` (Eq. 4).
+//!
+//! * [`GbtModel`] — gradient boosted trees (XGBoost-style, in-crate).
+//! * [`EnsembleModel`] — bootstrap ensemble of GBTs exposing
+//!   uncertainty for the EI/UCB ablation (Fig. 7).
+//! * [`TransferModel`] — frozen global model (trained on `D'` with an
+//!   invariant representation) + in-domain local model trained with the
+//!   global predictions as base margin (Fig. 8/9).
+//! * `neural::NeuralModel` — the context-encoded neural model (Fig. 3d),
+//!   executed via AOT-compiled JAX artifacts on PJRT (see
+//!   [`crate::runtime`]); the TreeGRU stand-in per DESIGN.md.
+
+pub mod neural;
+
+use crate::gbt::{Gbt, GbtEnsemble, GbtParams, Matrix};
+
+/// A trainable cost model. Scores follow "higher = better".
+/// (Driven from the tuner thread; PJRT-backed models are thread-affine.)
+pub trait CostModel {
+    /// Predict scores for a batch of feature rows.
+    fn predict(&self, x: &Matrix) -> Vec<f64>;
+
+    /// Predict (mean, std); models without uncertainty return std = 0.
+    fn predict_stats(&self, x: &Matrix) -> Vec<(f64, f64)> {
+        self.predict(x).into_iter().map(|m| (m, 0.0)).collect()
+    }
+
+    /// Retrain from the complete dataset (the paper retrains on all of
+    /// `D` after each measurement batch). `groups` are contiguous group
+    /// sizes for rank objectives.
+    fn fit(&mut self, x: &Matrix, y: &[f64], groups: &[usize]);
+
+    /// Whether the model has been fitted at least once.
+    fn ready(&self) -> bool;
+}
+
+/// GBT-backed cost model.
+pub struct GbtModel {
+    pub params: GbtParams,
+    model: Option<Gbt>,
+}
+
+impl GbtModel {
+    pub fn new(params: GbtParams) -> Self {
+        GbtModel { params, model: None }
+    }
+}
+
+impl CostModel for GbtModel {
+    fn predict(&self, x: &Matrix) -> Vec<f64> {
+        match &self.model {
+            Some(m) => m.predict_batch(x),
+            None => vec![0.0; x.rows],
+        }
+    }
+
+    fn fit(&mut self, x: &Matrix, y: &[f64], groups: &[usize]) {
+        if x.rows == 0 {
+            return;
+        }
+        self.model = Some(Gbt::train(x, y, groups, self.params.clone()));
+    }
+
+    fn ready(&self) -> bool {
+        self.model.is_some()
+    }
+}
+
+/// Bootstrap-ensemble model with uncertainty (Fig. 7 ablation). The
+/// paper uses 5 bootstrap models with the regression objective.
+pub struct EnsembleModel {
+    pub params: GbtParams,
+    pub k: usize,
+    model: Option<GbtEnsemble>,
+}
+
+impl EnsembleModel {
+    pub fn new(params: GbtParams, k: usize) -> Self {
+        EnsembleModel { params, k, model: None }
+    }
+}
+
+impl CostModel for EnsembleModel {
+    fn predict(&self, x: &Matrix) -> Vec<f64> {
+        self.predict_stats(x).into_iter().map(|(m, _)| m).collect()
+    }
+
+    fn predict_stats(&self, x: &Matrix) -> Vec<(f64, f64)> {
+        match &self.model {
+            Some(m) => m.predict_stats(x),
+            None => vec![(0.0, 0.0); x.rows],
+        }
+    }
+
+    fn fit(&mut self, x: &Matrix, y: &[f64], _groups: &[usize]) {
+        if x.rows == 0 {
+            return;
+        }
+        self.model = Some(GbtEnsemble::train(x, y, self.k, self.params.clone()));
+    }
+
+    fn ready(&self) -> bool {
+        self.model.is_some()
+    }
+}
+
+/// Acquisition functions over (mean, std) — §3.3 "Uncertainty
+/// Estimator". With `Mean` the search uses f̂ directly (the paper's
+/// default); `Ucb`/`Ei` are the Bayesian-optimization alternatives the
+/// paper evaluates and finds unhelpful (Fig. 7).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Acquisition {
+    Mean,
+    /// mean + κ·std
+    Ucb(f64),
+    /// expected improvement over `best`
+    Ei,
+}
+
+impl Acquisition {
+    /// Score a candidate (higher = more desirable to try).
+    pub fn score(self, mean: f64, std: f64, best: f64) -> f64 {
+        match self {
+            Acquisition::Mean => mean,
+            Acquisition::Ucb(kappa) => mean + kappa * std,
+            Acquisition::Ei => {
+                if std <= 1e-12 {
+                    return (mean - best).max(0.0);
+                }
+                let z = (mean - best) / std;
+                // EI = (μ-b)Φ(z) + σφ(z)
+                (mean - best) * phi_cdf(z) + std * phi_pdf(z)
+            }
+        }
+    }
+}
+
+fn phi_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard normal CDF via the Abramowitz–Stegun erf approximation.
+fn phi_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    // A&S 7.1.26, |error| ≤ 1.5e-7
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Transfer-learning model (Eq. 4): a frozen global model plus a local
+/// model trained on the current task. The local model is trained with
+/// the (linearly calibrated) global predictions as base margin, so
+/// `predict = calibrate(global) + local_trees` — the additive
+/// combination of the paper.
+pub struct TransferModel {
+    global: Gbt,
+    /// linear calibration of global scores to local label scale
+    calib: (f64, f64),
+    local: Option<Gbt>,
+    pub params: GbtParams,
+}
+
+impl TransferModel {
+    /// Train the global model on the source-domain dataset `D'`.
+    pub fn from_source(
+        x: &Matrix,
+        y: &[f64],
+        groups: &[usize],
+        params: GbtParams,
+    ) -> TransferModel {
+        let global = Gbt::train(x, y, groups, params.clone());
+        TransferModel { global, calib: (1.0, 0.0), local: None, params }
+    }
+
+    fn global_scores(&self, x: &Matrix) -> Vec<f64> {
+        self.global.predict_batch(x)
+    }
+}
+
+impl CostModel for TransferModel {
+    fn predict(&self, x: &Matrix) -> Vec<f64> {
+        let g = self.global_scores(x);
+        let (a, b) = self.calib;
+        match &self.local {
+            Some(l) => {
+                let lp = l.predict_batch(x);
+                g.iter().zip(lp).map(|(gi, li)| a * gi + b + li).collect()
+            }
+            None => g.iter().map(|gi| a * gi + b).collect(),
+        }
+    }
+
+    fn fit(&mut self, x: &Matrix, y: &[f64], groups: &[usize]) {
+        if x.rows == 0 {
+            return;
+        }
+        let g = self.global_scores(x);
+        // least-squares calibration y ≈ a·g + b
+        let n = x.rows as f64;
+        let mg = g.iter().sum::<f64>() / n;
+        let my = y.iter().sum::<f64>() / n;
+        let cov: f64 = g.iter().zip(y).map(|(gi, yi)| (gi - mg) * (yi - my)).sum();
+        let var: f64 = g.iter().map(|gi| (gi - mg) * (gi - mg)).sum();
+        let a = if var > 1e-12 { cov / var } else { 0.0 };
+        let b = my - a * mg;
+        self.calib = (a, b);
+        let margin: Vec<f64> = g.iter().map(|gi| a * gi + b).collect();
+        self.local =
+            Some(Gbt::train_with_margin(x, y, groups, &margin, self.params.clone()));
+    }
+
+    /// Global model alone is already usable.
+    fn ready(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbt::Objective;
+    use crate::util::Rng;
+
+    fn synth(n: usize, seed: u64, shift: f64) -> (Matrix, Vec<f64>) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut rows = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let r: Vec<f64> = (0..6).map(|_| rng.gen_f64() * 4.0).collect();
+            y.push(2.0 * r[0] - r[1] * r[2] + shift);
+            rows.push(r);
+        }
+        (Matrix::from_rows(&rows), y)
+    }
+
+    #[test]
+    fn gbt_model_lifecycle() {
+        let (x, y) = synth(500, 1, 0.0);
+        let mut m = GbtModel::new(GbtParams {
+            objective: Objective::Regression,
+            n_trees: 30,
+            ..Default::default()
+        });
+        assert!(!m.ready());
+        assert_eq!(m.predict(&x), vec![0.0; 500]);
+        m.fit(&x, &y, &[]);
+        assert!(m.ready());
+        let acc = crate::gbt::rank_accuracy(&m.predict(&x), &y);
+        assert!(acc > 0.9, "in-sample rank acc {acc}");
+    }
+
+    #[test]
+    fn ensemble_model_has_uncertainty() {
+        let (x, y) = synth(300, 2, 0.0);
+        let mut m = EnsembleModel::new(
+            GbtParams { objective: Objective::Regression, n_trees: 10, ..Default::default() },
+            5,
+        );
+        m.fit(&x, &y, &[]);
+        let stats = m.predict_stats(&x);
+        assert!(stats.iter().any(|(_, s)| *s > 0.0));
+    }
+
+    #[test]
+    fn acquisition_functions_behave() {
+        // UCB rewards uncertainty
+        assert!(Acquisition::Ucb(2.0).score(1.0, 1.0, 0.0) > Acquisition::Mean.score(1.0, 1.0, 0.0));
+        // EI is 0 for hopeless certain candidates, positive for uncertain
+        assert_eq!(Acquisition::Ei.score(0.0, 0.0, 5.0), 0.0);
+        assert!(Acquisition::Ei.score(0.0, 2.0, 0.5) > 0.0);
+        // EI increases with mean
+        assert!(
+            Acquisition::Ei.score(2.0, 1.0, 1.0) > Acquisition::Ei.score(0.0, 1.0, 1.0)
+        );
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        assert!((erf(0.0)).abs() < 1e-7);
+        assert!((erf(1.0) - 0.8427007).abs() < 1e-5);
+        assert!((erf(-1.0) + 0.8427007).abs() < 1e-5);
+        assert!((phi_cdf(0.0) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn transfer_model_beats_cold_start_with_little_data() {
+        // source domain: same function, shifted labels
+        let (xs, ys) = synth(3000, 3, 10.0);
+        let params = GbtParams {
+            objective: Objective::Regression,
+            n_trees: 40,
+            ..Default::default()
+        };
+        let transfer = TransferModel::from_source(&xs, &ys, &[], params.clone());
+        // tiny target dataset
+        let (xt, yt) = synth(30, 4, 0.0);
+        let (xe, ye) = synth(400, 5, 0.0);
+        let mut cold = GbtModel::new(params.clone());
+        cold.fit(&xt, &yt, &[]);
+        let mut warm = transfer;
+        warm.fit(&xt, &yt, &[]);
+        let acc_cold = crate::gbt::rank_accuracy(&cold.predict(&xe), &ye);
+        let acc_warm = crate::gbt::rank_accuracy(&warm.predict(&xe), &ye);
+        assert!(
+            acc_warm > acc_cold - 0.02,
+            "transfer {acc_warm} much worse than cold {acc_cold}"
+        );
+        assert!(acc_warm > 0.8, "transfer model weak: {acc_warm}");
+    }
+
+    #[test]
+    fn transfer_model_usable_before_local_fit() {
+        let (xs, ys) = synth(1000, 6, 0.0);
+        let params = GbtParams {
+            objective: Objective::Regression,
+            n_trees: 30,
+            ..Default::default()
+        };
+        let m = TransferModel::from_source(&xs, &ys, &[], params);
+        assert!(m.ready());
+        let (xe, ye) = synth(200, 7, 0.0);
+        let acc = crate::gbt::rank_accuracy(&m.predict(&xe), &ye);
+        assert!(acc > 0.8, "global-only acc {acc}");
+    }
+}

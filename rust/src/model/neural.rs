@@ -1,0 +1,239 @@
+//! Neural cost model executed via PJRT — the paper's deep-learning
+//! model (§3.1) in its transferable, context-encoded form (Fig. 3d).
+//!
+//! The paper's TreeGRU recurses over a dynamic AST, which cannot be
+//! AOT-compiled with static shapes; the paper itself introduces the
+//! context-encoded variant for transfer, where each loop level is
+//! represented by its context feature vector, embedded, softmax-
+//! scattered into memory slots and summed (DESIGN.md §Substitution).
+//! That variant is a fixed-shape network over the padded context matrix
+//! (`MAX_LOOPS × CONTEXT_DIM`), so we implement it in JAX (L2), lower
+//! it **once** to HLO text together with its Adam + rank-loss training
+//! step (which itself calls the L1 Pallas matmul kernel), and train /
+//! predict from Rust through PJRT. Python never runs at tuning time.
+//!
+//! Artifacts (see `python/compile/aot.py`):
+//! * `costmodel_meta.json` — dimensions (must match [`crate::features`]).
+//! * `costmodel_init.f32` — initial flat parameter vector θ.
+//! * `costmodel_fwd.hlo.txt` — `(θ, X[Bp,L,D]) → scores[Bp]`.
+//! * `costmodel_train.hlo.txt` — one Adam step on the pairwise rank
+//!   loss (Eq. 2): `(θ, m, v, t, X[Bt,L,D], y, mask) → (θ', m', v', loss)`.
+//! * `costmodel_reg_train.hlo.txt` — same with the regression objective
+//!   (the Fig. 5 ablation).
+
+use super::CostModel;
+use crate::gbt::Matrix;
+use crate::runtime::{literal_f32, require_artifact, to_vec_f32, Executable, PjrtRuntime};
+use crate::util::json::Json;
+use crate::util::Rng;
+use anyhow::{Context, Result};
+
+/// Artifact dimension metadata.
+#[derive(Clone, Debug)]
+pub struct NeuralMeta {
+    pub theta_dim: usize,
+    pub pred_batch: usize,
+    pub train_batch: usize,
+    pub max_loops: usize,
+    pub context_dim: usize,
+}
+
+impl NeuralMeta {
+    pub fn load() -> Result<NeuralMeta> {
+        let path = require_artifact("costmodel_meta.json")?;
+        let text = std::fs::read_to_string(&path)?;
+        let j = Json::parse(&text).context("parsing costmodel_meta.json")?;
+        let get = |k: &str| -> Result<usize> {
+            Ok(j.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow::anyhow!("meta missing {k}"))? as usize)
+        };
+        Ok(NeuralMeta {
+            theta_dim: get("theta_dim")?,
+            pred_batch: get("pred_batch")?,
+            train_batch: get("train_batch")?,
+            max_loops: get("max_loops")?,
+            context_dim: get("context_dim")?,
+        })
+    }
+}
+
+/// Training objective variant of the train-step artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NeuralObjective {
+    Rank,
+    Regression,
+}
+
+/// The PJRT-executed neural cost model.
+pub struct NeuralModel {
+    meta: NeuralMeta,
+    fwd: Executable,
+    train: Executable,
+    theta: Vec<f32>,
+    adam_m: Vec<f32>,
+    adam_v: Vec<f32>,
+    step: f32,
+    /// training epochs per `fit` call
+    pub epochs: usize,
+    fitted: bool,
+    rng: Rng,
+    /// label normalization (mean, std) from the last fit
+    norm: (f64, f64),
+}
+
+impl NeuralModel {
+    /// Load artifacts and initial parameters.
+    pub fn load(rt: &PjrtRuntime, objective: NeuralObjective, seed: u64) -> Result<Self> {
+        let meta = NeuralMeta::load()?;
+        anyhow::ensure!(
+            meta.max_loops == crate::features::MAX_LOOPS
+                && meta.context_dim == crate::features::CONTEXT_DIM,
+            "artifact feature dims ({}, {}) do not match crate ({}, {}) — \
+             re-run `make artifacts`",
+            meta.max_loops,
+            meta.context_dim,
+            crate::features::MAX_LOOPS,
+            crate::features::CONTEXT_DIM
+        );
+        let fwd = rt.load(require_artifact("costmodel_fwd.hlo.txt")?)?;
+        let train_name = match objective {
+            NeuralObjective::Rank => "costmodel_train.hlo.txt",
+            NeuralObjective::Regression => "costmodel_reg_train.hlo.txt",
+        };
+        let train = rt.load(require_artifact(train_name)?)?;
+        let init_bytes = std::fs::read(require_artifact("costmodel_init.f32")?)?;
+        anyhow::ensure!(
+            init_bytes.len() == meta.theta_dim * 4,
+            "init params size {} != theta_dim {}",
+            init_bytes.len() / 4,
+            meta.theta_dim
+        );
+        let theta: Vec<f32> = init_bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let d = meta.theta_dim;
+        Ok(NeuralModel {
+            meta,
+            fwd,
+            train,
+            theta,
+            adam_m: vec![0.0; d],
+            adam_v: vec![0.0; d],
+            step: 0.0,
+            epochs: 20,
+            fitted: false,
+            rng: Rng::seed_from_u64(seed ^ 0x4e55_5241),
+            norm: (0.0, 1.0),
+        })
+    }
+
+    /// One train-step call on a padded minibatch.
+    fn train_step(&mut self, x: &[f32], y: &[f32], mask: &[f32]) -> Result<f64> {
+        let m = &self.meta;
+        self.step += 1.0;
+        let inputs = [
+            literal_f32(&self.theta, &[m.theta_dim as i64])?,
+            literal_f32(&self.adam_m, &[m.theta_dim as i64])?,
+            literal_f32(&self.adam_v, &[m.theta_dim as i64])?,
+            literal_f32(&[self.step], &[])?,
+            literal_f32(x, &[m.train_batch as i64, m.max_loops as i64, m.context_dim as i64])?,
+            literal_f32(y, &[m.train_batch as i64])?,
+            literal_f32(mask, &[m.train_batch as i64])?,
+        ];
+        let out = self.train.run(&inputs)?;
+        anyhow::ensure!(out.len() == 4, "train step returned {} outputs", out.len());
+        self.theta = to_vec_f32(&out[0])?;
+        self.adam_m = to_vec_f32(&out[1])?;
+        self.adam_v = to_vec_f32(&out[2])?;
+        let loss = to_vec_f32(&out[3])?[0] as f64;
+        Ok(loss)
+    }
+
+    /// Fit on the dataset, returns final epoch mean loss.
+    pub fn fit_verbose(&mut self, x: &Matrix, y: &[f64]) -> Result<f64> {
+        let m = self.meta.clone();
+        let row_len = m.max_loops * m.context_dim;
+        anyhow::ensure!(x.cols == row_len, "feature dim {} != {}", x.cols, row_len);
+        let n = x.rows;
+        if n == 0 {
+            return Ok(0.0);
+        }
+        // z-score labels for stable regression / margins
+        let mu = y.iter().sum::<f64>() / n as f64;
+        let sd = (y.iter().map(|v| (v - mu) * (v - mu)).sum::<f64>() / n as f64)
+            .sqrt()
+            .max(1e-9);
+        self.norm = (mu, sd);
+        let yn: Vec<f32> = y.iter().map(|v| ((v - mu) / sd) as f32).collect();
+
+        let bt = m.train_batch;
+        let mut last_loss = 0.0;
+        let mut order: Vec<usize> = (0..n).collect();
+        for _ in 0..self.epochs {
+            self.rng.shuffle(&mut order);
+            let mut losses = Vec::new();
+            for chunk in order.chunks(bt) {
+                let mut xb = vec![0f32; bt * row_len];
+                let mut yb = vec![0f32; bt];
+                let mut mb = vec![0f32; bt];
+                for (k, &i) in chunk.iter().enumerate() {
+                    xb[k * row_len..(k + 1) * row_len].copy_from_slice(x.row(i));
+                    yb[k] = yn[i];
+                    mb[k] = 1.0;
+                }
+                losses.push(self.train_step(&xb, &yb, &mb)?);
+            }
+            last_loss = crate::util::mean(&losses);
+        }
+        self.fitted = true;
+        Ok(last_loss)
+    }
+
+    fn predict_impl(&self, x: &Matrix) -> Result<Vec<f64>> {
+        let m = &self.meta;
+        let row_len = m.max_loops * m.context_dim;
+        anyhow::ensure!(x.cols == row_len, "feature dim {} != {}", x.cols, row_len);
+        let bp = m.pred_batch;
+        let mut out = Vec::with_capacity(x.rows);
+        let theta = literal_f32(&self.theta, &[m.theta_dim as i64])?;
+        for start in (0..x.rows).step_by(bp) {
+            let end = (start + bp).min(x.rows);
+            let mut xb = vec![0f32; bp * row_len];
+            for (k, i) in (start..end).enumerate() {
+                xb[k * row_len..(k + 1) * row_len].copy_from_slice(x.row(i));
+            }
+            let xl = literal_f32(
+                &xb,
+                &[bp as i64, m.max_loops as i64, m.context_dim as i64],
+            )?;
+            let res = self.fwd.run(&[theta.clone(), xl])?;
+            let scores = to_vec_f32(&res[0])?;
+            for s in scores.iter().take(end - start) {
+                out.push(*s as f64 * self.norm.1 + self.norm.0);
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl CostModel for NeuralModel {
+    fn predict(&self, x: &Matrix) -> Vec<f64> {
+        if !self.fitted {
+            return vec![0.0; x.rows];
+        }
+        self.predict_impl(x).expect("neural predict failed")
+    }
+
+    fn fit(&mut self, x: &Matrix, y: &[f64], _groups: &[usize]) {
+        self.fit_verbose(x, y).expect("neural fit failed");
+    }
+
+    fn ready(&self) -> bool {
+        self.fitted
+    }
+}
+
+// Integration tests live in rust/tests/runtime_pjrt.rs (they need the
+// artifacts built by `make artifacts`).

@@ -1,0 +1,114 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts (produced once by
+//! `python/compile/aot.py`) and execute them from the Rust hot path.
+//!
+//! Python never runs at tuning time: the JAX/Pallas cost model is
+//! lowered to HLO **text** at build time (`make artifacts`; text rather
+//! than serialized proto — see /opt/xla-example/README.md) and this
+//! module compiles + runs it through the `xla` crate's PJRT CPU client.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Shared PJRT client wrapper.
+#[derive(Clone)]
+pub struct PjrtRuntime {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client: Arc::new(client) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+
+    /// Compile HLO text directly (used by the PJRT measurer to compile
+    /// kernel variants generated at tuning time).
+    pub fn compile_text(&self, name: &str, text: &str) -> Result<Executable> {
+        // the crate only exposes file-based text parsing; go through a
+        // temp file
+        let dir = std::env::temp_dir().join("autotvm-hlo");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!(
+            "{name}-{}-{}.hlo.txt",
+            std::process::id(),
+            text.len()
+        ));
+        std::fs::write(&path, text)?;
+        let out = self.load(&path);
+        let _ = std::fs::remove_file(&path);
+        out
+    }
+}
+
+/// A compiled executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the decomposed output tuple
+    /// (jax lowering uses `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        let parts = lit.to_tuple().context("decomposing output tuple")?;
+        Ok(parts)
+    }
+}
+
+/// Build an f32 literal of the given shape.
+pub fn literal_f32(data: &[f32], shape: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = shape.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape {shape:?} != len {}", data.len());
+    Ok(xla::Literal::vec1(data).reshape(shape)?)
+}
+
+/// Extract f32 data from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Standard location of the artifacts directory (overridable for
+/// tests / deployment via `AUTOTVM_ARTIFACTS`).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("AUTOTVM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Errors early with a friendly message when `make artifacts` has not
+/// been run.
+pub fn require_artifact(name: &str) -> Result<PathBuf> {
+    let p = artifacts_dir().join(name);
+    anyhow::ensure!(
+        p.exists(),
+        "artifact {} missing — run `make artifacts` first",
+        p.display()
+    );
+    Ok(p)
+}

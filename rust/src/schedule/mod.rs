@@ -1,0 +1,159 @@
+//! Schedule space `S_e` — transformation descriptions from expression to
+//! low-level code (§2 of the paper).
+//!
+//! A [`Schedule`] is a declarative set of choices consumed by
+//! [`crate::lower`]: multi-level tiling of every axis, loop ordering,
+//! annotations (unroll / vectorize / parallel / GPU thread binding),
+//! shared-memory cache reads and a local accumulator (cache write) —
+//! the primitive set the paper takes from TVM [9].
+//!
+//! [`space::ConfigSpace`] enumerates the template knobs and
+//! [`space::ConfigEntity`] is one point `s ∈ S_e`; templates in
+//! [`template`] map an operator to its space and a config to a
+//! `Schedule`.
+
+pub mod space;
+pub mod template;
+
+use crate::ast::ForKind;
+use std::collections::HashMap;
+
+/// Reference to one leaf loop produced by splitting: axis `axis`
+/// (index into spatial-then-reduce axes), tile level `part`
+/// (0 = outermost).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct LeafRef {
+    pub axis: usize,
+    pub part: usize,
+}
+
+/// Stage a tensor's tile into on-chip shared memory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheRead {
+    pub tensor: String,
+    /// Order position: the copy nest is emitted immediately before the
+    /// loop at this position of [`Schedule::order`].
+    pub at: usize,
+}
+
+/// A full schedule `s ∈ S_e`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Schedule {
+    /// Per axis (spatial axes first, then reduce axes): tile sizes,
+    /// outermost first. The product must equal the axis extent. A
+    /// single-element vector means "unsplit".
+    pub splits: Vec<Vec<i64>>,
+    /// Permutation of all leaves.
+    pub order: Vec<LeafRef>,
+    /// Explicit annotations (Parallel / BlockBind / ThreadBind).
+    pub annotations: HashMap<LeafRef, ForKind>,
+    pub cache_reads: Vec<CacheRead>,
+    /// Loop kind of shared-memory copy nests. GPU templates use
+    /// `ThreadBind` to model cooperative loading (the tile is fetched
+    /// once per block, distributed across its threads).
+    pub copy_kind: ForKind,
+    /// Accumulate into a register/local tile, write back once.
+    pub cache_write: bool,
+    /// Auto-unroll: innermost serial loops whose cumulative extent stays
+    /// ≤ this step are marked `Unrolled` (0 disables).
+    pub unroll_max_step: i64,
+    /// Mark the innermost leaf `Vectorized`.
+    pub vectorize_inner: bool,
+}
+
+impl Schedule {
+    /// Number of leaves (= loops of the main compute nest).
+    pub fn num_leaves(&self) -> usize {
+        self.splits.iter().map(|s| s.len()).sum()
+    }
+
+    /// Extent of a leaf.
+    pub fn leaf_extent(&self, leaf: LeafRef) -> i64 {
+        self.splits[leaf.axis][leaf.part]
+    }
+
+    /// Validate structural invariants against axis extents
+    /// (spatial-then-reduce order must match `splits`).
+    pub fn validate(&self, extents: &[i64]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.splits.len() == extents.len(),
+            "splits arity {} != axes {}",
+            self.splits.len(),
+            extents.len()
+        );
+        for (i, (sizes, &ext)) in self.splits.iter().zip(extents).enumerate() {
+            let prod: i64 = sizes.iter().product();
+            anyhow::ensure!(!sizes.is_empty(), "axis {i} has empty split");
+            anyhow::ensure!(
+                prod == ext,
+                "axis {i}: tile sizes {sizes:?} multiply to {prod}, extent {ext}"
+            );
+            anyhow::ensure!(sizes.iter().all(|&s| s >= 1), "axis {i}: nonpositive tile");
+        }
+        let mut seen = std::collections::HashSet::new();
+        for l in &self.order {
+            anyhow::ensure!(
+                l.axis < self.splits.len() && l.part < self.splits[l.axis].len(),
+                "order references missing leaf {l:?}"
+            );
+            anyhow::ensure!(seen.insert(*l), "leaf {l:?} ordered twice");
+        }
+        anyhow::ensure!(
+            seen.len() == self.num_leaves(),
+            "order covers {} of {} leaves",
+            seen.len(),
+            self.num_leaves()
+        );
+        for c in &self.cache_reads {
+            anyhow::ensure!(c.at < self.order.len(), "cache read past order end");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn simple_sched() -> Schedule {
+        Schedule {
+            splits: vec![vec![4, 8], vec![32]],
+            order: vec![
+                LeafRef { axis: 0, part: 0 },
+                LeafRef { axis: 1, part: 0 },
+                LeafRef { axis: 0, part: 1 },
+            ],
+            annotations: HashMap::new(),
+            cache_reads: vec![],
+            copy_kind: ForKind::Serial,
+            cache_write: false,
+            unroll_max_step: 0,
+            vectorize_inner: false,
+        }
+    }
+
+    #[test]
+    fn validate_ok() {
+        simple_sched().validate(&[32, 32]).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_product() {
+        let s = simple_sched();
+        assert!(s.validate(&[33, 32]).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_duplicate_leaf() {
+        let mut s = simple_sched();
+        s.order[2] = LeafRef { axis: 0, part: 0 };
+        assert!(s.validate(&[32, 32]).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_incomplete_order() {
+        let mut s = simple_sched();
+        s.order.pop();
+        assert!(s.validate(&[32, 32]).is_err());
+    }
+}

@@ -1,0 +1,262 @@
+//! Configuration space: knobs and config entities.
+//!
+//! A [`ConfigSpace`] is the enumerable set of template knob choices for
+//! one operator; a [`ConfigEntity`] is a point `s ∈ S_e`, decomposed
+//! into components `s = [s_1 … s_m]` (one per knob) — the decomposition
+//! the diversity-aware objective (Eq. 3) counts over.
+
+
+/// One tunable dimension of the space.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Knob {
+    /// Multi-level tiling of an axis: every ordered factorization of
+    /// `extent` into `parts` factors.
+    Split { name: String, extent: i64, parts: usize, options: Vec<Vec<i64>> },
+    /// Categorical choice over integer values.
+    Choice { name: String, options: Vec<i64> },
+}
+
+impl Knob {
+    pub fn name(&self) -> &str {
+        match self {
+            Knob::Split { name, .. } | Knob::Choice { name, .. } => name,
+        }
+    }
+
+    pub fn cardinality(&self) -> usize {
+        match self {
+            Knob::Split { options, .. } => options.len(),
+            Knob::Choice { options, .. } => options.len(),
+        }
+    }
+}
+
+/// Enumerate all ordered factorizations of `n` into `parts` factors
+/// (each ≥ 1, product = `n`), outermost first.
+pub fn factorizations(n: i64, parts: usize) -> Vec<Vec<i64>> {
+    assert!(n >= 1 && parts >= 1);
+    if parts == 1 {
+        return vec![vec![n]];
+    }
+    let mut out = Vec::new();
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            for first in [d, n / d] {
+                for mut rest in factorizations(n / first, parts - 1) {
+                    let mut v = Vec::with_capacity(parts);
+                    v.push(first);
+                    v.append(&mut rest);
+                    out.push(v);
+                }
+                if d * d == n {
+                    break;
+                }
+            }
+        }
+        d += 1;
+    }
+    out.sort();
+    out.dedup();
+    out
+}
+
+/// One point of the space: a choice index per knob.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ConfigEntity {
+    pub choices: Vec<u32>,
+}
+
+impl ConfigEntity {
+    /// The component `s_j` used by the diversity objective.
+    pub fn component(&self, j: usize) -> u32 {
+        self.choices[j]
+    }
+}
+
+/// The knob space of one template-instantiated operator.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConfigSpace {
+    pub knobs: Vec<Knob>,
+}
+
+impl ConfigSpace {
+    /// |S_e| — the number of candidate programs.
+    pub fn size(&self) -> u64 {
+        self.knobs.iter().map(|k| k.cardinality() as u64).product()
+    }
+
+    pub fn num_knobs(&self) -> usize {
+        self.knobs.len()
+    }
+
+    pub fn knob_index(&self, name: &str) -> Option<usize> {
+        self.knobs.iter().position(|k| k.name() == name)
+    }
+
+    /// Decode a flat index (mixed radix, first knob most significant).
+    pub fn entity(&self, mut index: u64) -> ConfigEntity {
+        let mut choices = vec![0u32; self.knobs.len()];
+        for (i, k) in self.knobs.iter().enumerate().rev() {
+            let c = k.cardinality() as u64;
+            choices[i] = (index % c) as u32;
+            index /= c;
+        }
+        ConfigEntity { choices }
+    }
+
+    /// Inverse of [`ConfigSpace::entity`].
+    pub fn index_of(&self, e: &ConfigEntity) -> u64 {
+        let mut idx = 0u64;
+        for (k, &c) in self.knobs.iter().zip(&e.choices) {
+            idx = idx * k.cardinality() as u64 + c as u64;
+        }
+        idx
+    }
+
+    /// Uniform random entity.
+    pub fn sample(&self, rng: &mut crate::util::Rng) -> ConfigEntity {
+        ConfigEntity {
+            choices: self
+                .knobs
+                .iter()
+                .map(|k| rng.gen_range(0..k.cardinality()) as u32)
+                .collect(),
+        }
+    }
+
+    /// SA/GA neighbor: re-draw one random knob.
+    pub fn mutate(&self, e: &ConfigEntity, rng: &mut crate::util::Rng) -> ConfigEntity {
+        let mut out = e.clone();
+        let j = rng.gen_range(0..self.knobs.len());
+        let c = self.knobs[j].cardinality();
+        if c > 1 {
+            let mut nv = rng.gen_range(0..c) as u32;
+            while nv == e.choices[j] {
+                nv = rng.gen_range(0..c) as u32;
+            }
+            out.choices[j] = nv;
+        }
+        out
+    }
+
+    /// Knob-wise uniform crossover (GA baseline).
+    pub fn crossover(
+        &self,
+        a: &ConfigEntity,
+        b: &ConfigEntity,
+        rng: &mut crate::util::Rng,
+    ) -> ConfigEntity {
+        ConfigEntity {
+            choices: a
+                .choices
+                .iter()
+                .zip(&b.choices)
+                .map(|(&x, &y)| if rng.gen_bool(0.5) { x } else { y })
+                .collect(),
+        }
+    }
+
+    /// Configuration-space feature vector (the non-invariant
+    /// representation of Fig. 9): log2 tile factors for split knobs,
+    /// raw value for choices.
+    pub fn config_features(&self, e: &ConfigEntity) -> Vec<f64> {
+        let mut f = Vec::new();
+        for (k, &c) in self.knobs.iter().zip(&e.choices) {
+            match k {
+                Knob::Split { options, .. } => {
+                    for &v in &options[c as usize] {
+                        f.push((v as f64).log2());
+                    }
+                }
+                Knob::Choice { options, .. } => {
+                    f.push((options[c as usize] as f64 + 1.0).log2());
+                }
+            }
+        }
+        f
+    }
+
+    /// Human-readable rendering of a config.
+    pub fn describe(&self, e: &ConfigEntity) -> String {
+        let mut parts = Vec::new();
+        for (k, &c) in self.knobs.iter().zip(&e.choices) {
+            match k {
+                Knob::Split { name, options, .. } => {
+                    parts.push(format!("{name}={:?}", options[c as usize]))
+                }
+                Knob::Choice { name, options, .. } => {
+                    parts.push(format!("{name}={}", options[c as usize]))
+                }
+            }
+        }
+        parts.join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn factorizations_cover_and_multiply() {
+        let f = factorizations(12, 2);
+        assert_eq!(f.len(), 6); // (1,12)(2,6)(3,4)(4,3)(6,2)(12,1)
+        for v in &f {
+            assert_eq!(v.iter().product::<i64>(), 12);
+        }
+        let f3 = factorizations(8, 3);
+        // ordered factorizations of 2^3 into 3 parts: C(3+2,2) = 10
+        assert_eq!(f3.len(), 10);
+    }
+
+    #[test]
+    fn factorizations_of_one() {
+        assert_eq!(factorizations(1, 3), vec![vec![1, 1, 1]]);
+    }
+
+    fn space() -> ConfigSpace {
+        ConfigSpace {
+            knobs: vec![
+                Knob::Split {
+                    name: "tile_y".into(),
+                    extent: 8,
+                    parts: 2,
+                    options: factorizations(8, 2),
+                },
+                Knob::Choice { name: "vec".into(), options: vec![0, 1] },
+            ],
+        }
+    }
+
+    #[test]
+    fn entity_roundtrip() {
+        let s = space();
+        assert_eq!(s.size(), 8);
+        for i in 0..s.size() {
+            let e = s.entity(i);
+            assert_eq!(s.index_of(&e), i);
+        }
+    }
+
+    #[test]
+    fn mutate_changes_exactly_one_knob() {
+        let s = space();
+        let mut rng = Rng::seed_from_u64(0);
+        let e = s.sample(&mut rng);
+        for _ in 0..20 {
+            let m = s.mutate(&e, &mut rng);
+            let diff = e.choices.iter().zip(&m.choices).filter(|(a, b)| a != b).count();
+            assert!(diff <= 1);
+        }
+    }
+
+    #[test]
+    fn config_features_dimension() {
+        let s = space();
+        let e = s.entity(0);
+        // split of 2 parts -> 2 dims, choice -> 1 dim
+        assert_eq!(s.config_features(&e).len(), 3);
+    }
+}

@@ -1,0 +1,283 @@
+//! Schedule templates: operator → config space → schedule.
+//!
+//! Mirrors AutoTVM's per-backend templates. A template decides which
+//! axes get multi-level tiling, the canonical loop-order interleaving,
+//! GPU thread binding and shared-memory caching, and the annotation
+//! knobs (auto-unroll step, vectorization) — together they define `S_e`.
+
+use super::space::{factorizations, ConfigEntity, ConfigSpace, Knob};
+use super::{CacheRead, LeafRef, Schedule};
+use crate::ast::ForKind;
+use crate::expr::ComputeDef;
+use std::collections::HashMap;
+
+/// Device class a template targets (device *models* live in
+/// [`crate::sim`]; Mali uses the GPU template with its own limits).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TemplateKind {
+    /// Multi-core CPU: 3-level spatial tiling, parallel outer, vectorized
+    /// inner, optional local accumulator.
+    Cpu,
+    /// GPU: block/thread/inner tiling, shared-memory cache reads,
+    /// register accumulator.
+    Gpu,
+}
+
+/// A tunable operator: expression + template + knob space.
+#[derive(Clone, Debug)]
+pub struct Task {
+    pub def: ComputeDef,
+    pub template: TemplateKind,
+    pub space: ConfigSpace,
+}
+
+impl Task {
+    pub fn new(def: ComputeDef, template: TemplateKind) -> Self {
+        let space = build_space(&def, template);
+        Task { def, template, space }
+    }
+
+    /// Short identity for the database / transfer learning.
+    pub fn key(&self) -> String {
+        format!("{}@{:?}", self.def.task_key(), self.template)
+    }
+
+    /// Map a config to a schedule.
+    pub fn schedule(&self, e: &ConfigEntity) -> Schedule {
+        instantiate(&self.def, self.template, &self.space, e)
+    }
+
+    /// `g(e, s)` — convenience wrapper over [`crate::lower::lower`].
+    pub fn lower(&self, e: &ConfigEntity) -> anyhow::Result<crate::ast::Program> {
+        let sched = self.schedule(e);
+        crate::lower::lower(&self.def, &sched)
+    }
+}
+
+/// How many tile levels each axis gets.
+fn spatial_parts(t: TemplateKind) -> usize {
+    match t {
+        TemplateKind::Cpu => 3,
+        TemplateKind::Gpu => 3, // block / thread / inner
+    }
+}
+
+/// Build the knob space for an operator under a template.
+///
+/// Knob layout (consumed positionally by [`instantiate`]):
+/// one `Split` per axis (spatial axes first, then reduce axes; axes of
+/// extent 1 get a degenerate single-option split), then `unroll`, then
+/// `vec`, then (CPU only) `cache_write`.
+pub fn build_space(def: &ComputeDef, t: TemplateKind) -> ConfigSpace {
+    let sp = spatial_parts(t);
+    let mut knobs = Vec::new();
+    for ax in def.axes.iter() {
+        let opts = if ax.extent == 1 {
+            vec![vec![1; sp]]
+        } else {
+            factorizations(ax.extent, sp)
+        };
+        knobs.push(Knob::Split {
+            name: format!("tile_{}", ax.name),
+            extent: ax.extent,
+            parts: sp,
+            options: opts,
+        });
+    }
+    for ax in def.reduce_axes.iter() {
+        let opts =
+            if ax.extent == 1 { vec![vec![1, 1]] } else { factorizations(ax.extent, 2) };
+        knobs.push(Knob::Split {
+            name: format!("tile_{}", ax.name),
+            extent: ax.extent,
+            parts: 2,
+            options: opts,
+        });
+    }
+    let unroll_opts = match t {
+        TemplateKind::Cpu => vec![0, 4, 16, 64],
+        TemplateKind::Gpu => vec![0, 16, 64, 512],
+    };
+    knobs.push(Knob::Choice { name: "unroll".into(), options: unroll_opts });
+    knobs.push(Knob::Choice { name: "vec".into(), options: vec![0, 1] });
+    if t == TemplateKind::Cpu {
+        knobs.push(Knob::Choice { name: "cache_write".into(), options: vec![0, 1] });
+    }
+    ConfigSpace { knobs }
+}
+
+/// Instantiate a schedule from a config entity.
+pub fn instantiate(
+    def: &ComputeDef,
+    t: TemplateKind,
+    space: &ConfigSpace,
+    e: &ConfigEntity,
+) -> Schedule {
+    let ns = def.axes.len();
+    let nr = def.reduce_axes.len();
+    let mut splits: Vec<Vec<i64>> = Vec::with_capacity(ns + nr);
+    for i in 0..ns + nr {
+        match &space.knobs[i] {
+            Knob::Split { options, .. } => {
+                splits.push(options[e.choices[i] as usize].clone())
+            }
+            _ => unreachable!("knob {i} must be a split"),
+        }
+    }
+    let get_choice = |name: &str| -> i64 {
+        let i = space.knob_index(name).unwrap();
+        match &space.knobs[i] {
+            Knob::Choice { options, .. } => options[e.choices[i] as usize],
+            _ => unreachable!(),
+        }
+    };
+    let unroll = get_choice("unroll");
+    let vec = get_choice("vec") != 0;
+    let cache_write = match t {
+        TemplateKind::Cpu => get_choice("cache_write") != 0,
+        TemplateKind::Gpu => true,
+    };
+
+    // Canonical interleaved order: S0.. R0.. S1.. R1.. S2..
+    let sp = spatial_parts(t);
+    let mut order = Vec::new();
+    // S0, then (for the reduce blocks) the pattern below.
+    for part in 0..sp {
+        if part == 1 {
+            // R0 between outer and middle spatial tiles.
+            for (ri, _) in def.reduce_axes.iter().enumerate() {
+                order.push(LeafRef { axis: ns + ri, part: 0 });
+            }
+        }
+        if part == sp - 1 && nr > 0 {
+            // R1 just outside the innermost spatial tiles.
+            for (ri, _) in def.reduce_axes.iter().enumerate() {
+                order.push(LeafRef { axis: ns + ri, part: 1 });
+            }
+        }
+        for ax in 0..ns {
+            order.push(LeafRef { axis: ax, part });
+        }
+    }
+
+    let mut annotations = HashMap::new();
+    match t {
+        TemplateKind::Cpu => {
+            // Parallelize the outer spatial tiles (collapsed OMP loop).
+            for ax in 0..ns {
+                if splits[ax][0] > 1 {
+                    annotations.insert(LeafRef { axis: ax, part: 0 }, ForKind::Parallel);
+                }
+            }
+        }
+        TemplateKind::Gpu => {
+            for ax in 0..ns {
+                annotations.insert(LeafRef { axis: ax, part: 0 }, ForKind::BlockBind);
+                annotations.insert(LeafRef { axis: ax, part: 1 }, ForKind::ThreadBind);
+            }
+        }
+    }
+
+    // GPU: stage every input tensor's tile into shared memory right
+    // inside the outer reduce loops (before R1).
+    let mut cache_reads = Vec::new();
+    if t == TemplateKind::Gpu && nr > 0 {
+        let r1_pos = order
+            .iter()
+            .position(|l| l.axis >= ns && l.part == 1)
+            .expect("reduce leaves exist");
+        let mut seen = std::collections::HashSet::new();
+        for acc in def.body.accesses() {
+            if seen.insert(acc.tensor.clone()) {
+                cache_reads.push(CacheRead { tensor: acc.tensor.clone(), at: r1_pos });
+            }
+        }
+    }
+
+    Schedule {
+        splits,
+        order,
+        annotations,
+        cache_reads,
+        copy_kind: match t {
+            TemplateKind::Cpu => ForKind::Serial,
+            TemplateKind::Gpu => ForKind::ThreadBind,
+        },
+        cache_write,
+        unroll_max_step: unroll,
+        vectorize_inner: vec,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::ops;
+    use crate::util::Rng;
+
+    #[test]
+    fn matmul_space_is_large() {
+        let def = ops::matmul(1024, 1024, 1024);
+        let s = build_space(&def, TemplateKind::Gpu);
+        // two spatial splits (3 parts of 2^10 → C(12,2)=66 each),
+        // one reduce split (2 parts → 11), unroll(4) × vec(2)
+        assert_eq!(s.size(), 66 * 66 * 11 * 4 * 2);
+    }
+
+    #[test]
+    fn conv_space_order_covers_all_leaves() {
+        let p = ops::Conv2dParams {
+            n: 1, h: 28, w: 28, ic: 128, oc: 128, kh: 3, kw: 3, stride: 1, pad: 1,
+        };
+        let def = ops::conv2d(p);
+        for t in [TemplateKind::Cpu, TemplateKind::Gpu] {
+            let task = Task::new(def.clone(), t);
+            let mut rng = Rng::seed_from_u64(7);
+            for _ in 0..50 {
+                let e = task.space.sample(&mut rng);
+                let sched = task.schedule(&e);
+                let extents: Vec<i64> =
+                    def.all_axes().map(|a| a.extent).collect();
+                sched.validate(&extents).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn gpu_template_caches_both_inputs() {
+        let def = ops::matmul(64, 64, 64);
+        let task = Task::new(def, TemplateKind::Gpu);
+        let e = task.space.entity(0);
+        let sched = task.schedule(&e);
+        let tensors: Vec<_> =
+            sched.cache_reads.iter().map(|c| c.tensor.clone()).collect();
+        assert_eq!(tensors, vec!["A", "B"]);
+        assert!(sched.cache_write);
+    }
+
+    #[test]
+    fn cpu_template_marks_parallel_outer() {
+        let def = ops::matmul(64, 64, 64);
+        let task = Task::new(def, TemplateKind::Cpu);
+        // pick a config whose outer y tile > 1
+        let mut e = task.space.entity(0);
+        let Knob::Split { options, .. } = &task.space.knobs[0] else { panic!() };
+        e.choices[0] = options.iter().position(|o| o == &vec![4, 4, 4]).unwrap() as u32;
+        let s = task.schedule(&e);
+        assert_eq!(s.splits[0], vec![4, 4, 4]);
+        assert_eq!(
+            s.annotations.get(&LeafRef { axis: 0, part: 0 }),
+            Some(&ForKind::Parallel)
+        );
+    }
+
+    #[test]
+    fn elementwise_has_no_reduce_leaves() {
+        let def = ops::relu(&[64, 56, 56]);
+        let task = Task::new(def, TemplateKind::Gpu);
+        let e = task.space.entity(0);
+        let s = task.schedule(&e);
+        assert!(s.cache_reads.is_empty() || !s.cache_reads.is_empty());
+        assert_eq!(s.order.len(), s.num_leaves());
+    }
+}

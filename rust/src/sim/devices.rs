@@ -1,0 +1,157 @@
+//! Device model registry — the three back-ends of the paper's
+//! evaluation plus a TPU-style systolic device for the
+//! hardware-adaptation ablation.
+//!
+//! Parameters are scaled from public spec sheets (TITAN X Pascal,
+//! Cortex-A53, Mali-T860 MP4); the paper's claims are about *relative*
+//! shapes (who wins, crossovers), not absolute numbers — see DESIGN.md.
+
+use super::{DeviceClass, DeviceModel};
+
+/// TITAN-X-class server GPU (`sim-gpu`): 28 SMs, ~11 TFLOPS fp32,
+/// 480 GB/s GDDR5X, 48 KiB shared memory per block, 1024-thread blocks.
+pub fn sim_gpu() -> DeviceModel {
+    DeviceModel {
+        name: "sim-gpu",
+        class: DeviceClass::Gpu,
+        clock_ghz: 1.4,
+        max_concurrency: 3584.0,
+        num_units: 28.0,
+        vector_lanes: 4.0, // float4 loads
+        flops_per_cycle: 2.0,
+        caches: vec![(48.0 * 1024.0, 2.0), (3.0 * 1024.0 * 1024.0, 8.0)],
+        dram_latency: 40.0,
+        dram_bw: 340.0,
+        shared_bytes: 48.0 * 1024.0,
+        shared_latency: 1.0,
+        max_threads_per_block: 1024.0,
+        warp: 32.0,
+        loop_overhead: 1.0,
+        unroll_budget: 2048.0,
+        launch_overhead: 8000.0,
+        mxu: None,
+        noise_sigma: 0.03,
+    }
+}
+
+/// Cortex-A53-class embedded CPU (`sim-cpu`): 4 cores @1.2 GHz, NEON
+/// (4×f32), 32 KiB L1 / 512 KiB L2, slim DRAM pipe.
+pub fn sim_cpu() -> DeviceModel {
+    DeviceModel {
+        name: "sim-cpu",
+        class: DeviceClass::Cpu,
+        clock_ghz: 1.2,
+        max_concurrency: 16.0,
+        num_units: 4.0,
+        vector_lanes: 4.0,
+        flops_per_cycle: 2.0,
+        caches: vec![(32.0 * 1024.0, 1.0), (512.0 * 1024.0, 6.0)],
+        dram_latency: 90.0,
+        dram_bw: 4.0,
+        shared_bytes: 0.0,
+        shared_latency: 1.0,
+        max_threads_per_block: 1.0,
+        warp: 1.0,
+        loop_overhead: 1.5,
+        unroll_budget: 512.0,
+        launch_overhead: 2000.0,
+        mxu: None,
+        noise_sigma: 0.05,
+    }
+}
+
+/// Mali-T860-class mobile GPU (`sim-mali`): 4 shader cores @650 MHz,
+/// unified memory (no fast shared scratch), vec4 ALUs, 256-thread
+/// workgroups.
+pub fn sim_mali() -> DeviceModel {
+    DeviceModel {
+        name: "sim-mali",
+        class: DeviceClass::Gpu,
+        clock_ghz: 0.65,
+        max_concurrency: 256.0,
+        num_units: 4.0,
+        vector_lanes: 4.0,
+        flops_per_cycle: 2.0,
+        caches: vec![(32.0 * 1024.0, 2.0), (256.0 * 1024.0, 8.0)],
+        dram_latency: 70.0,
+        dram_bw: 8.0,
+        // Mali "shared" is just L2-backed: allow staging but with L2-ish
+        // latency and a generous size so the knob is near-neutral, as on
+        // the real device.
+        shared_bytes: 32.0 * 1024.0,
+        shared_latency: 4.0,
+        max_threads_per_block: 256.0,
+        warp: 4.0,
+        loop_overhead: 1.0,
+        unroll_budget: 1024.0,
+        launch_overhead: 4000.0,
+        mxu: None,
+        noise_sigma: 0.05,
+    }
+}
+
+/// TPU-style device (`sim-tpu`): systolic 16×16 MXU with 8× dense-math
+/// speedup at full tile alignment, large VMEM-like scratch. Used by the
+/// hardware-adaptation ablation (DESIGN.md §Hardware-Adaptation), not by
+/// the paper's original experiments.
+pub fn sim_tpu() -> DeviceModel {
+    DeviceModel {
+        name: "sim-tpu",
+        class: DeviceClass::Gpu,
+        clock_ghz: 0.94,
+        max_concurrency: 2048.0,
+        num_units: 2.0,
+        vector_lanes: 8.0,
+        flops_per_cycle: 2.0,
+        caches: vec![(16.0 * 1024.0 * 1024.0, 2.0)],
+        dram_latency: 60.0,
+        dram_bw: 300.0,
+        shared_bytes: 16.0 * 1024.0 * 1024.0,
+        shared_latency: 1.0,
+        max_threads_per_block: 2048.0,
+        warp: 8.0,
+        loop_overhead: 1.0,
+        unroll_budget: 4096.0,
+        launch_overhead: 10000.0,
+        mxu: Some((16.0, 8.0)),
+        noise_sigma: 0.02,
+    }
+}
+
+/// Look up a device by name.
+pub fn by_name(name: &str) -> Option<DeviceModel> {
+    match name {
+        "sim-gpu" => Some(sim_gpu()),
+        "sim-cpu" => Some(sim_cpu()),
+        "sim-mali" => Some(sim_mali()),
+        "sim-tpu" => Some(sim_tpu()),
+        _ => None,
+    }
+}
+
+/// All devices of the paper's evaluation.
+pub fn all() -> Vec<DeviceModel> {
+    vec![sim_gpu(), sim_cpu(), sim_mali()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_roundtrip() {
+        for d in all() {
+            assert_eq!(by_name(d.name).unwrap().name, d.name);
+        }
+        assert!(by_name("sim-tpu").is_some());
+        assert!(by_name("a100").is_none());
+    }
+
+    #[test]
+    fn peak_flops_ordering() {
+        // peak = max_concurrency * flops_per_cycle * clock
+        let peak = |d: &DeviceModel| d.max_concurrency * d.flops_per_cycle * d.clock_ghz;
+        assert!(peak(&sim_gpu()) > 50.0 * peak(&sim_cpu()));
+        assert!(peak(&sim_gpu()) > 10.0 * peak(&sim_mali()));
+    }
+}

@@ -1,0 +1,705 @@
+//! Hardware simulator — the black-box `f(x)` the tuner measures.
+//!
+//! The paper measures real TITAN X / ARM A53 / Mali hardware; this
+//! testbed has none of them, so we substitute analytic abstract-machine
+//! models (see DESIGN.md §Substitution). The simulator walks the
+//! [`ProgramAnalysis`] of a lowered program and charges cycles for
+//! compute, the memory hierarchy (locality-dependent via touch/reuse
+//! analysis), vectorization (contiguity-dependent), multi-core / GPU
+//! parallelism (capacity-capped, occupancy-sensitive) and loop
+//! overheads (unrolling-sensitive). What matters for reproducing the
+//! paper is not absolute fidelity but that the cost landscape rewards
+//! the same structural properties real hardware does — locality,
+//! contiguity, the right parallel granularity — so that learning `f̂`
+//! is a genuinely hard, structured problem.
+//!
+//! Determinism: `evaluate` is pure; `measure` adds seeded lognormal
+//! noise to emulate run-to-run variance of real boards.
+
+pub mod devices;
+
+use crate::ast::analysis::{analyze, ProgramAnalysis, StoreChain};
+use crate::ast::{ForKind, MemScope, Program};
+use crate::util::Rng;
+
+/// Device class: drives template choice and parallelism semantics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeviceClass {
+    Cpu,
+    Gpu,
+}
+
+/// An abstract machine.
+#[derive(Clone, Debug)]
+pub struct DeviceModel {
+    pub name: &'static str,
+    pub class: DeviceClass,
+    pub clock_ghz: f64,
+    /// Peak scalar-equivalent parallel lanes (cores×SIMD for CPU,
+    /// resident CUDA lanes for GPU).
+    pub max_concurrency: f64,
+    /// CPU cores / GPU SMs (for launch overhead and the parallel cap).
+    pub num_units: f64,
+    /// SIMD lanes a `Vectorized` loop can use.
+    pub vector_lanes: f64,
+    /// FMA ops per cycle per active lane.
+    pub flops_per_cycle: f64,
+    /// (capacity bytes, amortized cycles per access) per cache level,
+    /// smallest first.
+    pub caches: Vec<(f64, f64)>,
+    /// Cycles per access for non-contiguous DRAM traffic.
+    pub dram_latency: f64,
+    /// Bytes per cycle of streaming DRAM bandwidth.
+    pub dram_bw: f64,
+    /// On-chip software-managed memory per block (bytes); 0 disables
+    /// shared staging benefit.
+    pub shared_bytes: f64,
+    /// Amortized cycles per shared-memory access.
+    pub shared_latency: f64,
+    /// Max threads per GPU block.
+    pub max_threads_per_block: f64,
+    /// Warp/wavefront granularity: thread counts are rounded up to this
+    /// for occupancy accounting.
+    pub warp: f64,
+    /// Cycles of overhead per innermost-loop iteration.
+    pub loop_overhead: f64,
+    /// Unrolled-body op budget before i-cache pressure penalizes.
+    pub unroll_budget: f64,
+    /// Cycles to launch a parallel region / kernel.
+    pub launch_overhead: f64,
+    /// Optional systolic matrix unit (TPU-style): (tile dim, speedup).
+    pub mxu: Option<(f64, f64)>,
+    /// Lognormal measurement-noise sigma.
+    pub noise_sigma: f64,
+}
+
+/// Why a configuration is invalid on this device (the paper's search
+/// also produces configs that fail to build/run; they are recorded as
+/// errors with zero GFLOPS).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SimError {
+    TooManyThreads { got: f64, max: f64 },
+    SharedMemOverflow { got: f64, max: f64 },
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::TooManyThreads { got, max } => {
+                write!(f, "threads per block {got} exceeds {max}")
+            }
+            SimError::SharedMemOverflow { got, max } => {
+                write!(f, "shared memory {got}B exceeds {max}B")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+/// Simulated measurement result.
+#[derive(Clone, Copy, Debug)]
+pub struct SimResult {
+    pub seconds: f64,
+    pub gflops: f64,
+}
+
+const ELEM_BYTES: f64 = 4.0;
+
+impl DeviceModel {
+    /// Pure analytic cost (no noise). Errors on invalid configs.
+    pub fn evaluate(&self, program: &Program) -> Result<SimResult, SimError> {
+        let analysis = analyze(program);
+        self.evaluate_analyzed(program, &analysis)
+    }
+
+    /// Evaluate with a precomputed analysis (hot path: the tuner shares
+    /// the analysis between feature extraction and simulation).
+    pub fn evaluate_analyzed(
+        &self,
+        program: &Program,
+        analysis: &ProgramAnalysis,
+    ) -> Result<SimResult, SimError> {
+        self.validate(program, analysis)?;
+        let mut cycles = 0.0;
+        let threads_per_block = self.threads_per_block(analysis);
+        for chain in &analysis.chains {
+            cycles += self.chain_cycles(chain, threads_per_block);
+        }
+        cycles += self.launch_overhead;
+        let seconds = cycles / (self.clock_ghz * 1e9);
+        Ok(SimResult { seconds, gflops: program.flops as f64 / seconds / 1e9 })
+    }
+
+    /// Noisy measurement (log-normal multiplicative noise), seeded.
+    pub fn measure(&self, program: &Program, seed: u64) -> Result<SimResult, SimError> {
+        let base = self.evaluate(program)?;
+        if self.noise_sigma == 0.0 {
+            return Ok(base);
+        }
+        let mut rng = Rng::seed_from_u64(seed);
+        let factor = (self.noise_sigma * rng.normal()).exp();
+        let seconds = base.seconds * factor;
+        Ok(SimResult { seconds, gflops: base.gflops / factor })
+    }
+
+    /// Hard resource-limit checks.
+    fn validate(
+        &self,
+        program: &Program,
+        analysis: &ProgramAnalysis,
+    ) -> Result<(), SimError> {
+        if self.class == DeviceClass::Gpu {
+            let tpb = self.threads_per_block(analysis);
+            if tpb > self.max_threads_per_block {
+                return Err(SimError::TooManyThreads {
+                    got: tpb,
+                    max: self.max_threads_per_block,
+                });
+            }
+        }
+        let shared: f64 = program
+            .buffers
+            .iter()
+            .filter(|b| b.scope == MemScope::Shared)
+            .map(|b| b.numel() as f64 * ELEM_BYTES)
+            .sum();
+        if self.shared_bytes > 0.0 && shared > self.shared_bytes {
+            return Err(SimError::SharedMemOverflow { got: shared, max: self.shared_bytes });
+        }
+        Ok(())
+    }
+
+    /// Threads per block = max ThreadBind extent product over compute
+    /// (non-copy) chains.
+    fn threads_per_block(&self, analysis: &ProgramAnalysis) -> f64 {
+        analysis
+            .chains
+            .iter()
+            .filter(|c| c.accesses[0].scope != MemScope::Shared)
+            .map(|c| {
+                c.loops
+                    .iter()
+                    .filter(|l| l.kind == ForKind::ThreadBind)
+                    .map(|l| l.extent as f64)
+                    .product::<f64>()
+            })
+            .fold(1.0, f64::max)
+    }
+
+    /// Cycles charged for one store chain.
+    fn chain_cycles(&self, chain: &StoreChain, threads_per_block: f64) -> f64 {
+        let trip = chain.trip;
+        let speedup = self.parallel_speedup(chain, threads_per_block);
+        let serial_iters = trip / speedup;
+
+        // --- compute ---
+        let (has_vec, vec_contig, vec_extent) = self.vector_info(chain);
+        let mut flop_cycles = chain.value_flops as f64 / self.flops_per_cycle;
+        if has_vec && vec_contig {
+            flop_cycles /= self.vector_lanes.min(vec_extent);
+        }
+        // Padding guards cost a couple of comparisons.
+        if chain.has_guard {
+            flop_cycles += 2.0 / self.flops_per_cycle;
+        }
+        // Systolic matrix unit: dense accumulate chains with aligned
+        // inner tiles run at `speedup`× with utilization given by tile
+        // alignment to the MXU dimension.
+        if let Some((dim, mxu_speedup)) = self.mxu {
+            if chain.accumulate && chain.accesses.len() >= 3 {
+                let util = self.mxu_utilization(chain, dim);
+                let accel = 1.0 + (mxu_speedup - 1.0) * util;
+                flop_cycles /= accel;
+            }
+        }
+
+        // --- memory ---
+        let mut mem_cycles = 0.0;
+        for a in &chain.accesses {
+            mem_cycles += self.access_cycles(chain, a, has_vec);
+        }
+
+        // --- loop overhead ---
+        let innermost_kind =
+            chain.loops.last().map(|l| l.kind).unwrap_or(ForKind::Serial);
+        let mut overhead = match innermost_kind {
+            ForKind::Unrolled => self.loop_overhead / 8.0,
+            ForKind::Vectorized => self.loop_overhead / self.vector_lanes,
+            _ => self.loop_overhead,
+        };
+        // i-cache pressure: unrolled body too large.
+        let unrolled_ext: f64 = chain
+            .loops
+            .iter()
+            .filter(|l| l.kind == ForKind::Unrolled)
+            .map(|l| l.extent as f64)
+            .product();
+        let body_ops = (chain.value_flops as f64 + chain.accesses.len() as f64).max(1.0);
+        if unrolled_ext * body_ops > self.unroll_budget {
+            overhead += self.loop_overhead * 0.5;
+        }
+
+        // Parallel-region / kernel launch costs.
+        let regions: f64 = if self.class == DeviceClass::Cpu {
+            chain.loops.iter().filter(|l| l.kind == ForKind::Parallel).count() as f64
+        } else {
+            1.0
+        };
+
+        // Compulsory (cold) DRAM traffic: every distinct global byte must
+        // cross the bus at least once.
+        let cold_bytes: f64 = chain
+            .accesses
+            .iter()
+            .filter(|a| a.scope == MemScope::Global)
+            .map(|a| a.touch.first().copied().unwrap_or(0.0) * ELEM_BYTES)
+            .sum();
+        let cold_cycles = cold_bytes / self.dram_bw;
+
+        serial_iters * (flop_cycles + mem_cycles + overhead)
+            + cold_cycles
+            + regions * self.launch_overhead
+    }
+
+    /// Effective parallel speedup for a chain.
+    fn parallel_speedup(&self, chain: &StoreChain, threads_per_block: f64) -> f64 {
+        match self.class {
+            DeviceClass::Cpu => {
+                let par: f64 = chain
+                    .loops
+                    .iter()
+                    .filter(|l| l.kind == ForKind::Parallel)
+                    .map(|l| l.extent as f64)
+                    .product();
+                par.min(self.num_units).max(1.0)
+            }
+            DeviceClass::Gpu => {
+                let blocks: f64 = chain
+                    .loops
+                    .iter()
+                    .filter(|l| l.kind == ForKind::BlockBind)
+                    .map(|l| l.extent as f64)
+                    .product();
+                let is_copy = chain.accesses[0].scope == MemScope::Shared;
+                let threads: f64 = {
+                    let t: f64 = chain
+                        .loops
+                        .iter()
+                        .filter(|l| l.kind == ForKind::ThreadBind)
+                        .map(|l| l.extent as f64)
+                        .product();
+                    if is_copy {
+                        // Cooperative staging: the copy loops (marked
+                        // ThreadBind by the template) are distributed over
+                        // the block's compute threads.
+                        t.min(threads_per_block)
+                    } else {
+                        t
+                    }
+                };
+                // Occupancy: threads are scheduled at warp granularity.
+                let warp_eff = if threads <= 1.0 {
+                    1.0
+                } else {
+                    threads / (self.warp * (threads / self.warp).ceil())
+                };
+                let raw = blocks * threads.max(1.0);
+                raw.min(self.max_concurrency).max(1.0) * warp_eff
+            }
+        }
+    }
+
+    /// (has a vectorized loop, all accesses contiguous along it, extent).
+    ///
+    /// Vector math pays off only when every access is contiguous or
+    /// invariant along the vector loop; otherwise the compiler emits
+    /// gathers (penalized per access in [`Self::access_cycles`]).
+    fn vector_info(&self, chain: &StoreChain) -> (bool, bool, f64) {
+        let Some((li, inner)) = chain
+            .loops
+            .iter()
+            .enumerate()
+            .rev()
+            .find(|(_, l)| l.kind == ForKind::Vectorized)
+        else {
+            return (false, false, 1.0);
+        };
+        let contig = chain
+            .accesses
+            .iter()
+            .all(|a| matches!(a.strides.get(li), Some(0) | Some(1) | Some(&-1)));
+        (true, contig, inner.extent as f64)
+    }
+
+    /// MXU utilization: alignment of the innermost unbound loops to the
+    /// systolic tile dimension.
+    fn mxu_utilization(&self, chain: &StoreChain, dim: f64) -> f64 {
+        // product of innermost serial/unrolled/vectorized loop extents
+        let mut inner = 1.0;
+        for l in chain.loops.iter().rev() {
+            match l.kind {
+                ForKind::Serial | ForKind::Unrolled | ForKind::Vectorized => {
+                    inner *= l.extent as f64
+                }
+                _ => break,
+            }
+        }
+        let tile = dim * dim;
+        (inner / (tile * (inner / tile).ceil())).clamp(0.0, 1.0)
+    }
+
+    /// Amortized cycles per access for one buffer access in the chain.
+    fn access_cycles(
+        &self,
+        chain: &StoreChain,
+        a: &crate::ast::analysis::AccessInfo,
+        vectorized: bool,
+    ) -> f64 {
+        let n = chain.loops.len();
+        if n == 0 {
+            return self.dram_latency;
+        }
+        match a.scope {
+            MemScope::Local => 0.05, // register file
+            MemScope::Shared => {
+                // invariant in the innermost loop → register-promoted
+                if a.strides[n - 1] == 0 {
+                    0.1
+                } else {
+                    self.shared_latency
+                }
+            }
+            MemScope::Global => {
+                // innermost-loop behaviour
+                let s_inner = a.strides[n - 1];
+                if s_inner == 0 {
+                    // register promotion across the innermost loop
+                    return 0.1;
+                }
+                // Reuse analysis: deepest loop whose var doesn't move the
+                // access (temporal reuse); footprint below it decides the
+                // cache level the access is served from.
+                let mut footprint = a.touch[0] * ELEM_BYTES;
+                for l in (0..n).rev() {
+                    if a.strides[l] == 0 && chain.loops[l].extent > 1 {
+                        footprint = if l + 1 < n {
+                            a.touch[l + 1] * ELEM_BYTES
+                        } else {
+                            ELEM_BYTES
+                        };
+                        break;
+                    }
+                }
+                let contiguous = s_inner.abs() == 1;
+                let mut cost = self.serve_cost(footprint, contiguous);
+                // Strided vector access forces a gather.
+                if vectorized && !contiguous {
+                    cost *= 1.5;
+                }
+                cost
+            }
+        }
+    }
+
+    /// Cycles per element served from the smallest level holding
+    /// `footprint` bytes.
+    fn serve_cost(&self, footprint: f64, contiguous: bool) -> f64 {
+        for (size, lat) in &self.caches {
+            if footprint <= *size {
+                return *lat;
+            }
+        }
+        if contiguous {
+            ELEM_BYTES / self.dram_bw
+        } else {
+            self.dram_latency
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::devices::{sim_cpu, sim_gpu, sim_tpu};
+    use super::*;
+    use crate::expr::ops;
+    use crate::schedule::space::Knob;
+    use crate::schedule::template::{Task, TemplateKind};
+
+    fn cpu_config(
+        task: &Task,
+        tiles: &[(usize, Vec<i64>)],
+        named: &[(&str, u32)],
+    ) -> crate::schedule::space::ConfigEntity {
+        let mut e = task.space.entity(0);
+        for (knob, tile) in tiles {
+            let Knob::Split { options, .. } = &task.space.knobs[*knob] else { panic!() };
+            e.choices[*knob] = options
+                .iter()
+                .position(|o| o == tile)
+                .unwrap_or_else(|| panic!("tile {tile:?} not in knob {knob}"))
+                as u32;
+        }
+        for (name, v) in named {
+            e.choices[task.space.knob_index(name).unwrap()] = *v;
+        }
+        e
+    }
+
+    #[test]
+    fn tiling_improves_locality_on_cpu() {
+        let dev = sim_cpu();
+        let task = Task::new(ops::matmul(256, 256, 256), TemplateKind::Cpu);
+        // naive: no tiling at all
+        let naive = cpu_config(
+            &task,
+            &[(0, vec![1, 1, 256]), (1, vec![1, 1, 256]), (2, vec![1, 256])],
+            &[],
+        );
+        // blocked: classic tiles with inner k
+        let blocked = cpu_config(
+            &task,
+            &[(0, vec![8, 4, 8]), (1, vec![2, 16, 8]), (2, vec![16, 16])],
+            &[],
+        );
+        let c_naive = dev.evaluate(&task.lower(&naive).unwrap()).unwrap();
+        let c_blocked = dev.evaluate(&task.lower(&blocked).unwrap()).unwrap();
+        assert!(
+            c_blocked.seconds < c_naive.seconds,
+            "blocked {} !< naive {}",
+            c_blocked.seconds,
+            c_naive.seconds
+        );
+    }
+
+    #[test]
+    fn vectorization_needs_contiguity() {
+        let dev = sim_cpu();
+        let task = Task::new(ops::matmul(128, 128, 128), TemplateKind::Cpu);
+        // vectorize innermost x (stride 1 in C and B): profitable
+        let tiles: &[(usize, Vec<i64>)] =
+            &[(0, vec![4, 32, 1]), (1, vec![4, 4, 8]), (2, vec![8, 16])];
+        let good = cpu_config(&task, tiles, &[("vec", 1)]);
+        let base = cpu_config(&task, tiles, &[("vec", 0)]);
+        let g = dev.evaluate(&task.lower(&good).unwrap()).unwrap();
+        let b = dev.evaluate(&task.lower(&base).unwrap()).unwrap();
+        assert!(g.seconds < b.seconds, "vec {} !< novec {}", g.seconds, b.seconds);
+
+        // stride-2 conv: input loads are non-contiguous along the
+        // innermost ox loop, so vectorizing forces gathers
+        let cp = ops::Conv2dParams {
+            n: 1, h: 32, w: 32, ic: 32, oc: 32, kh: 3, kw: 3, stride: 2, pad: 0,
+        };
+        let ctask = Task::new(ops::conv2d(cp), TemplateKind::Cpu);
+        let iv = ctask.space.knob_index("vec").unwrap();
+        let mut rng = Rng::seed_from_u64(2);
+        let mut worse = 0;
+        let mut cases = 0;
+        for _ in 0..40 {
+            let mut e = ctask.space.sample(&mut rng);
+            e.choices[iv] = 0;
+            let mut ev = e.clone();
+            ev.choices[iv] = 1;
+            if let (Ok(a), Ok(b)) = (
+                dev.evaluate(&ctask.lower(&e).unwrap()),
+                dev.evaluate(&ctask.lower(&ev).unwrap()),
+            ) {
+                cases += 1;
+                if b.seconds >= a.seconds * 0.98 {
+                    worse += 1;
+                }
+            }
+        }
+        assert!(cases > 10);
+        assert!(
+            worse * 2 >= cases,
+            "strided vectorize should rarely help: helped in {}/{cases}",
+            cases - worse
+        );
+    }
+
+    #[test]
+    fn parallel_speedup_caps_at_cores() {
+        let dev = sim_cpu(); // 4 cores
+        let task = Task::new(ops::matmul(256, 256, 256), TemplateKind::Cpu);
+        let mk = |outer_y: Vec<i64>| {
+            cpu_config(
+                &task,
+                &[(0, outer_y), (1, vec![1, 16, 16]), (2, vec![16, 16])],
+                &[],
+            )
+        };
+        let s = dev.evaluate(&task.lower(&mk(vec![1, 16, 16])).unwrap()).unwrap().seconds;
+        let p4 = dev.evaluate(&task.lower(&mk(vec![4, 4, 16])).unwrap()).unwrap().seconds;
+        let p64 = dev.evaluate(&task.lower(&mk(vec![64, 2, 2])).unwrap()).unwrap().seconds;
+        assert!(p4 < s * 0.5, "4-way parallel should speed up: {p4} vs {s}");
+        assert!(p64 > p4 * 0.5, "64-way can't be much faster than 4-way");
+    }
+
+    #[test]
+    fn gpu_thread_cap_is_enforced() {
+        let dev = sim_gpu();
+        let task = Task::new(ops::matmul(1024, 1024, 1024), TemplateKind::Gpu);
+        // thread tile 64x64 = 4096 threads > 1024 cap
+        let mut e = task.space.entity(0);
+        for knob in [0usize, 1] {
+            let Knob::Split { options, .. } = &task.space.knobs[knob] else { panic!() };
+            e.choices[knob] =
+                options.iter().position(|o| o == &vec![16, 64, 1]).unwrap() as u32;
+        }
+        let p = task.lower(&e).unwrap();
+        assert!(matches!(dev.evaluate(&p), Err(SimError::TooManyThreads { .. })));
+    }
+
+    #[test]
+    fn shared_memory_overflow_detected() {
+        let dev = sim_gpu();
+        let task = Task::new(ops::matmul(1024, 1024, 1024), TemplateKind::Gpu);
+        let mut e = task.space.entity(0);
+        // modest thread tiles but a giant reduce-outer tile: k split
+        // [1, 1024] stages 1024×tile elements of A and B in shared memory
+        let picks: &[(usize, Vec<i64>)] = &[
+            (0, vec![8, 8, 16]),
+            (1, vec![8, 8, 16]),
+            (2, vec![1, 1024]),
+        ];
+        for (knob, tile) in picks {
+            let Knob::Split { options, .. } = &task.space.knobs[*knob] else { panic!() };
+            e.choices[*knob] = options.iter().position(|o| o == tile).unwrap() as u32;
+        }
+        let p = task.lower(&e).unwrap();
+        assert!(matches!(dev.evaluate(&p), Err(SimError::SharedMemOverflow { .. })));
+    }
+
+    #[test]
+    fn gpu_beats_cpu_on_big_matmul() {
+        let cpu = sim_cpu();
+        let gpu = sim_gpu();
+        let tc = Task::new(ops::matmul(512, 512, 512), TemplateKind::Cpu);
+        let tg = Task::new(ops::matmul(512, 512, 512), TemplateKind::Gpu);
+        let ec = cpu_config(
+            &tc,
+            &[(0, vec![4, 16, 8]), (1, vec![1, 64, 8]), (2, vec![32, 16])],
+            &[("vec", 1)],
+        );
+        let mut eg = tg.space.entity(0);
+        for knob in [0usize, 1] {
+            let Knob::Split { options, .. } = &tg.space.knobs[knob] else { panic!() };
+            eg.choices[knob] =
+                options.iter().position(|o| o == &vec![32, 16, 1]).unwrap() as u32;
+        }
+        let Knob::Split { options, .. } = &tg.space.knobs[2] else { panic!() };
+        eg.choices[2] = options.iter().position(|o| o == &vec![64, 8]).unwrap() as u32;
+        let c = cpu.evaluate(&tc.lower(&ec).unwrap()).unwrap();
+        let g = gpu.evaluate(&tg.lower(&eg).unwrap()).unwrap();
+        assert!(
+            g.gflops > c.gflops * 5.0,
+            "gpu {} gflops vs cpu {} gflops",
+            g.gflops,
+            c.gflops
+        );
+    }
+
+    #[test]
+    fn mxu_rewards_aligned_tiles() {
+        let dev = sim_tpu();
+        let task = Task::new(ops::matmul(512, 512, 512), TemplateKind::Gpu);
+        // identical block/thread tiling; only the inner k split differs,
+        // so the innermost run is 16*4*4 = 256 (one full 16x16 MXU tile)
+        // vs 8*4*4 = 128 (half a tile)
+        let mk = |ksplit: Vec<i64>| {
+            let mut e = task.space.entity(0);
+            for knob in [0usize, 1] {
+                let Knob::Split { options, .. } = &task.space.knobs[knob] else { panic!() };
+                e.choices[knob] =
+                    options.iter().position(|o| o == &vec![8, 16, 4]).unwrap() as u32;
+            }
+            let Knob::Split { options, .. } = &task.space.knobs[2] else { panic!() };
+            e.choices[2] = options.iter().position(|o| o == &ksplit).unwrap() as u32;
+            e
+        };
+        let aligned = mk(vec![32, 16]);
+        let ragged = mk(vec![64, 8]);
+        let a = dev.evaluate(&task.lower(&aligned).unwrap()).unwrap();
+        let r = dev.evaluate(&task.lower(&ragged).unwrap()).unwrap();
+        assert!(a.gflops > r.gflops, "aligned {} !> ragged {}", a.gflops, r.gflops);
+    }
+
+    #[test]
+    fn measurement_noise_is_seeded_and_bounded() {
+        let dev = sim_gpu();
+        let task = Task::new(ops::matmul(256, 256, 256), TemplateKind::Gpu);
+        let mut rng = Rng::seed_from_u64(4);
+        let mut checked = 0;
+        for _ in 0..30 {
+            let e = task.space.sample(&mut rng);
+            let p = task.lower(&e).unwrap();
+            if let (Ok(a), Ok(b), Ok(c)) =
+                (dev.measure(&p, 1), dev.measure(&p, 1), dev.measure(&p, 2))
+            {
+                assert_eq!(a.seconds, b.seconds, "same seed must reproduce");
+                assert_ne!(a.seconds, c.seconds, "different seeds must differ");
+                let base = dev.evaluate(&p).unwrap();
+                assert!((a.seconds / base.seconds).ln().abs() < 0.5);
+                checked += 1;
+            }
+        }
+        assert!(checked > 5);
+    }
+
+    #[test]
+    fn evaluate_is_deterministic() {
+        let dev = sim_cpu();
+        let task = Task::new(ops::dense(64, 256, 256), TemplateKind::Cpu);
+        let e = task.space.entity(777 % task.space.size());
+        let p = task.lower(&e).unwrap();
+        let a = dev.evaluate(&p).unwrap();
+        let b = dev.evaluate(&p).unwrap();
+        assert_eq!(a.seconds, b.seconds);
+    }
+
+    #[test]
+    fn conv_c6_runs_on_all_devices() {
+        // C6 of Table 1: 28x28, 128->128, k3 s1
+        let p = ops::Conv2dParams {
+            n: 1, h: 28, w: 28, ic: 128, oc: 128, kh: 3, kw: 3, stride: 1, pad: 1,
+        };
+        for (dev, t) in [
+            (sim_gpu(), TemplateKind::Gpu),
+            (sim_cpu(), TemplateKind::Cpu),
+            (super::devices::sim_mali(), TemplateKind::Gpu),
+        ] {
+            let task = Task::new(ops::conv2d(p), t);
+            let mut rng = Rng::seed_from_u64(5);
+            let mut ok = 0;
+            for _ in 0..50 {
+                let e = task.space.sample(&mut rng);
+                let prog = task.lower(&e).unwrap();
+                if let Ok(r) = dev.evaluate(&prog) {
+                    assert!(r.seconds > 0.0 && r.gflops > 0.0);
+                    ok += 1;
+                }
+            }
+            assert!(ok > 10, "{}: only {ok}/50 configs valid", dev.name);
+        }
+    }
+
+    #[test]
+    fn cost_varies_across_configs() {
+        // the landscape must not be flat: spread between best and worst
+        // random configs should exceed 5x
+        let dev = sim_gpu();
+        let task = Task::new(ops::matmul(256, 256, 256), TemplateKind::Gpu);
+        let mut rng = Rng::seed_from_u64(9);
+        let mut costs = Vec::new();
+        for _ in 0..200 {
+            let e = task.space.sample(&mut rng);
+            if let Ok(r) = dev.evaluate(&task.lower(&e).unwrap()) {
+                costs.push(r.seconds);
+            }
+        }
+        let min = costs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = costs.iter().cloned().fold(0.0, f64::max);
+        assert!(max / min > 5.0, "landscape too flat: {min}..{max}");
+    }
+}

@@ -1,0 +1,267 @@
+//! Tuning database `D = {(e_i, s_i, c_i)}` (§3): persistent JSONL log of
+//! every measured trial, queryable per task — the source of `D'` for
+//! transfer learning (§4) and of best-config lookups for the graph
+//! compiler.
+
+use crate::features::Representation;
+use crate::gbt::Matrix;
+use crate::schedule::space::ConfigEntity;
+use crate::schedule::template::Task;
+use crate::tuner::TrialRecord;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One persisted measurement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Record {
+    pub task_key: String,
+    pub target: String,
+    pub choices: Vec<u32>,
+    pub gflops: f64,
+    pub seconds: f64,
+    pub error: Option<String>,
+}
+
+impl Record {
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("task", Json::from(self.task_key.clone())),
+            ("target", Json::from(self.target.clone())),
+            (
+                "choices",
+                Json::Arr(self.choices.iter().map(|&c| Json::from(c as u64)).collect()),
+            ),
+            ("gflops", Json::from(self.gflops)),
+            ("seconds", Json::from(self.seconds)),
+        ];
+        if let Some(e) = &self.error {
+            fields.push(("error", Json::from(e.clone())));
+        }
+        Json::obj(fields)
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<Record> {
+        let get_str = |k: &str| -> anyhow::Result<String> {
+            Ok(j.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("record missing {k}"))?
+                .to_string())
+        };
+        let choices = j
+            .get("choices")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("record missing choices"))?
+            .iter()
+            .map(|v| v.as_u64().unwrap_or(0) as u32)
+            .collect();
+        Ok(Record {
+            task_key: get_str("task")?,
+            target: get_str("target")?,
+            choices,
+            gflops: j.get("gflops").and_then(Json::as_f64).unwrap_or(0.0),
+            seconds: j.get("seconds").and_then(Json::as_f64).unwrap_or(0.0),
+            error: j.get("error").and_then(Json::as_str).map(String::from),
+        })
+    }
+}
+
+/// The tuning log.
+#[derive(Clone, Debug, Default)]
+pub struct Database {
+    pub records: Vec<Record>,
+}
+
+impl Database {
+    pub fn new() -> Self {
+        Database::default()
+    }
+
+    /// Append the trials of one tuning run.
+    pub fn add_run(&mut self, task: &Task, target: &str, records: &[TrialRecord]) {
+        for r in records {
+            self.records.push(Record {
+                task_key: task.key(),
+                target: target.to_string(),
+                choices: r.entity.choices.clone(),
+                gflops: r.gflops,
+                seconds: r.seconds.unwrap_or(0.0),
+                error: r.error.clone(),
+            });
+        }
+    }
+
+    /// Persist as JSONL.
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let mut out = String::new();
+        for r in &self.records {
+            out.push_str(&r.to_json().dump());
+            out.push('\n');
+        }
+        std::fs::write(path, out)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Database> {
+        let text = std::fs::read_to_string(path)?;
+        let mut records = Vec::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            records.push(Record::from_json(&Json::parse(line)?)?);
+        }
+        Ok(Database { records })
+    }
+
+    /// Records belonging to one task+target.
+    pub fn for_task(&self, task_key: &str, target: &str) -> Vec<&Record> {
+        self.records
+            .iter()
+            .filter(|r| r.task_key == task_key && r.target == target)
+            .collect()
+    }
+
+    /// Best valid config per task (for the graph compiler).
+    pub fn best_config(&self, task_key: &str, target: &str) -> Option<(ConfigEntity, f64)> {
+        self.for_task(task_key, target)
+            .into_iter()
+            .filter(|r| r.error.is_none())
+            .max_by(|a, b| a.gflops.partial_cmp(&b.gflops).unwrap())
+            .map(|r| (ConfigEntity { choices: r.choices.clone() }, r.gflops))
+    }
+
+    /// Build a training set from source-domain records under an
+    /// invariant representation — the `D'` featurization for the global
+    /// model of Eq. 4. Tasks must be supplied so configs can be
+    /// re-lowered; records for unknown tasks are skipped. Returns
+    /// (features, labels-normalized-per-task, group sizes per task).
+    ///
+    /// Labels are normalized to relative throughput within each task
+    /// (gflops / task max) so the global model learns *shape*, not
+    /// absolute workload scale — with the rank objective only per-task
+    /// order matters and tasks are separate rank groups.
+    pub fn to_training(
+        &self,
+        tasks: &[&Task],
+        target: &str,
+        repr: Representation,
+        limit_per_task: usize,
+    ) -> (Matrix, Vec<f64>, Vec<usize>) {
+        let by_key: HashMap<String, &Task> =
+            tasks.iter().map(|t| (t.key(), *t)).collect();
+        let mut rows: Vec<Vec<f64>> = Vec::new();
+        let mut ys = Vec::new();
+        let mut groups = Vec::new();
+        for (key, task) in &by_key {
+            let recs: Vec<&Record> = self
+                .for_task(key, target)
+                .into_iter()
+                .take(limit_per_task)
+                .collect();
+            if recs.is_empty() {
+                continue;
+            }
+            let max_g =
+                recs.iter().map(|r| r.gflops).fold(f64::MIN_POSITIVE, f64::max);
+            let entities: Vec<ConfigEntity> =
+                recs.iter().map(|r| ConfigEntity { choices: r.choices.clone() }).collect();
+            let feats = crate::util::parallel_map(
+                &entities,
+                crate::util::default_threads(),
+                |e| {
+                    let analysis =
+                        crate::ast::analysis::analyze(&task.lower(e).expect("db config lowers"));
+                    crate::features::extract(repr, task, e, &analysis)
+                },
+            );
+            for (f, r) in feats.into_iter().zip(&recs) {
+                rows.push(f);
+                ys.push(r.gflops / max_g);
+            }
+            groups.push(recs.len());
+        }
+        (Matrix::from_rows(&rows), ys, groups)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::ops;
+    use crate::measure::{Measurer, SimMeasurer};
+    use crate::schedule::template::TemplateKind;
+    use crate::sim::devices::sim_cpu;
+    use crate::util::Rng;
+
+    fn sample_records(task: &Task, n: usize) -> Vec<TrialRecord> {
+        let m = SimMeasurer::with_seed(sim_cpu(), 1);
+        let mut rng = Rng::seed_from_u64(2);
+        let batch: Vec<ConfigEntity> =
+            (0..n).map(|_| task.space.sample(&mut rng)).collect();
+        let res = m.measure(task, &batch);
+        batch
+            .into_iter()
+            .zip(res)
+            .map(|(e, r)| TrialRecord {
+                entity: e,
+                gflops: r.gflops,
+                seconds: r.seconds,
+                error: r.error,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu);
+        let mut db = Database::new();
+        db.add_run(&task, "sim-cpu", &sample_records(&task, 20));
+        let dir = std::env::temp_dir().join("autotvm-test-db");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.jsonl");
+        db.save(&path).unwrap();
+        let back = Database::load(&path).unwrap();
+        assert_eq!(db.records, back.records);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn best_config_skips_errors() {
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu);
+        let mut db = Database::new();
+        let mut recs = sample_records(&task, 10);
+        // poison: an error record with absurd gflops must not win
+        recs.push(TrialRecord {
+            entity: task.space.entity(0),
+            gflops: 1e12,
+            seconds: None,
+            error: Some("boom".into()),
+        });
+        db.add_run(&task, "sim-cpu", &recs);
+        let (_, g) = db.best_config(&task.key(), "sim-cpu").unwrap();
+        assert!(g < 1e12);
+    }
+
+    #[test]
+    fn to_training_builds_invariant_features() {
+        let t1 = Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu);
+        let t2 = Task::new(
+            ops::conv2d(ops::Conv2dParams {
+                n: 1, h: 14, w: 14, ic: 16, oc: 16, kh: 3, kw: 3, stride: 1, pad: 1,
+            }),
+            TemplateKind::Cpu,
+        );
+        let mut db = Database::new();
+        db.add_run(&t1, "sim-cpu", &sample_records(&t1, 12));
+        db.add_run(&t2, "sim-cpu", &sample_records(&t2, 12));
+        let (x, y, groups) = db.to_training(
+            &[&t1, &t2],
+            "sim-cpu",
+            Representation::ContextRelation,
+            100,
+        );
+        assert_eq!(x.rows, 24);
+        assert_eq!(x.cols, Representation::ContextRelation.dim());
+        assert_eq!(groups, vec![12, 12]);
+        // labels normalized per task
+        assert!(y.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+}

