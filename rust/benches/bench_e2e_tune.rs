@@ -1,24 +1,59 @@
-//! One full Algorithm-1 tuning round (SA collect + diversity select +
-//! batch measure + model refit) — the end-to-end L3 hot path.
+//! End-to-end tuning wall-clock — the L3 hot path.
+//!
+//! Three cases at the same trial budget:
+//! * serial loop on a single simulated board (the Algorithm-1 baseline),
+//! * serial loop on a 4-replica device farm with per-board latency,
+//! * pipelined loop (explore ∥ measure ∥ retrain) on the same farm.
+//!
+//! The farm latency emulates the RPC + run time of the paper's remote
+//! boards; the pipelined loop should hide SA and GBT refits behind it,
+//! so the last case must come in measurably under the second.
+//!
+//! `E2E_TUNE_SMOKE=1` shrinks the budget for CI check-only runs.
+
 use autotvm::explore::SaParams;
+use autotvm::measure::farm::DeviceFarm;
 use autotvm::measure::SimMeasurer;
 use autotvm::schedule::template::TemplateKind;
 use autotvm::sim::devices::sim_gpu;
-use autotvm::tuner::{tune_gbt, TuneOptions};
+use autotvm::tuner::{tune_gbt, tune_gbt_pipelined, TuneOptions};
 use autotvm::util::bench::Bench;
 use autotvm::workloads;
+use std::time::Duration;
 
 fn main() {
+    let smoke = std::env::var("E2E_TUNE_SMOKE").is_ok();
     let mut b = Bench::new("e2e_tune");
     let opts = TuneOptions {
-        n_trials: 128,
-        batch: 64,
-        sa: SaParams { n_chains: 64, n_steps: 60, ..Default::default() },
+        n_trials: if smoke { 32 } else { 128 },
+        batch: 32,
+        sa: SaParams {
+            n_chains: if smoke { 16 } else { 64 },
+            n_steps: if smoke { 20 } else { 60 },
+            ..Default::default()
+        },
         ..Default::default()
     };
-    b.run("tune_c6_128_trials", || {
-        let task = workloads::conv_task(6, TemplateKind::Gpu);
-        let m = SimMeasurer::with_seed(sim_gpu(), 1);
-        tune_gbt(task, &m, opts.clone())
+    let task = || workloads::conv_task(6, TemplateKind::Gpu);
+    let farm = || DeviceFarm::with_latency(sim_gpu(), 4, 1, Duration::from_millis(2));
+
+    b.run("tune_c6_serial_sim", {
+        let opts = opts.clone();
+        move || {
+            let m = SimMeasurer::with_seed(sim_gpu(), 1);
+            tune_gbt(task(), &m, opts.clone())
+        }
     });
+    let serial = b.run("tune_c6_serial_farm4", {
+        let opts = opts.clone();
+        move || tune_gbt(task(), &farm(), opts.clone())
+    });
+    let piped = b.run("tune_c6_pipelined_farm4", {
+        let opts = opts.clone();
+        move || tune_gbt_pipelined(task(), &farm(), opts.clone())
+    });
+    println!(
+        "e2e_tune/pipeline_speedup_over_serial_farm4       {:.2}x",
+        serial.mean_ns / piped.mean_ns
+    );
 }

@@ -33,6 +33,9 @@ pub struct ExpOpts {
     pub full: bool,
     /// Evaluate on all 12 workloads (supplementary Figs. 13–16).
     pub all_workloads: bool,
+    /// Stage depth for [`run_method_pipelined`] (see
+    /// [`crate::tuner::pipeline`]).
+    pub pipeline_depth: usize,
 }
 
 impl Default for ExpOpts {
@@ -44,6 +47,7 @@ impl Default for ExpOpts {
             seed: 0,
             full: false,
             all_workloads: false,
+            pipeline_depth: 2,
         }
     }
 }
@@ -65,6 +69,7 @@ impl ExpOpts {
             batch: self.batch,
             sa: self.sa.clone(),
             seed: self.seed,
+            pipeline_depth: self.pipeline_depth,
             ..Default::default()
         }
     }
@@ -180,6 +185,50 @@ pub fn run_method(
             Tuner::new(task.clone(), model, o).tune(measurer)
         }
     }
+}
+
+/// Pipelined counterpart of [`run_method`] for the model-based methods
+/// (the production path: explore ∥ measure ∥ retrain, see
+/// [`crate::tuner::pipeline`]). Returns `None` for methods without a
+/// pipelined implementation — the black-box baselines measure every
+/// proposal immediately, and the PJRT-backed neural model is
+/// thread-affine — so callers can fall back to [`run_method`].
+pub fn run_method_pipelined(
+    task: &Task,
+    measurer: &dyn Measurer,
+    method: Method,
+    opts: &ExpOpts,
+) -> Option<TuneResult> {
+    use crate::model::CostModel;
+    use crate::tuner::pipeline::PipelinedTuner;
+    let mut o = opts.tune_options();
+    let model: Box<dyn CostModel + Send> = match method {
+        Method::GbtRank | Method::GbtReg => {
+            let objective = if method == Method::GbtRank {
+                Objective::Rank
+            } else {
+                Objective::Regression
+            };
+            let params = GbtParams { objective, seed: o.seed, ..Default::default() };
+            Box::new(GbtModel::new(params))
+        }
+        Method::EnsembleMean | Method::EnsembleUcb | Method::EnsembleEi => {
+            let params = GbtParams {
+                objective: Objective::Regression,
+                n_trees: 30,
+                seed: o.seed,
+                ..Default::default()
+            };
+            o.acquisition = match method {
+                Method::EnsembleUcb => Acquisition::Ucb(1.0),
+                Method::EnsembleEi => Acquisition::Ei,
+                _ => Acquisition::Mean,
+            };
+            Box::new(EnsembleModel::new(params, 5))
+        }
+        _ => return None,
+    };
+    Some(PipelinedTuner::new(task.clone(), model, o).tune(measurer))
 }
 
 fn emit_curve(fig: &str, workload: &str, method: &str, curve: &[f64], stride: usize) {

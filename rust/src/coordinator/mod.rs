@@ -104,6 +104,7 @@ fn exp_opts(args: &Args) -> ExpOpts {
     o.trials = args.get_usize("trials", o.trials);
     o.all_workloads = args.has("all-workloads");
     o.seed = args.get_usize("seed", 0) as u64;
+    o.pipeline_depth = args.get_usize("depth", o.pipeline_depth);
     o
 }
 
@@ -132,15 +133,35 @@ pub fn run(argv: &[String]) -> Result<()> {
             let method = method_of(&args)?;
             let opts = exp_opts(&args);
             let task = workloads::conv_task(wl, template_of(&dev));
+            // --replicas N measures on a simulated device farm;
+            // --pipeline runs the asynchronous explore ∥ measure ∥
+            // retrain loop (GBT methods; others fall back to serial).
+            let replicas = args.get_usize("replicas", 1);
+            let measurer: Box<dyn Measurer> = if replicas > 1 {
+                Box::new(crate::measure::farm::DeviceFarm::new(
+                    dev.clone(),
+                    replicas,
+                    opts.seed + 1,
+                ))
+            } else {
+                Box::new(SimMeasurer::with_seed(dev.clone(), opts.seed + 1))
+            };
             println!(
-                "tuning C{wl} on {} with {} ({} trials, |S_e| = {:.2e})",
-                dev.name,
+                "tuning C{wl} on {} with {}{} ({} trials, |S_e| = {:.2e})",
+                measurer.target(),
                 method.name(),
+                if args.has("pipeline") { " [pipelined]" } else { "" },
                 opts.trials,
                 task.space.size() as f64
             );
-            let measurer = SimMeasurer::with_seed(dev.clone(), opts.seed + 1);
-            let res = experiments::run_method(&task, &measurer, method, &opts);
+            let res = if args.has("pipeline") {
+                experiments::run_method_pipelined(&task, measurer.as_ref(), method, &opts)
+                    .unwrap_or_else(|| {
+                        experiments::run_method(&task, measurer.as_ref(), method, &opts)
+                    })
+            } else {
+                experiments::run_method(&task, measurer.as_ref(), method, &opts)
+            };
             if let Some((e, g)) = &res.best {
                 println!("best: {g:.1} GFLOPS");
                 println!("config: {}", task.space.describe(e));
@@ -167,10 +188,15 @@ pub fn run(argv: &[String]) -> Result<()> {
                     n_trials: opts.trials,
                     sa: opts.sa.clone(),
                     seed: opts.seed + wl as u64,
+                    pipeline_depth: opts.pipeline_depth,
                     ..Default::default()
                 };
                 o.verbose = true;
-                let res = crate::tuner::tune_gbt(task.clone(), &measurer, o);
+                let res = if args.has("pipeline") {
+                    crate::tuner::tune_gbt_pipelined(task.clone(), &measurer, o)
+                } else {
+                    crate::tuner::tune_gbt(task.clone(), &measurer, o)
+                };
                 println!("C{wl}: best {:.1} GFLOPS", res.best_gflops());
                 db.add_run(&task, dev.name, &res.records);
             }
@@ -279,8 +305,9 @@ fn print_usage() {
 USAGE:
   autotvm table1
   autotvm tune      --workload C6 --device sim-gpu --method gbt_rank \\
-                    [--trials N] [--db file.jsonl] [--full]
-  autotvm tune-all  --device sim-gpu [--trials N] [--db file.jsonl]
+                    [--trials N] [--db file.jsonl] [--full] \\
+                    [--pipeline] [--depth D] [--replicas R]
+  autotvm tune-all  --device sim-gpu [--trials N] [--db file.jsonl] [--pipeline]
   autotvm e2e       --network resnet18 --device sim-gpu [--trials N]
   autotvm fig <4|5|6|7|8|9|10|11> [--full] [--all-workloads] [--neural] [--device D]
   autotvm pjrt-demo [--trials N]

@@ -97,7 +97,15 @@ impl ParallelSa {
         }
 
         let mut out: Vec<(ConfigEntity, f64)> = visited.into_iter().collect();
-        out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        // Deterministic order: score descending, config index ascending.
+        // Ties at the `top_k` cutoff must not inherit HashMap iteration
+        // order, or runs with the same seed diverge (the pipelined
+        // tuner's reproducibility guarantee builds on this).
+        out.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1)
+                .unwrap()
+                .then_with(|| space.index_of(&a.0).cmp(&space.index_of(&b.0)))
+        });
         out.truncate(top_k);
         out
     }

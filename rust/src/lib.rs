@@ -17,7 +17,12 @@
 //! * the exploration module — parallel simulated annealing,
 //!   diversity-aware selection, ε-greedy — plus black-box baselines
 //!   ([`explore`]),
-//! * the top-level tuning loop with transfer learning ([`tuner`]),
+//! * the top-level tuning loop with transfer learning ([`tuner`]) in
+//!   two drivers sharing one featurization / trial-accounting /
+//!   warm-start core: the serial Algorithm-1 reference loop
+//!   ([`tuner::Tuner`]) and the pipelined production loop
+//!   ([`tuner::pipeline`]) that overlaps exploration, farm measurement
+//!   and model refits on three channel-connected stages,
 //! * a mini graph compiler for end-to-end workloads ([`graph`],
 //!   [`workloads`], [`baselines`]).
 //!

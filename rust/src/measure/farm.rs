@@ -16,6 +16,11 @@ use std::sync::Mutex;
 /// A farm of simulated boards of the same device type.
 pub struct DeviceFarm {
     pub replicas: Vec<SimMeasurer>,
+    /// Per-candidate board latency (RPC round-trip + kernel run time of
+    /// the paper's remote farm). Zero by default; benches and the
+    /// pipelined-tuner tests use it to emulate slow hardware that the
+    /// exploration and model stages should hide behind.
+    pub latency: std::time::Duration,
 }
 
 impl DeviceFarm {
@@ -25,7 +30,20 @@ impl DeviceFarm {
         let replicas = (0..n)
             .map(|i| SimMeasurer::with_seed(device.clone(), seed.wrapping_add(i as u64 * 1_000_003)))
             .collect();
-        DeviceFarm { replicas }
+        DeviceFarm { replicas, latency: std::time::Duration::ZERO }
+    }
+
+    /// Farm whose boards take `latency` wall-clock per measurement on
+    /// top of the simulated kernel time.
+    pub fn with_latency(
+        device: crate::sim::DeviceModel,
+        n: usize,
+        seed: u64,
+        latency: std::time::Duration,
+    ) -> Self {
+        let mut farm = DeviceFarm::new(device, n, seed);
+        farm.latency = latency;
+        farm
     }
 }
 
@@ -44,6 +62,7 @@ impl Measurer for DeviceFarm {
             })
             .collect();
         let mut out: Vec<Option<MeasureResult>> = vec![None; batch.len()];
+        let latency = self.latency;
         let results: Vec<Vec<(usize, MeasureResult)>> = std::thread::scope(|s| {
             let handles: Vec<_> = shards
                 .iter()
@@ -52,6 +71,9 @@ impl Measurer for DeviceFarm {
                     s.spawn(move || {
                         let entities: Vec<ConfigEntity> =
                             shard.iter().map(|(_, e)| e.clone()).collect();
+                        if !latency.is_zero() && !entities.is_empty() {
+                            std::thread::sleep(latency * entities.len() as u32);
+                        }
                         let rs = replica.measure(task, &entities);
                         shard
                             .iter()

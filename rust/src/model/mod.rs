@@ -34,6 +34,16 @@ pub trait CostModel {
 
     /// Whether the model has been fitted at least once.
     fn ready(&self) -> bool;
+
+    /// Clone a frozen copy of the model for cross-thread scoring — the
+    /// pipelined tuner ([`crate::tuner::pipeline`]) ships one snapshot
+    /// per fit epoch to its proposal stage. Models that cannot be
+    /// cloned across threads (e.g. the PJRT-backed neural model, whose
+    /// executables are thread-affine) keep the default `None` and are
+    /// run under the serial reference schedule instead.
+    fn snapshot(&self) -> Option<Box<dyn CostModel + Send>> {
+        None
+    }
 }
 
 /// GBT-backed cost model.
@@ -65,6 +75,10 @@ impl CostModel for GbtModel {
 
     fn ready(&self) -> bool {
         self.model.is_some()
+    }
+
+    fn snapshot(&self) -> Option<Box<dyn CostModel + Send>> {
+        Some(Box::new(GbtModel { params: self.params.clone(), model: self.model.clone() }))
     }
 }
 
@@ -103,6 +117,14 @@ impl CostModel for EnsembleModel {
 
     fn ready(&self) -> bool {
         self.model.is_some()
+    }
+
+    fn snapshot(&self) -> Option<Box<dyn CostModel + Send>> {
+        Some(Box::new(EnsembleModel {
+            params: self.params.clone(),
+            k: self.k,
+            model: self.model.clone(),
+        }))
     }
 }
 
@@ -224,6 +246,18 @@ impl CostModel for TransferModel {
     /// Global model alone is already usable.
     fn ready(&self) -> bool {
         true
+    }
+
+    /// Transfer models snapshot cleanly, so the pipelined loop gets the
+    /// same warm start as the serial one: the epoch-0 snapshot is the
+    /// global model, making even the first SA round informed.
+    fn snapshot(&self) -> Option<Box<dyn CostModel + Send>> {
+        Some(Box::new(TransferModel {
+            global: self.global.clone(),
+            calib: self.calib,
+            local: self.local.clone(),
+            params: self.params.clone(),
+        }))
     }
 }
 

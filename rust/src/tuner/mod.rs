@@ -6,22 +6,42 @@
 //! random candidates, measure the batch on the hardware back-end,
 //! append to the database `D`, and refit `f̂` on all of `D`.
 //!
+//! Two drivers share that round structure:
+//!
+//! * [`Tuner`] — the serial reference loop (exactly Algorithm 1, one
+//!   stage at a time; kept for reference experiments and for models
+//!   that cannot be snapshotted across threads).
+//! * [`pipeline::PipelinedTuner`] — the asynchronous production loop:
+//!   proposal, measurement and model refit run concurrently on three
+//!   stages connected by bounded channels, so the device farm never
+//!   idles while SA runs or the GBT refits.
+//!
+//! Both are built from the same parts: [`Featurizer`] (shared feature
+//! extraction + cache), [`BatchProposer`] (SA + diversity selection +
+//! ε-greedy batch construction) and [`TrialAccountant`] (records,
+//! best-so-far curve, failure handling).
+//!
 //! Transfer learning (§4): pass a [`TransferModel`] built from a prior
 //! database — the global model makes the very first SA round informed
-//! instead of random.
+//! instead of random, in either driver.
+//!
+//! [`TransferModel`]: crate::model::TransferModel
 
 pub mod db;
+pub mod pipeline;
 
-use crate::explore::{diverse_select, random_batch, ParallelSa, SaParams, Scorer};
+use crate::explore::{diverse_select, random_batch, ParallelSa, Scorer};
 use crate::features::Representation;
 use crate::gbt::Matrix;
-use crate::measure::Measurer;
+use crate::measure::{MeasureResult, Measurer};
 use crate::model::{Acquisition, CostModel};
 use crate::schedule::space::ConfigEntity;
 use crate::schedule::template::Task;
 use crate::util::{parallel_map, Rng};
 use std::cell::RefCell;
 use std::collections::{HashMap, HashSet};
+
+pub use crate::explore::SaParams;
 
 /// Tuning options (defaults follow the paper's experiment configuration:
 /// b = 64, ε = 0.05, 128 SA chains × 500 steps).
@@ -42,6 +62,12 @@ pub struct TuneOptions {
     pub seed: u64,
     /// Print per-round progress.
     pub verbose: bool,
+    /// Pipelined loop only: how many measurement batches the proposal
+    /// stage may run ahead of the model stage. Depth `d` means batch
+    /// `k` is proposed from the model snapshot of epoch
+    /// `max(0, k − (d − 1))`; `d = 1` reproduces the serial schedule
+    /// exactly. See [`pipeline`].
+    pub pipeline_depth: usize,
 }
 
 impl Default for TuneOptions {
@@ -58,6 +84,7 @@ impl Default for TuneOptions {
             sa: SaParams::default(),
             seed: 0,
             verbose: false,
+            pipeline_depth: 2,
         }
     }
 }
@@ -100,50 +127,65 @@ impl TuneResult {
     }
 }
 
-/// Shared feature cache: entity → feature row.
-type FeatureCache = RefCell<HashMap<ConfigEntity, Vec<f64>>>;
+/// Shared feature extraction with a per-owner memo cache
+/// (entity → feature row). One implementation serves the serial loop,
+/// the pipelined proposal stage and the pipelined model stage — each
+/// stage owns its own `Featurizer`, so no locks sit on the SA hot path.
+pub struct Featurizer {
+    pub repr: Representation,
+    cache: RefCell<HashMap<ConfigEntity, Vec<f64>>>,
+}
 
-fn featurize_batch(
-    task: &Task,
-    repr: Representation,
-    cache: &FeatureCache,
-    entities: &[ConfigEntity],
-) -> Matrix {
-    // compute missing rows in parallel
-    let missing: Vec<ConfigEntity> = {
-        let c = cache.borrow();
-        entities.iter().filter(|e| !c.contains_key(*e)).cloned().collect()
-    };
-    if !missing.is_empty() {
-        let rows = parallel_map(&missing, crate::util::default_threads(), |e| {
-            let analysis = task
-                .lower(e)
-                .map(|p| crate::ast::analysis::analyze(&p))
-                .expect("template configs must lower");
-            crate::features::extract(repr, task, e, &analysis)
-        });
-        let mut c = cache.borrow_mut();
-        for (e, r) in missing.into_iter().zip(rows) {
-            c.insert(e, r);
-        }
+impl Featurizer {
+    pub fn new(repr: Representation) -> Self {
+        Featurizer { repr, cache: RefCell::new(HashMap::new()) }
     }
-    let c = cache.borrow();
-    let rows: Vec<Vec<f64>> = entities.iter().map(|e| c[e].clone()).collect();
-    Matrix::from_rows(&rows)
+
+    /// Feature matrix for `entities`, computing missing rows in
+    /// parallel and memoizing them.
+    pub fn features(&self, task: &Task, entities: &[ConfigEntity]) -> Matrix {
+        let missing: Vec<ConfigEntity> = {
+            let c = self.cache.borrow();
+            entities.iter().filter(|e| !c.contains_key(*e)).cloned().collect()
+        };
+        if !missing.is_empty() {
+            // capture only Copy data in the worker closure (the RefCell
+            // cache must stay out of it — parallel_map requires Sync)
+            let repr = self.repr;
+            let rows = parallel_map(&missing, crate::util::default_threads(), |e| {
+                let analysis = task
+                    .lower(e)
+                    .map(|p| crate::ast::analysis::analyze(&p))
+                    .expect("template configs must lower");
+                crate::features::extract(repr, task, e, &analysis)
+            });
+            let mut c = self.cache.borrow_mut();
+            for (e, r) in missing.into_iter().zip(rows) {
+                c.insert(e, r);
+            }
+        }
+        let c = self.cache.borrow();
+        let rows: Vec<Vec<f64>> = entities.iter().map(|e| c[e].clone()).collect();
+        Matrix::from_rows(&rows)
+    }
+
+    /// Number of memoized feature rows.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
 }
 
 struct TunerScorer<'a> {
     task: &'a Task,
-    repr: Representation,
+    feat: &'a Featurizer,
     model: &'a dyn CostModel,
-    cache: &'a FeatureCache,
     acquisition: Acquisition,
     best: f64,
 }
 
 impl Scorer for TunerScorer<'_> {
     fn score(&self, entities: &[ConfigEntity]) -> Vec<f64> {
-        let x = featurize_batch(self.task, self.repr, self.cache, entities);
+        let x = self.feat.features(self.task, entities);
         match self.acquisition {
             Acquisition::Mean => self.model.predict(&x),
             acq => self
@@ -156,97 +198,103 @@ impl Scorer for TunerScorer<'_> {
     }
 }
 
-/// The Algorithm-1 driver.
-pub struct Tuner {
-    pub task: Task,
-    pub options: TuneOptions,
-    model: Box<dyn CostModel>,
-    sa: ParallelSa,
-    cache: FeatureCache,
-    rng: Rng,
+/// Trial accounting shared by every loop: best-so-far tracking, the
+/// per-trial curve, and the failure policy (errored trials are recorded
+/// with 0 GFLOPS and never become `best`).
+#[derive(Default)]
+pub struct TrialAccountant {
+    pub best: Option<(ConfigEntity, f64)>,
+    pub curve: Vec<f64>,
+    pub records: Vec<TrialRecord>,
+    pub trials: usize,
 }
 
-impl Tuner {
-    pub fn new(task: Task, model: Box<dyn CostModel>, options: TuneOptions) -> Self {
-        let sa = ParallelSa::new(options.sa.clone());
-        let rng = Rng::seed_from_u64(options.seed ^ 0x7u64.wrapping_mul(0x9E3779B97F4A7C15));
-        Tuner { task, options, model, sa, cache: RefCell::new(HashMap::new()), rng }
+impl TrialAccountant {
+    pub fn new() -> Self {
+        TrialAccountant::default()
     }
 
-    /// Run the tuning loop against a measurement back-end.
-    pub fn tune(&mut self, measurer: &dyn Measurer) -> TuneResult {
-        let opts = self.options.clone();
-        let mut seen: HashSet<ConfigEntity> = HashSet::new();
-        let mut records: Vec<TrialRecord> = Vec::new();
-        let mut curve: Vec<f64> = Vec::new();
-        let mut best: Option<(ConfigEntity, f64)> = None;
-        // training set (features of measured configs) + labels + groups
-        let mut xs: Vec<ConfigEntity> = Vec::new();
-        let mut ys: Vec<f64> = Vec::new();
-        let mut groups: Vec<usize> = Vec::new();
+    pub fn best_gflops(&self) -> f64 {
+        self.best.as_ref().map(|(_, g)| *g).unwrap_or(0.0)
+    }
 
-        let mut trials = 0usize;
-        while trials < opts.n_trials {
-            let b = opts.batch.min(opts.n_trials - trials);
-            let batch = self.next_batch(b, &seen, best.as_ref().map(|(_, g)| *g).unwrap_or(0.0));
-            if batch.is_empty() {
-                break; // space exhausted
+    /// Record one measured batch; returns the training labels
+    /// (GFLOPS, with failures mapped to 0.0).
+    pub fn absorb(&mut self, batch: &[ConfigEntity], results: &[MeasureResult]) -> Vec<f64> {
+        debug_assert_eq!(batch.len(), results.len());
+        let mut labels = Vec::with_capacity(batch.len());
+        for (e, r) in batch.iter().zip(results) {
+            let gf = if r.is_ok() { r.gflops } else { 0.0 };
+            if r.is_ok() && self.best.as_ref().map_or(true, |(_, bg)| gf > *bg) {
+                self.best = Some((e.clone(), gf));
             }
-            let results = measurer.measure(&self.task, &batch);
-            for (e, r) in batch.iter().zip(&results) {
-                seen.insert(e.clone());
-                let gf = if r.is_ok() { r.gflops } else { 0.0 };
-                if r.is_ok() && best.as_ref().map_or(true, |(_, bg)| gf > *bg) {
-                    best = Some((e.clone(), gf));
-                }
-                curve.push(best.as_ref().map(|(_, g)| *g).unwrap_or(0.0));
-                records.push(TrialRecord {
-                    entity: e.clone(),
-                    gflops: gf,
-                    seconds: r.seconds,
-                    error: r.error.clone(),
-                });
-                xs.push(e.clone());
-                ys.push(gf);
-            }
-            groups.push(batch.len());
-            trials += batch.len();
-
-            // refit f̂ on all of D
-            let x = featurize_batch(&self.task, opts.repr, &self.cache, &xs);
-            self.model.fit(&x, &ys, &groups);
-            if opts.verbose {
-                println!(
-                    "[{}] trials={trials:4} best={:.1} GFLOPS",
-                    measurer.target(),
-                    best.as_ref().map(|(_, g)| *g).unwrap_or(0.0)
-                );
-            }
+            self.curve.push(self.best.as_ref().map(|(_, g)| *g).unwrap_or(0.0));
+            self.records.push(TrialRecord {
+                entity: e.clone(),
+                gflops: gf,
+                seconds: r.seconds,
+                error: r.error.clone(),
+            });
+            labels.push(gf);
         }
-        TuneResult { best, curve, records }
+        self.trials += batch.len();
+        labels
     }
 
-    /// Pick the next measurement batch per Algorithm 1.
-    fn next_batch(
+    pub fn into_result(self) -> TuneResult {
+        TuneResult { best: self.best, curve: self.curve, records: self.records }
+    }
+}
+
+/// Batch proposal per Algorithm 1: SA pool → dedup against everything
+/// already proposed → diversity (or top-b) selection → ε-greedy random
+/// tail. Owns the persistent SA chains, the proposal RNG stream and a
+/// [`Featurizer`]; shared verbatim by the serial and pipelined loops.
+pub struct BatchProposer {
+    pub feat: Featurizer,
+    sa: ParallelSa,
+    rng: Rng,
+    proposed: HashSet<ConfigEntity>,
+}
+
+impl BatchProposer {
+    pub fn new(options: &TuneOptions) -> Self {
+        BatchProposer {
+            feat: Featurizer::new(options.repr),
+            sa: ParallelSa::new(options.sa.clone()),
+            rng: Rng::seed_from_u64(options.seed ^ 0x7u64.wrapping_mul(0x9E3779B97F4A7C15)),
+            proposed: HashSet::new(),
+        }
+    }
+
+    /// Number of configs proposed so far (all distinct).
+    pub fn proposed_count(&self) -> usize {
+        self.proposed.len()
+    }
+
+    /// Pick the next measurement batch of (at most) `b` configs, none
+    /// of which has been proposed before. Empty ⇒ space exhausted.
+    pub fn propose(
         &mut self,
+        task: &Task,
+        options: &TuneOptions,
+        model: &dyn CostModel,
         b: usize,
-        seen: &HashSet<ConfigEntity>,
         best_y: f64,
     ) -> Vec<ConfigEntity> {
-        let Tuner { task, options, model, sa, cache, rng } = self;
+        let BatchProposer { feat, sa, rng, proposed } = self;
         let mut batch: Vec<ConfigEntity> = Vec::with_capacity(b);
         if model.ready() {
             let scorer = TunerScorer {
                 task,
-                repr: options.repr,
-                model: model.as_ref(),
-                cache,
+                feat,
+                model,
                 acquisition: options.acquisition,
                 best: best_y,
             };
             let pool = sa.collect(&task.space, &scorer, options.lambda * b, rng);
             let fresh: Vec<(ConfigEntity, f64)> =
-                pool.into_iter().filter(|(e, _)| !seen.contains(e)).collect();
+                pool.into_iter().filter(|(e, _)| !proposed.contains(e)).collect();
             let n_rand = ((b as f64 * options.eps).round() as usize).min(b);
             let n_model = b - n_rand;
             let picked = if options.diversity {
@@ -256,14 +304,80 @@ impl Tuner {
             };
             batch.extend(picked);
             // ε-greedy random tail + top-up if SA pool was too small
-            let mut avoid: HashSet<ConfigEntity> = seen.clone();
+            let mut avoid: HashSet<ConfigEntity> = proposed.clone();
             avoid.extend(batch.iter().cloned());
             let tail = random_batch(&task.space, b - batch.len(), &avoid, rng);
             batch.extend(tail);
         } else {
-            batch = random_batch(&task.space, b, seen, rng);
+            batch = random_batch(&task.space, b, proposed, rng);
         }
+        proposed.extend(batch.iter().cloned());
         batch
+    }
+}
+
+/// The serial Algorithm-1 schedule over shared parts — used by
+/// [`Tuner::tune`] and as the pipelined tuner's fallback for models
+/// without snapshot support.
+pub(crate) fn serial_loop(
+    task: &Task,
+    opts: &TuneOptions,
+    proposer: &mut BatchProposer,
+    model: &mut dyn CostModel,
+    measurer: &dyn Measurer,
+) -> TuneResult {
+    let mut acct = TrialAccountant::new();
+    // training set (measured configs) + labels + batch groups
+    let mut xs: Vec<ConfigEntity> = Vec::new();
+    let mut ys: Vec<f64> = Vec::new();
+    let mut groups: Vec<usize> = Vec::new();
+
+    while acct.trials < opts.n_trials {
+        let b = opts.batch.min(opts.n_trials - acct.trials);
+        let batch = proposer.propose(task, opts, model, b, acct.best_gflops());
+        if batch.is_empty() {
+            break; // space exhausted
+        }
+        let results = measurer.measure(task, &batch);
+        let labels = acct.absorb(&batch, &results);
+        xs.extend(batch.iter().cloned());
+        ys.extend(labels);
+        groups.push(batch.len());
+
+        // refit f̂ on all of D
+        let x = proposer.feat.features(task, &xs);
+        model.fit(&x, &ys, &groups);
+        if opts.verbose {
+            println!(
+                "[{}] trials={:4} best={:.1} GFLOPS",
+                measurer.target(),
+                acct.trials,
+                acct.best_gflops()
+            );
+        }
+    }
+    acct.into_result()
+}
+
+/// The serial Algorithm-1 driver (reference loop). The pipelined
+/// production driver is [`pipeline::PipelinedTuner`].
+pub struct Tuner {
+    pub task: Task,
+    pub options: TuneOptions,
+    model: Box<dyn CostModel>,
+    proposer: BatchProposer,
+}
+
+impl Tuner {
+    pub fn new(task: Task, model: Box<dyn CostModel>, options: TuneOptions) -> Self {
+        let proposer = BatchProposer::new(&options);
+        Tuner { task, options, model, proposer }
+    }
+
+    /// Run the tuning loop against a measurement back-end.
+    pub fn tune(&mut self, measurer: &dyn Measurer) -> TuneResult {
+        let opts = self.options.clone();
+        serial_loop(&self.task, &opts, &mut self.proposer, self.model.as_mut(), measurer)
     }
 }
 
@@ -278,72 +392,52 @@ pub fn tune_gbt(
     Tuner::new(task, model, options).tune(measurer)
 }
 
+/// Pipelined counterpart of [`tune_gbt`]: same trial budget and
+/// batch construction, but exploration, measurement and model refits
+/// overlap (see [`pipeline`] for the stage diagram and the determinism
+/// contract).
+pub fn tune_gbt_pipelined(
+    task: Task,
+    measurer: &dyn Measurer,
+    options: TuneOptions,
+) -> TuneResult {
+    let params = crate::gbt::GbtParams { seed: options.seed, ..Default::default() };
+    let model = Box::new(crate::model::GbtModel::new(params));
+    pipeline::PipelinedTuner::new(task, model, options).tune(measurer)
+}
+
 /// Baseline: pure random search (Fig. 4 "Random").
 pub fn tune_random(task: Task, measurer: &dyn Measurer, options: TuneOptions) -> TuneResult {
     let mut rng = Rng::seed_from_u64(options.seed ^ 0xAA55);
     let mut seen = HashSet::new();
-    let mut best: Option<(ConfigEntity, f64)> = None;
-    let mut curve = Vec::new();
-    let mut records = Vec::new();
-    let mut trials = 0;
-    while trials < options.n_trials {
-        let b = options.batch.min(options.n_trials - trials);
+    let mut acct = TrialAccountant::new();
+    while acct.trials < options.n_trials {
+        let b = options.batch.min(options.n_trials - acct.trials);
         let batch = random_batch(&task.space, b, &seen, &mut rng);
         if batch.is_empty() {
             break;
         }
+        seen.extend(batch.iter().cloned());
         let results = measurer.measure(&task, &batch);
-        for (e, r) in batch.iter().zip(&results) {
-            seen.insert(e.clone());
-            let gf = if r.is_ok() { r.gflops } else { 0.0 };
-            if r.is_ok() && best.as_ref().map_or(true, |(_, bg)| gf > *bg) {
-                best = Some((e.clone(), gf));
-            }
-            curve.push(best.as_ref().map(|(_, g)| *g).unwrap_or(0.0));
-            records.push(TrialRecord {
-                entity: e.clone(),
-                gflops: gf,
-                seconds: r.seconds,
-                error: r.error.clone(),
-            });
-        }
-        trials += batch.len();
+        acct.absorb(&batch, &results);
     }
-    TuneResult { best, curve, records }
+    acct.into_result()
 }
 
 /// Baseline: genetic algorithm (Fig. 4 "GA").
 pub fn tune_ga(task: Task, measurer: &dyn Measurer, options: TuneOptions) -> TuneResult {
     let mut rng = Rng::seed_from_u64(options.seed ^ 0x6A6A);
     let mut ga = crate::explore::Genetic::new(options.batch);
-    let mut best: Option<(ConfigEntity, f64)> = None;
-    let mut curve = Vec::new();
-    let mut records = Vec::new();
-    let mut trials = 0;
-    while trials < options.n_trials {
+    let mut acct = TrialAccountant::new();
+    while acct.trials < options.n_trials {
         let batch = ga.propose(&task.space, &mut rng);
         let batch: Vec<ConfigEntity> =
-            batch.into_iter().take(options.n_trials - trials).collect();
+            batch.into_iter().take(options.n_trials - acct.trials).collect();
         let results = measurer.measure(&task, &batch);
-        let fitness: Vec<f64> =
-            results.iter().map(|r| if r.is_ok() { r.gflops } else { 0.0 }).collect();
-        for (e, r) in batch.iter().zip(&results) {
-            let gf = if r.is_ok() { r.gflops } else { 0.0 };
-            if r.is_ok() && best.as_ref().map_or(true, |(_, bg)| gf > *bg) {
-                best = Some((e.clone(), gf));
-            }
-            curve.push(best.as_ref().map(|(_, g)| *g).unwrap_or(0.0));
-            records.push(TrialRecord {
-                entity: e.clone(),
-                gflops: gf,
-                seconds: r.seconds,
-                error: r.error.clone(),
-            });
-        }
+        let fitness = acct.absorb(&batch, &results);
         ga.update(&batch, &fitness);
-        trials += batch.len();
     }
-    TuneResult { best, curve, records }
+    acct.into_result()
 }
 
 #[cfg(test)]
@@ -430,5 +524,27 @@ mod tests {
         for r in &res.records {
             assert!(uniq.insert(r.entity.clone()), "config measured twice");
         }
+    }
+
+    #[test]
+    fn accountant_failure_policy() {
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu);
+        let mut rng = Rng::seed_from_u64(1);
+        let batch: Vec<ConfigEntity> = (0..4).map(|_| task.space.sample(&mut rng)).collect();
+        let results = vec![
+            MeasureResult::err("board timeout"),
+            MeasureResult::ok(10.0, 1e-3),
+            MeasureResult::err("build error"),
+            MeasureResult::ok(5.0, 2e-3),
+        ];
+        let mut acct = TrialAccountant::new();
+        let labels = acct.absorb(&batch, &results);
+        assert_eq!(labels, vec![0.0, 10.0, 0.0, 5.0]);
+        assert_eq!(acct.curve, vec![0.0, 10.0, 10.0, 10.0]);
+        // best comes from a successful trial, never from a failure
+        assert_eq!(acct.best.as_ref().unwrap().0, batch[1]);
+        let res = acct.into_result();
+        assert_eq!(res.best_gflops(), 10.0);
+        assert_eq!(res.records.iter().filter(|r| r.error.is_some()).count(), 2);
     }
 }

@@ -1,0 +1,297 @@
+//! Pipelined asynchronous tuning loop: explore ∥ measure ∥ retrain.
+//!
+//! Algorithm 1 alternates explore → measure → retrain serially, so the
+//! device farm idles while simulated annealing runs and the GBT refits.
+//! This module splits the round into three stages on separate threads,
+//! connected by bounded channels, so batch `k+1` is being explored
+//! while batch `k` measures and the model retrains in the background:
+//!
+//! ```text
+//!            proposals (bounded, cap = depth)
+//!   ┌─────────────┐ ──────────────────────────▶ ┌──────────────┐
+//!   │  PROPOSAL    │                            │ MEASUREMENT   │
+//!   │ ParallelSa + │                            │ caller thread │
+//!   │ diversity +  │                            │ (owns the     │
+//!   │ ε-random     │                            │  Measurer /   │
+//!   └─────────────┘ ◀────────────────────────── │  DeviceFarm)  │
+//!          ▲     model snapshots (epoch-tagged) └──────────────┘
+//!          │                                            │
+//!          │        ┌─────────────┐   measured batches  │
+//!          └─────── │ MODEL STAGE  │ ◀──────────────────┘
+//!                   │ GBT refit on │    (entities + labels)
+//!                   │ all of D     │
+//!                   └─────────────┘
+//! ```
+//!
+//! * The **proposal stage** owns the persistent SA chains, the proposal
+//!   RNG stream and its own feature cache ([`super::BatchProposer`]);
+//!   it scores candidates against the latest *required* model snapshot.
+//! * The **measurement stage** runs on the calling thread — the
+//!   [`Measurer`] never crosses a thread boundary, so thread-affine
+//!   back-ends (PJRT) and the non-`Sync` trait contract are honored.
+//! * The **model stage** owns the cost model, accumulates every
+//!   measured [`TrialRecord`](super::TrialRecord)'s features and label,
+//!   refits after each batch (on all of `D`, like the paper) and
+//!   publishes an epoch-tagged snapshot ([`CostModel::snapshot`]).
+//!
+//! ## Determinism
+//!
+//! A fixed seed reproduces a pipelined run bit-for-bit, even though the
+//! stages race in wall-clock time: batch `k` is always proposed from
+//! the snapshot of epoch `max(0, k − (depth − 1))` — the proposal stage
+//! *waits* for exactly that epoch rather than using "latest available",
+//! so thread scheduling never leaks into candidate selection. The
+//! schedule differs from the serial loop only in model staleness
+//! (`depth − 1` batches); `depth = 1` reproduces the serial loop
+//! exactly.
+//!
+//! The same discipline bounds backpressure: proposals can never outrun
+//! measurement by more than `depth` batches (enforced structurally by
+//! the epoch wait, and by the bounded proposal channel).
+//!
+//! The serial loop ([`super::Tuner`]) is kept for reference experiments
+//! and for models whose [`CostModel::snapshot`] returns `None`.
+
+use super::{serial_loop, BatchProposer, Featurizer, TrialAccountant, TuneOptions, TuneResult};
+use crate::measure::Measurer;
+use crate::model::CostModel;
+use crate::schedule::space::ConfigEntity;
+use crate::schedule::template::Task;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+/// Live counters of one pipelined run (all monotone).
+#[derive(Debug, Default)]
+pub struct PipelineStats {
+    proposed: AtomicUsize,
+    measured: AtomicUsize,
+    fitted: AtomicUsize,
+    max_lead: AtomicUsize,
+}
+
+impl PipelineStats {
+    /// Batches emitted by the proposal stage.
+    pub fn proposed_batches(&self) -> usize {
+        self.proposed.load(Ordering::SeqCst)
+    }
+
+    /// Batches measured and accounted.
+    pub fn measured_batches(&self) -> usize {
+        self.measured.load(Ordering::SeqCst)
+    }
+
+    /// Model refit epochs completed.
+    pub fn fitted_epochs(&self) -> usize {
+        self.fitted.load(Ordering::SeqCst)
+    }
+
+    /// Maximum observed lead of the proposal stage over the measurement
+    /// stage, in batches. Structurally ≤ `pipeline_depth`.
+    pub fn max_lead(&self) -> usize {
+        self.max_lead.load(Ordering::SeqCst)
+    }
+
+    fn record_propose(&self) {
+        let p = self.proposed.fetch_add(1, Ordering::SeqCst) + 1;
+        let m = self.measured.load(Ordering::SeqCst);
+        self.max_lead.fetch_max(p.saturating_sub(m), Ordering::SeqCst);
+    }
+
+    fn reset(&self) {
+        self.proposed.store(0, Ordering::SeqCst);
+        self.measured.store(0, Ordering::SeqCst);
+        self.fitted.store(0, Ordering::SeqCst);
+        self.max_lead.store(0, Ordering::SeqCst);
+    }
+}
+
+/// One epoch-tagged model snapshot flowing model stage → proposal stage.
+struct ModelUpdate {
+    /// Number of measured batches the model has been fitted on.
+    epoch: usize,
+    /// Best GFLOPS among those batches (for UCB/EI acquisition).
+    best_y: f64,
+    model: Box<dyn CostModel + Send>,
+}
+
+/// The pipelined production driver. Construction requires a `Send`
+/// model; models without snapshot support transparently fall back to
+/// the serial schedule inside [`PipelinedTuner::tune`].
+pub struct PipelinedTuner {
+    pub task: Task,
+    pub options: TuneOptions,
+    model: Option<Box<dyn CostModel + Send>>,
+    stats: Arc<PipelineStats>,
+}
+
+impl PipelinedTuner {
+    pub fn new(task: Task, model: Box<dyn CostModel + Send>, options: TuneOptions) -> Self {
+        PipelinedTuner {
+            task,
+            options,
+            model: Some(model),
+            stats: Arc::new(PipelineStats::default()),
+        }
+    }
+
+    /// Counters of the most recent [`tune`](Self::tune) run.
+    pub fn stats(&self) -> Arc<PipelineStats> {
+        self.stats.clone()
+    }
+
+    /// Run the pipelined loop against a measurement back-end. The
+    /// back-end stays on the calling thread for its whole lifetime.
+    pub fn tune(&mut self, measurer: &dyn Measurer) -> TuneResult {
+        let opts = self.options.clone();
+        let depth = opts.pipeline_depth.max(1);
+        // Reset the counters in place so Arcs handed out before this
+        // run (via `stats()`) observe it live.
+        let stats = self.stats.clone();
+        stats.reset();
+
+        // Fixed batch plan: sizes of every measurement batch up front,
+        // so all three stages agree on the schedule without negotiation.
+        let mut sizes: Vec<usize> = Vec::new();
+        let mut planned = 0usize;
+        while planned < opts.n_trials && opts.batch > 0 {
+            let b = opts.batch.min(opts.n_trials - planned);
+            sizes.push(b);
+            planned += b;
+        }
+        let n_batches = sizes.len();
+
+        let mut model = self.model.take().expect("model present");
+        if n_batches == 0 {
+            self.model = Some(model);
+            return TuneResult { best: None, curve: Vec::new(), records: Vec::new() };
+        }
+        if model.snapshot().is_none() {
+            // Non-cloneable model: serial reference schedule in place.
+            let mut proposer = BatchProposer::new(&opts);
+            let res = serial_loop(&self.task, &opts, &mut proposer, model.as_mut(), measurer);
+            self.model = Some(model);
+            return res;
+        }
+
+        let mut proposer = BatchProposer::new(&opts);
+        let task = self.task.clone();
+
+        // proposal stage → measurement stage (bounded: backpressure)
+        let (prop_tx, prop_rx) = mpsc::sync_channel::<Vec<ConfigEntity>>(depth);
+        // measurement stage → model stage (entities + labels)
+        let (train_tx, train_rx) = mpsc::channel::<(Vec<ConfigEntity>, Vec<f64>)>();
+        // model stage → proposal stage (epoch-tagged snapshots)
+        let (snap_tx, snap_rx) = mpsc::channel::<ModelUpdate>();
+
+        let (result, model_back) = std::thread::scope(|s| {
+            // ---- proposal stage ----
+            let explore_task = task.clone();
+            let explore_opts = opts.clone();
+            let explore_sizes = sizes.clone();
+            let explore_stats = stats.clone();
+            s.spawn(move || {
+                let mut cur: Option<ModelUpdate> = None;
+                for (k, &b) in explore_sizes.iter().enumerate() {
+                    // Deterministic model choice: wait for exactly the
+                    // required epoch (snapshots arrive in epoch order).
+                    let need = k.saturating_sub(depth - 1);
+                    while cur.as_ref().map_or(true, |u| u.epoch < need) {
+                        match snap_rx.recv() {
+                            Ok(u) => cur = Some(u),
+                            Err(_) => return, // run aborted downstream
+                        }
+                    }
+                    let u = cur.as_ref().expect("snapshot for required epoch");
+                    let batch = proposer.propose(
+                        &explore_task,
+                        &explore_opts,
+                        &*u.model,
+                        b,
+                        u.best_y,
+                    );
+                    // Empty batch (space exhausted) is forwarded so the
+                    // measurement stage can terminate the run cleanly.
+                    let stop = batch.is_empty();
+                    if prop_tx.send(batch).is_err() {
+                        return;
+                    }
+                    explore_stats.record_propose();
+                    if stop {
+                        return;
+                    }
+                }
+            });
+
+            // ---- model stage ----
+            let fit_task = task.clone();
+            let fit_repr = opts.repr;
+            let fit_stats = stats.clone();
+            let fit_handle = s.spawn(move || {
+                let feat = Featurizer::new(fit_repr);
+                let mut best_y = 0.0f64;
+                // Epoch 0: the initial model — unfitted (⇒ random
+                // bootstrap batches) or a transfer-learning global model
+                // (⇒ warm-started SA from the very first batch).
+                if let Some(snap) = model.snapshot() {
+                    let _ = snap_tx.send(ModelUpdate { epoch: 0, best_y, model: snap });
+                }
+                let mut xs: Vec<ConfigEntity> = Vec::new();
+                let mut ys: Vec<f64> = Vec::new();
+                let mut groups: Vec<usize> = Vec::new();
+                let mut epoch = 0usize;
+                while let Ok((batch, labels)) = train_rx.recv() {
+                    for &gf in &labels {
+                        if gf > best_y {
+                            best_y = gf;
+                        }
+                    }
+                    groups.push(batch.len());
+                    xs.extend(batch);
+                    ys.extend(labels);
+                    // refit f̂ on all of D, then publish the new epoch
+                    let x = feat.features(&fit_task, &xs);
+                    model.fit(&x, &ys, &groups);
+                    epoch += 1;
+                    fit_stats.fitted.fetch_add(1, Ordering::SeqCst);
+                    if let Some(snap) = model.snapshot() {
+                        let _ = snap_tx.send(ModelUpdate { epoch, best_y, model: snap });
+                    }
+                }
+                model
+            });
+
+            // ---- measurement stage (this thread owns the measurer) ----
+            let mut acct = TrialAccountant::new();
+            for _ in 0..n_batches {
+                let Ok(batch) = prop_rx.recv() else { break };
+                if batch.is_empty() {
+                    break; // space exhausted upstream
+                }
+                let results = measurer.measure(&task, &batch);
+                let labels = acct.absorb(&batch, &results);
+                stats.measured.fetch_add(1, Ordering::SeqCst);
+                if opts.verbose {
+                    println!(
+                        "[{}|pipeline d={depth}] trials={:4} best={:.1} GFLOPS",
+                        measurer.target(),
+                        acct.trials,
+                        acct.best_gflops()
+                    );
+                }
+                if train_tx.send((batch, labels)).is_err() {
+                    break;
+                }
+            }
+            // Unblock any stage still waiting, then drain the model
+            // stage — every measured TrialRecord is already in `acct`,
+            // so nothing is lost regardless of shutdown order.
+            drop(prop_rx);
+            drop(train_tx);
+            let model = fit_handle.join().expect("model stage panicked");
+            (acct.into_result(), model)
+        });
+
+        self.model = Some(model_back);
+        result
+    }
+}

@@ -279,3 +279,72 @@ fn prop_vendor_config_always_lowers() {
         task.lower(&cfg).unwrap_or_else(|e| panic!("seed {seed}: vendor config: {e}"));
     });
 }
+
+/// Serial and pipelined tuning loops agree on structural invariants for
+/// random workloads: same trial count at the same budget, monotone
+/// non-decreasing best-so-far curves, every measured config a member of
+/// the task's `ConfigSpace`, and no config measured twice.
+#[test]
+fn prop_serial_and_pipelined_loops_agree_on_invariants() {
+    use autotvm::measure::SimMeasurer;
+    use autotvm::tuner::{tune_gbt, tune_gbt_pipelined, TuneOptions, TuneResult};
+
+    fn check_invariants(which: &str, seed: u64, task: &Task, res: &TuneResult) {
+        for w in res.curve.windows(2) {
+            assert!(w[1] >= w[0], "seed {seed} {which}: curve not monotone");
+        }
+        for k in [1usize, 8, 16, 32] {
+            assert!(
+                res.best_at(32) >= res.best_at(k),
+                "seed {seed} {which}: best_at not monotone"
+            );
+        }
+        assert_eq!(res.curve.len(), res.records.len(), "seed {seed} {which}");
+        let mut uniq = std::collections::HashSet::new();
+        for r in &res.records {
+            assert_eq!(
+                r.entity.choices.len(),
+                task.space.num_knobs(),
+                "seed {seed} {which}: wrong knob count"
+            );
+            for (j, knob) in task.space.knobs.iter().enumerate() {
+                assert!(
+                    (r.entity.component(j) as usize) < knob.cardinality(),
+                    "seed {seed} {which}: choice out of range"
+                );
+            }
+            assert!(task.space.index_of(&r.entity) < task.space.size(), "seed {seed} {which}");
+            assert!(uniq.insert(r.entity.clone()), "seed {seed} {which}: duplicate config");
+        }
+    }
+
+    forall(5, |rng, seed| {
+        let task = random_task(rng);
+        let dev = match task.template {
+            TemplateKind::Gpu => autotvm::sim::devices::sim_gpu(),
+            TemplateKind::Cpu => autotvm::sim::devices::sim_cpu(),
+        };
+        let o = TuneOptions {
+            n_trials: 32,
+            batch: 8,
+            sa: autotvm::explore::SaParams { n_chains: 8, n_steps: 15, ..Default::default() },
+            seed,
+            pipeline_depth: 2,
+            ..Default::default()
+        };
+        let serial =
+            tune_gbt(task.clone(), &SimMeasurer::with_seed(dev.clone(), 40 + seed), o.clone());
+        let piped =
+            tune_gbt_pipelined(task.clone(), &SimMeasurer::with_seed(dev.clone(), 40 + seed), o);
+        // spaces here are far larger than the budget, so both loops must
+        // spend it fully — and therefore agree on the trial count
+        assert_eq!(
+            serial.curve.len(),
+            piped.curve.len(),
+            "seed {seed}: trial counts diverged"
+        );
+        assert_eq!(serial.curve.len(), 32, "seed {seed}: budget not spent");
+        check_invariants("serial", seed, &task, &serial);
+        check_invariants("pipelined", seed, &task, &piped);
+    });
+}

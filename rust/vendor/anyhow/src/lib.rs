@@ -1,0 +1,217 @@
+//! Minimal, API-compatible stand-in for the `anyhow` crate (the build is
+//! fully offline, so the real crate is not vendored).
+//!
+//! Implements the surface this repository uses:
+//! * [`Error`] — a message plus an optional cause chain.
+//! * [`Result<T>`] — alias defaulting the error type.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — construction macros.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//! * `?`-conversion from any `std::error::Error + Send + Sync + 'static`.
+//!
+//! Display follows anyhow's convention: `{}` prints the outermost
+//! message, `{:#}` prints the whole chain separated by `: `.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Error with a context chain (outermost message first).
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), cause: None }
+    }
+
+    /// Wrap `self` as the cause of a new outer message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: c.to_string(), cause: Some(Box::new(self)) }
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut msgs = vec![self.msg.as_str()];
+        let mut cur = &self.cause;
+        while let Some(c) = cur {
+            msgs.push(c.msg.as_str());
+            cur = &c.cause;
+        }
+        msgs.into_iter()
+    }
+
+    /// The innermost message.
+    pub fn root_cause(&self) -> &str {
+        self.chain().last().unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            let mut first = true;
+            for m in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{m}")?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<&str> = self.chain().skip(1).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does not implement `std::error::Error`, exactly
+// like anyhow — that is what makes this blanket conversion coherent
+// next to the language's reflexive `From<Error> for Error`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msgs: Vec<String> = Vec::new();
+        let mut cur: Option<&(dyn StdError + 'static)> = Some(&e);
+        while let Some(c) = cur {
+            msgs.push(c.to_string());
+            cur = c.source();
+        }
+        let mut it = msgs.into_iter().rev();
+        let mut err = Error { msg: it.next().unwrap_or_default(), cause: None };
+        for m in it {
+            err = Error { msg: m, cause: Some(Box::new(err)) };
+        }
+        err
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error variant of a `Result` or to `None`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $arg:expr)* $(,)?) => {
+        $crate::Error::msg(format!($fmt $(, $arg)*))
+    };
+    ($e:expr) => {
+        $crate::Error::msg(format!("{}", $e))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $fmt:literal $(, $arg:expr)* $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!($fmt $(, $arg)*));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {}", flag);
+        Ok(7)
+    }
+
+    #[test]
+    fn display_and_chain() {
+        let e = Error::msg("root").context("mid").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+        assert_eq!(e.root_cause(), "root");
+    }
+
+    #[test]
+    fn macros_and_context() {
+        assert_eq!(fails(true).unwrap(), 7);
+        let e = fails(false).unwrap_err();
+        assert_eq!(format!("{e}"), "flag was false");
+        let r: Result<()> = Err(anyhow!("x = {}", 3));
+        assert_eq!(format!("{}", r.unwrap_err()), "x = 3");
+        let o: Option<u32> = None;
+        let e = o.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+    }
+
+    #[test]
+    fn std_error_conversion_keeps_chain() {
+        fn io() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        let e = io().unwrap_err().context("loading config");
+        assert!(format!("{e:#}").starts_with("loading config: "));
+    }
+
+    #[test]
+    fn collect_into_result() {
+        let ok: Result<Vec<u32>> = (0u32..3).map(Ok).collect();
+        assert_eq!(ok.unwrap(), vec![0, 1, 2]);
+        let items: Vec<Result<u32>> = vec![Ok(1), Err(anyhow!("boom")), Ok(3)];
+        let err: Result<Vec<u32>> = items.into_iter().collect();
+        assert!(err.is_err());
+    }
+}
