@@ -15,7 +15,7 @@ fn main() -> anyhow::Result<()> {
     let device = sim_gpu();
     println!("collecting source database from C1..C6 ...");
     let db = collect_source_db(&[1, 2, 3, 4, 5, 6], TemplateKind::Gpu, &device, 192, 0);
-    println!("  {} historical records", db.records.len());
+    println!("  {} historical records", db.len());
 
     let source_tasks: Vec<Task> =
         (1..=6).map(|w| workloads::conv_task(w, TemplateKind::Gpu)).collect();

@@ -1,0 +1,72 @@
+//! TuningDb serving hot path — the acceptance comparison for the
+//! service-layer refactor: `best_config` served from the incremental
+//! per-shard index vs the old linear scan, on a 50k-record DB, plus the
+//! per-task feature cache's effect on repeated `to_training` calls.
+
+use autotvm::features::Representation;
+use autotvm::schedule::template::TemplateKind;
+use autotvm::tuner::db::{Database, Record};
+use autotvm::util::bench::Bench;
+use autotvm::util::Rng;
+use autotvm::workloads;
+
+fn main() {
+    let mut b = Bench::new("tuning_db");
+
+    // 50k synthetic records over 10 tasks on one target (serving only —
+    // best_config never lowers, so choices need not be real schedules).
+    let db = Database::new();
+    let mut rng = Rng::seed_from_u64(1);
+    let tasks: Vec<String> = (0..10).map(|i| format!("task{i}@Gpu")).collect();
+    for i in 0..50_000usize {
+        db.append(Record {
+            task_key: tasks[i % tasks.len()].clone(),
+            target: "sim-gpu".into(),
+            choices: (0..8).map(|_| rng.gen_range(0..64) as u32).collect(),
+            gflops: rng.gen_f64() * 1000.0,
+            seconds: 1e-3,
+            error: if i % 97 == 0 { Some("timeout".into()) } else { None },
+        })
+        .expect("in-memory append");
+    }
+    let sanity = db.best_config("task3@Gpu", "sim-gpu").map(|(_, g)| g);
+    assert_eq!(sanity, db.best_config_scan("task3@Gpu", "sim-gpu").map(|(_, g)| g));
+
+    b.run("best_config_indexed_50k", || db.best_config("task3@Gpu", "sim-gpu"));
+    b.run("best_config_scan_50k", || db.best_config_scan("task3@Gpu", "sim-gpu"));
+    b.run("top_k8_indexed_50k", || db.top_k("task3@Gpu", "sim-gpu", 8));
+
+    // Feature cache: to_training over 192 real records — cold pays the
+    // lower+analyze+extract cost, warm is served from the shard cache.
+    let task = workloads::conv_task(6, TemplateKind::Gpu);
+    let mut rng = Rng::seed_from_u64(2);
+    let records: Vec<Record> = (0..192)
+        .map(|_| {
+            let e = task.space.sample(&mut rng);
+            Record {
+                task_key: task.key(),
+                target: "sim-gpu".into(),
+                choices: e.choices,
+                gflops: rng.gen_f64() * 500.0,
+                seconds: 1e-3,
+                error: None,
+            }
+        })
+        .collect();
+    b.run("to_training_192_cold", || {
+        let fresh = Database::new();
+        for r in &records {
+            fresh.append(r.clone()).expect("in-memory append");
+        }
+        fresh.to_training(&[&task], "sim-gpu", Representation::ContextRelation, usize::MAX)
+    });
+    let warm_db = Database::new();
+    for r in &records {
+        warm_db.append(r.clone()).expect("in-memory append");
+    }
+    // prime the cache once, then measure cache-served calls
+    warm_db.to_training(&[&task], "sim-gpu", Representation::ContextRelation, usize::MAX);
+    b.run("to_training_192_warm_cache", || {
+        warm_db.to_training(&[&task], "sim-gpu", Representation::ContextRelation, usize::MAX)
+    });
+}

@@ -18,7 +18,7 @@ use crate::schedule::template::{Task, TemplateKind};
 use crate::sim::devices;
 use crate::sim::DeviceModel;
 use crate::tuner::db::Database;
-use crate::tuner::{tune_ga, tune_random, TuneOptions, TuneResult, Tuner};
+use crate::tuner::{tune_ga, tune_random, DbSink, TuneOptions, TuneResult, Tuner};
 use crate::workloads;
 
 /// Budgets for one experiment run.
@@ -36,6 +36,11 @@ pub struct ExpOpts {
     /// Stage depth for [`run_method_pipelined`] (see
     /// [`crate::tuner::pipeline`]).
     pub pipeline_depth: usize,
+    /// Live record sink: stream every measured trial into a shared
+    /// [`Database`] (see [`TuneOptions::sink`]).
+    pub sink: Option<DbSink>,
+    /// Per-round progress printing (see [`TuneOptions::verbose`]).
+    pub verbose: bool,
 }
 
 impl Default for ExpOpts {
@@ -48,6 +53,8 @@ impl Default for ExpOpts {
             full: false,
             all_workloads: false,
             pipeline_depth: 2,
+            sink: None,
+            verbose: false,
         }
     }
 }
@@ -63,13 +70,15 @@ impl ExpOpts {
         }
     }
 
-    fn tune_options(&self) -> TuneOptions {
+    pub(crate) fn tune_options(&self) -> TuneOptions {
         TuneOptions {
             n_trials: self.trials,
             batch: self.batch,
             sa: self.sa.clone(),
             seed: self.seed,
             pipeline_depth: self.pipeline_depth,
+            sink: self.sink.clone(),
+            verbose: self.verbose,
             ..Default::default()
         }
     }
@@ -119,6 +128,46 @@ impl Method {
     }
 }
 
+/// Model construction shared by the serial and pipelined drivers for
+/// the snapshot-capable model-based methods (GBT, bootstrap ensembles;
+/// the ensemble arms also set `o.acquisition`). `None` for the
+/// black-box baselines and the thread-affine neural model — keeping one
+/// builder guarantees serial and pipelined runs of the same method use
+/// identical models.
+fn snapshot_model(
+    method: Method,
+    o: &mut TuneOptions,
+) -> Option<Box<dyn crate::model::CostModel + Send>> {
+    match method {
+        Method::GbtRank | Method::GbtReg => {
+            let objective = if method == Method::GbtRank {
+                Objective::Rank
+            } else {
+                Objective::Regression
+            };
+            let params = GbtParams { objective, seed: o.seed, ..Default::default() };
+            Some(Box::new(GbtModel::new(params)))
+        }
+        Method::EnsembleMean | Method::EnsembleUcb | Method::EnsembleEi => {
+            // the paper's Fig. 7 setup: 5 bootstrap models, regression
+            // objective (as in Bayesian-optimization practice)
+            let params = GbtParams {
+                objective: Objective::Regression,
+                n_trees: 30,
+                seed: o.seed,
+                ..Default::default()
+            };
+            o.acquisition = match method {
+                Method::EnsembleUcb => Acquisition::Ucb(1.0),
+                Method::EnsembleEi => Acquisition::Ei,
+                _ => Acquisition::Mean,
+            };
+            Some(Box::new(EnsembleModel::new(params, 5)))
+        }
+        _ => None,
+    }
+}
+
 /// Run one method on one task. Returns the best-so-far curve indexed by
 /// *trials* (×2 methods consume double measurements per trial).
 pub fn run_method(
@@ -143,16 +192,6 @@ pub fn run_method(
                 r.curve.chunks(2).map(|c| c[c.len() - 1]).collect();
             TuneResult { curve, ..r }
         }
-        Method::GbtRank | Method::GbtReg => {
-            let objective = if method == Method::GbtRank {
-                Objective::Rank
-            } else {
-                Objective::Regression
-            };
-            let params = GbtParams { objective, seed: o.seed, ..Default::default() };
-            let model = Box::new(GbtModel::new(params));
-            Tuner::new(task.clone(), model, o).tune(measurer)
-        }
         Method::NeuralRank | Method::NeuralReg => {
             use crate::model::neural::{NeuralModel, NeuralObjective};
             let rt = crate::runtime::PjrtRuntime::cpu().expect("PJRT client");
@@ -167,21 +206,12 @@ pub fn run_method(
             o.repr = Representation::FlatAst; // the context-matrix layout
             Tuner::new(task.clone(), model, o).tune(measurer)
         }
-        Method::EnsembleMean | Method::EnsembleUcb | Method::EnsembleEi => {
-            // the paper's Fig. 7 setup: 5 bootstrap models, regression
-            // objective (as in Bayesian-optimization practice)
-            let params = GbtParams {
-                objective: Objective::Regression,
-                n_trees: 30,
-                seed: o.seed,
-                ..Default::default()
-            };
-            o.acquisition = match method {
-                Method::EnsembleUcb => Acquisition::Ucb(1.0),
-                Method::EnsembleEi => Acquisition::Ei,
-                _ => Acquisition::Mean,
-            };
-            let model = Box::new(EnsembleModel::new(params, 5));
+        Method::GbtRank
+        | Method::GbtReg
+        | Method::EnsembleMean
+        | Method::EnsembleUcb
+        | Method::EnsembleEi => {
+            let model = snapshot_model(method, &mut o).expect("model-based method");
             Tuner::new(task.clone(), model, o).tune(measurer)
         }
     }
@@ -199,35 +229,9 @@ pub fn run_method_pipelined(
     method: Method,
     opts: &ExpOpts,
 ) -> Option<TuneResult> {
-    use crate::model::CostModel;
     use crate::tuner::pipeline::PipelinedTuner;
     let mut o = opts.tune_options();
-    let model: Box<dyn CostModel + Send> = match method {
-        Method::GbtRank | Method::GbtReg => {
-            let objective = if method == Method::GbtRank {
-                Objective::Rank
-            } else {
-                Objective::Regression
-            };
-            let params = GbtParams { objective, seed: o.seed, ..Default::default() };
-            Box::new(GbtModel::new(params))
-        }
-        Method::EnsembleMean | Method::EnsembleUcb | Method::EnsembleEi => {
-            let params = GbtParams {
-                objective: Objective::Regression,
-                n_trees: 30,
-                seed: o.seed,
-                ..Default::default()
-            };
-            o.acquisition = match method {
-                Method::EnsembleUcb => Acquisition::Ucb(1.0),
-                Method::EnsembleEi => Acquisition::Ei,
-                _ => Acquisition::Mean,
-            };
-            Box::new(EnsembleModel::new(params, 5))
-        }
-        _ => return None,
-    };
+    let model = snapshot_model(method, &mut o)?;
     Some(PipelinedTuner::new(task.clone(), model, o).tune(measurer))
 }
 
@@ -340,7 +344,7 @@ pub fn collect_source_db(
     trials_per_task: usize,
     seed: u64,
 ) -> Database {
-    let mut db = Database::new();
+    let db = Database::new();
     for &wl in source_workloads {
         let task = workloads::conv_task(wl, template);
         let measurer = SimMeasurer::with_seed(device.clone(), 9000 + wl as u64);
@@ -350,8 +354,8 @@ pub fn collect_source_db(
             ..Default::default()
         };
         o.sa = SaParams { n_chains: 64, n_steps: 100, ..Default::default() };
-        let res = crate::tuner::tune_gbt(task.clone(), &measurer, o);
-        db.add_run(&task, device.name, &res.records);
+        o.sink = Some(DbSink::new(&db, &task, device.name));
+        crate::tuner::tune_gbt(task, &measurer, o);
     }
     db
 }
@@ -368,6 +372,99 @@ pub fn transfer_model_from(
     let (x, y, groups) = db.to_training(source_tasks, target, repr, limit_per_task);
     let params = GbtParams { objective: Objective::Rank, seed, ..Default::default() };
     TransferModel::from_source(&x, &y, &groups, params)
+}
+
+/// The task inventory the service knows how to re-lower when replaying
+/// DB records: every Table-1 conv under both templates, plus the
+/// matmul transfer target of Fig. 9.
+fn known_tasks() -> Vec<Task> {
+    let mut tasks = Vec::new();
+    for template in [TemplateKind::Cpu, TemplateKind::Gpu] {
+        for wl in 1..=12 {
+            tasks.push(workloads::conv_task(wl, template));
+        }
+        tasks.push(workloads::matmul_1024_task(template));
+    }
+    tasks
+}
+
+/// Automatic cross-workload warm start: query `db` for records of
+/// *other* known tasks on the same `target`, build `D'` under the
+/// invariant [`Representation::ContextRelation`] and train the Eq.-4
+/// global model. Returns `None` when the DB holds nothing usable.
+pub fn warm_start_model(
+    db: &Database,
+    target_task: &Task,
+    target: &str,
+    objective: Objective,
+    seed: u64,
+) -> Option<TransferModel> {
+    let have: std::collections::HashSet<String> =
+        db.task_keys(target).into_iter().collect();
+    if have.is_empty() {
+        return None;
+    }
+    let target_key = target_task.key();
+    let inventory = known_tasks();
+    let sources: Vec<&Task> = inventory
+        .iter()
+        .filter(|t| {
+            let k = t.key();
+            k != target_key && have.contains(&k)
+        })
+        .collect();
+    if sources.is_empty() {
+        return None;
+    }
+    let params = GbtParams { objective, seed, ..Default::default() };
+    let model = TransferModel::from_db(
+        db,
+        &sources,
+        &target_key,
+        target,
+        Representation::ContextRelation,
+        usize::MAX,
+        params,
+    )?;
+    println!(
+        "# warm-start: global model from {} source task(s) on {target} (ContextRelation D')",
+        sources.len()
+    );
+    Some(model)
+}
+
+/// Warm-started counterpart of [`run_method`] / [`run_method_pipelined`]
+/// — the default service path when the shared DB is non-empty. The
+/// global model is the tuner's initial model (and the pipelined loop's
+/// epoch-0 snapshot), so even the first SA round is informed. Returns
+/// `None` for methods without a transfer path (black-box baselines,
+/// ensembles, the thread-affine neural model) or when the DB has no
+/// usable source rows; callers fall back to the cold path.
+pub fn run_method_warm(
+    task: &Task,
+    measurer: &dyn Measurer,
+    method: Method,
+    opts: &ExpOpts,
+    db: &Database,
+    target: &str,
+    pipelined: bool,
+) -> Option<TuneResult> {
+    let objective = match method {
+        Method::GbtRank => Objective::Rank,
+        Method::GbtReg => Objective::Regression,
+        _ => return None,
+    };
+    let model = warm_start_model(db, task, target, objective, opts.seed)?;
+    let mut o = opts.tune_options();
+    // features must match the representation the global model was
+    // trained on
+    o.repr = Representation::ContextRelation;
+    Some(if pipelined {
+        crate::tuner::pipeline::PipelinedTuner::new(task.clone(), Box::new(model), o)
+            .tune(measurer)
+    } else {
+        Tuner::new(task.clone(), Box::new(model), o).tune(measurer)
+    })
 }
 
 /// Fig. 8: transfer learning speedup, C1–C6 → C7, C8, C9.

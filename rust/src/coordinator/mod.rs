@@ -3,9 +3,15 @@
 //!
 //! Commands:
 //! * `table1` — print the Table-1 workload inventory.
-//! * `tune` — tune one workload on a device with a chosen method.
-//! * `tune-all` — tune C1–C12, persisting the database (the `D'`
-//!   collection step for transfer experiments).
+//! * `tune` — tune one workload on a device with a chosen method. With
+//!   `--db FILE` the run streams every trial into a WAL-backed
+//!   [`TuningDb`](crate::tuner::db::TuningDb) live, and — by default,
+//!   when that DB already holds records of *other* tasks — warm-starts
+//!   a transfer model from them (`--no-warm-start` disables,
+//!   `--warm-start` forces the attempt).
+//! * `tune-all` — tune C1–C12 into the shared DB; each task after the
+//!   first warm-starts from its predecessors' records (the §4
+//!   cross-workload service flow).
 //! * `e2e` — end-to-end network latency vs the vendor baseline.
 //! * `fig` — regenerate a paper figure (4–11).
 //! * `pjrt-demo` — tune the Pallas matmul tile family where `f(x)` is
@@ -17,7 +23,7 @@ use crate::measure::{Measurer, SimMeasurer};
 use crate::schedule::template::TemplateKind;
 use crate::sim::devices;
 use crate::tuner::db::Database;
-use crate::tuner::TuneOptions;
+use crate::tuner::{DbSink, TuneOptions};
 use crate::workloads;
 use anyhow::{bail, Context, Result};
 use experiments::{ExpOpts, Method};
@@ -131,8 +137,15 @@ pub fn run(argv: &[String]) -> Result<()> {
             let dev = device_of(&args)?;
             let wl = workload_of(&args)?;
             let method = method_of(&args)?;
-            let opts = exp_opts(&args);
+            let mut opts = exp_opts(&args);
             let task = workloads::conv_task(wl, template_of(&dev));
+            // --db FILE opens (or creates) the WAL-backed service DB;
+            // every measured trial is streamed in live by the trial
+            // accountant, so a crash loses at most one record.
+            let db = args.get("db").map(Database::open).transpose()?;
+            if let Some(db) = &db {
+                opts.sink = Some(DbSink::new(db, &task, dev.name));
+            }
             // --replicas N measures on a simulated device farm;
             // --pipeline runs the asynchronous explore ∥ measure ∥
             // retrain loop (GBT methods; others fall back to serial).
@@ -154,55 +167,96 @@ pub fn run(argv: &[String]) -> Result<()> {
                 opts.trials,
                 task.space.size() as f64
             );
-            let res = if args.has("pipeline") {
-                experiments::run_method_pipelined(&task, measurer.as_ref(), method, &opts)
-                    .unwrap_or_else(|| {
-                        experiments::run_method(&task, measurer.as_ref(), method, &opts)
-                    })
-            } else {
-                experiments::run_method(&task, measurer.as_ref(), method, &opts)
+            // Warm start is the default service path whenever the DB
+            // already holds records (necessarily of other tasks — this
+            // run's own records only start streaming in below).
+            let warm = match &db {
+                Some(d) => {
+                    !args.has("no-warm-start") && (args.has("warm-start") || !d.is_empty())
+                }
+                None => false,
+            };
+            let pipelined = args.has("pipeline");
+            let mut res = None;
+            if warm {
+                res = experiments::run_method_warm(
+                    &task,
+                    measurer.as_ref(),
+                    method,
+                    &opts,
+                    db.as_ref().expect("warm implies db"),
+                    dev.name,
+                    pipelined,
+                );
+                if res.is_none() {
+                    println!(
+                        "warm-start unavailable (no usable source records or method \
+                         without a transfer path); cold start"
+                    );
+                }
+            }
+            let res = match res {
+                Some(r) => r,
+                None if pipelined => {
+                    experiments::run_method_pipelined(&task, measurer.as_ref(), method, &opts)
+                        .unwrap_or_else(|| {
+                            experiments::run_method(&task, measurer.as_ref(), method, &opts)
+                        })
+                }
+                None => experiments::run_method(&task, measurer.as_ref(), method, &opts),
             };
             if let Some((e, g)) = &res.best {
                 println!("best: {g:.1} GFLOPS");
                 println!("config: {}", task.space.describe(e));
             }
-            if let Some(path) = args.get("db") {
-                let mut db = if std::path::Path::new(path).exists() {
-                    Database::load(path)?
-                } else {
-                    Database::new()
-                };
-                db.add_run(&task, dev.name, &res.records);
-                db.save(path)?;
-                println!("appended {} records to {path}", res.records.len());
+            if let (Some(path), Some(db)) = (args.get("db"), &db) {
+                println!(
+                    "streamed {} records into {path} ({} total)",
+                    res.records.len(),
+                    db.len()
+                );
             }
         }
         "tune-all" => {
             let dev = device_of(&args)?;
-            let opts = exp_opts(&args);
-            let mut db = Database::new();
+            let mut opts = exp_opts(&args);
+            opts.verbose = true;
+            let base_seed = opts.seed;
+            let path = args.get("db").unwrap_or("tuning_db.jsonl").to_string();
+            let db = Database::open(&path)?;
+            let pipelined = args.has("pipeline");
+            // Cross-workload service flow: C2 warm-starts from C1's
+            // streamed records, C3 from C1–C2, … (§4 reuse of D).
+            let warm_enabled = !args.has("no-warm-start");
             for wl in 1..=12 {
                 let task = workloads::conv_task(wl, template_of(&dev));
-                let measurer = SimMeasurer::with_seed(dev.clone(), opts.seed + wl as u64);
-                let mut o = TuneOptions {
-                    n_trials: opts.trials,
-                    sa: opts.sa.clone(),
-                    seed: opts.seed + wl as u64,
-                    pipeline_depth: opts.pipeline_depth,
-                    ..Default::default()
-                };
-                o.verbose = true;
-                let res = if args.has("pipeline") {
-                    crate::tuner::tune_gbt_pipelined(task.clone(), &measurer, o)
+                let measurer = SimMeasurer::with_seed(dev.clone(), base_seed + wl as u64);
+                opts.seed = base_seed + wl as u64;
+                opts.sink = Some(DbSink::new(&db, &task, dev.name));
+                let warm_res = if warm_enabled && !db.is_empty() {
+                    experiments::run_method_warm(
+                        &task,
+                        &measurer,
+                        Method::GbtRank,
+                        &opts,
+                        &db,
+                        dev.name,
+                        pipelined,
+                    )
                 } else {
-                    crate::tuner::tune_gbt(task.clone(), &measurer, o)
+                    None
                 };
+                let res = warm_res.unwrap_or_else(|| {
+                    let o = opts.tune_options();
+                    if pipelined {
+                        crate::tuner::tune_gbt_pipelined(task.clone(), &measurer, o)
+                    } else {
+                        crate::tuner::tune_gbt(task.clone(), &measurer, o)
+                    }
+                });
                 println!("C{wl}: best {:.1} GFLOPS", res.best_gflops());
-                db.add_run(&task, dev.name, &res.records);
             }
-            let path = args.get("db").unwrap_or("tuning_db.jsonl");
-            db.save(path)?;
-            println!("saved database: {path} ({} records)", db.records.len());
+            println!("tuning DB: {path} ({} records)", db.len());
         }
         "e2e" => {
             let dev = device_of(&args)?;
@@ -306,14 +360,19 @@ USAGE:
   autotvm table1
   autotvm tune      --workload C6 --device sim-gpu --method gbt_rank \\
                     [--trials N] [--db file.jsonl] [--full] \\
-                    [--pipeline] [--depth D] [--replicas R]
-  autotvm tune-all  --device sim-gpu [--trials N] [--db file.jsonl] [--pipeline]
+                    [--pipeline] [--depth D] [--replicas R] \\
+                    [--warm-start] [--no-warm-start]
+  autotvm tune-all  --device sim-gpu [--trials N] [--db file.jsonl] \\
+                    [--pipeline] [--no-warm-start]
   autotvm e2e       --network resnet18 --device sim-gpu [--trials N]
   autotvm fig <4|5|6|7|8|9|10|11> [--full] [--all-workloads] [--neural] [--device D]
   autotvm pjrt-demo [--trials N]
 
 devices: sim-gpu (TITAN-X-class), sim-cpu (A53-class), sim-mali, sim-tpu
-methods: random, ga, gbt_rank, gbt_reg, neural, neural_reg"
+methods: random, ga, gbt_rank, gbt_reg, neural, neural_reg
+
+--db opens a WAL-backed tuning DB: trials stream in live, and new tasks
+warm-start a transfer model from other tasks' records by default."
     );
 }
 

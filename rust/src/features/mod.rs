@@ -47,8 +47,9 @@ pub const FULL_DIM: usize = FLAT_DIM + RELATION_DIM;
 /// cross-domain comparison of Fig. 9).
 pub const CONFIG_DIM: usize = 24;
 
-/// Which representation to extract (the Fig. 9 axis).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Which representation to extract (the Fig. 9 axis). `Hash` lets the
+/// tuning DB key its per-task feature caches by representation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Representation {
     Config,
     FlatAst,
@@ -243,6 +244,25 @@ pub fn extract(
     }
 }
 
+/// Shared featurization hook: lower + analyze + extract rows for a
+/// batch of entities in parallel. One implementation feeds both the
+/// tuner's [`Featurizer`](crate::tuner::Featurizer) memo cache and the
+/// tuning DB's per-task feature cache. Entities that fail to lower
+/// yield `None` — that happens only for foreign/corrupt configs
+/// replayed from a persisted DB; configs sampled from the task's own
+/// space always lower.
+pub fn featurize_batch(
+    repr: Representation,
+    task: &crate::schedule::template::Task,
+    entities: &[crate::schedule::space::ConfigEntity],
+) -> Vec<Option<Vec<f64>>> {
+    crate::util::parallel_map(entities, crate::util::default_threads(), |e| {
+        let program = task.lower(e).ok()?;
+        let analysis = crate::ast::analysis::analyze(&program);
+        Some(extract(repr, task, e, &analysis))
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -354,6 +374,20 @@ mod tests {
         // rows beyond the real loop count are zero
         for l in n..MAX_LOOPS {
             assert!(m[l * CONTEXT_DIM..(l + 1) * CONTEXT_DIM].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn featurize_batch_matches_single_extract() {
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+        let mut rng = Rng::seed_from_u64(11);
+        let ents: Vec<_> = (0..6).map(|_| task.space.sample(&mut rng)).collect();
+        let rows = featurize_batch(Representation::ContextRelation, &task, &ents);
+        assert_eq!(rows.len(), ents.len());
+        for (e, row) in ents.iter().zip(&rows) {
+            let row = row.as_ref().expect("space configs lower");
+            let a = analyze(&task.lower(e).unwrap());
+            assert_eq!(row, &extract(Representation::ContextRelation, &task, e, &a));
         }
     }
 

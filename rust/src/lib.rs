@@ -23,6 +23,11 @@
 //!   ([`tuner::Tuner`]) and the pipelined production loop
 //!   ([`tuner::pipeline`]) that overlaps exploration, farm measurement
 //!   and model refits on three channel-connected stages,
+//! * the tuning-record service layer ([`tuner::db`]): a sharded,
+//!   thread-safe [`TuningDb`](tuner::db::TuningDb) with O(1) best-config
+//!   serving, a JSONL write-ahead log, per-task feature caches, live
+//!   record streaming from every loop and automatic cross-workload
+//!   transfer warm starts,
 //! * a mini graph compiler for end-to-end workloads ([`graph`],
 //!   [`workloads`], [`baselines`]).
 //!

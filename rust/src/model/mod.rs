@@ -206,6 +206,40 @@ impl TransferModel {
         TransferModel { global, calib: (1.0, 0.0), local: None, params }
     }
 
+    /// Build the Eq.-4 global model straight from the tuning-DB service
+    /// layer: `D'` is every valid record of `source_tasks` on `target`
+    /// (minus `exclude_task_key`, the task about to be tuned),
+    /// featurized under `repr` — use an invariant representation
+    /// ([`Representation::ContextRelation`]) so the model transfers
+    /// across operator types and templates. Returns `None` when the DB
+    /// holds no usable source rows, so callers can fall back to a cold
+    /// start.
+    ///
+    /// [`Representation::ContextRelation`]: crate::features::Representation::ContextRelation
+    pub fn from_db(
+        db: &crate::tuner::db::TuningDb,
+        source_tasks: &[&crate::schedule::template::Task],
+        exclude_task_key: &str,
+        target: &str,
+        repr: crate::features::Representation,
+        limit_per_task: usize,
+        params: GbtParams,
+    ) -> Option<TransferModel> {
+        let sources: Vec<&crate::schedule::template::Task> = source_tasks
+            .iter()
+            .copied()
+            .filter(|t| t.key() != exclude_task_key)
+            .collect();
+        if sources.is_empty() {
+            return None;
+        }
+        let (x, y, groups) = db.to_training(&sources, target, repr, limit_per_task);
+        if x.rows == 0 {
+            return None;
+        }
+        Some(TransferModel::from_source(&x, &y, &groups, params))
+    }
+
     fn global_scores(&self, x: &Matrix) -> Vec<f64> {
         self.global.predict_batch(x)
     }

@@ -1,7 +1,38 @@
-//! Tuning database `D = {(e_i, s_i, c_i)}` (§3): persistent JSONL log of
-//! every measured trial, queryable per task — the source of `D'` for
-//! transfer learning (§4) and of best-config lookups for the graph
-//! compiler.
+//! TuningDb — the indexed, concurrent tuning-record service layer.
+//!
+//! The paper's headline transfer speedup (§4, Eq. 4) comes from reusing
+//! the tuning log `D = {(e_i, s_i, c_i)}` across workloads, and the
+//! graph compiler serves `argmax D` per task on its hot path. This
+//! module is the record store behind both:
+//!
+//! * **Sharded index** — records live in per-`(task_key, target)`
+//!   shards behind `N_SHARDS` bucket locks, so concurrent writers
+//!   (the pipelined tuner's measurement stage) and readers (the graph
+//!   compiler, warm-start queries) contend only when they touch the
+//!   same bucket.
+//! * **Incremental best / top-k** — every shard maintains its best
+//!   valid record and a descending top-[`TOP_K`] list as records
+//!   arrive, so [`TuningDb::best_config`] and [`TuningDb::top_k`] are
+//!   O(1)/O(k) lookups, never scans ([`TuningDb::best_config_scan`] is
+//!   the linear reference kept for tests and the `bench_db` baseline).
+//!   Ordering uses `f64::total_cmp`; records with NaN/non-finite
+//!   GFLOPS or an error are stored but never indexed as best.
+//! * **Append-only WAL** — a file-backed DB ([`TuningDb::open`])
+//!   appends one JSONL line per record as it is measured, so a crash
+//!   loses at most the line being written; `open` tolerates (and
+//!   drops) a torn trailing line, while any other malformed record is
+//!   a hard parse error ([`Record::from_json`] is strict).
+//! * **Per-task feature cache** — [`TuningDb::to_training`] memoizes
+//!   lowered+extracted feature rows per `(shard, representation)`, so
+//!   building `D'` for a transfer model re-featurizes only records it
+//!   has never seen, instead of re-lowering the whole log every call.
+//! * **Thread-safe handle** — [`TuningDb`] is a cheap `Arc` clone
+//!   (`Send + Sync`); the tuner streams records in live through
+//!   [`crate::tuner::DbSink`] while other threads query.
+//!
+//! Training sets are deterministic: tasks are visited in sorted-key
+//! order, records in insertion order, and errored / non-finite /
+//! unlowerable records are excluded from `D'`.
 
 use crate::features::Representation;
 use crate::gbt::Matrix;
@@ -9,8 +40,20 @@ use crate::schedule::space::ConfigEntity;
 use crate::schedule::template::Task;
 use crate::tuner::TrialRecord;
 use crate::util::json::Json;
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::hash::{Hash, Hasher};
+use std::io::Write;
 use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Cap on the incrementally maintained per-task top-k index.
+pub const TOP_K: usize = 16;
+
+/// Lock buckets for the shard map.
+const N_SHARDS: usize = 16;
 
 /// One persisted measurement.
 #[derive(Clone, Debug, PartialEq)]
@@ -24,7 +67,18 @@ pub struct Record {
 }
 
 impl Record {
+    /// Valid for serving / training: finished without error and with a
+    /// finite throughput (a NaN gflops must never win `best_config`).
+    fn is_valid(&self) -> bool {
+        self.error.is_none() && self.gflops.is_finite()
+    }
+
     fn to_json(&self) -> Json {
+        // Non-finite floats have no JSON representation (`{x}` would
+        // emit `NaN`, which the parser rejects) — serialize them as
+        // null so a NaN record round-trips as an invalid-but-parseable
+        // record instead of poisoning the WAL.
+        let num_or_null = |x: f64| if x.is_finite() { Json::from(x) } else { Json::Null };
         let mut fields = vec![
             ("task", Json::from(self.task_key.clone())),
             ("target", Json::from(self.target.clone())),
@@ -32,8 +86,8 @@ impl Record {
                 "choices",
                 Json::Arr(self.choices.iter().map(|&c| Json::from(c as u64)).collect()),
             ),
-            ("gflops", Json::from(self.gflops)),
-            ("seconds", Json::from(self.seconds)),
+            ("gflops", num_or_null(self.gflops)),
+            ("seconds", num_or_null(self.seconds)),
         ];
         if let Some(e) = &self.error {
             fields.push(("error", Json::from(e.clone())));
@@ -41,60 +95,331 @@ impl Record {
         Json::obj(fields)
     }
 
+    /// Strict parse: missing fields and malformed `choices` entries are
+    /// errors, not silently-coerced zeros (a corrupt config replayed as
+    /// `choices = [0, …]` would poison `D'` and the serving path).
     fn from_json(j: &Json) -> anyhow::Result<Record> {
         let get_str = |k: &str| -> anyhow::Result<String> {
-            Ok(j.get(k)
+            j.get(k)
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow::anyhow!("record missing {k}"))?
-                .to_string())
+                .map(String::from)
+                .ok_or_else(|| anyhow::anyhow!("record missing {k}"))
         };
-        let choices = j
+        let arr = j
             .get("choices")
             .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow::anyhow!("record missing choices"))?
-            .iter()
-            .map(|v| v.as_u64().unwrap_or(0) as u32)
-            .collect();
+            .ok_or_else(|| anyhow::anyhow!("record missing choices"))?;
+        let mut choices = Vec::with_capacity(arr.len());
+        for v in arr {
+            let x = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("non-numeric choices entry {}", v.dump()))?;
+            anyhow::ensure!(
+                x.fract() == 0.0 && x >= 0.0 && x <= u32::MAX as f64,
+                "choices entry {x} is not a u32"
+            );
+            choices.push(x as u32);
+        }
+        let gflops = match j.get("gflops") {
+            Some(Json::Null) => f64::NAN, // serialized non-finite value
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("record gflops is not a number"))?,
+            None => anyhow::bail!("record missing gflops"),
+        };
+        let seconds = match j.get("seconds") {
+            Some(Json::Null) => f64::NAN, // serialized non-finite value
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("record seconds is not a number"))?,
+            None => 0.0,
+        };
         Ok(Record {
             task_key: get_str("task")?,
             target: get_str("target")?,
             choices,
-            gflops: j.get("gflops").and_then(Json::as_f64).unwrap_or(0.0),
-            seconds: j.get("seconds").and_then(Json::as_f64).unwrap_or(0.0),
+            gflops,
+            seconds,
             error: j.get("error").and_then(Json::as_str).map(String::from),
         })
     }
 }
 
-/// The tuning log.
-#[derive(Clone, Debug, Default)]
-pub struct Database {
-    pub records: Vec<Record>,
+/// Per-representation memo of feature rows: record index → extracted
+/// row (`None` = the stored config does not lower under this task, e.g.
+/// a foreign record; such rows are skipped when building `D'`).
+type FeatureCache = HashMap<Representation, HashMap<usize, Option<Vec<f64>>>>;
+
+/// All records of one `(task_key, target)` pair plus its incremental
+/// serving indexes and feature cache.
+#[derive(Default)]
+struct TaskShard {
+    records: Vec<Record>,
+    /// `(record index, gflops)` of the best valid record — O(1) serving.
+    best: Option<(usize, f64)>,
+    /// Valid records by descending gflops (ties: earliest first), at
+    /// most [`TOP_K`] entries.
+    top_k: Vec<(usize, f64)>,
+    feat_cache: FeatureCache,
 }
 
-impl Database {
+impl TaskShard {
+    fn insert(&mut self, rec: Record) {
+        let idx = self.records.len();
+        let valid = rec.is_valid();
+        let g = rec.gflops;
+        self.records.push(rec);
+        if !valid {
+            return;
+        }
+        // NaN-safe ordering: f64::total_cmp (non-finite never reaches
+        // here, so total order == numeric order).
+        if self
+            .best
+            .map_or(true, |(_, bg)| g.total_cmp(&bg) == std::cmp::Ordering::Greater)
+        {
+            self.best = Some((idx, g));
+        }
+        let pos = self
+            .top_k
+            .partition_point(|&(_, tg)| tg.total_cmp(&g) != std::cmp::Ordering::Less);
+        if pos < TOP_K {
+            self.top_k.insert(pos, (idx, g));
+            self.top_k.truncate(TOP_K);
+        }
+    }
+}
+
+type ShardKey = (String, String); // (task_key, target)
+
+struct DbInner {
+    shards: Vec<Mutex<HashMap<ShardKey, TaskShard>>>,
+    /// Append-only JSONL write-ahead log (file-backed DBs only). Held
+    /// across the index update so file order matches insertion order.
+    wal: Mutex<Option<File>>,
+    len: AtomicUsize,
+}
+
+/// The unparseable fragment a crashed append leaves after the last
+/// newline, if any. A complete (newline-terminated) malformed line is
+/// NOT a torn tail — that is real corruption and stays a hard error.
+fn torn_tail(text: &str) -> Option<&str> {
+    let tail = match text.rfind('\n') {
+        Some(i) => &text[i + 1..],
+        None => text,
+    };
+    if tail.trim().is_empty() {
+        return None;
+    }
+    match Json::parse(tail).and_then(|j| Record::from_json(&j)) {
+        Ok(_) => None,
+        Err(_) => Some(tail),
+    }
+}
+
+fn shard_idx(task_key: &str, target: &str) -> usize {
+    let mut h = DefaultHasher::new();
+    task_key.hash(&mut h);
+    target.hash(&mut h);
+    (h.finish() as usize) % N_SHARDS
+}
+
+/// The tuning-DB service handle: a cheap `Arc` clone, `Send + Sync`.
+/// See the module docs for the index / WAL / cache layout.
+#[derive(Clone)]
+pub struct TuningDb {
+    inner: Arc<DbInner>,
+}
+
+/// Historical name of the record store (pre-service-layer); kept as an
+/// alias so experiment drivers and tests read naturally.
+pub type Database = TuningDb;
+
+impl Default for TuningDb {
+    fn default() -> Self {
+        TuningDb::new()
+    }
+}
+
+impl std::fmt::Debug for TuningDb {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TuningDb").field("records", &self.len()).finish()
+    }
+}
+
+impl TuningDb {
+    /// Fresh in-memory DB (no WAL).
     pub fn new() -> Self {
-        Database::default()
+        TuningDb {
+            inner: Arc::new(DbInner {
+                shards: (0..N_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+                wal: Mutex::new(None),
+                len: AtomicUsize::new(0),
+            }),
+        }
     }
 
-    /// Append the trials of one tuning run.
-    pub fn add_run(&mut self, task: &Task, target: &str, records: &[TrialRecord]) {
+    /// Open (or create) a WAL-backed DB at `path`: existing records are
+    /// loaded and indexed, and every subsequent [`append`](Self::append)
+    /// is written through to the file immediately. A torn trailing line
+    /// (crash mid-append, i.e. an unparseable fragment after the last
+    /// newline) is dropped AND truncated from the file — so the next
+    /// append starts on a clean line instead of concatenating onto the
+    /// fragment. Any other malformed record is a hard error.
+    pub fn open(path: impl AsRef<Path>) -> anyhow::Result<TuningDb> {
+        let path = path.as_ref();
+        let db = TuningDb::new();
+        if path.exists() {
+            let text = std::fs::read_to_string(path)?;
+            let valid = match torn_tail(&text) {
+                Some(tail) => {
+                    eprintln!(
+                        "tuning-db: truncating torn trailing WAL line ({} bytes)",
+                        tail.len()
+                    );
+                    // In-place truncation to the last newline: the valid
+                    // prefix is never rewritten, so a crash during
+                    // recovery cannot lose durably-appended records.
+                    let keep = text.len() - tail.len();
+                    OpenOptions::new().write(true).open(path)?.set_len(keep as u64)?;
+                    &text[..keep]
+                }
+                None => {
+                    if !text.is_empty() && !text.ends_with('\n') {
+                        // Valid but unterminated last line: append the
+                        // missing newline so the next record doesn't
+                        // merge with it (append-only, crash-safe).
+                        OpenOptions::new().append(true).open(path)?.write_all(b"\n")?;
+                    }
+                    text.as_str()
+                }
+            };
+            db.load_lines(valid)?;
+        }
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        *db.inner.wal.lock().unwrap() = Some(file);
+        Ok(db)
+    }
+
+    /// Load a JSONL log into an in-memory DB (strict: every line must
+    /// parse). Use [`open`](Self::open) for the live service path.
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<TuningDb> {
+        let db = TuningDb::new();
+        db.load_lines(&std::fs::read_to_string(path)?)?;
+        Ok(db)
+    }
+
+    fn load_lines(&self, text: &str) -> anyhow::Result<()> {
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            match Json::parse(line).and_then(|j| Record::from_json(&j)) {
+                Ok(r) => self.insert(r),
+                Err(e) => return Err(e.context(format!("tuning-db record on line {}", i + 1))),
+            }
+        }
+        Ok(())
+    }
+
+    /// Index one record (no WAL write).
+    fn insert(&self, rec: Record) {
+        let b = shard_idx(&rec.task_key, &rec.target);
+        let mut bucket = self.inner.shards[b].lock().unwrap();
+        bucket
+            .entry((rec.task_key.clone(), rec.target.clone()))
+            .or_default()
+            .insert(rec);
+        self.inner.len.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Append one record: crash-safe incremental WAL write (if
+    /// file-backed) plus index update. Safe to call from any thread.
+    ///
+    /// The record is indexed in memory even when the WAL write fails
+    /// (the error is still returned): the service keeps serving while
+    /// persistence degrades. A failed write may leave a partial line on
+    /// disk, so the file is truncated back to its pre-write length; if
+    /// even that fails the WAL is disabled rather than risk mid-file
+    /// corruption on the next append.
+    pub fn append(&self, rec: Record) -> anyhow::Result<()> {
+        let mut wal = self.inner.wal.lock().unwrap();
+        let mut wal_err: Option<std::io::Error> = None;
+        let mut disable = false;
+        if let Some(f) = wal.as_mut() {
+            let mut line = rec.to_json().dump();
+            line.push('\n');
+            let prev_len = f.metadata().ok().map(|m| m.len());
+            if let Err(e) = f.write_all(line.as_bytes()) {
+                let repaired = prev_len.map_or(false, |p| f.set_len(p).is_ok());
+                disable = !repaired;
+                wal_err = Some(e);
+            }
+        }
+        if disable {
+            eprintln!(
+                "tuning-db: WAL unrecoverable after failed write; disabling persistence"
+            );
+            *wal = None;
+        }
+        // Still under the WAL lock: file order == insertion order even
+        // with concurrent appenders.
+        self.insert(rec);
+        match wal_err {
+            Some(e) => Err(e.into()),
+            None => Ok(()),
+        }
+    }
+
+    /// Append the trials of one tuning run (bulk path; the live path is
+    /// [`crate::tuner::DbSink`] streaming through [`append`](Self::append)).
+    pub fn add_run(
+        &self,
+        task: &Task,
+        target: &str,
+        records: &[TrialRecord],
+    ) -> anyhow::Result<()> {
         for r in records {
-            self.records.push(Record {
+            self.append(Record {
                 task_key: task.key(),
                 target: target.to_string(),
                 choices: r.entity.choices.clone(),
                 gflops: r.gflops,
                 seconds: r.seconds.unwrap_or(0.0),
                 error: r.error.clone(),
-            });
+            })?;
         }
+        Ok(())
     }
 
-    /// Persist as JSONL.
+    /// Total number of records across all shards.
+    pub fn len(&self) -> usize {
+        self.inner.len.load(Ordering::SeqCst)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Deterministic snapshot of every record: shards in sorted
+    /// `(task_key, target)` order, records in insertion order.
+    pub fn records(&self) -> Vec<Record> {
+        let mut groups: Vec<(ShardKey, Vec<Record>)> = Vec::new();
+        for bucket in &self.inner.shards {
+            let bucket = bucket.lock().unwrap();
+            for (k, s) in bucket.iter() {
+                groups.push((k.clone(), s.records.clone()));
+            }
+        }
+        groups.sort_by(|a, b| a.0.cmp(&b.0));
+        groups.into_iter().flat_map(|(_, r)| r).collect()
+    }
+
+    /// Export the whole DB as JSONL (for in-memory DBs; a file-backed
+    /// DB's WAL is already on disk).
     pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
         let mut out = String::new();
-        for r in &self.records {
+        for r in self.records() {
             out.push_str(&r.to_json().dump());
             out.push('\n');
         }
@@ -102,30 +427,72 @@ impl Database {
         Ok(())
     }
 
-    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Database> {
-        let text = std::fs::read_to_string(path)?;
-        let mut records = Vec::new();
-        for line in text.lines().filter(|l| !l.trim().is_empty()) {
-            records.push(Record::from_json(&Json::parse(line)?)?);
+    /// Records belonging to one task+target, in insertion order.
+    pub fn for_task(&self, task_key: &str, target: &str) -> Vec<Record> {
+        let bucket = self.inner.shards[shard_idx(task_key, target)].lock().unwrap();
+        bucket
+            .get(&(task_key.to_string(), target.to_string()))
+            .map(|s| s.records.clone())
+            .unwrap_or_default()
+    }
+
+    /// Sorted task keys with at least one record on `target`.
+    pub fn task_keys(&self, target: &str) -> Vec<String> {
+        let mut keys: Vec<String> = Vec::new();
+        for bucket in &self.inner.shards {
+            let bucket = bucket.lock().unwrap();
+            for (k, _) in bucket.iter() {
+                if k.1 == target {
+                    keys.push(k.0.clone());
+                }
+            }
         }
-        Ok(Database { records })
+        keys.sort();
+        keys.dedup();
+        keys
     }
 
-    /// Records belonging to one task+target.
-    pub fn for_task(&self, task_key: &str, target: &str) -> Vec<&Record> {
-        self.records
-            .iter()
-            .filter(|r| r.task_key == task_key && r.target == target)
-            .collect()
-    }
-
-    /// Best valid config per task (for the graph compiler).
+    /// Best valid config per task — served from the incremental index
+    /// in O(1), the graph-compiler hot path.
     pub fn best_config(&self, task_key: &str, target: &str) -> Option<(ConfigEntity, f64)> {
-        self.for_task(task_key, target)
-            .into_iter()
-            .filter(|r| r.error.is_none())
-            .max_by(|a, b| a.gflops.partial_cmp(&b.gflops).unwrap())
+        let bucket = self.inner.shards[shard_idx(task_key, target)].lock().unwrap();
+        let shard = bucket.get(&(task_key.to_string(), target.to_string()))?;
+        let (idx, g) = shard.best?;
+        Some((ConfigEntity { choices: shard.records[idx].choices.clone() }, g))
+    }
+
+    /// Linear-scan reference for [`best_config`](Self::best_config) —
+    /// kept for tests and the `bench_db` indexed-vs-scan comparison.
+    /// (On a tie the scan may return a different record than the index;
+    /// the gflops value is always identical.)
+    pub fn best_config_scan(
+        &self,
+        task_key: &str,
+        target: &str,
+    ) -> Option<(ConfigEntity, f64)> {
+        let bucket = self.inner.shards[shard_idx(task_key, target)].lock().unwrap();
+        let shard = bucket.get(&(task_key.to_string(), target.to_string()))?;
+        shard
+            .records
+            .iter()
+            .filter(|r| r.is_valid())
+            .max_by(|a, b| a.gflops.total_cmp(&b.gflops))
             .map(|r| (ConfigEntity { choices: r.choices.clone() }, r.gflops))
+    }
+
+    /// Up to `k` best valid configs (descending gflops, ties earliest
+    /// first) from the incremental index; `k` is capped at [`TOP_K`].
+    pub fn top_k(&self, task_key: &str, target: &str, k: usize) -> Vec<(ConfigEntity, f64)> {
+        let bucket = self.inner.shards[shard_idx(task_key, target)].lock().unwrap();
+        let Some(shard) = bucket.get(&(task_key.to_string(), target.to_string())) else {
+            return Vec::new();
+        };
+        shard
+            .top_k
+            .iter()
+            .take(k)
+            .map(|&(i, g)| (ConfigEntity { choices: shard.records[i].choices.clone() }, g))
+            .collect()
     }
 
     /// Build a training set from source-domain records under an
@@ -133,6 +500,12 @@ impl Database {
     /// model of Eq. 4. Tasks must be supplied so configs can be
     /// re-lowered; records for unknown tasks are skipped. Returns
     /// (features, labels-normalized-per-task, group sizes per task).
+    ///
+    /// Deterministic: tasks are visited in sorted-key order (duplicates
+    /// dropped) and records in insertion order. Errored, non-finite and
+    /// unlowerable records are excluded. Feature rows are memoized in
+    /// the per-shard cache, so repeated calls only featurize records
+    /// appended since the last call.
     ///
     /// Labels are normalized to relative throughput within each task
     /// (gflops / task max) so the global model learns *shape*, not
@@ -145,38 +518,72 @@ impl Database {
         repr: Representation,
         limit_per_task: usize,
     ) -> (Matrix, Vec<f64>, Vec<usize>) {
-        let by_key: HashMap<String, &Task> =
-            tasks.iter().map(|t| (t.key(), *t)).collect();
+        let mut sorted: Vec<&Task> = tasks.to_vec();
+        sorted.sort_by_key(|t| t.key());
+        sorted.dedup_by_key(|t| t.key());
         let mut rows: Vec<Vec<f64>> = Vec::new();
-        let mut ys = Vec::new();
-        let mut groups = Vec::new();
-        for (key, task) in &by_key {
-            let recs: Vec<&Record> = self
-                .for_task(key, target)
-                .into_iter()
-                .take(limit_per_task)
-                .collect();
-            if recs.is_empty() {
+        let mut ys: Vec<f64> = Vec::new();
+        let mut groups: Vec<usize> = Vec::new();
+        for task in sorted {
+            let key = (task.key(), target.to_string());
+            let bucket_idx = shard_idx(&key.0, target);
+            // Phase 1 (locked, cheap): pick the valid records and find
+            // which of them the feature cache is missing.
+            let (sel, missing_idx, missing_ents) = {
+                let mut bucket = self.inner.shards[bucket_idx].lock().unwrap();
+                let Some(shard) = bucket.get_mut(&key) else { continue };
+                let TaskShard { records, feat_cache, .. } = shard;
+                let sel: Vec<usize> = records
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, r)| r.is_valid())
+                    .map(|(i, _)| i)
+                    .take(limit_per_task)
+                    .collect();
+                if sel.is_empty() {
+                    continue;
+                }
+                let cache = feat_cache.entry(repr).or_default();
+                let missing_idx: Vec<usize> =
+                    sel.iter().copied().filter(|i| !cache.contains_key(i)).collect();
+                let missing_ents: Vec<ConfigEntity> = missing_idx
+                    .iter()
+                    .map(|&i| ConfigEntity { choices: records[i].choices.clone() })
+                    .collect();
+                (sel, missing_idx, missing_ents)
+            };
+            // Phase 2 (no locks): the expensive lower+analyze+extract —
+            // writers streaming into this shard are not stalled. Records
+            // are append-only, so the selected indices stay valid.
+            let computed = if missing_ents.is_empty() {
+                Vec::new()
+            } else {
+                crate::features::featurize_batch(repr, task, &missing_ents)
+            };
+            // Phase 3 (locked, cheap): install the new cache rows, then
+            // emit the training rows in selection order.
+            let mut bucket = self.inner.shards[bucket_idx].lock().unwrap();
+            let Some(shard) = bucket.get_mut(&key) else { continue };
+            let TaskShard { records, feat_cache, .. } = shard;
+            let cache = feat_cache.entry(repr).or_default();
+            for (i, f) in missing_idx.into_iter().zip(computed) {
+                cache.insert(i, f);
+            }
+            let mut task_rows: Vec<(Vec<f64>, f64)> = Vec::new();
+            for &i in &sel {
+                if let Some(Some(f)) = cache.get(&i) {
+                    task_rows.push((f.clone(), records[i].gflops));
+                }
+            }
+            if task_rows.is_empty() {
                 continue;
             }
-            let max_g =
-                recs.iter().map(|r| r.gflops).fold(f64::MIN_POSITIVE, f64::max);
-            let entities: Vec<ConfigEntity> =
-                recs.iter().map(|r| ConfigEntity { choices: r.choices.clone() }).collect();
-            let feats = crate::util::parallel_map(
-                &entities,
-                crate::util::default_threads(),
-                |e| {
-                    let analysis =
-                        crate::ast::analysis::analyze(&task.lower(e).expect("db config lowers"));
-                    crate::features::extract(repr, task, e, &analysis)
-                },
-            );
-            for (f, r) in feats.into_iter().zip(&recs) {
+            let max_g = task_rows.iter().map(|(_, g)| *g).fold(f64::MIN_POSITIVE, f64::max);
+            groups.push(task_rows.len());
+            for (f, g) in task_rows {
                 rows.push(f);
-                ys.push(r.gflops / max_g);
+                ys.push(g / max_g);
             }
-            groups.push(recs.len());
         }
         (Matrix::from_rows(&rows), ys, groups)
     }
@@ -212,21 +619,22 @@ mod tests {
     #[test]
     fn save_load_roundtrip() {
         let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu);
-        let mut db = Database::new();
-        db.add_run(&task, "sim-cpu", &sample_records(&task, 20));
+        let db = Database::new();
+        db.add_run(&task, "sim-cpu", &sample_records(&task, 20)).unwrap();
         let dir = std::env::temp_dir().join("autotvm-test-db");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("roundtrip.jsonl");
         db.save(&path).unwrap();
         let back = Database::load(&path).unwrap();
-        assert_eq!(db.records, back.records);
+        assert_eq!(db.records(), back.records());
+        assert_eq!(db.len(), back.len());
         let _ = std::fs::remove_file(&path);
     }
 
     #[test]
     fn best_config_skips_errors() {
         let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu);
-        let mut db = Database::new();
+        let db = Database::new();
         let mut recs = sample_records(&task, 10);
         // poison: an error record with absurd gflops must not win
         recs.push(TrialRecord {
@@ -235,9 +643,62 @@ mod tests {
             seconds: None,
             error: Some("boom".into()),
         });
-        db.add_run(&task, "sim-cpu", &recs);
+        db.add_run(&task, "sim-cpu", &recs).unwrap();
         let (_, g) = db.best_config(&task.key(), "sim-cpu").unwrap();
         assert!(g < 1e12);
+    }
+
+    /// Regression (satellite): a NaN gflops record used to panic
+    /// `best_config` via `partial_cmp().unwrap()`; now ordering is
+    /// `total_cmp` and non-finite records never enter the index.
+    #[test]
+    fn best_config_nan_safe() {
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu);
+        let db = Database::new();
+        let mut recs = sample_records(&task, 8);
+        recs.push(TrialRecord {
+            entity: task.space.entity(1),
+            gflops: f64::NAN,
+            seconds: None,
+            error: None,
+        });
+        db.add_run(&task, "sim-cpu", &recs).unwrap();
+        let (_, g) = db.best_config(&task.key(), "sim-cpu").unwrap();
+        assert!(g.is_finite(), "NaN record won the serving path");
+        // index agrees with the linear scan
+        let (_, gs) = db.best_config_scan(&task.key(), "sim-cpu").unwrap();
+        assert_eq!(g, gs);
+        // a shard with only a NaN record serves nothing
+        let db2 = Database::new();
+        db2.add_run(
+            &task,
+            "sim-cpu",
+            &[TrialRecord {
+                entity: task.space.entity(1),
+                gflops: f64::NAN,
+                seconds: None,
+                error: None,
+            }],
+        )
+        .unwrap();
+        assert!(db2.best_config(&task.key(), "sim-cpu").is_none());
+    }
+
+    #[test]
+    fn top_k_is_sorted_and_capped() {
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu);
+        let db = Database::new();
+        db.add_run(&task, "sim-cpu", &sample_records(&task, 40)).unwrap();
+        let top = db.top_k(&task.key(), "sim-cpu", 64);
+        assert!(top.len() <= TOP_K);
+        assert!(!top.is_empty());
+        for w in top.windows(2) {
+            assert!(w[0].1 >= w[1].1, "top-k not descending");
+        }
+        let (_, best) = db.best_config(&task.key(), "sim-cpu").unwrap();
+        assert_eq!(top[0].1, best);
+        // a k below the cap truncates
+        assert_eq!(db.top_k(&task.key(), "sim-cpu", 3).len(), 3.min(top.len()));
     }
 
     #[test]
@@ -249,19 +710,185 @@ mod tests {
             }),
             TemplateKind::Cpu,
         );
-        let mut db = Database::new();
-        db.add_run(&t1, "sim-cpu", &sample_records(&t1, 12));
-        db.add_run(&t2, "sim-cpu", &sample_records(&t2, 12));
+        let db = Database::new();
+        let r1 = sample_records(&t1, 12);
+        let r2 = sample_records(&t2, 12);
+        let ok1 = r1.iter().filter(|r| r.error.is_none()).count();
+        let ok2 = r2.iter().filter(|r| r.error.is_none()).count();
+        db.add_run(&t1, "sim-cpu", &r1).unwrap();
+        db.add_run(&t2, "sim-cpu", &r2).unwrap();
         let (x, y, groups) = db.to_training(
             &[&t1, &t2],
             "sim-cpu",
             Representation::ContextRelation,
             100,
         );
-        assert_eq!(x.rows, 24);
+        // errored trials are filtered out of D'
+        assert_eq!(x.rows, ok1 + ok2);
         assert_eq!(x.cols, Representation::ContextRelation.dim());
-        assert_eq!(groups, vec![12, 12]);
+        assert_eq!(groups.iter().sum::<usize>(), ok1 + ok2);
         // labels normalized per task
         assert!(y.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    /// Satellite regression: the training set must not depend on caller
+    /// task order (the old HashMap iteration made row order vary
+    /// run-to-run) and the cached second call must equal the first.
+    #[test]
+    fn to_training_is_deterministic_and_cached() {
+        let t1 = Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu);
+        let t2 = Task::new(ops::matmul(32, 32, 32), TemplateKind::Cpu);
+        let db = Database::new();
+        db.add_run(&t1, "sim-cpu", &sample_records(&t1, 10)).unwrap();
+        db.add_run(&t2, "sim-cpu", &sample_records(&t2, 10)).unwrap();
+        let (xa, ya, ga) =
+            db.to_training(&[&t1, &t2], "sim-cpu", Representation::ContextRelation, 100);
+        // reversed task order: identical output (sorted-key iteration)
+        let (xb, yb, gb) =
+            db.to_training(&[&t2, &t1], "sim-cpu", Representation::ContextRelation, 100);
+        assert_eq!(xa.data, xb.data);
+        assert_eq!(ya, yb);
+        assert_eq!(ga, gb);
+        // third call is served from the feature cache — same result
+        let (xc, yc, gc) =
+            db.to_training(&[&t1, &t2], "sim-cpu", Representation::ContextRelation, 100);
+        assert_eq!(xa.data, xc.data);
+        assert_eq!(ya, yc);
+        assert_eq!(ga, gc);
+        // duplicate tasks don't duplicate groups
+        let (xd, _, gd) =
+            db.to_training(&[&t1, &t1, &t2], "sim-cpu", Representation::ContextRelation, 100);
+        assert_eq!(xd.rows, xa.rows);
+        assert_eq!(gd, ga);
+    }
+
+    /// Satellite regression: malformed `choices` entries used to be
+    /// silently coerced to 0; now they are parse errors. A torn
+    /// trailing WAL line is tolerated by `open` only.
+    #[test]
+    fn strict_parse_rejects_malformed_records() {
+        let dir = std::env::temp_dir().join("autotvm-test-db");
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = r#"{"task":"t@Cpu","target":"d","choices":[1,2],"gflops":5,"seconds":0.1}"#;
+        let bad = r#"{"task":"t@Cpu","target":"d","choices":[1,"x"],"gflops":5,"seconds":0.1}"#;
+
+        let path = dir.join("strict-mid.jsonl");
+        std::fs::write(&path, format!("{bad}\n{good}\n")).unwrap();
+        assert!(Database::load(&path).is_err(), "malformed choices must not parse");
+        assert!(Database::open(&path).is_err(), "mid-file corruption is fatal");
+        let _ = std::fs::remove_file(&path);
+
+        let path = dir.join("strict-missing.jsonl");
+        std::fs::write(&path, r#"{"task":"t@Cpu","target":"d","gflops":5}"#).unwrap();
+        assert!(Database::load(&path).is_err(), "missing choices must not parse");
+        let _ = std::fs::remove_file(&path);
+
+        // torn trailing line: open() truncates it from the file (so the
+        // next append starts clean), load() rejects it
+        let path = dir.join("torn.jsonl");
+        std::fs::write(&path, format!("{good}\n{{\"task\":\"t@C")).unwrap();
+        assert!(Database::load(&path).is_err());
+        {
+            let db = Database::open(&path).unwrap();
+            assert_eq!(db.len(), 1);
+            // appending after a torn tail must not concatenate onto the
+            // truncated fragment
+            db.append(Record {
+                task_key: "t@Cpu".into(),
+                target: "d".into(),
+                choices: vec![3, 4],
+                gflops: 7.0,
+                seconds: 0.2,
+                error: None,
+            })
+            .unwrap();
+        }
+        let db = Database::open(&path).unwrap();
+        assert_eq!(db.len(), 2, "WAL corrupted by append-after-torn-tail");
+        assert!(Database::load(&path).is_ok(), "WAL no longer strictly parseable");
+        let _ = std::fs::remove_file(&path);
+
+        // a valid but newline-unterminated last line is terminated on
+        // open, so the next append starts on its own line
+        let path = dir.join("unterminated.jsonl");
+        std::fs::write(&path, good).unwrap(); // no trailing newline
+        {
+            let db = Database::open(&path).unwrap();
+            assert_eq!(db.len(), 1);
+            db.append(Record {
+                task_key: "t@Cpu".into(),
+                target: "d".into(),
+                choices: vec![5],
+                gflops: 1.0,
+                seconds: 0.1,
+                error: None,
+            })
+            .unwrap();
+        }
+        assert_eq!(Database::open(&path).unwrap().len(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Regression: a non-finite gflops used to serialize as `NaN`,
+    /// which the JSON parser rejects — poisoning the WAL. It now
+    /// round-trips as null → NaN (still invalid for serving).
+    #[test]
+    fn nan_record_roundtrips_through_wal() {
+        let dir = std::env::temp_dir().join("autotvm-test-db");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("nan-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let db = Database::open(&path).unwrap();
+            db.append(Record {
+                task_key: "t@Cpu".into(),
+                target: "d".into(),
+                choices: vec![1],
+                gflops: f64::NAN,
+                seconds: 0.1,
+                error: None,
+            })
+            .unwrap();
+            db.append(Record {
+                task_key: "t@Cpu".into(),
+                target: "d".into(),
+                choices: vec![2],
+                gflops: 5.0,
+                seconds: 0.1,
+                error: None,
+            })
+            .unwrap();
+        }
+        let back = Database::open(&path).unwrap();
+        assert_eq!(back.len(), 2, "NaN record poisoned the WAL");
+        let recs = back.for_task("t@Cpu", "d");
+        assert!(recs[0].gflops.is_nan());
+        // the NaN record is stored but never served
+        assert_eq!(back.best_config("t@Cpu", "d").unwrap().1, 5.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn wal_appends_survive_reopen() {
+        let dir = std::env::temp_dir().join("autotvm-test-db");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("wal-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu);
+        let recs = sample_records(&task, 6);
+        {
+            let db = Database::open(&path).unwrap();
+            db.add_run(&task, "sim-cpu", &recs[..4]).unwrap();
+            assert_eq!(db.len(), 4);
+        } // drop: no explicit save — the WAL is the persistence
+        {
+            let db = Database::open(&path).unwrap();
+            assert_eq!(db.len(), 4, "WAL records lost across reopen");
+            db.add_run(&task, "sim-cpu", &recs[4..]).unwrap();
+        }
+        let db = Database::open(&path).unwrap();
+        assert_eq!(db.len(), 6, "reopen must append, not clobber");
+        assert_eq!(db.for_task(&task.key(), "sim-cpu").len(), 6);
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -23,7 +23,11 @@
 //!
 //! Transfer learning (§4): pass a [`TransferModel`] built from a prior
 //! database — the global model makes the very first SA round informed
-//! instead of random, in either driver.
+//! instead of random, in either driver. The coordinator builds that
+//! model automatically from the shared [`db::TuningDb`] service layer
+//! (cross-workload warm starts), and every loop can stream its measured
+//! trials into the same DB live via [`DbSink`] ([`TuneOptions::sink`])
+//! instead of bulk-dumping at the end.
 //!
 //! [`TransferModel`]: crate::model::TransferModel
 
@@ -37,7 +41,8 @@ use crate::measure::{MeasureResult, Measurer};
 use crate::model::{Acquisition, CostModel};
 use crate::schedule::space::ConfigEntity;
 use crate::schedule::template::Task;
-use crate::util::{parallel_map, Rng};
+use crate::util::Rng;
+use db::{Record, TuningDb};
 use std::cell::RefCell;
 use std::collections::{HashMap, HashSet};
 
@@ -68,6 +73,12 @@ pub struct TuneOptions {
     /// `max(0, k − (d − 1))`; `d = 1` reproduces the serial schedule
     /// exactly. See [`pipeline`].
     pub pipeline_depth: usize,
+    /// Live record sink: every measured trial is appended to the shared
+    /// [`TuningDb`] as it is absorbed (from the measurement stage in the
+    /// pipelined loop), so concurrent readers — the graph compiler, a
+    /// warm-starting coordinator — see records immediately. `None` (the
+    /// default) keeps the loop side-effect free.
+    pub sink: Option<DbSink>,
 }
 
 impl Default for TuneOptions {
@@ -85,7 +96,49 @@ impl Default for TuneOptions {
             seed: 0,
             verbose: false,
             pipeline_depth: 2,
+            sink: None,
         }
+    }
+}
+
+/// Where a tuning loop streams its measured trials: a shared
+/// [`TuningDb`] handle plus the task/target identity stamped onto every
+/// [`Record`]. Cloning is cheap (the DB handle is an `Arc`).
+#[derive(Clone)]
+pub struct DbSink {
+    pub db: TuningDb,
+    pub task_key: String,
+    pub target: String,
+}
+
+impl DbSink {
+    pub fn new(db: &TuningDb, task: &Task, target: &str) -> Self {
+        DbSink { db: db.clone(), task_key: task.key(), target: target.to_string() }
+    }
+
+    /// Append one measured trial. WAL failures are reported, not fatal:
+    /// the in-flight tuning run keeps its own records either way.
+    fn record(&self, e: &ConfigEntity, gflops: f64, r: &MeasureResult) {
+        let rec = Record {
+            task_key: self.task_key.clone(),
+            target: self.target.clone(),
+            choices: e.choices.clone(),
+            gflops,
+            seconds: r.seconds.unwrap_or(0.0),
+            error: r.error.clone(),
+        };
+        if let Err(err) = self.db.append(rec) {
+            eprintln!("tuning-db: record append failed: {err:#}");
+        }
+    }
+}
+
+impl std::fmt::Debug for DbSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DbSink")
+            .field("task_key", &self.task_key)
+            .field("target", &self.target)
+            .finish()
     }
 }
 
@@ -149,19 +202,10 @@ impl Featurizer {
             entities.iter().filter(|e| !c.contains_key(*e)).cloned().collect()
         };
         if !missing.is_empty() {
-            // capture only Copy data in the worker closure (the RefCell
-            // cache must stay out of it — parallel_map requires Sync)
-            let repr = self.repr;
-            let rows = parallel_map(&missing, crate::util::default_threads(), |e| {
-                let analysis = task
-                    .lower(e)
-                    .map(|p| crate::ast::analysis::analyze(&p))
-                    .expect("template configs must lower");
-                crate::features::extract(repr, task, e, &analysis)
-            });
+            let rows = crate::features::featurize_batch(self.repr, task, &missing);
             let mut c = self.cache.borrow_mut();
             for (e, r) in missing.into_iter().zip(rows) {
-                c.insert(e, r);
+                c.insert(e, r.expect("template configs must lower"));
             }
         }
         let c = self.cache.borrow();
@@ -199,19 +243,27 @@ impl Scorer for TunerScorer<'_> {
 }
 
 /// Trial accounting shared by every loop: best-so-far tracking, the
-/// per-trial curve, and the failure policy (errored trials are recorded
-/// with 0 GFLOPS and never become `best`).
+/// per-trial curve, the failure policy (errored trials are recorded
+/// with 0 GFLOPS and never become `best`), and optional live streaming
+/// of every trial into a shared [`TuningDb`] via [`DbSink`].
 #[derive(Default)]
 pub struct TrialAccountant {
     pub best: Option<(ConfigEntity, f64)>,
     pub curve: Vec<f64>,
     pub records: Vec<TrialRecord>,
     pub trials: usize,
+    sink: Option<DbSink>,
 }
 
 impl TrialAccountant {
     pub fn new() -> Self {
         TrialAccountant::default()
+    }
+
+    /// Accountant that streams every absorbed trial into `sink` (if
+    /// any) as a side effect of [`absorb`](Self::absorb).
+    pub fn with_sink(sink: Option<DbSink>) -> Self {
+        TrialAccountant { sink, ..TrialAccountant::default() }
     }
 
     pub fn best_gflops(&self) -> f64 {
@@ -235,6 +287,9 @@ impl TrialAccountant {
                 seconds: r.seconds,
                 error: r.error.clone(),
             });
+            if let Some(sink) = &self.sink {
+                sink.record(e, gf, r);
+            }
             labels.push(gf);
         }
         self.trials += batch.len();
@@ -326,7 +381,7 @@ pub(crate) fn serial_loop(
     model: &mut dyn CostModel,
     measurer: &dyn Measurer,
 ) -> TuneResult {
-    let mut acct = TrialAccountant::new();
+    let mut acct = TrialAccountant::with_sink(opts.sink.clone());
     // training set (measured configs) + labels + batch groups
     let mut xs: Vec<ConfigEntity> = Vec::new();
     let mut ys: Vec<f64> = Vec::new();
@@ -410,7 +465,7 @@ pub fn tune_gbt_pipelined(
 pub fn tune_random(task: Task, measurer: &dyn Measurer, options: TuneOptions) -> TuneResult {
     let mut rng = Rng::seed_from_u64(options.seed ^ 0xAA55);
     let mut seen = HashSet::new();
-    let mut acct = TrialAccountant::new();
+    let mut acct = TrialAccountant::with_sink(options.sink.clone());
     while acct.trials < options.n_trials {
         let b = options.batch.min(options.n_trials - acct.trials);
         let batch = random_batch(&task.space, b, &seen, &mut rng);
@@ -428,7 +483,7 @@ pub fn tune_random(task: Task, measurer: &dyn Measurer, options: TuneOptions) ->
 pub fn tune_ga(task: Task, measurer: &dyn Measurer, options: TuneOptions) -> TuneResult {
     let mut rng = Rng::seed_from_u64(options.seed ^ 0x6A6A);
     let mut ga = crate::explore::Genetic::new(options.batch);
-    let mut acct = TrialAccountant::new();
+    let mut acct = TrialAccountant::with_sink(options.sink.clone());
     while acct.trials < options.n_trials {
         let batch = ga.propose(&task.space, &mut rng);
         let batch: Vec<ConfigEntity> =

@@ -51,6 +51,16 @@
 //!
 //! The serial loop ([`super::Tuner`]) is kept for reference experiments
 //! and for models whose [`CostModel::snapshot`] returns `None`.
+//!
+//! ## Live DB streaming
+//!
+//! With [`TuneOptions::sink`](super::TuneOptions::sink) set, the
+//! measurement stage appends every measured trial to the shared
+//! [`TuningDb`](super::db::TuningDb) as it is absorbed — the service
+//! behavior: concurrent readers (graph-compiler `best_config` lookups,
+//! a coordinator warm-starting the next task) observe records while the
+//! run is still in flight. Streaming is a pure side effect and does not
+//! perturb the determinism contract above.
 
 use super::{serial_loop, BatchProposer, Featurizer, TrialAccountant, TuneOptions, TuneResult};
 use crate::measure::Measurer;
@@ -165,13 +175,16 @@ impl PipelinedTuner {
             self.model = Some(model);
             return TuneResult { best: None, curve: Vec::new(), records: Vec::new() };
         }
-        if model.snapshot().is_none() {
+        // The first snapshot doubles as the epoch-0 model update (an
+        // unfitted model ⇒ random bootstrap batches; a transfer model ⇒
+        // warm-started SA from the very first batch).
+        let Some(epoch0) = model.snapshot() else {
             // Non-cloneable model: serial reference schedule in place.
             let mut proposer = BatchProposer::new(&opts);
             let res = serial_loop(&self.task, &opts, &mut proposer, model.as_mut(), measurer);
             self.model = Some(model);
             return res;
-        }
+        };
 
         let mut proposer = BatchProposer::new(&opts);
         let task = self.task.clone();
@@ -229,12 +242,7 @@ impl PipelinedTuner {
             let fit_handle = s.spawn(move || {
                 let feat = Featurizer::new(fit_repr);
                 let mut best_y = 0.0f64;
-                // Epoch 0: the initial model — unfitted (⇒ random
-                // bootstrap batches) or a transfer-learning global model
-                // (⇒ warm-started SA from the very first batch).
-                if let Some(snap) = model.snapshot() {
-                    let _ = snap_tx.send(ModelUpdate { epoch: 0, best_y, model: snap });
-                }
+                let _ = snap_tx.send(ModelUpdate { epoch: 0, best_y, model: epoch0 });
                 let mut xs: Vec<ConfigEntity> = Vec::new();
                 let mut ys: Vec<f64> = Vec::new();
                 let mut groups: Vec<usize> = Vec::new();
@@ -261,7 +269,11 @@ impl PipelinedTuner {
             });
 
             // ---- measurement stage (this thread owns the measurer) ----
-            let mut acct = TrialAccountant::new();
+            // The accountant streams each measured batch straight into
+            // the shared TuningDb (if a sink is configured), so DB
+            // readers on other threads see records live instead of a
+            // bulk dump when the run ends.
+            let mut acct = TrialAccountant::with_sink(opts.sink.clone());
             for _ in 0..n_batches {
                 let Ok(batch) = prop_rx.recv() else { break };
                 if batch.is_empty() {

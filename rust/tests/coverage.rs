@@ -205,7 +205,7 @@ fn depthwise_tunes_on_mali() {
 fn database_multi_target_isolation() {
     use autotvm::tuner::db::Database;
     let task = workloads::conv_task(3, TemplateKind::Gpu);
-    let mut db = Database::new();
+    let db = Database::new();
     for (target, seed) in [("sim-gpu", 1u64), ("sim-mali", 2)] {
         let dev = autotvm::sim::devices::by_name(target).unwrap();
         let m = SimMeasurer::with_seed(dev, seed);
@@ -217,7 +217,7 @@ fn database_multi_target_isolation() {
             ..Default::default()
         };
         let res = autotvm::tuner::tune_gbt(task.clone(), &m, o);
-        db.add_run(&task, target, &res.records);
+        db.add_run(&task, target, &res.records).unwrap();
     }
     assert_eq!(db.for_task(&task.key(), "sim-gpu").len(), 24);
     assert_eq!(db.for_task(&task.key(), "sim-mali").len(), 24);

@@ -1,0 +1,222 @@
+//! Tier-1 tests for the TuningDb service layer: concurrent live
+//! streaming from the pipelined tuner, WAL persistence through a tuning
+//! run, serial-equivalence with a sink attached, and the end-to-end
+//! cross-workload warm-start path (tune task A into the DB, then tune
+//! task B warm-started from A's records).
+
+use autotvm::coordinator::experiments::{
+    collect_source_db, run_method, run_method_warm, ExpOpts, Method,
+};
+use autotvm::expr::ops;
+use autotvm::gbt::GbtParams;
+use autotvm::measure::SimMeasurer;
+use autotvm::model::GbtModel;
+use autotvm::schedule::template::{Task, TemplateKind};
+use autotvm::sim::devices;
+use autotvm::tuner::db::Database;
+use autotvm::tuner::pipeline::PipelinedTuner;
+use autotvm::tuner::{tune_gbt, tune_gbt_pipelined, DbSink, SaParams, TuneOptions};
+use autotvm::workloads;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+fn quick(n_trials: usize, batch: usize, seed: u64, depth: usize) -> TuneOptions {
+    TuneOptions {
+        n_trials,
+        batch,
+        sa: SaParams { n_chains: 16, n_steps: 30, ..Default::default() },
+        seed,
+        pipeline_depth: depth,
+        ..Default::default()
+    }
+}
+
+fn exp(trials: usize) -> ExpOpts {
+    ExpOpts {
+        trials,
+        batch: 32,
+        sa: SaParams { n_chains: 32, n_steps: 50, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+/// The pipelined tuner streams records into the shared DB while a
+/// concurrent reader queries `best_config` and `len`: no lost records,
+/// monotone visibility, and the final index agrees with the run.
+#[test]
+fn concurrent_streaming_no_lost_records() {
+    let db = Database::new();
+    let task = Task::new(ops::matmul(128, 128, 128), TemplateKind::Gpu);
+    let mut o = quick(96, 16, 5, 3);
+    o.sink = Some(DbSink::new(&db, &task, "sim-gpu"));
+    let m = SimMeasurer::with_seed(devices::sim_gpu(), 7);
+    let params = GbtParams { seed: o.seed, ..Default::default() };
+    let stop = AtomicBool::new(false);
+
+    let res = std::thread::scope(|s| {
+        let reader_db = db.clone();
+        let key = task.key();
+        let stop = &stop;
+        let reader = s.spawn(move || {
+            let mut seen_len = 0usize;
+            let mut seen_best = 0.0f64;
+            while !stop.load(Ordering::SeqCst) {
+                let n = reader_db.len();
+                assert!(n >= seen_len, "record count went backwards");
+                seen_len = n;
+                if let Some((_, g)) = reader_db.best_config(&key, "sim-gpu") {
+                    assert!(g >= seen_best, "per-task best went backwards");
+                    seen_best = g;
+                }
+                std::thread::yield_now();
+            }
+        });
+        let mut tuner = PipelinedTuner::new(task.clone(), Box::new(GbtModel::new(params)), o);
+        let res = tuner.tune(&m);
+        stop.store(true, Ordering::SeqCst);
+        reader.join().expect("reader panicked");
+        res
+    });
+
+    assert_eq!(res.records.len(), 96);
+    assert_eq!(db.len(), 96, "streamed records lost");
+    // DB shard content matches the run's records exactly, in order
+    let recs = db.for_task(&task.key(), "sim-gpu");
+    assert_eq!(recs.len(), 96);
+    for (a, b) in recs.iter().zip(&res.records) {
+        assert_eq!(a.choices, b.entity.choices);
+        assert_eq!(a.gflops, b.gflops);
+        assert_eq!(a.error, b.error);
+    }
+    assert_eq!(
+        db.best_config(&task.key(), "sim-gpu").map(|(_, g)| g),
+        Some(res.best_gflops()),
+        "indexed best diverged from the run's best"
+    );
+}
+
+/// Attaching a live DB sink must not perturb the determinism contract:
+/// depth-1 pipelined with a sink still reproduces the serial schedule
+/// bit-for-bit.
+#[test]
+fn depth1_with_live_db_still_matches_serial() {
+    let mk = || Task::new(ops::matmul(128, 128, 128), TemplateKind::Gpu);
+    let base = quick(64, 16, 4, 1);
+    let ms = SimMeasurer::with_seed(devices::sim_gpu(), 3);
+    let serial = tune_gbt(mk(), &ms, base.clone());
+
+    let db = Database::new();
+    let task = mk();
+    let mut o = base;
+    o.sink = Some(DbSink::new(&db, &task, "sim-gpu"));
+    let mp = SimMeasurer::with_seed(devices::sim_gpu(), 3);
+    let piped = tune_gbt_pipelined(task, &mp, o);
+
+    assert_eq!(serial.curve, piped.curve, "sink perturbed the schedule");
+    assert_eq!(serial.records.len(), piped.records.len());
+    for (a, b) in serial.records.iter().zip(&piped.records) {
+        assert_eq!(a.entity, b.entity);
+        assert_eq!(a.gflops, b.gflops);
+    }
+    assert_eq!(db.len(), 64);
+}
+
+/// A WAL-backed run persists without any explicit save: reopening the
+/// file serves the run's best config from the incremental index.
+#[test]
+fn wal_streamed_run_survives_reopen() {
+    let dir = std::env::temp_dir().join("autotvm-db-service");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("wal-stream-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+
+    let task = workloads::conv_task(3, TemplateKind::Gpu);
+    let dev = devices::sim_gpu();
+    let res = {
+        let db = Database::open(&path).unwrap();
+        let m = SimMeasurer::with_seed(dev.clone(), 5);
+        let mut o = quick(48, 16, 2, 2);
+        o.sink = Some(DbSink::new(&db, &task, dev.name));
+        tune_gbt(task.clone(), &m, o)
+    }; // no save() — the WAL is the persistence
+
+    let back = Database::open(&path).unwrap();
+    assert_eq!(back.len(), res.records.len());
+    let (cfg, g) = back.best_config(&task.key(), dev.name).unwrap();
+    assert_eq!(g, res.best_gflops());
+    assert_eq!(back.best_config_scan(&task.key(), dev.name).unwrap().1, g);
+    // the served config is a real schedule of this task
+    assert!(task.lower(&cfg).is_ok());
+    let _ = std::fs::remove_file(&path);
+}
+
+/// End-to-end transfer path (acceptance): tune source workloads into
+/// the DB, then tune a new workload warm-started from their records.
+/// At an equal (early-regime) trial budget the warm-started search must
+/// do at least as well as the cold start, seed-averaged.
+#[test]
+fn warm_start_from_db_beats_cold_start_at_equal_budget() {
+    let device = devices::sim_gpu();
+    // task A (well, two source tasks) → DB, streamed via the sink
+    let db = collect_source_db(&[4, 6], TemplateKind::Gpu, &device, 128, 0);
+    assert!(!db.is_empty(), "source runs streamed nothing");
+    let target = workloads::conv_task(7, TemplateKind::Gpu);
+
+    let mut warm_total = 0.0;
+    let mut cold_total = 0.0;
+    for seed in 0..3u64 {
+        // 64 trials: the early regime where reusing D' must pay off
+        let mut o = exp(64);
+        o.seed = seed;
+        let m = SimMeasurer::with_seed(device.clone(), 900 + seed);
+        let warm = run_method_warm(&target, &m, Method::GbtRank, &o, &db, device.name, false)
+            .expect("DB holds source records; warm path must engage");
+        let m2 = SimMeasurer::with_seed(device.clone(), 900 + seed);
+        let cold = run_method(&target, &m2, Method::GbtRank, &o);
+        assert_eq!(warm.curve.len(), cold.curve.len(), "unequal trial budgets");
+        warm_total += warm.best_gflops();
+        cold_total += cold.best_gflops();
+    }
+    assert!(
+        warm_total >= cold_total,
+        "warm-start {warm_total:.0} GFLOPS (sum over seeds) fell below cold start \
+         {cold_total:.0}"
+    );
+}
+
+/// The pipelined warm-start path: the epoch-0 snapshot is the global
+/// model (first SA round already informed), the run completes its
+/// budget, and a fixed seed reproduces it bit-for-bit.
+#[test]
+fn warm_start_pipelined_is_deterministic() {
+    let device = devices::sim_gpu();
+    let db = collect_source_db(&[6], TemplateKind::Gpu, &device, 96, 0);
+    let target = workloads::conv_task(7, TemplateKind::Gpu);
+    let o = exp(64);
+    let m = SimMeasurer::with_seed(device.clone(), 42);
+    let a = run_method_warm(&target, &m, Method::GbtRank, &o, &db, device.name, true)
+        .expect("warm pipelined path");
+    assert_eq!(a.curve.len(), 64);
+    assert!(a.best_gflops() > 0.0);
+    let m2 = SimMeasurer::with_seed(device.clone(), 42);
+    let b = run_method_warm(&target, &m2, Method::GbtRank, &o, &db, device.name, true)
+        .expect("warm pipelined path");
+    assert_eq!(a.curve, b.curve, "warm pipelined run not reproducible");
+}
+
+/// Methods without a transfer path decline the warm start instead of
+/// silently running cold inside `run_method_warm`.
+#[test]
+fn warm_start_declines_unsupported_methods() {
+    let device = devices::sim_gpu();
+    let db = Database::new();
+    let target = workloads::conv_task(7, TemplateKind::Gpu);
+    let m = SimMeasurer::with_seed(device.clone(), 1);
+    let o = exp(32);
+    // empty DB: even GBT declines
+    assert!(run_method_warm(&target, &m, Method::GbtRank, &o, &db, device.name, false)
+        .is_none());
+    // black-box baseline: declines regardless of DB content
+    let db2 = collect_source_db(&[6], TemplateKind::Gpu, &device, 64, 0);
+    assert!(run_method_warm(&target, &m, Method::Random, &o, &db2, device.name, false)
+        .is_none());
+}

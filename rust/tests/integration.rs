@@ -46,14 +46,14 @@ fn database_roundtrip_through_tuner() {
     let dev = devices::sim_gpu();
     let m = SimMeasurer::with_seed(dev.clone(), 5);
     let res = tune_gbt(task.clone(), &m, quick_opts(48, 2));
-    let mut db = Database::new();
-    db.add_run(&task, dev.name, &res.records);
+    let db = Database::new();
+    db.add_run(&task, dev.name, &res.records).unwrap();
     let dir = std::env::temp_dir().join("autotvm-int-test");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("db.jsonl");
     db.save(&path).unwrap();
     let back = Database::load(&path).unwrap();
-    assert_eq!(back.records.len(), res.records.len());
+    assert_eq!(back.len(), res.records.len());
     // best config must re-lower and re-evaluate to the recorded gflops
     let (cfg, gflops) = back.best_config(&task.key(), dev.name).unwrap();
     let prog = task.lower(&cfg).unwrap();
