@@ -13,16 +13,22 @@ use crate::expr::{IndexExpr, VarId};
 /// One loop in a chain, outermost first.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LoopLevel {
+    /// Loop variable.
     pub var: VarId,
+    /// Loop trip count.
     pub extent: i64,
+    /// Loop annotation (serial / unrolled / vectorized / bound …).
     pub kind: ForKind,
 }
 
 /// Per-(access, chain) analysis.
 #[derive(Clone, Debug)]
 pub struct AccessInfo {
+    /// Name of the accessed buffer.
     pub buffer: String,
+    /// Memory scope of the accessed buffer.
     pub scope: MemScope,
+    /// Whether this access is the store target (vs a load).
     pub is_write: bool,
     /// Stride (elements) of each chain loop's variable in the flattened
     /// buffer index; `strides[l]` corresponds to `chain.loops[l]`.
@@ -51,11 +57,13 @@ impl AccessInfo {
 /// One store statement with its loop context.
 #[derive(Clone, Debug)]
 pub struct StoreChain {
+    /// Enclosing loops, outermost first.
     pub loops: Vec<LoopLevel>,
     /// Store target first, then loads in evaluation order.
     pub accesses: Vec<AccessInfo>,
     /// Arithmetic ops per innermost iteration (incl. the accumulate add).
     pub value_flops: u64,
+    /// Whether the store accumulates into its target (`+=`).
     pub accumulate: bool,
     /// Whether the value contains a padding guard.
     pub has_guard: bool,
@@ -68,6 +76,7 @@ pub struct StoreChain {
 }
 
 impl StoreChain {
+    /// The access of `buffer` in this chain, if it reads/writes it.
     pub fn access(&self, buffer: &str) -> Option<&AccessInfo> {
         self.accesses.iter().find(|a| a.buffer == buffer)
     }
@@ -76,6 +85,7 @@ impl StoreChain {
 /// Full program analysis.
 #[derive(Clone, Debug)]
 pub struct ProgramAnalysis {
+    /// One entry per store statement, in program order.
     pub chains: Vec<StoreChain>,
 }
 

@@ -14,8 +14,11 @@ use crate::expr::{IndexExpr, VarId, VarPool};
 /// Loop annotation — the `s` choices visible in the final program.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ForKind {
+    /// Plain sequential loop.
     Serial,
+    /// Fully unrolled loop.
     Unrolled,
+    /// SIMD-vectorized loop.
     Vectorized,
     /// CPU multi-core parallel loop.
     Parallel,
@@ -26,8 +29,10 @@ pub enum ForKind {
 }
 
 impl ForKind {
+    /// Number of annotation kinds (one-hot feature width).
     pub const COUNT: usize = 6;
 
+    /// Position of this kind in the one-hot feature encoding.
     pub fn one_hot_index(self) -> usize {
         match self {
             ForKind::Serial => 0,
@@ -39,6 +44,7 @@ impl ForKind {
         }
     }
 
+    /// Short keyword used by the pretty-printer.
     pub fn short(self) -> &'static str {
         match self {
             ForKind::Serial => "for",
@@ -65,15 +71,21 @@ pub enum MemScope {
 /// A buffer referenced by the program.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BufferDecl {
+    /// Buffer name (unique within the program).
     pub name: String,
+    /// Row-major dimensions.
     pub shape: Vec<i64>,
+    /// Memory scope the buffer lives in.
     pub scope: MemScope,
 }
 
 impl BufferDecl {
+    /// Total number of elements.
     pub fn numel(&self) -> i64 {
         self.shape.iter().product()
     }
+
+    /// Row-major strides (elements).
     pub fn strides(&self) -> Vec<i64> {
         let mut s = vec![1i64; self.shape.len()];
         for d in (0..self.shape.len().saturating_sub(1)).rev() {
@@ -86,19 +98,38 @@ impl BufferDecl {
 /// Scalar value expression in the lowered program.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// Constant.
     Imm(f64),
     /// `buffer[indices...]`
-    Load { buffer: String, indices: Vec<IndexExpr> },
+    Load {
+        /// Buffer read from.
+        buffer: String,
+        /// One affine index per dimension.
+        indices: Vec<IndexExpr>,
+    },
+    /// Addition.
     Add(Box<Value>, Box<Value>),
+    /// Subtraction.
     Sub(Box<Value>, Box<Value>),
+    /// Multiplication.
     Mul(Box<Value>, Box<Value>),
+    /// Elementwise maximum.
     Max(Box<Value>, Box<Value>),
+    /// `max(x, 0)` activation.
     Relu(Box<Value>),
     /// Bounds-guarded value (padding): in-bounds value, else `else_`.
-    Guarded { bounds: Vec<(IndexExpr, i64, i64)>, value: Box<Value>, else_: Box<Value> },
+    Guarded {
+        /// `(index, lo, hi)` half-open bounds that must all hold.
+        bounds: Vec<(IndexExpr, i64, i64)>,
+        /// Value when every bound holds.
+        value: Box<Value>,
+        /// Value otherwise (the padding constant).
+        else_: Box<Value>,
+    },
 }
 
 impl Value {
+    /// Convenience constructor for [`Value::Load`].
     pub fn load(buffer: impl Into<String>, indices: Vec<IndexExpr>) -> Self {
         Value::Load { buffer: buffer.into(), indices }
     }
@@ -142,25 +173,54 @@ impl Value {
 /// Statement of the lowered program.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Stmt {
-    For { var: VarId, extent: i64, kind: ForKind, body: Vec<Stmt> },
+    /// Annotated counted loop over `body`.
+    For {
+        /// Loop variable.
+        var: VarId,
+        /// Trip count.
+        extent: i64,
+        /// Loop annotation.
+        kind: ForKind,
+        /// Loop body.
+        body: Vec<Stmt>,
+    },
     /// `buffer[indices...] = value` (or `+=` when `accumulate`).
-    Store { buffer: String, indices: Vec<IndexExpr>, value: Value, accumulate: bool },
+    Store {
+        /// Buffer written to.
+        buffer: String,
+        /// One affine index per dimension.
+        indices: Vec<IndexExpr>,
+        /// Stored value expression.
+        value: Value,
+        /// `+=` instead of `=`.
+        accumulate: bool,
+    },
     /// Declare an on-chip buffer live for `body`.
-    Alloc { buffer: String, body: Vec<Stmt> },
+    Alloc {
+        /// The declared buffer's name.
+        buffer: String,
+        /// Statements the buffer is live for.
+        body: Vec<Stmt>,
+    },
 }
 
 /// A complete lowered tensor program: `x = g(e, s)`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Program {
+    /// Program (operator) name.
     pub name: String,
+    /// Top-level statements.
     pub stmts: Vec<Stmt>,
+    /// All buffers the program references.
     pub buffers: Vec<BufferDecl>,
+    /// Variable pool resolving [`VarId`]s to names.
     pub vars: VarPool,
     /// Total useful flops of the underlying operator (for GFLOPS).
     pub flops: u64,
 }
 
 impl Program {
+    /// Look up a buffer declaration by name.
     pub fn buffer(&self, name: &str) -> Option<&BufferDecl> {
         self.buffers.iter().find(|b| b.name == name)
     }

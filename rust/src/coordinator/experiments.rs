@@ -18,6 +18,7 @@ use crate::schedule::template::{Task, TemplateKind};
 use crate::sim::devices;
 use crate::sim::DeviceModel;
 use crate::tuner::db::Database;
+use crate::tuner::scheduler::{AllocPolicy, SchedulerOptions, TaskScheduler};
 use crate::tuner::{tune_ga, tune_random, DbSink, TuneOptions, TuneResult, Tuner};
 use crate::workloads;
 
@@ -26,8 +27,11 @@ use crate::workloads;
 pub struct ExpOpts {
     /// Measurement trials per tuning run.
     pub trials: usize,
+    /// Measurement batch size.
     pub batch: usize,
+    /// Simulated-annealing exploration budget.
     pub sa: SaParams,
+    /// Seed of every RNG stream.
     pub seed: u64,
     /// Paper-scale budgets (800 trials, full SA).
     pub full: bool,
@@ -60,6 +64,7 @@ impl Default for ExpOpts {
 }
 
 impl ExpOpts {
+    /// The paper's experiment configuration (800 trials, full SA).
     pub fn paper_scale() -> Self {
         ExpOpts {
             trials: 800,
@@ -95,22 +100,32 @@ impl ExpOpts {
 /// Tuning method axis of Figs. 4–7.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
+    /// Uniform random search.
     Random,
+    /// Random search with a 2× measurement budget (Fig. 4's `random_x2`).
     RandomX2,
+    /// Genetic-algorithm black-box search.
     Ga,
+    /// GA with a 2× measurement budget.
     GaX2,
+    /// GBT cost model, rank objective (the paper's default).
     GbtRank,
+    /// GBT cost model, regression objective.
     GbtReg,
     /// context-encoded neural model via PJRT (needs artifacts)
     NeuralRank,
+    /// Neural model with the regression objective.
     NeuralReg,
     /// bootstrap-ensemble GBT with an acquisition function
     EnsembleMean,
+    /// Ensemble with UCB acquisition.
     EnsembleUcb,
+    /// Ensemble with expected-improvement acquisition.
     EnsembleEi,
 }
 
 impl Method {
+    /// CLI / CSV name of the method.
     pub fn name(self) -> &'static str {
         match self {
             Method::Random => "random",
@@ -664,7 +679,11 @@ pub fn fig10(opts: &ExpOpts, device: &DeviceModel) -> Vec<(String, f64, f64, f64
 }
 
 /// Fig. 11: end-to-end network latency, AutoTVM (fused + tuned) vs the
-/// vendor baseline (unfused + fixed schedules).
+/// vendor baseline (unfused + fixed schedules). The AutoTVM side runs
+/// through the graph-level [`TaskScheduler`]: one global budget of
+/// `tasks × trials`, allocated to tasks by expected end-to-end gain,
+/// with every trial streamed into a shared DB so later tasks warm-start
+/// from earlier ones.
 pub fn fig11(
     opts: &ExpOpts,
     device: &DeviceModel,
@@ -678,25 +697,35 @@ pub fn fig11(
     println!("fig,network,baseline_ms,autotvm_ms,speedup");
     let mut out = Vec::new();
     for &name in nets {
-        let graph = match name {
-            "resnet18" => workloads::resnet18(),
-            "mobilenet" => workloads::mobilenet(),
-            "dqn" => workloads::dqn(),
-            "lstm" => workloads::lstm_lm(),
-            "dcgan" => workloads::dcgan(),
-            other => panic!("unknown network {other}"),
-        };
+        let graph = workloads::network(name)
+            .unwrap_or_else(|| panic!("unknown network {name}"));
         // baseline: unfused graph + vendor fixed schedules
         let (base_s, _) = graph
             .latency(device, template, |t| Some(crate::baselines::vendor_config(t)))
             .expect("baseline latency");
-        // AutoTVM: fused graph + per-task tuning
+        // AutoTVM: fused graph + scheduler-allocated per-task tuning
         let fused = graph.fuse();
+        let sched = TaskScheduler::from_graph(
+            &fused,
+            device,
+            template,
+            SchedulerOptions {
+                budget: 0, // set below: tasks × per-task trials
+                slice: opts.batch,
+                policy: AllocPolicy::Gradient,
+                ..Default::default()
+            },
+        )
+        .expect("graph decomposition");
+        let n_tasks = sched.plans().len();
+        let sched = sched.with_budget(n_tasks * opts.trials);
+        let db = Database::new();
         let measurer = SimMeasurer::with_seed(device.clone(), 8000);
-        let tuned =
-            crate::graph::tune_graph_tasks(&fused, template, &measurer, opts.tune_options());
+        sched.run_tuning(&measurer, &db, opts.tune_options(), false, true);
         let (auto_s, _) = fused
-            .latency(device, template, |t| tuned.get(&t.key()).cloned())
+            .latency(device, template, |t| {
+                db.best_config(&t.key(), device.name).map(|(e, _)| e)
+            })
             .expect("autotvm latency");
         println!(
             "fig11,{name},{:.3},{:.3},{:.2}",

@@ -11,7 +11,13 @@
 //!   `--warm-start` forces the attempt).
 //! * `tune-all` — tune C1–C12 into the shared DB; each task after the
 //!   first warm-starts from its predecessors' records (the §4
-//!   cross-workload service flow).
+//!   cross-workload service flow). `--alloc gradient` replaces the
+//!   fixed per-task budget with the graph-level scheduler.
+//! * `tune-graph` — tune a whole network end-to-end: the
+//!   [`TaskScheduler`](crate::tuner::scheduler::TaskScheduler) spreads
+//!   one global trial budget across the network's tasks by expected
+//!   marginal reduction in end-to-end latency (`--alloc
+//!   uniform|gradient`), then reports tuned vs vendor latency.
 //! * `e2e` — end-to-end network latency vs the vendor baseline.
 //! * `fig` — regenerate a paper figure (4–11).
 //! * `pjrt-demo` — tune the Pallas matmul tile family where `f(x)` is
@@ -23,6 +29,7 @@ use crate::measure::{Measurer, SimMeasurer};
 use crate::schedule::template::TemplateKind;
 use crate::sim::devices;
 use crate::tuner::db::Database;
+use crate::tuner::scheduler::{AllocPolicy, SchedulerOptions, TaskScheduler};
 use crate::tuner::{DbSink, TuneOptions};
 use crate::workloads;
 use anyhow::{bail, Context, Result};
@@ -31,11 +38,13 @@ use experiments::{ExpOpts, Method};
 /// Minimal flag parser: `--key value` and `--flag` pairs after the
 /// subcommand (clap is not vendored in the offline build).
 pub struct Args {
+    /// Non-flag arguments, in order.
     pub positional: Vec<String>,
     flags: std::collections::HashMap<String, String>,
 }
 
 impl Args {
+    /// Parse an argv tail into flags and positionals.
     pub fn parse(argv: &[String]) -> Args {
         let mut positional = Vec::new();
         let mut flags = std::collections::HashMap::new();
@@ -60,14 +69,17 @@ impl Args {
         Args { positional, flags }
     }
 
+    /// Value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// `--key` parsed as usize, or `default`.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Whether `--key` was passed (with or without a value).
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
@@ -103,6 +115,14 @@ fn method_of(args: &Args) -> Result<Method> {
         "neural_reg" => Method::NeuralReg,
         other => bail!("unknown method {other}"),
     })
+}
+
+fn alloc_of(args: &Args, default: AllocPolicy) -> Result<AllocPolicy> {
+    match args.get("alloc") {
+        None => Ok(default),
+        Some(s) => AllocPolicy::parse(s)
+            .with_context(|| format!("unknown --alloc {s}; try uniform/gradient")),
+    }
 }
 
 fn exp_opts(args: &Args) -> ExpOpts {
@@ -228,6 +248,44 @@ pub fn run(argv: &[String]) -> Result<()> {
             // Cross-workload service flow: C2 warm-starts from C1's
             // streamed records, C3 from C1–C2, … (§4 reuse of D).
             let warm_enabled = !args.has("no-warm-start");
+            // --alloc gradient hands the whole C1–C12 budget to the
+            // task scheduler instead of fixed per-task shares.
+            if alloc_of(&args, AllocPolicy::Uniform)? == AllocPolicy::Gradient {
+                let template = template_of(&dev);
+                let tasks: Vec<crate::schedule::template::Task> =
+                    (1..=12).map(|wl| workloads::conv_task(wl, template)).collect();
+                let budget = args.get_usize("budget", tasks.len() * opts.trials);
+                let sched = TaskScheduler::for_tasks(
+                    tasks,
+                    SchedulerOptions {
+                        budget,
+                        slice: args.get_usize("slice", opts.batch),
+                        policy: AllocPolicy::Gradient,
+                        verbose: true,
+                        ..Default::default()
+                    },
+                );
+                let measurer = SimMeasurer::with_seed(dev.clone(), base_seed + 1);
+                println!("tune-all via gradient scheduler ({budget} trials total)");
+                let alloc = sched.run_tuning(
+                    &measurer,
+                    &db,
+                    opts.tune_options(),
+                    pipelined,
+                    warm_enabled,
+                );
+                for (i, plan) in sched.plans().iter().enumerate() {
+                    println!(
+                        "C{}: {} trials, best {:.3} ms  ({})",
+                        i + 1,
+                        alloc.trials[i],
+                        alloc.secs[i] * 1e3,
+                        plan.task.key()
+                    );
+                }
+                println!("tuning DB: {path} ({} records)", db.len());
+                return Ok(());
+            }
             for wl in 1..=12 {
                 let task = workloads::conv_task(wl, template_of(&dev));
                 let measurer = SimMeasurer::with_seed(dev.clone(), base_seed + wl as u64);
@@ -257,6 +315,87 @@ pub fn run(argv: &[String]) -> Result<()> {
                 println!("C{wl}: best {:.1} GFLOPS", res.best_gflops());
             }
             println!("tuning DB: {path} ({} records)", db.len());
+        }
+        "tune-graph" => {
+            let dev = device_of(&args)?;
+            let template = template_of(&dev);
+            let name = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .or_else(|| args.get("network"))
+                .unwrap_or("resnet18")
+                .to_string();
+            let graph = workloads::network(&name).with_context(|| {
+                format!("unknown network {name}; try resnet18/mobilenet/dqn/lstm/dcgan")
+            })?;
+            let opts = exp_opts(&args);
+            let policy = alloc_of(&args, AllocPolicy::Gradient)?;
+            // AutoTVM compiles the fused graph (§6.3)
+            let fused = graph.fuse();
+            let sched = TaskScheduler::from_graph(
+                &fused,
+                &dev,
+                template,
+                SchedulerOptions {
+                    budget: 0, // set below once the task count is known
+                    slice: args.get_usize("slice", opts.batch),
+                    policy,
+                    verbose: args.has("verbose"),
+                    ..Default::default()
+                },
+            )?;
+            let budget =
+                args.get_usize("budget", sched.plans().len().max(1) * opts.trials);
+            let sched = sched.with_budget(budget);
+            let db = match args.get("db") {
+                Some(p) => Database::open(p)?,
+                None => Database::new(),
+            };
+            let measurer = SimMeasurer::with_seed(dev.clone(), opts.seed + 1);
+            println!(
+                "tuning {name} end-to-end on {} — {} tasks, {budget} trials total, \
+                 {} allocation",
+                dev.name,
+                sched.plans().len(),
+                policy.name()
+            );
+            let alloc = sched.run_tuning(
+                &measurer,
+                &db,
+                opts.tune_options(),
+                args.has("pipeline"),
+                !args.has("no-warm-start"),
+            );
+            println!("task                                    weight  trials  best ms");
+            for (i, plan) in sched.plans().iter().enumerate() {
+                println!(
+                    "{:<40} {:>5}  {:>6}  {:>8.4}",
+                    plan.task.key(),
+                    plan.weight,
+                    alloc.trials[i],
+                    alloc.secs[i] * 1e3
+                );
+            }
+            // end-to-end: vendor baseline on the unfused graph vs tuned
+            // configs (served from the DB) on the fused graph
+            let (base_s, _) = graph
+                .latency(&dev, template, |t| Some(crate::baselines::vendor_config(t)))?;
+            let (auto_s, _) = fused.latency(&dev, template, |t| {
+                db.best_config(&t.key(), dev.name).map(|(e, _)| e)
+            })?;
+            println!(
+                "end-to-end: vendor {:.3} ms, autotvm {:.3} ms ({:.2}x), \
+                 scheduler estimate {:.3} ms (fixed glue {:.3} ms)",
+                base_s * 1e3,
+                auto_s * 1e3,
+                base_s / auto_s,
+                alloc.est_latency * 1e3,
+                sched.fixed_secs() * 1e3
+            );
+            if let Some(path) = args.get("db") {
+                println!("tuning DB: {path} ({} records)", db.len());
+            }
         }
         "e2e" => {
             let dev = device_of(&args)?;
@@ -363,7 +502,10 @@ USAGE:
                     [--pipeline] [--depth D] [--replicas R] \\
                     [--warm-start] [--no-warm-start]
   autotvm tune-all  --device sim-gpu [--trials N] [--db file.jsonl] \\
-                    [--pipeline] [--no-warm-start]
+                    [--pipeline] [--no-warm-start] [--alloc uniform|gradient]
+  autotvm tune-graph <resnet18|mobilenet|dqn|lstm|dcgan> --device sim-gpu \\
+                    [--budget N] [--slice S] [--alloc uniform|gradient] \\
+                    [--db file.jsonl] [--pipeline] [--no-warm-start] [--verbose]
   autotvm e2e       --network resnet18 --device sim-gpu [--trials N]
   autotvm fig <4|5|6|7|8|9|10|11> [--full] [--all-workloads] [--neural] [--device D]
   autotvm pjrt-demo [--trials N]
@@ -372,7 +514,12 @@ devices: sim-gpu (TITAN-X-class), sim-cpu (A53-class), sim-mali, sim-tpu
 methods: random, ga, gbt_rank, gbt_reg, neural, neural_reg
 
 --db opens a WAL-backed tuning DB: trials stream in live, and new tasks
-warm-start a transfer model from other tasks' records by default."
+warm-start a transfer model from other tasks' records by default.
+
+tune-graph spreads one global trial budget across a network's tasks:
+--alloc gradient (default) allocates each round-slice to the task with
+the highest predicted end-to-end latency reduction; --alloc uniform is
+the equal-shares baseline."
     );
 }
 

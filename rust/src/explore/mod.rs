@@ -2,6 +2,18 @@
 //! over the config space with the cost model as energy, diversity-aware
 //! batch selection (Eq. 3), ε-greedy random injection — plus the
 //! black-box baselines of Fig. 4 (random search, genetic algorithm).
+//!
+//! Invariants:
+//! * **Chain persistence** — [`ParallelSa`] keeps its Markov-chain
+//!   states across cost-model updates (and, via the incremental tuners,
+//!   across budget slices); only the energy function changes between
+//!   passes.
+//! * **Determinism** — every stochastic choice draws from a caller-
+//!   provided seeded [`Rng`]; candidate collection breaks score ties by
+//!   insertion index, so results are independent of thread scheduling.
+//! * **No re-proposals** — selection operates on candidates the caller
+//!   has not measured before; dedup is the tuner's
+//!   [`BatchProposer`](crate::tuner::BatchProposer) contract.
 
 use crate::schedule::space::{ConfigEntity, ConfigSpace};
 use crate::util::Rng;
@@ -23,10 +35,13 @@ impl<F: Fn(&[ConfigEntity]) -> Vec<f64>> Scorer for F {
 /// ≤500 steps per run).
 #[derive(Clone, Debug)]
 pub struct SaParams {
+    /// Parallel Markov chains.
     pub n_chains: usize,
+    /// Steps per chain per SA pass.
     pub n_steps: usize,
     /// Initial and final temperature of a geometric schedule.
     pub t_start: f64,
+    /// Final temperature of the geometric schedule.
     pub t_end: f64,
 }
 
@@ -39,6 +54,7 @@ impl Default for SaParams {
 /// Persistent parallel simulated annealing (§3.3: "we make the states of
 /// the Markov chains persistent across f̂ updates").
 pub struct ParallelSa {
+    /// The annealing schedule.
     pub params: SaParams,
     chains: Vec<ConfigEntity>,
     chain_scores: Vec<f64>,
@@ -46,6 +62,7 @@ pub struct ParallelSa {
 }
 
 impl ParallelSa {
+    /// Fresh (uninitialized) chains; the first pass seeds them randomly.
     pub fn new(params: SaParams) -> Self {
         ParallelSa { params, chains: Vec::new(), chain_scores: Vec::new(), initialized: false }
     }
@@ -199,13 +216,17 @@ pub fn random_batch(
 /// parent selection, knob-wise crossover + mutation. Each generation
 /// proposes one measurement batch.
 pub struct Genetic {
+    /// Individuals per generation (one measurement batch).
     pub population: usize,
+    /// Top individuals preserved across generations.
     pub elite: usize,
+    /// Per-knob mutation probability.
     pub mutation_prob: f64,
     pool: Vec<(ConfigEntity, f64)>,
 }
 
 impl Genetic {
+    /// GA with elite = population/4 and 0.3 mutation probability.
     pub fn new(population: usize) -> Self {
         Genetic { population, elite: population / 4, mutation_prob: 0.3, pool: Vec::new() }
     }

@@ -17,24 +17,29 @@ pub struct VarPool {
 }
 
 impl VarPool {
+    /// Empty pool.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Intern a new variable, returning its id.
     pub fn fresh(&mut self, name: impl Into<String>) -> VarId {
         let id = self.names.len() as VarId;
         self.names.push(name.into());
         id
     }
 
+    /// Name of variable `v`.
     pub fn name(&self, v: VarId) -> &str {
         &self.names[v as usize]
     }
 
+    /// Number of interned variables.
     pub fn len(&self) -> usize {
         self.names.len()
     }
 
+    /// Whether the pool is empty.
     pub fn is_empty(&self) -> bool {
         self.names.is_empty()
     }
@@ -43,20 +48,24 @@ impl VarPool {
 /// An affine index expression `c0 + Σ c_v · v`.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct IndexExpr {
+    /// The constant term `c0`.
     pub constant: i64,
     /// Sorted (var, coefficient) pairs; coefficients are never zero.
     pub terms: Vec<(VarId, i64)>,
 }
 
 impl IndexExpr {
+    /// The constant expression `c`.
     pub fn constant(c: i64) -> Self {
         Self { constant: c, terms: vec![] }
     }
 
+    /// The expression `v`.
     pub fn var(v: VarId) -> Self {
         Self { constant: 0, terms: vec![(v, 1)] }
     }
 
+    /// The expression `c·v`.
     pub fn scaled_var(v: VarId, c: i64) -> Self {
         if c == 0 {
             Self::constant(0)
@@ -74,6 +83,7 @@ impl IndexExpr {
             .unwrap_or(0)
     }
 
+    /// Sum of two affine expressions.
     pub fn add(&self, other: &IndexExpr) -> IndexExpr {
         // merge two sorted term lists (hot path: called throughout
         // lowering; avoids hashing — see EXPERIMENTS.md §Perf)
@@ -105,6 +115,7 @@ impl IndexExpr {
         IndexExpr { constant: self.constant + other.constant, terms }
     }
 
+    /// Multiply every term by `k`.
     pub fn scale(&self, k: i64) -> IndexExpr {
         if k == 0 {
             return IndexExpr::constant(0);
@@ -115,6 +126,7 @@ impl IndexExpr {
         }
     }
 
+    /// Add a constant `k`.
     pub fn offset(&self, k: i64) -> IndexExpr {
         IndexExpr { constant: self.constant + k, terms: self.terms.clone() }
     }
@@ -143,10 +155,12 @@ impl IndexExpr {
                 .sum::<i64>()
     }
 
+    /// Whether the expression has no variable terms.
     pub fn is_constant(&self) -> bool {
         self.terms.is_empty()
     }
 
+    /// Human-readable form using the pool's variable names.
     pub fn display(&self, pool: &VarPool) -> String {
         let mut parts = Vec::new();
         for (v, c) in &self.terms {

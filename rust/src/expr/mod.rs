@@ -16,11 +16,14 @@ pub use index::{IndexExpr, VarId, VarPool};
 /// A typed tensor placeholder (an input of the computation).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorSpec {
+    /// Tensor (buffer) name.
     pub name: String,
+    /// Row-major dimensions.
     pub shape: Vec<i64>,
 }
 
 impl TensorSpec {
+    /// Placeholder with a name and shape.
     pub fn new(name: impl Into<String>, shape: &[i64]) -> Self {
         Self { name: name.into(), shape: shape.to_vec() }
     }
@@ -44,23 +47,31 @@ impl TensorSpec {
 /// reduction (commutative accumulate).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum IterKind {
+    /// Parallelizable output axis.
     Spatial,
+    /// Commutative reduction axis.
     Reduce,
 }
 
 /// One iteration axis of a compute definition.
 #[derive(Clone, Debug, PartialEq)]
 pub struct IterVar {
+    /// Interned variable id.
     pub var: VarId,
+    /// Axis name (e.g. `oc`, `kh`).
     pub name: String,
+    /// Axis extent.
     pub extent: i64,
+    /// Spatial vs reduction.
     pub kind: IterKind,
 }
 
 /// A read `T[i_0, ..., i_{r-1}]` of an input tensor.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Access {
+    /// Tensor read from.
     pub tensor: String,
+    /// One affine index per dimension.
     pub indices: Vec<IndexExpr>,
 }
 
@@ -71,9 +82,13 @@ pub enum BodyExpr {
     Load(Access),
     /// Immediate constant.
     Imm(f64),
+    /// Addition.
     Add(Box<BodyExpr>, Box<BodyExpr>),
+    /// Subtraction.
     Sub(Box<BodyExpr>, Box<BodyExpr>),
+    /// Multiplication.
     Mul(Box<BodyExpr>, Box<BodyExpr>),
+    /// Elementwise maximum.
     Max(Box<BodyExpr>, Box<BodyExpr>),
     /// `max(x, 0)` — lets us fuse ReLU epilogues.
     Relu(Box<BodyExpr>),
@@ -82,6 +97,7 @@ pub enum BodyExpr {
 }
 
 impl BodyExpr {
+    /// Convenience constructor for [`BodyExpr::Load`].
     pub fn load(tensor: impl Into<String>, indices: Vec<IndexExpr>) -> Self {
         BodyExpr::Load(Access { tensor: tensor.into(), indices })
     }
@@ -129,6 +145,7 @@ impl BodyExpr {
 /// Index predicate for padding selects: `lo <= e < hi` conjunctions.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PredExpr {
+    /// `(index, lo, hi)` half-open bounds that must all hold.
     pub bounds: Vec<(IndexExpr, i64, i64)>,
 }
 
@@ -142,6 +159,7 @@ pub enum Combiner {
 }
 
 impl Combiner {
+    /// The combiner's identity element.
     pub fn identity(self) -> f64 {
         match self {
             Combiner::Sum => 0.0,
@@ -155,22 +173,31 @@ impl Combiner {
 /// Output element `output[axes...] = reduce(body)` over `reduce_axes`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ComputeDef {
+    /// Operator name (encodes shape parameters; the task key).
     pub name: String,
+    /// The produced tensor.
     pub output: TensorSpec,
+    /// Input tensor placeholders.
     pub inputs: Vec<TensorSpec>,
+    /// Spatial (output) axes.
     pub axes: Vec<IterVar>,
+    /// Reduction axes.
     pub reduce_axes: Vec<IterVar>,
+    /// Per-element value expression.
     pub body: BodyExpr,
+    /// How reduced values combine.
     pub combiner: Combiner,
     /// Fused elementwise epilogue applied to the accumulated value
     /// (e.g. ReLU) — the operator-fusion hook used by the graph layer.
     pub epilogue: Option<Epilogue>,
+    /// Variable pool resolving axis [`VarId`]s.
     pub vars: VarPool,
 }
 
 /// Elementwise epilogues that can be fused onto a reduction output.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Epilogue {
+    /// `max(x, 0)`.
     Relu,
     /// Add a per-channel bias then ReLU (bias read cost is negligible and
     /// modeled as one extra flop).
@@ -195,6 +222,7 @@ impl ComputeDef {
         self.axes.iter().chain(self.reduce_axes.iter())
     }
 
+    /// Look up an axis (spatial or reduce) by name.
     pub fn find_axis(&self, name: &str) -> Option<&IterVar> {
         self.all_axes().find(|a| a.name == name)
     }

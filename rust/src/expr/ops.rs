@@ -42,21 +42,33 @@ pub fn matmul(n: i64, m: i64, k: i64) -> ComputeDef {
 /// Parameters of a 2-D convolution workload (NCHW, OIHW kernel).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Conv2dParams {
+    /// Batch size.
     pub n: i64,
+    /// Input height.
     pub h: i64,
+    /// Input width.
     pub w: i64,
+    /// Input channels.
     pub ic: i64,
+    /// Output channels.
     pub oc: i64,
+    /// Kernel height.
     pub kh: i64,
+    /// Kernel width.
     pub kw: i64,
+    /// Stride (both dims).
     pub stride: i64,
+    /// Zero padding (both dims).
     pub pad: i64,
 }
 
 impl Conv2dParams {
+    /// Output height.
     pub fn out_h(&self) -> i64 {
         (self.h + 2 * self.pad - self.kh) / self.stride + 1
     }
+
+    /// Output width.
     pub fn out_w(&self) -> i64 {
         (self.w + 2 * self.pad - self.kw) / self.stride + 1
     }

@@ -51,13 +51,18 @@ pub const CONFIG_DIM: usize = 24;
 /// tuning DB key its per-task feature caches by representation.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Representation {
+    /// Raw knob values (SMAC-style baseline; not space-invariant).
     Config,
+    /// Flattened per-loop context rows of the longest chain.
     FlatAst,
+    /// The paper's transferable context-relation features.
     ContextRelation,
+    /// FlatAst ⧺ ContextRelation ⧺ globals (in-domain default).
     Full,
 }
 
 impl Representation {
+    /// Feature-vector dimension of this representation.
     pub fn dim(self) -> usize {
         match self {
             Representation::Config => CONFIG_DIM,

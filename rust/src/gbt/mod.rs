@@ -20,17 +20,22 @@ use tree::{Binner, Tree};
 /// Row-major f32 feature matrix.
 #[derive(Clone, Debug, Default)]
 pub struct Matrix {
+    /// Row-major storage, `rows × cols`.
     pub data: Vec<f32>,
+    /// Number of rows (samples).
     pub rows: usize,
+    /// Number of columns (features).
     pub cols: usize,
 }
 
 impl Matrix {
+    /// Wrap row-major storage (length must be `rows × cols`).
     pub fn new(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), rows * cols);
         Matrix { data, rows, cols }
     }
 
+    /// Build from f64 rows (the featurizers' native output).
     pub fn from_rows(rows: &[Vec<f64>]) -> Self {
         let cols = rows.first().map_or(0, |r| r.len());
         let mut data = Vec::with_capacity(rows.len() * cols);
@@ -41,6 +46,7 @@ impl Matrix {
         Matrix { data, rows: rows.len(), cols }
     }
 
+    /// Row `i` as a feature slice.
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.cols..(i + 1) * self.cols]
@@ -50,23 +56,32 @@ impl Matrix {
 /// Training objective (§3.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Objective {
+    /// Squared-error regression on throughput labels.
     Regression,
+    /// Pairwise rank loss (the paper's default — only order matters).
     Rank,
 }
 
 /// Boosting hyper-parameters (defaults follow the paper's setup scale).
 #[derive(Clone, Debug)]
 pub struct GbtParams {
+    /// Training objective (rank vs regression).
     pub objective: Objective,
+    /// Boosting rounds.
     pub n_trees: usize,
+    /// Maximum tree depth.
     pub max_depth: usize,
+    /// Learning rate (shrinkage).
     pub eta: f64,
+    /// L2 regularization on leaf weights.
     pub lambda: f64,
+    /// Minimum hessian sum to split a node.
     pub min_child_weight: f64,
     /// Feature subsample per tree.
     pub colsample: f64,
     /// Max comparison partners per item in rank mode.
     pub rank_pairs: usize,
+    /// RNG seed for subsampling / pair sampling.
     pub seed: u64,
 }
 
@@ -89,6 +104,7 @@ impl Default for GbtParams {
 /// A trained model.
 #[derive(Clone, Debug)]
 pub struct Gbt {
+    /// Hyper-parameters the model was trained with.
     pub params: GbtParams,
     base: f64,
     trees: Vec<Tree>,
@@ -177,6 +193,7 @@ impl Gbt {
         }
     }
 
+    /// Number of trained trees.
     pub fn n_trees(&self) -> usize {
         self.trees.len()
     }
@@ -244,10 +261,12 @@ fn gradients(
 /// predictions.
 #[derive(Clone, Debug)]
 pub struct GbtEnsemble {
+    /// The bootstrap members.
     pub members: Vec<Gbt>,
 }
 
 impl GbtEnsemble {
+    /// Train `k` members, each on a bootstrap resample of the rows.
     pub fn train(x: &Matrix, y: &[f64], k: usize, params: GbtParams) -> GbtEnsemble {
         let n = x.rows;
         let mut members = Vec::with_capacity(k);

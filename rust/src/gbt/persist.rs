@@ -49,11 +49,13 @@ impl Gbt {
         Ok(Gbt { params, base, trees })
     }
 
+    /// Serialize the model to a JSON file.
     pub fn save(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
         std::fs::write(path, self.to_json().dump())?;
         Ok(())
     }
 
+    /// Load a model serialized by [`Gbt::save`].
     pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Gbt> {
         Gbt::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
     }

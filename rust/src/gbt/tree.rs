@@ -17,6 +17,7 @@ pub struct Binner {
 }
 
 impl Binner {
+    /// Learn per-feature quantile cut points from a feature matrix.
     pub fn fit(x: &Matrix, max_bins: usize) -> Binner {
         let mut cuts = Vec::with_capacity(x.cols);
         for f in 0..x.cols {
@@ -43,6 +44,7 @@ impl Binner {
     }
 
     #[inline]
+    /// Bin index of value `v` in feature column `f`.
     pub fn bin_value(&self, f: usize, v: f32) -> u8 {
         // binary search first cut > v
         let cuts = &self.cuts[f];
@@ -75,6 +77,7 @@ impl Binner {
         self.cuts[f][b as usize]
     }
 
+    /// Number of bins of feature column `f`.
     pub fn n_bins(&self, f: usize) -> usize {
         self.cuts[f].len() + 1
     }
@@ -83,15 +86,31 @@ impl Binner {
 /// Column-major binned features.
 #[derive(Clone, Debug)]
 pub struct BinnedMatrix {
+    /// One bin-index column per feature.
     pub cols: Vec<Vec<u8>>,
+    /// Number of rows (samples).
     pub rows: usize,
 }
 
 /// Tree node (public for (de)serialization in [`super::persist`]).
 #[derive(Clone, Debug)]
 pub enum Node {
-    Leaf { value: f64 },
-    Split { feature: u32, threshold: f32, left: u32, right: u32 },
+    /// Terminal node.
+    Leaf {
+        /// Predicted value (leaf weight).
+        value: f64,
+    },
+    /// Internal decision node.
+    Split {
+        /// Feature column tested.
+        feature: u32,
+        /// Go left when `x[feature] < threshold`.
+        threshold: f32,
+        /// Left child index.
+        left: u32,
+        /// Right child index.
+        right: u32,
+    },
 }
 
 /// One regression tree.
@@ -111,6 +130,8 @@ struct BuildCtx<'a> {
 }
 
 impl Tree {
+    /// Grow one tree on gradients/hessians `g`/`h` by greedy
+    /// histogram-based splitting.
     pub fn fit(
         binned: &BinnedMatrix,
         binner: &Binner,
@@ -207,6 +228,7 @@ impl Tree {
         }
     }
 
+    /// Number of nodes (leaves + splits).
     pub fn n_nodes(&self) -> usize {
         self.nodes.len()
     }

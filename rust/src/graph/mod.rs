@@ -8,7 +8,18 @@
 //!   producer reduction op, the optimization the paper highlights as
 //!   impossible for fixed-library baselines;
 //! * **latency evaluation** — sum per-node simulated latencies under a
-//!   schedule lookup (tuned database / vendor baseline / defaults).
+//!   schedule lookup (tuned database / vendor baseline / defaults);
+//! * **latency decomposition** — attribute the end-to-end latency to
+//!   deduplicated tasks weighted by node multiplicity
+//!   ([`Graph::latency_by_task`]), the objective the graph-level
+//!   trial allocator ([`crate::tuner::scheduler`]) descends.
+//!
+//! Task-key invariant: schedule lookups are always keyed by the
+//! *epilogue-free* task key — the same key [`Graph::tasks`] and
+//! [`Graph::weighted_tasks`] emit — even for nodes that carry a fused
+//! epilogue after [`Graph::fuse`]. A fused ReLU changes the lowered
+//! program (and its simulated cost) but not the knob space, so a config
+//! tuned on the bare operator applies verbatim to the fused node.
 
 use crate::expr::ops::{self, Conv2dParams};
 use crate::expr::{ComputeDef, Epilogue};
@@ -21,15 +32,53 @@ use std::collections::HashMap;
 #[derive(Clone, Debug, PartialEq)]
 pub enum OpKind {
     /// Network input (no cost).
-    Input { shape: Vec<i64> },
+    Input {
+        /// Tensor shape.
+        shape: Vec<i64>,
+    },
+    /// 2-D convolution (tunable).
     Conv2d(Conv2dParams),
+    /// Depthwise 2-D convolution (tunable).
     DepthwiseConv2d(Conv2dParams),
-    Dense { batch: i64, out_dim: i64, in_dim: i64 },
-    MaxPool { n: i64, c: i64, h: i64, w: i64, k: i64, s: i64 },
-    Relu { shape: Vec<i64> },
-    Add { shape: Vec<i64> },
+    /// Fully-connected layer (tunable).
+    Dense {
+        /// Batch size.
+        batch: i64,
+        /// Output features.
+        out_dim: i64,
+        /// Input features.
+        in_dim: i64,
+    },
+    /// Max pooling (glue).
+    MaxPool {
+        /// Batch.
+        n: i64,
+        /// Channels.
+        c: i64,
+        /// Input height.
+        h: i64,
+        /// Input width.
+        w: i64,
+        /// Window size.
+        k: i64,
+        /// Stride.
+        s: i64,
+    },
+    /// ReLU activation (glue; fusable into a tunable producer).
+    Relu {
+        /// Tensor shape.
+        shape: Vec<i64>,
+    },
+    /// Elementwise addition, e.g. a residual connection (glue).
+    Add {
+        /// Tensor shape.
+        shape: Vec<i64>,
+    },
     /// Pool/flatten glue — modeled as an elementwise pass.
-    Reduce { shape: Vec<i64> },
+    Reduce {
+        /// Tensor shape.
+        shape: Vec<i64>,
+    },
 }
 
 impl OpKind {
@@ -63,8 +112,11 @@ impl OpKind {
 /// A graph node.
 #[derive(Clone, Debug)]
 pub struct Node {
+    /// Unique node name (used in latency breakdowns).
     pub name: String,
+    /// The operator this node computes.
     pub op: OpKind,
+    /// Producer node ids.
     pub inputs: Vec<usize>,
     /// Epilogue fused into this node (set by [`Graph::fuse`]).
     pub fused_epilogue: Option<Epilogue>,
@@ -73,11 +125,14 @@ pub struct Node {
 /// A network graph.
 #[derive(Clone, Debug)]
 pub struct Graph {
+    /// Network name (e.g. `resnet18`).
     pub name: String,
+    /// Nodes in topological (insertion) order.
     pub nodes: Vec<Node>,
 }
 
 impl Graph {
+    /// Empty graph with a name.
     pub fn new(name: impl Into<String>) -> Self {
         Graph { name: name.into(), nodes: Vec::new() }
     }
@@ -157,8 +212,21 @@ impl Graph {
     /// Extract deduplicated tunable tasks (the paper's workload list;
     /// for ResNet-18 this yields exactly the C1–C12 conv2ds + dense).
     pub fn tasks(&self, template: TemplateKind) -> Vec<Task> {
-        let mut seen: HashMap<String, ()> = HashMap::new();
-        let mut tasks = Vec::new();
+        self.weighted_tasks(template).into_iter().map(|(t, _)| t).collect()
+    }
+
+    /// Deduplicated tunable tasks with their node multiplicity: how many
+    /// graph nodes lower to each task. The multiplicity is the static
+    /// per-task weight of the graph-level scheduler — a task that
+    /// appears four times (ResNet-18's C2) contributes four times its
+    /// per-invocation latency to the end-to-end number, so a GFLOPS
+    /// improvement on it is worth four times as much trial budget.
+    ///
+    /// Tasks are keyed epilogue-free (see the module docs), so fused and
+    /// unfused instances of the same operator count toward one task.
+    pub fn weighted_tasks(&self, template: TemplateKind) -> Vec<(Task, usize)> {
+        let mut index: HashMap<String, usize> = HashMap::new();
+        let mut tasks: Vec<(Task, usize)> = Vec::new();
         for n in &self.nodes {
             if !n.op.tunable() {
                 continue;
@@ -166,17 +234,74 @@ impl Graph {
             // tasks are tuned without the epilogue: a fused relu does
             // not change the search space materially
             let def = n.op.compute(None).unwrap();
-            if seen.insert(def.task_key(), ()).is_none() {
-                tasks.push(Task::new(def, template));
+            match index.get(&def.task_key()) {
+                Some(&i) => tasks[i].1 += 1,
+                None => {
+                    index.insert(def.task_key(), tasks.len());
+                    tasks.push((Task::new(def, template), 1));
+                }
             }
         }
         tasks
     }
 
+    /// Simulated latency of one node under a schedule lookup. Tunable
+    /// nodes are looked up by their epilogue-free task (the key
+    /// [`Graph::tasks`] emits) but *evaluated* with the fused definition
+    /// — a config tuned on the bare op drives the fused kernel. Glue
+    /// ops use [`quick_best`] defaults. Returns `None` for cost-free
+    /// nodes (inputs).
+    fn node_latency(
+        &self,
+        node: &Node,
+        device: &DeviceModel,
+        template: TemplateKind,
+        lookup: &mut impl FnMut(&Task) -> Option<crate::schedule::space::ConfigEntity>,
+    ) -> Option<anyhow::Result<f64>> {
+        let def = node.op.compute(node.fused_epilogue)?;
+        let task = Task::new(def, template);
+        let entity = if node.op.tunable() {
+            // lookups are keyed epilogue-free; the base task is only
+            // rebuilt when a fused epilogue makes the keys differ (the
+            // knob space is identical either way)
+            let looked_up = if node.fused_epilogue.is_some() {
+                let base =
+                    Task::new(node.op.compute(None).expect("tunable ops lower"), template);
+                lookup(&base)
+            } else {
+                lookup(&task)
+            };
+            // a config replayed from external storage may not index
+            // into this build's space; fall back instead of panicking
+            looked_up
+                .filter(|e| task.space.contains(e))
+                .unwrap_or_else(|| quick_best(&task, device, 32, 7))
+        } else {
+            quick_best(&task, device, 32, 7)
+        };
+        let run = |e: &crate::schedule::space::ConfigEntity| -> anyhow::Result<Option<f64>> {
+            Ok(device.evaluate(&task.lower(e)?).ok().map(|r| r.seconds))
+        };
+        let secs = match run(&entity) {
+            Err(e) => return Some(Err(e)),
+            Ok(Some(s)) => s,
+            // invalid lookup config → fall back to a safe default
+            Ok(None) => {
+                let e2 = quick_best(&task, device, 32, 11);
+                match run(&e2) {
+                    Err(e) => return Some(Err(e)),
+                    Ok(s) => s.unwrap_or(f64::INFINITY),
+                }
+            }
+        };
+        Some(Ok(secs))
+    }
+
     /// End-to-end latency under a schedule source.
     ///
     /// `lookup(task) -> ConfigEntity` supplies configs for tunable ops
-    /// (tuned DB or baseline); glue ops use [`quick_best`] defaults.
+    /// (tuned DB or baseline), keyed by the *epilogue-free* task (see
+    /// the module docs); glue ops use [`quick_best`] defaults.
     /// Returns (total seconds, per-node breakdown).
     pub fn latency(
         &self,
@@ -187,35 +312,97 @@ impl Graph {
         let mut total = 0.0;
         let mut breakdown = Vec::new();
         for n in &self.nodes {
-            let Some(def) = n.op.compute(n.fused_epilogue) else {
+            let Some(secs) = self.node_latency(n, device, template, &mut lookup) else {
                 continue;
             };
-            let task = Task::new(def, template);
-            let entity = if n.op.tunable() {
-                lookup(&task).unwrap_or_else(|| quick_best(&task, device, 32, 7))
-            } else {
-                quick_best(&task, device, 32, 7)
-            };
-            let prog = task.lower(&entity)?;
-            let secs = match device.evaluate(&prog) {
-                Ok(r) => r.seconds,
-                // invalid lookup config → fall back to a safe default
-                Err(_) => {
-                    let e2 = quick_best(&task, device, 32, 11);
-                    device
-                        .evaluate(&task.lower(&e2)?)
-                        .map(|r| r.seconds)
-                        .unwrap_or(f64::INFINITY)
-                }
-            };
+            let secs = secs?;
             total += secs;
             breakdown.push((n.name.clone(), secs));
         }
         Ok((total, breakdown))
     }
+
+    /// Latency of the untunable glue alone — the fixed floor of
+    /// [`Graph::latency_by_task`] without pricing any tunable node
+    /// (which would simulate a default-schedule search per node the
+    /// caller then discards).
+    pub fn fixed_latency(
+        &self,
+        device: &DeviceModel,
+        template: TemplateKind,
+    ) -> anyhow::Result<f64> {
+        let mut fixed = 0.0;
+        for n in &self.nodes {
+            if n.op.tunable() {
+                continue;
+            }
+            let Some(secs) = self.node_latency(n, device, template, &mut |_| None) else {
+                continue;
+            };
+            fixed += secs?;
+        }
+        Ok(fixed)
+    }
+
+    /// End-to-end latency decomposed by task — the scheduler's view of
+    /// the graph: each deduplicated tunable task's contribution is its
+    /// per-node latency summed over every node that lowers to it (node
+    /// multiplicity × per-invocation cost), and everything the tuner
+    /// cannot touch (pools, residual adds, unfused activations) is
+    /// lumped into a fixed term.
+    ///
+    /// `per_task` follows [`Graph::weighted_tasks`] order, so
+    /// `per_task[i]` is the weighted latency of `weighted_tasks()[i]`.
+    pub fn latency_by_task(
+        &self,
+        device: &DeviceModel,
+        template: TemplateKind,
+        mut lookup: impl FnMut(&Task) -> Option<crate::schedule::space::ConfigEntity>,
+    ) -> anyhow::Result<LatencyByTask> {
+        let weighted = self.weighted_tasks(template);
+        let index: HashMap<String, usize> =
+            weighted.iter().enumerate().map(|(i, (t, _))| (t.key(), i)).collect();
+        let mut out = LatencyByTask {
+            total: 0.0,
+            fixed: 0.0,
+            per_task: vec![0.0; weighted.len()],
+        };
+        for n in &self.nodes {
+            let Some(secs) = self.node_latency(n, device, template, &mut lookup) else {
+                continue;
+            };
+            let secs = secs?;
+            out.total += secs;
+            if n.op.tunable() {
+                let key = Task::key_for(
+                    &n.op.compute(None).expect("tunable ops lower"),
+                    template,
+                );
+                out.per_task[index[&key]] += secs;
+            } else {
+                out.fixed += secs;
+            }
+        }
+        Ok(out)
+    }
 }
 
-fn task_salt(task: &Task) -> u64 {
+/// Per-task latency decomposition of a graph (see
+/// [`Graph::latency_by_task`]).
+#[derive(Clone, Debug)]
+pub struct LatencyByTask {
+    /// End-to-end seconds (equals `fixed + per_task.sum()`).
+    pub total: f64,
+    /// Seconds spent in untunable glue ops — a floor no trial budget
+    /// can reduce.
+    pub fixed: f64,
+    /// Weighted seconds per deduplicated task, indexed like
+    /// [`Graph::weighted_tasks`].
+    pub per_task: Vec<f64>,
+}
+
+/// Stable per-task hash used to decorrelate seeds across tasks.
+pub(crate) fn task_salt(task: &Task) -> u64 {
     use std::hash::{Hash, Hasher};
     let mut h = std::collections::hash_map::DefaultHasher::new();
     task.key().hash(&mut h);
@@ -352,6 +539,96 @@ mod tests {
         assert!(total > 0.0);
         assert_eq!(breakdown.len(), g.nodes.len() - 1); // input free
         assert!((breakdown.iter().map(|(_, s)| s).sum::<f64>() - total).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_tasks_count_multiplicity() {
+        // tiny_graph has the same conv twice → one task, weight 2
+        let g = tiny_graph();
+        let w = g.weighted_tasks(TemplateKind::Gpu);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].1, 2);
+        // tasks() is the weight-stripped view
+        assert_eq!(g.tasks(TemplateKind::Gpu).len(), 1);
+    }
+
+    #[test]
+    fn latency_by_task_attributes_multiplicity_and_fixed_cost() {
+        let g = tiny_graph();
+        let dev = sim_cpu();
+        let dec = g.latency_by_task(&dev, TemplateKind::Cpu, |_| None).unwrap();
+        let (total, breakdown) = g.latency(&dev, TemplateKind::Cpu, |_| None).unwrap();
+        // decomposition sums to the plain latency
+        assert!((dec.total - total).abs() < 1e-12);
+        assert!(
+            (dec.fixed + dec.per_task.iter().sum::<f64>() - dec.total).abs() < 1e-12
+        );
+        // the duplicated conv's bucket holds both node contributions
+        assert_eq!(dec.per_task.len(), 1);
+        let conv_nodes: f64 = breakdown
+            .iter()
+            .filter(|(n, _)| n.starts_with("conv"))
+            .map(|(_, s)| s)
+            .sum();
+        assert!((dec.per_task[0] - conv_nodes).abs() < 1e-12);
+        // untunable glue (relus + residual add) is a nonzero fixed floor
+        assert!(dec.fixed > 0.0);
+        // the glue-only fast path agrees with the full decomposition
+        assert_eq!(g.fixed_latency(&dev, TemplateKind::Cpu).unwrap(), dec.fixed);
+    }
+
+    #[test]
+    fn untunable_only_graph_is_all_fixed_cost() {
+        let mut g = Graph::new("glue");
+        let input = g.add("data", OpKind::Input { shape: vec![1, 8, 8, 8] }, &[]);
+        let _pool =
+            g.add("pool", OpKind::MaxPool { n: 1, c: 8, h: 8, w: 8, k: 2, s: 2 }, &[input]);
+        let dev = sim_cpu();
+        let dec = g.latency_by_task(&dev, TemplateKind::Cpu, |_| None).unwrap();
+        assert!(g.tasks(TemplateKind::Cpu).is_empty());
+        assert!(dec.per_task.is_empty());
+        assert!(dec.fixed > 0.0);
+        assert_eq!(dec.fixed, dec.total);
+    }
+
+    #[test]
+    fn empty_graph_edge_cases() {
+        let g = Graph::new("empty");
+        assert!(g.tasks(TemplateKind::Gpu).is_empty());
+        let f = g.fuse();
+        assert!(f.nodes.is_empty());
+        let dev = sim_gpu();
+        let (total, breakdown) = g.latency(&dev, TemplateKind::Gpu, |_| None).unwrap();
+        assert_eq!(total, 0.0);
+        assert!(breakdown.is_empty());
+        let dec = g.latency_by_task(&dev, TemplateKind::Gpu, |_| None).unwrap();
+        assert_eq!((dec.total, dec.fixed), (0.0, 0.0));
+        assert!(dec.per_task.is_empty());
+    }
+
+    #[test]
+    fn fused_nodes_are_looked_up_by_epilogue_free_key() {
+        // regression: tuned configs used to miss fused nodes because the
+        // lookup key carried the `_relu` epilogue suffix
+        let mut g = Graph::new("chain");
+        let input = g.add("data", OpKind::Input { shape: vec![1, 16, 16, 16] }, &[]);
+        let p = Conv2dParams {
+            n: 1, h: 16, w: 16, ic: 16, oc: 16, kh: 3, kw: 3, stride: 1, pad: 1,
+        };
+        let c = g.add("conv", OpKind::Conv2d(p), &[input]);
+        let _r = g.add("relu", OpKind::Relu { shape: vec![1, 16, 16, 16] }, &[c]);
+        let f = g.fuse();
+        assert!(f.nodes.iter().any(|n| n.fused_epilogue.is_some()));
+        let expected: Vec<String> =
+            g.tasks(TemplateKind::Gpu).iter().map(|t| t.key()).collect();
+        let dev = sim_gpu();
+        let mut seen = Vec::new();
+        f.latency(&dev, TemplateKind::Gpu, |t| {
+            seen.push(t.key());
+            None
+        })
+        .unwrap();
+        assert_eq!(seen, expected, "fused node must be keyed like tasks()");
     }
 
     #[test]

@@ -29,10 +29,18 @@
 //!   record streaming from every loop and automatic cross-workload
 //!   transfer warm starts,
 //! * a mini graph compiler for end-to-end workloads ([`graph`],
-//!   [`workloads`], [`baselines`]).
+//!   [`workloads`], [`baselines`]),
+//! * the graph-level task scheduler ([`tuner::scheduler`]): one global
+//!   trial budget spread across a network's tasks by expected marginal
+//!   reduction in end-to-end latency (gradient/bandit-style with an
+//!   ε starvation floor), closing the loop graph → tasks → tuner → db →
+//!   graph latency.
 //!
-//! See `DESIGN.md` for the paper → module map and `EXPERIMENTS.md` for
-//! reproduced results.
+//! See `README.md` for the quickstart and the paper-section → module
+//! map, and `docs/ARCHITECTURE.md` for the data-flow and determinism
+//! contracts.
+
+#![warn(missing_docs)]
 
 pub mod ast;
 pub mod baselines;

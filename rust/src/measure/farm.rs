@@ -15,6 +15,7 @@ use std::sync::Mutex;
 
 /// A farm of simulated boards of the same device type.
 pub struct DeviceFarm {
+    /// The simulated boards, each with its own noise stream.
     pub replicas: Vec<SimMeasurer>,
     /// Per-candidate board latency (RPC round-trip + kernel run time of
     /// the paper's remote farm). Zero by default; benches and the
@@ -105,12 +106,15 @@ impl Measurer for DeviceFarm {
 /// Failure-injecting wrapper: with probability `fail_prob` a
 /// measurement is replaced by a board error (timeout / crash).
 pub struct FlakyMeasurer<M: Measurer> {
+    /// The wrapped back-end.
     pub inner: M,
+    /// Per-candidate failure probability.
     pub fail_prob: f64,
     rng: Mutex<Rng>,
 }
 
 impl<M: Measurer> FlakyMeasurer<M> {
+    /// Wrap `inner`, failing each candidate with probability `fail_prob`.
     pub fn new(inner: M, fail_prob: f64, seed: u64) -> Self {
         FlakyMeasurer { inner, fail_prob, rng: Mutex::new(Rng::seed_from_u64(seed)) }
     }

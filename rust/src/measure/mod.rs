@@ -24,20 +24,26 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// like failed trials in the paper's system.
 #[derive(Clone, Debug)]
 pub struct MeasureResult {
+    /// Measured throughput (0.0 on failure).
     pub gflops: f64,
+    /// Wall-clock seconds, when the back-end reports one.
     pub seconds: Option<f64>,
+    /// Failure reason, if the candidate errored.
     pub error: Option<String>,
 }
 
 impl MeasureResult {
+    /// Successful measurement.
     pub fn ok(gflops: f64, seconds: f64) -> Self {
         MeasureResult { gflops, seconds: Some(seconds), error: None }
     }
 
+    /// Failed measurement.
     pub fn err(msg: impl Into<String>) -> Self {
         MeasureResult { gflops: 0.0, seconds: None, error: Some(msg.into()) }
     }
 
+    /// Whether the candidate ran without error.
     pub fn is_ok(&self) -> bool {
         self.error.is_none()
     }
@@ -49,6 +55,7 @@ impl MeasureResult {
 /// back-ends parallelize internally (PJRT handles are thread-affine in
 /// the `xla` crate).
 pub trait Measurer {
+    /// Measure a batch of candidates for one task.
     fn measure(&self, task: &Task, batch: &[ConfigEntity]) -> Vec<MeasureResult>;
 
     /// Human-readable target name (for logs / records).
@@ -57,13 +64,16 @@ pub trait Measurer {
 
 /// Simulator-backed measurer with a parallel build+run worker pool.
 pub struct SimMeasurer {
+    /// The simulated device.
     pub device: crate::sim::DeviceModel,
+    /// Worker threads for parallel build+run.
     pub threads: usize,
     /// deterministic measurement-noise stream
     seed: AtomicU64,
 }
 
 impl SimMeasurer {
+    /// Measurer over `device` with a fresh noise stream.
     pub fn new(device: crate::sim::DeviceModel) -> Self {
         SimMeasurer { device, threads: crate::util::default_threads(), seed: AtomicU64::new(1) }
     }

@@ -22,7 +22,9 @@ use std::time::Instant;
 pub const VARIANT_N: i64 = 256;
 /// Tile options per dimension (matches `aot.py`).
 pub const BM_OPTS: [i64; 3] = [32, 64, 128];
+/// Tile options for the N dimension (matches `aot.py`).
 pub const BN_OPTS: [i64; 3] = [32, 64, 128];
+/// Tile options for the K dimension (matches `aot.py`).
 pub const BK_OPTS: [i64; 3] = [64, 128, 256];
 
 /// Build the restricted task whose space enumerates exactly the
@@ -73,6 +75,7 @@ pub struct PjrtMeasurer {
 }
 
 impl PjrtMeasurer {
+    /// Measurer over a PJRT runtime (loads the AOT variant executables).
     pub fn new(rt: PjrtRuntime) -> anyhow::Result<Self> {
         let n = VARIANT_N as usize;
         // fixed pseudo-random inputs (value content doesn't affect time)

@@ -48,11 +48,13 @@ pub trait CostModel {
 
 /// GBT-backed cost model.
 pub struct GbtModel {
+    /// Boosting hyper-parameters.
     pub params: GbtParams,
     model: Option<Gbt>,
 }
 
 impl GbtModel {
+    /// Unfitted model with the given hyper-parameters.
     pub fn new(params: GbtParams) -> Self {
         GbtModel { params, model: None }
     }
@@ -85,12 +87,15 @@ impl CostModel for GbtModel {
 /// Bootstrap-ensemble model with uncertainty (Fig. 7 ablation). The
 /// paper uses 5 bootstrap models with the regression objective.
 pub struct EnsembleModel {
+    /// Per-member boosting hyper-parameters.
     pub params: GbtParams,
+    /// Number of bootstrap members.
     pub k: usize,
     model: Option<GbtEnsemble>,
 }
 
 impl EnsembleModel {
+    /// Unfitted `k`-member ensemble.
     pub fn new(params: GbtParams, k: usize) -> Self {
         EnsembleModel { params, k, model: None }
     }
@@ -134,6 +139,7 @@ impl CostModel for EnsembleModel {
 /// paper evaluates and finds unhelpful (Fig. 7).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Acquisition {
+    /// Use the predicted mean directly (the paper's default).
     Mean,
     /// mean + κ·std
     Ucb(f64),
@@ -191,6 +197,7 @@ pub struct TransferModel {
     /// linear calibration of global scores to local label scale
     calib: (f64, f64),
     local: Option<Gbt>,
+    /// Hyper-parameters of the local model.
     pub params: GbtParams,
 }
 

@@ -31,14 +31,20 @@ use anyhow::{Context, Result};
 /// Artifact dimension metadata.
 #[derive(Clone, Debug)]
 pub struct NeuralMeta {
+    /// Flattened parameter-vector length.
     pub theta_dim: usize,
+    /// Rows per prediction executable call.
     pub pred_batch: usize,
+    /// Rows per train-step executable call.
     pub train_batch: usize,
+    /// Padded loop count of the context matrix.
     pub max_loops: usize,
+    /// Per-loop context feature width.
     pub context_dim: usize,
 }
 
 impl NeuralMeta {
+    /// Load `costmodel_meta.json` from the artifact directory.
     pub fn load() -> Result<NeuralMeta> {
         let path = require_artifact("costmodel_meta.json")?;
         let text = std::fs::read_to_string(&path)?;
@@ -61,7 +67,9 @@ impl NeuralMeta {
 /// Training objective variant of the train-step artifact.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum NeuralObjective {
+    /// Pairwise rank loss.
     Rank,
+    /// Squared-error regression.
     Regression,
 }
 

@@ -23,6 +23,7 @@ impl PjrtRuntime {
         Ok(PjrtRuntime { client: Arc::new(client) })
     }
 
+    /// Backend platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -62,6 +63,7 @@ impl PjrtRuntime {
 /// A compiled executable.
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
+    /// Source artifact name (for error messages).
     pub name: String,
 }
 

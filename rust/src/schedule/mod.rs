@@ -23,13 +23,16 @@ use std::collections::HashMap;
 /// (0 = outermost).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct LeafRef {
+    /// Axis index (spatial axes first, then reduce axes).
     pub axis: usize,
+    /// Tile level (0 = outermost).
     pub part: usize,
 }
 
 /// Stage a tensor's tile into on-chip shared memory.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CacheRead {
+    /// The staged tensor.
     pub tensor: String,
     /// Order position: the copy nest is emitted immediately before the
     /// loop at this position of [`Schedule::order`].
@@ -47,6 +50,7 @@ pub struct Schedule {
     pub order: Vec<LeafRef>,
     /// Explicit annotations (Parallel / BlockBind / ThreadBind).
     pub annotations: HashMap<LeafRef, ForKind>,
+    /// Shared-memory staging of input tiles.
     pub cache_reads: Vec<CacheRead>,
     /// Loop kind of shared-memory copy nests. GPU templates use
     /// `ThreadBind` to model cooperative loading (the tile is fetched

@@ -11,18 +11,34 @@
 pub enum Knob {
     /// Multi-level tiling of an axis: every ordered factorization of
     /// `extent` into `parts` factors.
-    Split { name: String, extent: i64, parts: usize, options: Vec<Vec<i64>> },
+    Split {
+        /// Knob name (usually the axis name).
+        name: String,
+        /// The tiled axis extent.
+        extent: i64,
+        /// Number of tile levels.
+        parts: usize,
+        /// All ordered factorizations, outermost first.
+        options: Vec<Vec<i64>>,
+    },
     /// Categorical choice over integer values.
-    Choice { name: String, options: Vec<i64> },
+    Choice {
+        /// Knob name.
+        name: String,
+        /// The selectable values.
+        options: Vec<i64>,
+    },
 }
 
 impl Knob {
+    /// Knob name.
     pub fn name(&self) -> &str {
         match self {
             Knob::Split { name, .. } | Knob::Choice { name, .. } => name,
         }
     }
 
+    /// Number of selectable options.
     pub fn cardinality(&self) -> usize {
         match self {
             Knob::Split { options, .. } => options.len(),
@@ -64,6 +80,7 @@ pub fn factorizations(n: i64, parts: usize) -> Vec<Vec<i64>> {
 /// One point of the space: a choice index per knob.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct ConfigEntity {
+    /// One option index per knob.
     pub choices: Vec<u32>,
 }
 
@@ -77,6 +94,7 @@ impl ConfigEntity {
 /// The knob space of one template-instantiated operator.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ConfigSpace {
+    /// The tunable dimensions, in template order.
     pub knobs: Vec<Knob>,
 }
 
@@ -86,10 +104,29 @@ impl ConfigSpace {
         self.knobs.iter().map(|k| k.cardinality() as u64).product()
     }
 
+    /// Number of knobs (the `m` of `s = [s_1 … s_m]`).
     pub fn num_knobs(&self) -> usize {
         self.knobs.len()
     }
 
+    /// Whether a stored choices vector indexes validly into this space
+    /// (arity and per-knob option range). Guard configs replayed from
+    /// external storage before lowering them — a record written by a
+    /// build with a different knob layout would panic the instantiator.
+    pub fn contains_choices(&self, choices: &[u32]) -> bool {
+        choices.len() == self.knobs.len()
+            && choices
+                .iter()
+                .zip(self.knobs.iter())
+                .all(|(&c, k)| (c as usize) < k.cardinality())
+    }
+
+    /// [`ConfigSpace::contains_choices`] over an entity.
+    pub fn contains(&self, e: &ConfigEntity) -> bool {
+        self.contains_choices(&e.choices)
+    }
+
+    /// Index of the knob named `name`, if present.
     pub fn knob_index(&self, name: &str) -> Option<usize> {
         self.knobs.iter().position(|k| k.name() == name)
     }

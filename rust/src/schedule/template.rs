@@ -26,12 +26,17 @@ pub enum TemplateKind {
 /// A tunable operator: expression + template + knob space.
 #[derive(Clone, Debug)]
 pub struct Task {
+    /// The operator expression.
     pub def: ComputeDef,
+    /// Backend template the space was built for.
     pub template: TemplateKind,
+    /// The enumerable knob space `S_e`.
     pub space: ConfigSpace,
 }
 
 impl Task {
+    /// Build the task (and its knob space) for an operator under a
+    /// template.
     pub fn new(def: ComputeDef, template: TemplateKind) -> Self {
         let space = build_space(&def, template);
         Task { def, template, space }
@@ -39,7 +44,14 @@ impl Task {
 
     /// Short identity for the database / transfer learning.
     pub fn key(&self) -> String {
-        format!("{}@{:?}", self.def.task_key(), self.template)
+        Task::key_for(&self.def, self.template)
+    }
+
+    /// The [`Task::key`] an operator would get under `template`,
+    /// without building its config space (cheap key derivation for
+    /// lookup/indexing paths).
+    pub fn key_for(def: &ComputeDef, template: TemplateKind) -> String {
+        format!("{}@{:?}", def.task_key(), template)
     }
 
     /// Map a config to a schedule.

@@ -7,6 +7,53 @@
 //! shapes (who wins, crossovers), not absolute numbers — see DESIGN.md.
 
 use super::{DeviceClass, DeviceModel};
+use crate::schedule::template::Task;
+
+/// Deterministic diminishing-returns tuning curve of one task on one
+/// device: the best-so-far per-invocation latency as a function of
+/// trials spent, `secs(n) = floor + span · exp(−n/τ)`.
+///
+/// This is the simulated-farm stand-in the graph-level scheduler
+/// ([`crate::tuner::scheduler`]) is tested against: real tuning curves
+/// are noisy and seed-dependent, but allocation *decisions* must be
+/// auditable — gradient allocation has to beat uniform at equal budget
+/// deterministically, not on a lucky seed. Curve parameters are derived
+/// from the task's FLOPs and a hash of its key, so different tasks get
+/// heterogeneous (but reproducible) headrooms and decay rates.
+#[derive(Clone, Debug)]
+pub struct TaskCurve {
+    /// Latency floor approached as trials → ∞ (seconds).
+    pub floor: f64,
+    /// Latency above the floor at zero trials (seconds).
+    pub span: f64,
+    /// Trials for the remaining gap to shrink by e×.
+    pub tau: f64,
+}
+
+impl TaskCurve {
+    /// Best-so-far latency after `trials` measurements (seconds).
+    pub fn secs_after(&self, trials: usize) -> f64 {
+        self.floor + self.span * (-(trials as f64) / self.tau).exp()
+    }
+
+    /// Derive the curve of `task` on `device`: the floor is the task's
+    /// FLOPs at half the device's peak throughput; untuned headroom
+    /// (2–8× the floor) and decay rate (τ ∈ [24, 120]) come from a hash
+    /// of the task key, so they are stable across runs but differ
+    /// between tasks.
+    pub fn for_task(task: &Task, device: &DeviceModel) -> TaskCurve {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        task.key().hash(&mut h);
+        device.name.hash(&mut h);
+        let salt = h.finish();
+        let peak_gflops = device.max_concurrency * device.flops_per_cycle * device.clock_ghz;
+        let floor = task.def.total_flops() as f64 / (0.5 * peak_gflops * 1e9);
+        let headroom = 1.0 + (salt % 7) as f64; // 2×..8× above the floor
+        let tau = 24.0 + (salt % 97) as f64;
+        TaskCurve { floor, span: headroom * floor, tau }
+    }
+}
 
 /// TITAN-X-class server GPU (`sim-gpu`): 28 SMs, ~11 TFLOPS fp32,
 /// 480 GB/s GDDR5X, 48 KiB shared memory per block, 1024-thread blocks.
@@ -145,6 +192,27 @@ mod tests {
         }
         assert!(by_name("sim-tpu").is_some());
         assert!(by_name("a100").is_none());
+    }
+
+    #[test]
+    fn task_curves_are_deterministic_and_monotone() {
+        let task = crate::workloads::conv_task(6, crate::schedule::template::TemplateKind::Gpu);
+        let dev = sim_gpu();
+        let a = TaskCurve::for_task(&task, &dev);
+        let b = TaskCurve::for_task(&task, &dev);
+        assert_eq!((a.floor, a.span, a.tau), (b.floor, b.span, b.tau));
+        assert!(a.floor > 0.0 && a.span > 0.0);
+        // monotone nonincreasing, approaching the floor
+        let mut prev = a.secs_after(0);
+        for n in [1usize, 8, 64, 512, 4096] {
+            let s = a.secs_after(n);
+            assert!(s <= prev && s >= a.floor);
+            prev = s;
+        }
+        assert!(a.secs_after(100_000) < a.floor + 1e-3 * a.span);
+        // a different device yields a different (still deterministic) curve
+        let c = TaskCurve::for_task(&task, &sim_cpu());
+        assert!(c.floor != a.floor);
     }
 
     #[test]

@@ -25,15 +25,20 @@ use crate::util::Rng;
 /// Device class: drives template choice and parallelism semantics.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DeviceClass {
+    /// Multi-core CPU (parallel outer loops, SIMD inner).
     Cpu,
+    /// Throughput device with block/thread grids (GPU, Mali, TPU-style).
     Gpu,
 }
 
 /// An abstract machine.
 #[derive(Clone, Debug)]
 pub struct DeviceModel {
+    /// Registry name (e.g. `sim-gpu`).
     pub name: &'static str,
+    /// Device class (drives template choice).
     pub class: DeviceClass,
+    /// Core clock in GHz.
     pub clock_ghz: f64,
     /// Peak scalar-equivalent parallel lanes (cores×SIMD for CPU,
     /// resident CUDA lanes for GPU).
@@ -78,8 +83,20 @@ pub struct DeviceModel {
 /// errors with zero GFLOPS).
 #[derive(Clone, Debug, PartialEq)]
 pub enum SimError {
-    TooManyThreads { got: f64, max: f64 },
-    SharedMemOverflow { got: f64, max: f64 },
+    /// The block's thread count exceeds the device limit.
+    TooManyThreads {
+        /// Threads requested per block.
+        got: f64,
+        /// Device limit.
+        max: f64,
+    },
+    /// The staged working set exceeds on-chip shared memory.
+    SharedMemOverflow {
+        /// Bytes requested.
+        got: f64,
+        /// Device capacity in bytes.
+        max: f64,
+    },
 }
 
 impl std::fmt::Display for SimError {
@@ -100,7 +117,9 @@ impl std::error::Error for SimError {}
 /// Simulated measurement result.
 #[derive(Clone, Copy, Debug)]
 pub struct SimResult {
+    /// Modeled execution time.
     pub seconds: f64,
+    /// Useful-flops throughput at that time.
     pub gflops: f64,
 }
 

@@ -46,7 +46,7 @@ use std::fs::{File, OpenOptions};
 use std::hash::{Hash, Hasher};
 use std::io::Write;
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Cap on the incrementally maintained per-task top-k index.
@@ -58,11 +58,17 @@ const N_SHARDS: usize = 16;
 /// One persisted measurement.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Record {
+    /// Task identity ([`Task::key`]).
     pub task_key: String,
+    /// Target (device) the trial ran on.
     pub target: String,
+    /// The measured config's knob choices.
     pub choices: Vec<u32>,
+    /// Measured throughput (0.0 / non-finite for failed trials).
     pub gflops: f64,
+    /// Measured wall-clock seconds (0.0 when unknown).
     pub seconds: f64,
+    /// Failure reason, if the trial errored.
     pub error: Option<String>,
 }
 
@@ -197,6 +203,10 @@ struct DbInner {
     /// Append-only JSONL write-ahead log (file-backed DBs only). Held
     /// across the index update so file order matches insertion order.
     wal: Mutex<Option<File>>,
+    /// Fast-path flag mirroring `wal.is_some()`: in-memory DBs skip the
+    /// global WAL lock entirely, so their writers contend only on the
+    /// touched shard bucket (the concurrency the sharding exists for).
+    wal_enabled: AtomicBool,
     len: AtomicUsize,
 }
 
@@ -254,6 +264,7 @@ impl TuningDb {
             inner: Arc::new(DbInner {
                 shards: (0..N_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
                 wal: Mutex::new(None),
+                wal_enabled: AtomicBool::new(false),
                 len: AtomicUsize::new(0),
             }),
         }
@@ -298,6 +309,7 @@ impl TuningDb {
         }
         let file = OpenOptions::new().create(true).append(true).open(path)?;
         *db.inner.wal.lock().unwrap() = Some(file);
+        db.inner.wal_enabled.store(true, Ordering::Release);
         Ok(db)
     }
 
@@ -343,6 +355,12 @@ impl TuningDb {
     /// even that fails the WAL is disabled rather than risk mid-file
     /// corruption on the next append.
     pub fn append(&self, rec: Record) -> anyhow::Result<()> {
+        // In-memory DBs never touch the WAL lock: writers to different
+        // shards proceed fully in parallel.
+        if !self.inner.wal_enabled.load(Ordering::Acquire) {
+            self.insert(rec);
+            return Ok(());
+        }
         let mut wal = self.inner.wal.lock().unwrap();
         let mut wal_err: Option<std::io::Error> = None;
         let mut disable = false;
@@ -361,6 +379,7 @@ impl TuningDb {
                 "tuning-db: WAL unrecoverable after failed write; disabling persistence"
             );
             *wal = None;
+            self.inner.wal_enabled.store(false, Ordering::Release);
         }
         // Still under the WAL lock: file order == insertion order even
         // with concurrent appenders.
@@ -397,6 +416,7 @@ impl TuningDb {
         self.inner.len.load(Ordering::SeqCst)
     }
 
+    /// Whether the DB holds no records at all.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -544,12 +564,21 @@ impl TuningDb {
                     continue;
                 }
                 let cache = feat_cache.entry(repr).or_default();
-                let missing_idx: Vec<usize> =
-                    sel.iter().copied().filter(|i| !cache.contains_key(i)).collect();
-                let missing_ents: Vec<ConfigEntity> = missing_idx
-                    .iter()
-                    .map(|&i| ConfigEntity { choices: records[i].choices.clone() })
-                    .collect();
+                let mut missing_idx: Vec<usize> = Vec::new();
+                let mut missing_ents: Vec<ConfigEntity> = Vec::new();
+                for &i in sel.iter().filter(|i| !cache.contains_key(*i)) {
+                    // stale/foreign configs that don't index into this
+                    // build's space are excluded from D', not lowered
+                    // (lowering them would panic)
+                    if task.space.contains_choices(&records[i].choices) {
+                        missing_idx.push(i);
+                        missing_ents.push(ConfigEntity {
+                            choices: records[i].choices.clone(),
+                        });
+                    } else {
+                        cache.insert(i, None);
+                    }
+                }
                 (sel, missing_idx, missing_ents)
             };
             // Phase 2 (no locks): the expensive lower+analyze+extract —
@@ -729,6 +758,34 @@ mod tests {
         assert_eq!(groups.iter().sum::<usize>(), ok1 + ok2);
         // labels normalized per task
         assert!(y.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    /// Stale/foreign records whose choices don't index into this
+    /// build's space must be skipped by `to_training` — not lowered
+    /// (which would panic in `instantiate`).
+    #[test]
+    fn to_training_skips_out_of_space_records() {
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu);
+        let db = Database::new();
+        let recs = sample_records(&task, 6);
+        let ok = recs.iter().filter(|r| r.error.is_none()).count();
+        db.add_run(&task, "sim-cpu", &recs).unwrap();
+        // wrong arity (too few knobs) and out-of-range option index
+        for choices in [vec![0u32], vec![u32::MAX; task.space.num_knobs()]] {
+            db.append(Record {
+                task_key: task.key(),
+                target: "sim-cpu".into(),
+                choices,
+                gflops: 5.0,
+                seconds: 0.1,
+                error: None,
+            })
+            .unwrap();
+        }
+        let (x, _, groups) =
+            db.to_training(&[&task], "sim-cpu", Representation::ContextRelation, 100);
+        assert_eq!(x.rows, ok, "poisoned records must be excluded from D'");
+        assert_eq!(groups.iter().sum::<usize>(), ok);
     }
 
     /// Satellite regression: the training set must not depend on caller

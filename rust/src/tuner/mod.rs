@@ -29,10 +29,17 @@
 //! trials into the same DB live via [`DbSink`] ([`TuneOptions::sink`])
 //! instead of bulk-dumping at the end.
 //!
+//! Both drivers are **incremental**: SA chains, the dedup set, the
+//! model and the training set persist across calls, so a budget can be
+//! spent in slices (`tune_more`). The graph-level [`scheduler`] builds
+//! on exactly that contract to allocate one global budget across all
+//! tasks of a network by expected end-to-end gain.
+//!
 //! [`TransferModel`]: crate::model::TransferModel
 
 pub mod db;
 pub mod pipeline;
+pub mod scheduler;
 
 use crate::explore::{diverse_select, random_batch, ParallelSa, Scorer};
 use crate::features::Representation;
@@ -52,18 +59,26 @@ pub use crate::explore::SaParams;
 /// b = 64, ε = 0.05, 128 SA chains × 500 steps).
 #[derive(Clone, Debug)]
 pub struct TuneOptions {
+    /// Total measurement trials of the run.
     pub n_trials: usize,
+    /// Measurement batch size `b`.
     pub batch: usize,
+    /// ε-greedy share of each batch filled with random configs.
     pub eps: f64,
     /// SA candidate pool multiplier: diversity selection picks from the
     /// top `λ·b`.
     pub lambda: usize,
     /// Diversity weight α of Eq. 3; `diversity = false` ⇒ plain top-b.
     pub alpha: f64,
+    /// Use diversity-aware batch selection (Eq. 3) instead of top-b.
     pub diversity: bool,
+    /// Acquisition function over model predictions.
     pub acquisition: Acquisition,
+    /// Program representation used for featurization.
     pub repr: Representation,
+    /// Simulated-annealing exploration budget.
     pub sa: SaParams,
+    /// Seed of every RNG stream in the loop.
     pub seed: u64,
     /// Print per-round progress.
     pub verbose: bool,
@@ -106,12 +121,16 @@ impl Default for TuneOptions {
 /// [`Record`]. Cloning is cheap (the DB handle is an `Arc`).
 #[derive(Clone)]
 pub struct DbSink {
+    /// The shared tuning DB handle records stream into.
     pub db: TuningDb,
+    /// Task identity stamped onto every record.
     pub task_key: String,
+    /// Target (device) identity stamped onto every record.
     pub target: String,
 }
 
 impl DbSink {
+    /// Sink for `task` on `target` streaming into `db`.
     pub fn new(db: &TuningDb, task: &Task, target: &str) -> Self {
         DbSink { db: db.clone(), task_key: task.key(), target: target.to_string() }
     }
@@ -145,22 +164,29 @@ impl std::fmt::Debug for DbSink {
 /// One measured trial.
 #[derive(Clone, Debug)]
 pub struct TrialRecord {
+    /// The measured config.
     pub entity: ConfigEntity,
+    /// Throughput (0.0 for failed trials).
     pub gflops: f64,
+    /// Wall-clock seconds, when the back-end reports one.
     pub seconds: Option<f64>,
+    /// Failure reason, if the trial errored.
     pub error: Option<String>,
 }
 
 /// Outcome of a tuning run.
 #[derive(Clone, Debug)]
 pub struct TuneResult {
+    /// Best successful (config, GFLOPS), if any trial succeeded.
     pub best: Option<(ConfigEntity, f64)>,
     /// best-so-far GFLOPS after each trial (x = trial count, 1-based).
     pub curve: Vec<f64>,
+    /// Every measured trial, in measurement order.
     pub records: Vec<TrialRecord>,
 }
 
 impl TuneResult {
+    /// Best GFLOPS of the run (0.0 when every trial failed).
     pub fn best_gflops(&self) -> f64 {
         self.best.as_ref().map(|(_, g)| *g).unwrap_or(0.0)
     }
@@ -185,11 +211,13 @@ impl TuneResult {
 /// the pipelined proposal stage and the pipelined model stage — each
 /// stage owns its own `Featurizer`, so no locks sit on the SA hot path.
 pub struct Featurizer {
+    /// Representation rows are extracted under.
     pub repr: Representation,
     cache: RefCell<HashMap<ConfigEntity, Vec<f64>>>,
 }
 
 impl Featurizer {
+    /// Empty-cache featurizer for a representation.
     pub fn new(repr: Representation) -> Self {
         Featurizer { repr, cache: RefCell::new(HashMap::new()) }
     }
@@ -248,14 +276,19 @@ impl Scorer for TunerScorer<'_> {
 /// of every trial into a shared [`TuningDb`] via [`DbSink`].
 #[derive(Default)]
 pub struct TrialAccountant {
+    /// Best successful (config, GFLOPS) so far.
     pub best: Option<(ConfigEntity, f64)>,
+    /// best-so-far GFLOPS after each trial (1-based trial count).
     pub curve: Vec<f64>,
+    /// Every absorbed trial, in measurement order.
     pub records: Vec<TrialRecord>,
+    /// Trials absorbed so far.
     pub trials: usize,
     sink: Option<DbSink>,
 }
 
 impl TrialAccountant {
+    /// Fresh accountant without a DB sink.
     pub fn new() -> Self {
         TrialAccountant::default()
     }
@@ -266,6 +299,7 @@ impl TrialAccountant {
         TrialAccountant { sink, ..TrialAccountant::default() }
     }
 
+    /// Best GFLOPS so far (0.0 before any success).
     pub fn best_gflops(&self) -> f64 {
         self.best.as_ref().map(|(_, g)| *g).unwrap_or(0.0)
     }
@@ -296,8 +330,20 @@ impl TrialAccountant {
         labels
     }
 
+    /// Consume the accountant into its final [`TuneResult`].
     pub fn into_result(self) -> TuneResult {
         TuneResult { best: self.best, curve: self.curve, records: self.records }
+    }
+
+    /// Clone the accounting so far into a [`TuneResult`] without ending
+    /// the run — the incremental drivers ([`Tuner::tune_more`], the
+    /// graph-level [`scheduler`]) read results between slices.
+    pub fn result_snapshot(&self) -> TuneResult {
+        TuneResult {
+            best: self.best.clone(),
+            curve: self.curve.clone(),
+            records: self.records.clone(),
+        }
     }
 }
 
@@ -306,6 +352,7 @@ impl TrialAccountant {
 /// tail. Owns the persistent SA chains, the proposal RNG stream and a
 /// [`Featurizer`]; shared verbatim by the serial and pipelined loops.
 pub struct BatchProposer {
+    /// Shared feature extraction + memo cache.
     pub feat: Featurizer,
     sa: ParallelSa,
     rng: Rng,
@@ -313,6 +360,7 @@ pub struct BatchProposer {
 }
 
 impl BatchProposer {
+    /// Fresh proposer (SA chains, RNG stream, dedup set) for a run.
     pub fn new(options: &TuneOptions) -> Self {
         BatchProposer {
             feat: Featurizer::new(options.repr),
@@ -371,68 +419,137 @@ impl BatchProposer {
     }
 }
 
-/// The serial Algorithm-1 schedule over shared parts — used by
-/// [`Tuner::tune`] and as the pipelined tuner's fallback for models
-/// without snapshot support.
-pub(crate) fn serial_loop(
+/// Persistent state of an incremental tuning loop: the trial accountant
+/// plus the growing training set `D` (measured configs, labels, batch
+/// groups) the model refits on. Both serial and pipelined drivers keep
+/// one across calls, so a run can be spent in slices — the contract the
+/// graph-level [`scheduler`] builds on.
+pub(crate) struct LoopState {
+    /// Best-so-far / curve / record accounting (and the live DB sink).
+    pub(crate) acct: TrialAccountant,
+    pub(crate) xs: Vec<ConfigEntity>,
+    pub(crate) ys: Vec<f64>,
+    pub(crate) groups: Vec<usize>,
+}
+
+impl LoopState {
+    pub(crate) fn new(sink: Option<DbSink>) -> Self {
+        LoopState {
+            acct: TrialAccountant::with_sink(sink),
+            xs: Vec::new(),
+            ys: Vec::new(),
+            groups: Vec::new(),
+        }
+    }
+}
+
+/// The serial Algorithm-1 round structure over shared parts: propose →
+/// measure → absorb → refit on all of `D`, continuing from `state`
+/// until the accountant reaches `target_trials` total trials (or the
+/// space is exhausted). Used by [`Tuner`] and as the pipelined tuner's
+/// fallback for models without snapshot support.
+pub(crate) fn serial_steps(
     task: &Task,
     opts: &TuneOptions,
     proposer: &mut BatchProposer,
     model: &mut dyn CostModel,
     measurer: &dyn Measurer,
-) -> TuneResult {
-    let mut acct = TrialAccountant::with_sink(opts.sink.clone());
-    // training set (measured configs) + labels + batch groups
-    let mut xs: Vec<ConfigEntity> = Vec::new();
-    let mut ys: Vec<f64> = Vec::new();
-    let mut groups: Vec<usize> = Vec::new();
-
-    while acct.trials < opts.n_trials {
-        let b = opts.batch.min(opts.n_trials - acct.trials);
-        let batch = proposer.propose(task, opts, model, b, acct.best_gflops());
+    state: &mut LoopState,
+    target_trials: usize,
+) {
+    while state.acct.trials < target_trials {
+        let b = opts.batch.min(target_trials - state.acct.trials);
+        let batch = proposer.propose(task, opts, model, b, state.acct.best_gflops());
         if batch.is_empty() {
             break; // space exhausted
         }
         let results = measurer.measure(task, &batch);
-        let labels = acct.absorb(&batch, &results);
-        xs.extend(batch.iter().cloned());
-        ys.extend(labels);
-        groups.push(batch.len());
+        let labels = state.acct.absorb(&batch, &results);
+        state.xs.extend(batch.iter().cloned());
+        state.ys.extend(labels);
+        state.groups.push(batch.len());
 
         // refit f̂ on all of D
-        let x = proposer.feat.features(task, &xs);
-        model.fit(&x, &ys, &groups);
+        let x = proposer.feat.features(task, &state.xs);
+        model.fit(&x, &state.ys, &state.groups);
         if opts.verbose {
             println!(
                 "[{}] trials={:4} best={:.1} GFLOPS",
                 measurer.target(),
-                acct.trials,
-                acct.best_gflops()
+                state.acct.trials,
+                state.acct.best_gflops()
             );
         }
     }
-    acct.into_result()
 }
 
 /// The serial Algorithm-1 driver (reference loop). The pipelined
 /// production driver is [`pipeline::PipelinedTuner`].
+///
+/// The tuner is *incremental*: its SA chains, dedup set, model and
+/// training set persist across calls, so the budget can be spent in
+/// slices via [`tune_more`](Self::tune_more) — the execution contract
+/// of the graph-level [`scheduler`]. [`tune`](Self::tune) runs up to
+/// the `n_trials` of [`TuneOptions`] and is equivalent to one
+/// `tune_more(n_trials)` on a fresh tuner.
 pub struct Tuner {
+    /// The task being tuned.
     pub task: Task,
+    /// Loop configuration (batch size, SA budget, seed, sink, …).
     pub options: TuneOptions,
     model: Box<dyn CostModel>,
     proposer: BatchProposer,
+    state: LoopState,
 }
 
 impl Tuner {
+    /// Build a tuner from a task, a cost model and loop options.
     pub fn new(task: Task, model: Box<dyn CostModel>, options: TuneOptions) -> Self {
         let proposer = BatchProposer::new(&options);
-        Tuner { task, options, model, proposer }
+        let state = LoopState::new(options.sink.clone());
+        Tuner { task, options, model, proposer, state }
     }
 
-    /// Run the tuning loop against a measurement back-end.
+    /// Run the tuning loop against a measurement back-end until the
+    /// configured `n_trials` total trials have been measured.
     pub fn tune(&mut self, measurer: &dyn Measurer) -> TuneResult {
+        let target = self.options.n_trials;
+        let extra = target.saturating_sub(self.state.acct.trials);
+        self.tune_more(measurer, extra);
+        self.state.acct.result_snapshot()
+    }
+
+    /// Spend `extra` more measurement trials, continuing the persistent
+    /// loop (same SA chains, no re-proposals, model refit on all of
+    /// `D`). Returns the best GFLOPS so far.
+    pub fn tune_more(&mut self, measurer: &dyn Measurer, extra: usize) -> f64 {
         let opts = self.options.clone();
-        serial_loop(&self.task, &opts, &mut self.proposer, self.model.as_mut(), measurer)
+        let target = self.state.acct.trials + extra;
+        serial_steps(
+            &self.task,
+            &opts,
+            &mut self.proposer,
+            self.model.as_mut(),
+            measurer,
+            &mut self.state,
+            target,
+        );
+        self.state.acct.best_gflops()
+    }
+
+    /// Trials measured so far (across all slices).
+    pub fn trials(&self) -> usize {
+        self.state.acct.trials
+    }
+
+    /// Best measured (config, GFLOPS) so far, if any trial succeeded.
+    pub fn best(&self) -> Option<&(ConfigEntity, f64)> {
+        self.state.acct.best.as_ref()
+    }
+
+    /// Snapshot of the accounting so far (curve, records, best).
+    pub fn result(&self) -> TuneResult {
+        self.state.acct.result_snapshot()
     }
 }
 

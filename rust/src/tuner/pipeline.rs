@@ -62,7 +62,7 @@
 //! run is still in flight. Streaming is a pure side effect and does not
 //! perturb the determinism contract above.
 
-use super::{serial_loop, BatchProposer, Featurizer, TrialAccountant, TuneOptions, TuneResult};
+use super::{serial_steps, BatchProposer, Featurizer, LoopState, TuneOptions, TuneResult};
 use crate::measure::Measurer;
 use crate::model::CostModel;
 use crate::schedule::space::ConfigEntity;
@@ -127,31 +127,81 @@ struct ModelUpdate {
 /// The pipelined production driver. Construction requires a `Send`
 /// model; models without snapshot support transparently fall back to
 /// the serial schedule inside [`PipelinedTuner::tune`].
+///
+/// Like the serial [`Tuner`](super::Tuner), the pipelined driver is
+/// *incremental*: its SA chains, dedup set, model and training set
+/// persist across calls, so the budget can be spent in slices via
+/// [`tune_more`](Self::tune_more) (the graph-level
+/// [`scheduler`](super::scheduler) contract). Slice boundaries are full
+/// barriers — a run spent as two slices refits on all of `D` but is not
+/// bit-identical to one unsliced run, because the model staleness
+/// window restarts at each boundary.
 pub struct PipelinedTuner {
+    /// The task being tuned.
     pub task: Task,
+    /// Loop configuration (batch size, depth, seed, sink, …).
     pub options: TuneOptions,
     model: Option<Box<dyn CostModel + Send>>,
+    proposer: BatchProposer,
+    state: LoopState,
+    /// Fit-stage feature memo, persisted across slices so a new slice
+    /// doesn't re-featurize the whole accumulated training set.
+    fit_feat: Option<Featurizer>,
     stats: Arc<PipelineStats>,
 }
 
 impl PipelinedTuner {
+    /// Build a pipelined tuner from a task, a `Send` cost model and
+    /// loop options.
     pub fn new(task: Task, model: Box<dyn CostModel + Send>, options: TuneOptions) -> Self {
+        let proposer = BatchProposer::new(&options);
+        let state = LoopState::new(options.sink.clone());
         PipelinedTuner {
             task,
             options,
             model: Some(model),
+            proposer,
+            state,
+            fit_feat: None,
             stats: Arc::new(PipelineStats::default()),
         }
     }
 
-    /// Counters of the most recent [`tune`](Self::tune) run.
+    /// Counters of the most recent [`tune`](Self::tune) /
+    /// [`tune_more`](Self::tune_more) call (reset at each call).
     pub fn stats(&self) -> Arc<PipelineStats> {
         self.stats.clone()
     }
 
-    /// Run the pipelined loop against a measurement back-end. The
+    /// Run the pipelined loop against a measurement back-end until the
+    /// configured `n_trials` total trials have been measured. The
     /// back-end stays on the calling thread for its whole lifetime.
     pub fn tune(&mut self, measurer: &dyn Measurer) -> TuneResult {
+        let extra = self.options.n_trials.saturating_sub(self.state.acct.trials);
+        self.tune_more(measurer, extra);
+        self.state.acct.result_snapshot()
+    }
+
+    /// Trials measured so far (across all slices).
+    pub fn trials(&self) -> usize {
+        self.state.acct.trials
+    }
+
+    /// Best measured (config, GFLOPS) so far, if any trial succeeded.
+    pub fn best(&self) -> Option<&(ConfigEntity, f64)> {
+        self.state.acct.best.as_ref()
+    }
+
+    /// Snapshot of the accounting so far (curve, records, best).
+    pub fn result(&self) -> TuneResult {
+        self.state.acct.result_snapshot()
+    }
+
+    /// Spend `extra` more measurement trials through the three-stage
+    /// pipeline, continuing the persistent loop (no re-proposals; the
+    /// first refit of the slice trains on all of `D` accumulated so
+    /// far). Returns the best GFLOPS so far.
+    pub fn tune_more(&mut self, measurer: &dyn Measurer, extra: usize) -> f64 {
         let opts = self.options.clone();
         let depth = opts.pipeline_depth.max(1);
         // Reset the counters in place so Arcs handed out before this
@@ -163,8 +213,8 @@ impl PipelinedTuner {
         // so all three stages agree on the schedule without negotiation.
         let mut sizes: Vec<usize> = Vec::new();
         let mut planned = 0usize;
-        while planned < opts.n_trials && opts.batch > 0 {
-            let b = opts.batch.min(opts.n_trials - planned);
+        while planned < extra && opts.batch > 0 {
+            let b = opts.batch.min(extra - planned);
             sizes.push(b);
             planned += b;
         }
@@ -173,20 +223,43 @@ impl PipelinedTuner {
         let mut model = self.model.take().expect("model present");
         if n_batches == 0 {
             self.model = Some(model);
-            return TuneResult { best: None, curve: Vec::new(), records: Vec::new() };
+            return self.state.acct.best_gflops();
         }
         // The first snapshot doubles as the epoch-0 model update (an
-        // unfitted model ⇒ random bootstrap batches; a transfer model ⇒
-        // warm-started SA from the very first batch).
+        // unfitted model ⇒ random bootstrap batches; a transfer model or
+        // a model fitted in an earlier slice ⇒ warm-started SA from the
+        // very first batch).
         let Some(epoch0) = model.snapshot() else {
             // Non-cloneable model: serial reference schedule in place.
-            let mut proposer = BatchProposer::new(&opts);
-            let res = serial_loop(&self.task, &opts, &mut proposer, model.as_mut(), measurer);
+            let target = self.state.acct.trials + extra;
+            serial_steps(
+                &self.task,
+                &opts,
+                &mut self.proposer,
+                model.as_mut(),
+                measurer,
+                &mut self.state,
+                target,
+            );
             self.model = Some(model);
-            return res;
+            return self.state.acct.best_gflops();
         };
 
-        let mut proposer = BatchProposer::new(&opts);
+        let proposer = &mut self.proposer;
+        // Fit-stage featurizer persists across slices (recreated only if
+        // the representation changed between calls).
+        let fit_feat = match self.fit_feat.take() {
+            Some(f) if f.repr == opts.repr => f,
+            _ => Featurizer::new(opts.repr),
+        };
+        let state = &mut self.state;
+        // The persistent training set moves into the model stage for
+        // this slice and is restored after the scope.
+        let xs0 = std::mem::take(&mut state.xs);
+        let ys0 = std::mem::take(&mut state.ys);
+        let groups0 = std::mem::take(&mut state.groups);
+        let acct = &mut state.acct;
+        let best_y0 = acct.best_gflops();
         let task = self.task.clone();
 
         // proposal stage → measurement stage (bounded: backpressure)
@@ -196,7 +269,7 @@ impl PipelinedTuner {
         // model stage → proposal stage (epoch-tagged snapshots)
         let (snap_tx, snap_rx) = mpsc::channel::<ModelUpdate>();
 
-        let (result, model_back) = std::thread::scope(|s| {
+        let (model_back, xs_back, ys_back, groups_back, feat_back) = std::thread::scope(|s| {
             // ---- proposal stage ----
             let explore_task = task.clone();
             let explore_opts = opts.clone();
@@ -237,15 +310,15 @@ impl PipelinedTuner {
 
             // ---- model stage ----
             let fit_task = task.clone();
-            let fit_repr = opts.repr;
             let fit_stats = stats.clone();
             let fit_handle = s.spawn(move || {
-                let feat = Featurizer::new(fit_repr);
-                let mut best_y = 0.0f64;
+                let feat = fit_feat;
+                let mut best_y = best_y0;
                 let _ = snap_tx.send(ModelUpdate { epoch: 0, best_y, model: epoch0 });
-                let mut xs: Vec<ConfigEntity> = Vec::new();
-                let mut ys: Vec<f64> = Vec::new();
-                let mut groups: Vec<usize> = Vec::new();
+                // training set carried over from earlier slices
+                let mut xs: Vec<ConfigEntity> = xs0;
+                let mut ys: Vec<f64> = ys0;
+                let mut groups: Vec<usize> = groups0;
                 let mut epoch = 0usize;
                 while let Ok((batch, labels)) = train_rx.recv() {
                     for &gf in &labels {
@@ -265,15 +338,14 @@ impl PipelinedTuner {
                         let _ = snap_tx.send(ModelUpdate { epoch, best_y, model: snap });
                     }
                 }
-                model
+                (model, xs, ys, groups, feat)
             });
 
             // ---- measurement stage (this thread owns the measurer) ----
-            // The accountant streams each measured batch straight into
-            // the shared TuningDb (if a sink is configured), so DB
-            // readers on other threads see records live instead of a
-            // bulk dump when the run ends.
-            let mut acct = TrialAccountant::with_sink(opts.sink.clone());
+            // The persistent accountant streams each measured batch
+            // straight into the shared TuningDb (if a sink is
+            // configured), so DB readers on other threads see records
+            // live instead of a bulk dump when the run ends.
             for _ in 0..n_batches {
                 let Ok(batch) = prop_rx.recv() else { break };
                 if batch.is_empty() {
@@ -299,11 +371,14 @@ impl PipelinedTuner {
             // so nothing is lost regardless of shutdown order.
             drop(prop_rx);
             drop(train_tx);
-            let model = fit_handle.join().expect("model stage panicked");
-            (acct.into_result(), model)
+            fit_handle.join().expect("model stage panicked")
         });
 
+        state.xs = xs_back;
+        state.ys = ys_back;
+        state.groups = groups_back;
+        self.fit_feat = Some(feat_back);
         self.model = Some(model_back);
-        result
+        self.state.acct.best_gflops()
     }
 }

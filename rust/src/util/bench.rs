@@ -11,6 +11,7 @@ pub struct Bench {
     name: String,
     /// Target measurement time per case.
     pub measure_time: Duration,
+    /// Warmup time per case before measuring.
     pub warmup_time: Duration,
     results: Vec<(String, Stats)>,
 }
@@ -18,13 +19,18 @@ pub struct Bench {
 /// Summary statistics over per-iteration times (nanoseconds).
 #[derive(Clone, Copy, Debug)]
 pub struct Stats {
+    /// Mean per-iteration time.
     pub mean_ns: f64,
+    /// Median per-iteration time.
     pub median_ns: f64,
+    /// 95th-percentile per-iteration time.
     pub p95_ns: f64,
+    /// Iterations measured.
     pub iters: u64,
 }
 
 impl Stats {
+    /// Items per second at the mean time.
     pub fn throughput(&self, items: f64) -> f64 {
         items / (self.mean_ns * 1e-9)
     }
@@ -43,6 +49,7 @@ fn fmt_ns(ns: f64) -> String {
 }
 
 impl Bench {
+    /// Group named `name`; `BENCH_MEASURE_SECS` overrides the budget.
     pub fn new(name: &str) -> Self {
         // Keep benches fast under `cargo bench` while allowing override.
         let secs: f64 = std::env::var("BENCH_MEASURE_SECS")

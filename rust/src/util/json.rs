@@ -9,19 +9,27 @@ use std::fmt::Write as _;
 /// A JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (always stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys for deterministic dumps).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Member `key` of an object (`None` for non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -29,6 +37,7 @@ impl Json {
         }
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -36,10 +45,12 @@ impl Json {
         }
     }
 
+    /// Numeric value truncated to u64, if this is a number.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().map(|x| x as u64)
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -47,6 +58,7 @@ impl Json {
         }
     }
 
+    /// Array elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -54,6 +66,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),

@@ -17,6 +17,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Expand a 64-bit seed into the full state (splitmix64).
     pub fn seed_from_u64(seed: u64) -> Self {
         let mut sm = seed;
         Rng {
@@ -34,6 +35,7 @@ impl Rng {
         Rng::seed_from_u64(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit output (xoshiro256**).
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[0]
             .wrapping_add(self.s[3])
@@ -72,6 +74,7 @@ impl Rng {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Bernoulli draw with probability `p`.
     pub fn gen_bool(&mut self, p: f64) -> bool {
         self.gen_f64() < p
     }

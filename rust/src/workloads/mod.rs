@@ -216,6 +216,19 @@ pub fn all_networks() -> Vec<Graph> {
     vec![resnet18(), mobilenet(), dqn(), lstm_lm(), dcgan()]
 }
 
+/// Look up a Fig. 11 network by CLI name
+/// (`resnet18|mobilenet|dqn|lstm|dcgan`).
+pub fn network(name: &str) -> Option<Graph> {
+    match name {
+        "resnet18" => Some(resnet18()),
+        "mobilenet" => Some(mobilenet()),
+        "dqn" => Some(dqn()),
+        "lstm" => Some(lstm_lm()),
+        "dcgan" => Some(dcgan()),
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
