@@ -1,0 +1,70 @@
+//! Scheduler-aware Fig.-11 companion: gradient-vs-uniform END-TO-END
+//! latency curves per network, as a function of the global trial
+//! budget. For each network the graph is fused, its weighted task set
+//! extracted, and the budget swept from 1 to 8 slices per task under
+//! both allocation policies; latency is replayed on the deterministic
+//! per-task tuning curves (`TaskCurve`), so the curves are exact — the
+//! same simulated farm the scheduler's acceptance tests run against.
+//!
+//! Emits `fig11_alloc,network,policy,budget,latency_ms` CSV rows plus a
+//! per-network summary of the gradient/uniform gap at the final budget.
+//!
+//! Run: `cargo run --release --example fig11_alloc`
+//! (The maintained interactive entry point is `autotvm tune-graph <net>
+//! --alloc gradient|uniform`, which runs the real tuning loops.)
+
+use autotvm::schedule::template::TemplateKind;
+use autotvm::sim::devices::{sim_gpu, TaskCurve};
+use autotvm::tuner::scheduler::{AllocPolicy, CurveExecutor, SchedulerOptions, TaskScheduler};
+use autotvm::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let dev = sim_gpu();
+    let template = TemplateKind::Gpu;
+    let slice = 8usize;
+    println!("fig11_alloc,network,policy,budget,latency_ms");
+    for name in ["resnet18", "mobilenet", "lstm", "dqn", "dcgan"] {
+        let graph = workloads::network(name).expect("known network");
+        let fused = graph.fuse();
+        let mut final_latency = [0.0f64; 2];
+        for (pi, policy) in [AllocPolicy::Uniform, AllocPolicy::Gradient]
+            .into_iter()
+            .enumerate()
+        {
+            for mult in 1..=8usize {
+                let sched = TaskScheduler::from_graph(
+                    &fused,
+                    &dev,
+                    template,
+                    SchedulerOptions { budget: 0, slice, policy, ..Default::default() },
+                )?;
+                let k = sched.plans().len();
+                let budget = k * slice * mult;
+                let sched = sched.with_budget(budget);
+                let mut farm = CurveExecutor::new(
+                    sched
+                        .plans()
+                        .iter()
+                        .map(|p| TaskCurve::for_task(&p.task, &dev))
+                        .collect(),
+                );
+                let alloc = sched.run(&mut farm);
+                println!(
+                    "fig11_alloc,{name},{},{budget},{:.4}",
+                    policy.name(),
+                    alloc.est_latency * 1e3
+                );
+                final_latency[pi] = alloc.est_latency;
+            }
+        }
+        let (uni, grad) = (final_latency[0], final_latency[1]);
+        println!(
+            "# {name}: at the final budget, gradient {:.4} ms vs uniform {:.4} ms \
+             ({:.2}% lower)",
+            grad * 1e3,
+            uni * 1e3,
+            (1.0 - grad / uni) * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,24 +1,37 @@
 //! End-to-end tuning wall-clock — the L3 hot path.
 //!
-//! Three cases at the same trial budget:
+//! Five cases at the same trial budget:
 //! * serial loop on a single simulated board (the Algorithm-1 baseline),
-//! * serial loop on a 4-replica device farm with per-board latency,
-//! * pipelined loop (explore ∥ measure ∥ retrain) on the same farm.
+//! * serial loop on a single board with per-board RTT — the makespan
+//!   reference the device-farm service must beat,
+//! * serial loop on a 4-replica in-place device farm with per-board
+//!   latency,
+//! * pipelined loop (explore ∥ measure ∥ retrain) on the same in-place
+//!   farm,
+//! * pipelined loop through the asynchronous [`MeasureService`] over a
+//!   4-replica RTT farm — batches shard across replica workers *and*
+//!   batch `k+1` measures while batch `k` drains.
 //!
 //! The farm latency emulates the RPC + run time of the paper's remote
-//! boards; the pipelined loop should hide SA and GBT refits behind it,
-//! so the last case must come in measurably under the second.
+//! boards. Acceptance: the service-backed pipelined makespan must come
+//! in **under 0.5×** the single-board serial makespan (the final ratio
+//! line), while depth-1 single-replica service output stays bit-for-bit
+//! identical to the serial loop (asserted in `tests/farm_service.rs`).
 //!
 //! `E2E_TUNE_SMOKE=1` shrinks the budget for CI check-only runs.
+//!
+//! [`MeasureService`]: autotvm::measure::service::MeasureService
 
 use autotvm::explore::SaParams;
-use autotvm::measure::farm::DeviceFarm;
+use autotvm::measure::farm::{DeviceFarm, LatencyMeasurer};
+use autotvm::measure::service::MeasureService;
 use autotvm::measure::SimMeasurer;
 use autotvm::schedule::template::TemplateKind;
 use autotvm::sim::devices::sim_gpu;
 use autotvm::tuner::{tune_gbt, tune_gbt_pipelined, TuneOptions};
 use autotvm::util::bench::Bench;
 use autotvm::workloads;
+use std::sync::Arc;
 use std::time::Duration;
 
 fn main() {
@@ -34,13 +47,21 @@ fn main() {
         },
         ..Default::default()
     };
+    let rtt = Duration::from_millis(2);
     let task = || workloads::conv_task(6, TemplateKind::Gpu);
-    let farm = || DeviceFarm::with_latency(sim_gpu(), 4, 1, Duration::from_millis(2));
+    let farm = || DeviceFarm::with_latency(sim_gpu(), 4, 1, rtt);
 
     b.run("tune_c6_serial_sim", {
         let opts = opts.clone();
         move || {
             let m = SimMeasurer::with_seed(sim_gpu(), 1);
+            tune_gbt(task(), &m, opts.clone())
+        }
+    });
+    let serial_one = b.run("tune_c6_serial_board1_rtt", {
+        let opts = opts.clone();
+        move || {
+            let m = LatencyMeasurer { inner: SimMeasurer::with_seed(sim_gpu(), 1), latency: rtt };
             tune_gbt(task(), &m, opts.clone())
         }
     });
@@ -52,8 +73,25 @@ fn main() {
         let opts = opts.clone();
         move || tune_gbt_pipelined(task(), &farm(), opts.clone())
     });
+    let service = b.run("tune_c6_pipelined_service_farm4", {
+        let opts = opts.clone();
+        move || {
+            let svc = MeasureService::with_defaults(Arc::new(farm()));
+            tune_gbt_pipelined(task(), &svc, opts.clone())
+        }
+    });
     println!(
         "e2e_tune/pipeline_speedup_over_serial_farm4       {:.2}x",
         serial.mean_ns / piped.mean_ns
+    );
+    println!(
+        "e2e_tune/service_speedup_over_serial_farm4        {:.2}x",
+        serial.mean_ns / service.mean_ns
+    );
+    // The acceptance ratio: pipelined-through-service on 4 RTT replicas
+    // vs the serial single-board makespan. Must print below 0.50.
+    println!(
+        "e2e_tune/service_makespan_vs_serial_board1        {:.2}x (target < 0.50x)",
+        service.mean_ns / serial_one.mean_ns
     );
 }

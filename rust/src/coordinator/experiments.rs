@@ -405,8 +405,13 @@ fn known_tasks() -> Vec<Task> {
 
 /// Automatic cross-workload warm start: query `db` for records of
 /// *other* known tasks on the same `target`, build `D'` under the
-/// invariant [`Representation::ContextRelation`] and train the Eq.-4
+/// invariant `ContextRelation` representation and train the Eq.-4
 /// global model. Returns `None` when the DB holds nothing usable.
+///
+/// Thin wrapper over the shared [`TransferModel::warm_start`] entry
+/// point (the graph scheduler's `LoopExecutor` wraps the same function
+/// with its plan's sibling tasks as the inventory) — source discovery,
+/// representation and model hyper-parameters live in one place.
 pub fn warm_start_model(
     db: &Database,
     target_task: &Task,
@@ -414,37 +419,9 @@ pub fn warm_start_model(
     objective: Objective,
     seed: u64,
 ) -> Option<TransferModel> {
-    let have: std::collections::HashSet<String> =
-        db.task_keys(target).into_iter().collect();
-    if have.is_empty() {
-        return None;
-    }
-    let target_key = target_task.key();
     let inventory = known_tasks();
-    let sources: Vec<&Task> = inventory
-        .iter()
-        .filter(|t| {
-            let k = t.key();
-            k != target_key && have.contains(&k)
-        })
-        .collect();
-    if sources.is_empty() {
-        return None;
-    }
-    let params = GbtParams { objective, seed, ..Default::default() };
-    let model = TransferModel::from_db(
-        db,
-        &sources,
-        &target_key,
-        target,
-        Representation::ContextRelation,
-        usize::MAX,
-        params,
-    )?;
-    println!(
-        "# warm-start: global model from {} source task(s) on {target} (ContextRelation D')",
-        sources.len()
-    );
+    let model = TransferModel::warm_start(db, &inventory, target_task, target, objective, seed)?;
+    println!("# warm-start: global model from sibling task records on {target} (ContextRelation D')");
     Some(model)
 }
 

@@ -8,7 +8,10 @@
 //!   [`TuningDb`](crate::tuner::db::TuningDb) live, and — by default,
 //!   when that DB already holds records of *other* tasks — warm-starts
 //!   a transfer model from them (`--no-warm-start` disables,
-//!   `--warm-start` forces the attempt).
+//!   `--warm-start` forces the attempt). With `--replicas R` (and the
+//!   other farm flags) measurement runs through the shared asynchronous
+//!   [`MeasureService`](crate::measure::service::MeasureService) and the
+//!   run ends with a farm utilization report.
 //! * `tune-all` — tune C1–C12 into the shared DB; each task after the
 //!   first warm-starts from its predecessors' records (the §4
 //!   cross-workload service flow). `--alloc gradient` replaces the
@@ -25,6 +28,8 @@
 
 pub mod experiments;
 
+use crate::measure::farm::DeviceFarm;
+use crate::measure::service::{MeasureService, ServiceOptions};
 use crate::measure::{Measurer, SimMeasurer};
 use crate::schedule::template::TemplateKind;
 use crate::sim::devices;
@@ -34,6 +39,8 @@ use crate::tuner::{DbSink, TuneOptions};
 use crate::workloads;
 use anyhow::{bail, Context, Result};
 use experiments::{ExpOpts, Method};
+use std::sync::Arc;
+use std::time::Duration;
 
 /// Minimal flag parser: `--key value` and `--flag` pairs after the
 /// subcommand (clap is not vendored in the offline build).
@@ -125,6 +132,75 @@ fn alloc_of(args: &Args, default: AllocPolicy) -> Result<AllocPolicy> {
     }
 }
 
+/// Build the asynchronous device-farm [`MeasureService`] when any farm
+/// flag is present (`--replicas N`, `--measure-timeout MS`,
+/// `--farm-latency-ms MS`, `--flaky P`); `None` keeps the plain
+/// single-board simulator path. One service instance is shared by every
+/// tuning loop of the command — `tune-all` and `tune-graph` measure all
+/// their tasks' slices on the same farm.
+fn service_of(args: &Args, dev: &crate::sim::DeviceModel, seed: u64) -> Option<MeasureService> {
+    let replicas = args.get_usize("replicas", 1);
+    let timeout_ms = args.get("measure-timeout").and_then(|v| v.parse::<u64>().ok());
+    let latency_ms = args.get_usize("farm-latency-ms", 0);
+    let flaky: f64 = args.get("flaky").and_then(|v| v.parse().ok()).unwrap_or(0.0);
+    if replicas <= 1 && timeout_ms.is_none() && latency_ms == 0 && flaky <= 0.0 {
+        return None;
+    }
+    let farm = DeviceFarm::with_latency(
+        dev.clone(),
+        replicas.max(1),
+        seed,
+        Duration::from_millis(latency_ms as u64),
+    )
+    .with_flakiness(flaky);
+    let opts =
+        ServiceOptions { timeout: timeout_ms.map(Duration::from_millis), ..Default::default() };
+    Some(MeasureService::new(Arc::new(farm), opts))
+}
+
+/// One measurement back-end per coordinator command: the shared
+/// device-farm service when any farm flag is present, else a plain
+/// single-board simulator. One place to build, select and report, so
+/// the `tune`/`tune-all`/`tune-graph` arms cannot drift.
+struct FarmOrBoard {
+    service: Option<MeasureService>,
+    direct: SimMeasurer,
+}
+
+impl FarmOrBoard {
+    fn new(args: &Args, dev: &crate::sim::DeviceModel, seed: u64) -> Self {
+        FarmOrBoard {
+            service: service_of(args, dev, seed),
+            direct: SimMeasurer::with_seed(dev.clone(), seed),
+        }
+    }
+
+    /// The measurer tuning loops should drive.
+    fn measurer(&self) -> &dyn Measurer {
+        match &self.service {
+            Some(s) => s,
+            None => &self.direct,
+        }
+    }
+
+    /// Service measurer, or `fallback` when no farm flag was given —
+    /// the `tune-all` per-workload loop keeps its historical per-task
+    /// seeding on the direct path.
+    fn measurer_or<'x>(&'x self, fallback: &'x dyn Measurer) -> &'x dyn Measurer {
+        match &self.service {
+            Some(s) => s,
+            None => fallback,
+        }
+    }
+
+    /// Print the farm utilization report of a service-backed run.
+    fn report(&self) {
+        if let Some(s) = &self.service {
+            println!("{}", s.report());
+        }
+    }
+}
+
 fn exp_opts(args: &Args) -> ExpOpts {
     let mut o = if args.has("full") { ExpOpts::paper_scale() } else { ExpOpts::default() };
     o.trials = args.get_usize("trials", o.trials);
@@ -166,19 +242,14 @@ pub fn run(argv: &[String]) -> Result<()> {
             if let Some(db) = &db {
                 opts.sink = Some(DbSink::new(db, &task, dev.name));
             }
-            // --replicas N measures on a simulated device farm;
-            // --pipeline runs the asynchronous explore ∥ measure ∥
-            // retrain loop (GBT methods; others fall back to serial).
-            let replicas = args.get_usize("replicas", 1);
-            let measurer: Box<dyn Measurer> = if replicas > 1 {
-                Box::new(crate::measure::farm::DeviceFarm::new(
-                    dev.clone(),
-                    replicas,
-                    opts.seed + 1,
-                ))
-            } else {
-                Box::new(SimMeasurer::with_seed(dev.clone(), opts.seed + 1))
-            };
+            // --replicas N measures through the asynchronous device-farm
+            // service (per-replica workers, deterministic job ordering;
+            // --measure-timeout / --farm-latency-ms / --flaky set the
+            // board-fault policy and the emulated fleet). --pipeline runs
+            // the asynchronous explore ∥ measure ∥ retrain loop (GBT
+            // methods; others fall back to serial).
+            let farm = FarmOrBoard::new(&args, &dev, opts.seed + 1);
+            let measurer = farm.measurer();
             println!(
                 "tuning C{wl} on {} with {}{} ({} trials, |S_e| = {:.2e})",
                 measurer.target(),
@@ -201,7 +272,7 @@ pub fn run(argv: &[String]) -> Result<()> {
             if warm {
                 res = experiments::run_method_warm(
                     &task,
-                    measurer.as_ref(),
+                    measurer,
                     method,
                     &opts,
                     db.as_ref().expect("warm implies db"),
@@ -218,12 +289,12 @@ pub fn run(argv: &[String]) -> Result<()> {
             let res = match res {
                 Some(r) => r,
                 None if pipelined => {
-                    experiments::run_method_pipelined(&task, measurer.as_ref(), method, &opts)
+                    experiments::run_method_pipelined(&task, measurer, method, &opts)
                         .unwrap_or_else(|| {
-                            experiments::run_method(&task, measurer.as_ref(), method, &opts)
+                            experiments::run_method(&task, measurer, method, &opts)
                         })
                 }
-                None => experiments::run_method(&task, measurer.as_ref(), method, &opts),
+                None => experiments::run_method(&task, measurer, method, &opts),
             };
             if let Some((e, g)) = &res.best {
                 println!("best: {g:.1} GFLOPS");
@@ -236,6 +307,7 @@ pub fn run(argv: &[String]) -> Result<()> {
                     db.len()
                 );
             }
+            farm.report();
         }
         "tune-all" => {
             let dev = device_of(&args)?;
@@ -245,6 +317,10 @@ pub fn run(argv: &[String]) -> Result<()> {
             let path = args.get("db").unwrap_or("tuning_db.jsonl").to_string();
             let db = Database::open(&path)?;
             let pipelined = args.has("pipeline");
+            // One shared measurement service (if any farm flag is set)
+            // spans every task's loop — the whole C1–C12 run measures on
+            // the same fleet.
+            let farm = FarmOrBoard::new(&args, &dev, base_seed + 1);
             // Cross-workload service flow: C2 warm-starts from C1's
             // streamed records, C3 from C1–C2, … (§4 reuse of D).
             let warm_enabled = !args.has("no-warm-start");
@@ -265,10 +341,10 @@ pub fn run(argv: &[String]) -> Result<()> {
                         ..Default::default()
                     },
                 );
-                let measurer = SimMeasurer::with_seed(dev.clone(), base_seed + 1);
+                let measurer = farm.measurer();
                 println!("tune-all via gradient scheduler ({budget} trials total)");
                 let alloc = sched.run_tuning(
-                    &measurer,
+                    measurer,
                     &db,
                     opts.tune_options(),
                     pipelined,
@@ -284,17 +360,19 @@ pub fn run(argv: &[String]) -> Result<()> {
                     );
                 }
                 println!("tuning DB: {path} ({} records)", db.len());
+                farm.report();
                 return Ok(());
             }
             for wl in 1..=12 {
                 let task = workloads::conv_task(wl, template_of(&dev));
-                let measurer = SimMeasurer::with_seed(dev.clone(), base_seed + wl as u64);
+                let direct = SimMeasurer::with_seed(dev.clone(), base_seed + wl as u64);
+                let measurer = farm.measurer_or(&direct);
                 opts.seed = base_seed + wl as u64;
                 opts.sink = Some(DbSink::new(&db, &task, dev.name));
                 let warm_res = if warm_enabled && !db.is_empty() {
                     experiments::run_method_warm(
                         &task,
-                        &measurer,
+                        measurer,
                         Method::GbtRank,
                         &opts,
                         &db,
@@ -307,14 +385,15 @@ pub fn run(argv: &[String]) -> Result<()> {
                 let res = warm_res.unwrap_or_else(|| {
                     let o = opts.tune_options();
                     if pipelined {
-                        crate::tuner::tune_gbt_pipelined(task.clone(), &measurer, o)
+                        crate::tuner::tune_gbt_pipelined(task.clone(), measurer, o)
                     } else {
-                        crate::tuner::tune_gbt(task.clone(), &measurer, o)
+                        crate::tuner::tune_gbt(task.clone(), measurer, o)
                     }
                 });
                 println!("C{wl}: best {:.1} GFLOPS", res.best_gflops());
             }
             println!("tuning DB: {path} ({} records)", db.len());
+            farm.report();
         }
         "tune-graph" => {
             let dev = device_of(&args)?;
@@ -352,7 +431,11 @@ pub fn run(argv: &[String]) -> Result<()> {
                 Some(p) => Database::open(p)?,
                 None => Database::new(),
             };
-            let measurer = SimMeasurer::with_seed(dev.clone(), opts.seed + 1);
+            // Every task's slices measure on one shared service when a
+            // farm flag is set (the scheduler's loops all feed the same
+            // fleet); otherwise the plain single-board simulator.
+            let farm = FarmOrBoard::new(&args, &dev, opts.seed + 1);
+            let measurer = farm.measurer();
             println!(
                 "tuning {name} end-to-end on {} — {} tasks, {budget} trials total, \
                  {} allocation",
@@ -361,7 +444,7 @@ pub fn run(argv: &[String]) -> Result<()> {
                 policy.name()
             );
             let alloc = sched.run_tuning(
-                &measurer,
+                measurer,
                 &db,
                 opts.tune_options(),
                 args.has("pipeline"),
@@ -396,6 +479,7 @@ pub fn run(argv: &[String]) -> Result<()> {
             if let Some(path) = args.get("db") {
                 println!("tuning DB: {path} ({} records)", db.len());
             }
+            farm.report();
         }
         "e2e" => {
             let dev = device_of(&args)?;
@@ -500,12 +584,17 @@ USAGE:
   autotvm tune      --workload C6 --device sim-gpu --method gbt_rank \\
                     [--trials N] [--db file.jsonl] [--full] \\
                     [--pipeline] [--depth D] [--replicas R] \\
+                    [--measure-timeout MS] [--farm-latency-ms MS] [--flaky P] \\
                     [--warm-start] [--no-warm-start]
   autotvm tune-all  --device sim-gpu [--trials N] [--db file.jsonl] \\
-                    [--pipeline] [--no-warm-start] [--alloc uniform|gradient]
+                    [--pipeline] [--no-warm-start] [--alloc uniform|gradient] \\
+                    [--replicas R] [--measure-timeout MS] \\
+                    [--farm-latency-ms MS] [--flaky P]
   autotvm tune-graph <resnet18|mobilenet|dqn|lstm|dcgan> --device sim-gpu \\
                     [--budget N] [--slice S] [--alloc uniform|gradient] \\
-                    [--db file.jsonl] [--pipeline] [--no-warm-start] [--verbose]
+                    [--db file.jsonl] [--pipeline] [--no-warm-start] [--verbose] \\
+                    [--replicas R] [--measure-timeout MS] \\
+                    [--farm-latency-ms MS] [--flaky P]
   autotvm e2e       --network resnet18 --device sim-gpu [--trials N]
   autotvm fig <4|5|6|7|8|9|10|11> [--full] [--all-workloads] [--neural] [--device D]
   autotvm pjrt-demo [--trials N]
@@ -515,6 +604,13 @@ methods: random, ga, gbt_rank, gbt_reg, neural, neural_reg
 
 --db opens a WAL-backed tuning DB: trials stream in live, and new tasks
 warm-start a transfer model from other tasks' records by default.
+
+--replicas R measures through the asynchronous device-farm service: R
+per-replica workers, sequence-ordered jobs (fixed-seed runs stay
+bit-for-bit reproducible), bounded in-flight backpressure, and a
+timeout/retry/quarantine board-fault policy (--measure-timeout MS).
+--farm-latency-ms emulates per-board RPC round-trips, --flaky P injects
+board failures; the run ends with a farm utilization report.
 
 tune-graph spreads one global trial budget across a network's tasks:
 --alloc gradient (default) allocates each round-slice to the task with

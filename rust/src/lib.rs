@@ -8,8 +8,14 @@
 //! * a tensor-expression DSL and schedule space ([`expr`], [`schedule`]),
 //! * a compiler `g(e, s)` lowering expression + schedule to a low-level
 //!   loop AST ([`lower`], [`ast`]),
-//! * hardware back-ends `f(x)`: analytic device simulators ([`sim`]) and
-//!   a real PJRT wall-clock path ([`measure`], [`runtime`]),
+//! * hardware back-ends `f(x)`: analytic device simulators ([`sim`]), a
+//!   real PJRT wall-clock path ([`measure`], [`runtime`]), and the
+//!   asynchronous device-farm service every tuning loop shares
+//!   ([`measure::service`]): a per-replica worker pool built through
+//!   [`MeasurerFactory`](measure::service::MeasurerFactory),
+//!   sequence-ordered jobs with bounded in-flight backpressure, and
+//!   timeout/retry/quarantine board-fault policies with deterministic
+//!   result accounting,
 //! * the statistical cost models `f̂(x)`: gradient-boosted trees
 //!   ([`gbt`]) and an AOT-compiled neural model executed via PJRT
 //!   ([`model`]),

@@ -3,25 +3,50 @@
 //! The paper's system measures batches on a farm of boards behind an
 //! RPC tracker; boards flake, time out and return build errors, and the
 //! tuner must absorb that. [`DeviceFarm`] reproduces the farm semantics
-//! (a batch is sharded round-robin across device replicas and measured
-//! concurrently); [`FlakyMeasurer`] injects seeded failures into any
-//! back-end so tests can assert the tuning loop is robust to them.
+//! two ways: as a [`Measurer`] (a batch is sharded round-robin across
+//! device replicas and measured concurrently — the original in-place
+//! farm) and as the sim-backed [`MeasurerFactory`] behind the
+//! asynchronous [`MeasureService`] (each service worker builds its own
+//! per-replica board, with the farm's RTT and flakiness applied
+//! per-board). [`FlakyMeasurer`] injects seeded failures into any
+//! back-end and [`LatencyMeasurer`] adds per-candidate round-trip
+//! latency, so tests and benches can emulate slow, unreliable fleets.
+//!
+//! [`MeasureService`]: super::service::MeasureService
+//! [`MeasurerFactory`]: super::service::MeasurerFactory
 
+use super::service::MeasurerFactory;
 use super::{MeasureResult, Measurer, SimMeasurer};
 use crate::schedule::space::ConfigEntity;
 use crate::schedule::template::Task;
 use crate::util::Rng;
 use std::sync::Mutex;
+use std::time::Duration;
+
+/// Decorrelated per-replica noise seed (real boards differ run to run).
+fn replica_seed(base: u64, replica: usize) -> u64 {
+    base.wrapping_add(replica as u64 * 1_000_003)
+}
 
 /// A farm of simulated boards of the same device type.
 pub struct DeviceFarm {
-    /// The simulated boards, each with its own noise stream.
-    pub replicas: Vec<SimMeasurer>,
+    /// The simulated boards, each with its own noise stream and wrapped
+    /// with the farm's RTT ([`LatencyMeasurer`] is the single home of
+    /// the latency semantics). These serve the in-place [`Measurer`]
+    /// path; the [`MeasurerFactory`] path builds fresh boards with the
+    /// same per-replica seeds on the service's worker threads.
+    pub replicas: Vec<LatencyMeasurer<SimMeasurer>>,
     /// Per-candidate board latency (RPC round-trip + kernel run time of
     /// the paper's remote farm). Zero by default; benches and the
     /// pipelined-tuner tests use it to emulate slow hardware that the
     /// exploration and model stages should hide behind.
-    pub latency: std::time::Duration,
+    pub latency: Duration,
+    /// Per-candidate board failure probability, applied per replica on
+    /// the factory path (the in-place [`Measurer`] path stays
+    /// failure-free; wrap it in [`FlakyMeasurer`] instead).
+    pub fail_prob: f64,
+    device: crate::sim::DeviceModel,
+    base_seed: u64,
 }
 
 impl DeviceFarm {
@@ -29,9 +54,18 @@ impl DeviceFarm {
     /// real boards differ run to run).
     pub fn new(device: crate::sim::DeviceModel, n: usize, seed: u64) -> Self {
         let replicas = (0..n)
-            .map(|i| SimMeasurer::with_seed(device.clone(), seed.wrapping_add(i as u64 * 1_000_003)))
+            .map(|i| LatencyMeasurer {
+                inner: SimMeasurer::with_seed(device.clone(), replica_seed(seed, i)),
+                latency: Duration::ZERO,
+            })
             .collect();
-        DeviceFarm { replicas, latency: std::time::Duration::ZERO }
+        DeviceFarm {
+            replicas,
+            latency: Duration::ZERO,
+            fail_prob: 0.0,
+            device,
+            base_seed: seed,
+        }
     }
 
     /// Farm whose boards take `latency` wall-clock per measurement on
@@ -40,11 +74,72 @@ impl DeviceFarm {
         device: crate::sim::DeviceModel,
         n: usize,
         seed: u64,
-        latency: std::time::Duration,
+        latency: Duration,
     ) -> Self {
         let mut farm = DeviceFarm::new(device, n, seed);
         farm.latency = latency;
+        for board in &mut farm.replicas {
+            board.latency = latency;
+        }
         farm
+    }
+
+    /// Builder: boards flake with probability `fail_prob` per candidate
+    /// on the [`MeasurerFactory`] path (seeded per replica).
+    pub fn with_flakiness(mut self, fail_prob: f64) -> Self {
+        self.fail_prob = fail_prob;
+        self
+    }
+}
+
+impl MeasurerFactory for DeviceFarm {
+    fn make(&self, replica: usize) -> anyhow::Result<Box<dyn Measurer>> {
+        let board = LatencyMeasurer {
+            inner: SimMeasurer::with_seed(
+                self.device.clone(),
+                replica_seed(self.base_seed, replica),
+            ),
+            latency: self.latency,
+        };
+        Ok(if self.fail_prob > 0.0 {
+            Box::new(FlakyMeasurer::new(
+                board,
+                self.fail_prob,
+                replica_seed(self.base_seed ^ 0x5EED_F1A2, replica),
+            ))
+        } else {
+            Box::new(board)
+        })
+    }
+
+    fn replicas(&self) -> usize {
+        self.replicas.len().max(1)
+    }
+
+    fn board(&self) -> String {
+        self.device.name.to_string()
+    }
+}
+
+/// Wrap a back-end with per-candidate round-trip latency — the RPC +
+/// run time of one remote board in the paper's farm.
+pub struct LatencyMeasurer<M: Measurer> {
+    /// The wrapped back-end.
+    pub inner: M,
+    /// Sleep per candidate before measuring.
+    pub latency: Duration,
+}
+
+impl<M: Measurer> Measurer for LatencyMeasurer<M> {
+    fn measure(&self, task: &Task, batch: &[ConfigEntity]) -> Vec<MeasureResult> {
+        if !self.latency.is_zero() && !batch.is_empty() {
+            std::thread::sleep(self.latency * batch.len() as u32);
+        }
+        self.inner.measure(task, batch)
+    }
+
+    fn target(&self) -> String {
+        self.inner.target()
     }
 }
 
@@ -63,7 +158,6 @@ impl Measurer for DeviceFarm {
             })
             .collect();
         let mut out: Vec<Option<MeasureResult>> = vec![None; batch.len()];
-        let latency = self.latency;
         let results: Vec<Vec<(usize, MeasureResult)>> = std::thread::scope(|s| {
             let handles: Vec<_> = shards
                 .iter()
@@ -72,9 +166,7 @@ impl Measurer for DeviceFarm {
                     s.spawn(move || {
                         let entities: Vec<ConfigEntity> =
                             shard.iter().map(|(_, e)| e.clone()).collect();
-                        if !latency.is_zero() && !entities.is_empty() {
-                            std::thread::sleep(latency * entities.len() as u32);
-                        }
+                        // the board itself is RTT-wrapped (LatencyMeasurer)
                         let rs = replica.measure(task, &entities);
                         shard
                             .iter()
@@ -95,11 +187,7 @@ impl Measurer for DeviceFarm {
     }
 
     fn target(&self) -> String {
-        format!(
-            "farm({}x{})",
-            self.replicas.len(),
-            self.replicas.first().map(|r| r.device.name).unwrap_or("?")
-        )
+        format!("farm({}x{})", self.replicas.len(), self.device.name)
     }
 }
 

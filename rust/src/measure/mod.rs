@@ -10,9 +10,17 @@
 //! * [`pjrt::PjrtMeasurer`] — the real-hardware path: compiles
 //!   AOT-generated Pallas kernel variants through the PJRT CPU client
 //!   and wall-clocks them (see `examples/pjrt_measure.rs`).
+//! * [`service::MeasureService`] — the asynchronous device-farm
+//!   service every tuning loop shares: per-replica workers (each
+//!   building its own measurer on-thread via
+//!   [`service::MeasurerFactory`]), sequence-numbered job queues with
+//!   bounded in-flight backpressure, and timeout/retry/quarantine
+//!   board-fault policies, with results delivered deterministically in
+//!   submission order.
 
 pub mod farm;
 pub mod pjrt;
+pub mod service;
 
 use crate::schedule::space::ConfigEntity;
 use crate::schedule::template::Task;
@@ -49,17 +57,81 @@ impl MeasureResult {
     }
 }
 
+/// Handle for a measurement batch submitted through
+/// [`Measurer::submit`]: redeem it with [`Measurer::wait`] on the same
+/// back-end. For plain synchronous back-ends the ticket already carries
+/// the results; for the asynchronous [`service::MeasureService`] it
+/// carries the batch's job sequence numbers while the farm measures in
+/// the background.
+pub struct BatchTicket {
+    ready: Option<Vec<MeasureResult>>,
+    seqs: Vec<u64>,
+}
+
+impl BatchTicket {
+    /// Ticket that already holds its results (synchronous back-ends).
+    pub(crate) fn ready(results: Vec<MeasureResult>) -> Self {
+        BatchTicket { ready: Some(results), seqs: Vec::new() }
+    }
+
+    /// Ticket for jobs still in flight on a [`service::MeasureService`].
+    pub(crate) fn pending(seqs: Vec<u64>) -> Self {
+        BatchTicket { ready: None, seqs }
+    }
+
+    pub(crate) fn into_parts(self) -> (Option<Vec<MeasureResult>>, Vec<u64>) {
+        (self.ready, self.seqs)
+    }
+}
+
 /// A measurement back-end.
 ///
 /// Not `Send`/`Sync`: the tuner drives measurement from one thread and
 /// back-ends parallelize internally (PJRT handles are thread-affine in
-/// the `xla` crate).
+/// the `xla` crate). The [`service::MeasureService`] is the exception
+/// that proves the rule — it parallelizes across replica *worker
+/// threads*, each of which owns its own thread-affine measurer, and is
+/// itself driven from one caller thread through this trait.
 pub trait Measurer {
     /// Measure a batch of candidates for one task.
     fn measure(&self, task: &Task, batch: &[ConfigEntity]) -> Vec<MeasureResult>;
 
     /// Human-readable target name (for logs / records).
     fn target(&self) -> String;
+
+    /// Begin measuring a batch, returning a [`BatchTicket`] to redeem
+    /// with [`wait`](Self::wait). The default measures synchronously at
+    /// submit time (so plain back-ends behave exactly as before);
+    /// asynchronous back-ends override both methods to keep the next
+    /// batch measuring while the caller absorbs the previous one.
+    fn submit(&self, task: &Task, batch: &[ConfigEntity]) -> BatchTicket {
+        BatchTicket::ready(self.measure(task, batch))
+    }
+
+    /// Redeem a ticket from [`submit`](Self::submit) on this back-end.
+    fn wait(&self, ticket: BatchTicket) -> Vec<MeasureResult> {
+        ticket
+            .ready
+            .expect("ticket from an asynchronous service must be waited on that service")
+    }
+}
+
+impl<'a> Measurer for Box<dyn Measurer + 'a> {
+    fn measure(&self, task: &Task, batch: &[ConfigEntity]) -> Vec<MeasureResult> {
+        (**self).measure(task, batch)
+    }
+
+    fn target(&self) -> String {
+        (**self).target()
+    }
+
+    fn submit(&self, task: &Task, batch: &[ConfigEntity]) -> BatchTicket {
+        (**self).submit(task, batch)
+    }
+
+    fn wait(&self, ticket: BatchTicket) -> Vec<MeasureResult> {
+        (**self).wait(ticket)
+    }
 }
 
 /// Simulator-backed measurer with a parallel build+run worker pool.

@@ -108,6 +108,36 @@ impl PjrtMeasurer {
     }
 }
 
+/// [`MeasurerFactory`] for the real-hardware path: each device-farm
+/// worker constructs its *own* PJRT client and measurer on its own
+/// thread — exactly the thread-affinity constraint the service's
+/// factory indirection exists for (PJRT handles must never cross
+/// threads). Construction failure (missing artifacts, no PJRT plugin)
+/// is a *board fault*: the service retries the job on another replica
+/// and quarantines the broken board instead of burning trials on it, so
+/// one misconfigured machine degrades — never kills — the farm.
+///
+/// [`MeasurerFactory`]: super::service::MeasurerFactory
+pub struct PjrtMeasurerFactory {
+    /// Number of farm workers, each with a private PJRT client.
+    pub replicas: usize,
+}
+
+impl super::service::MeasurerFactory for PjrtMeasurerFactory {
+    fn make(&self, _replica: usize) -> anyhow::Result<Box<dyn Measurer>> {
+        let m = PjrtMeasurer::new(crate::runtime::PjrtRuntime::cpu()?)?;
+        Ok(Box::new(m))
+    }
+
+    fn replicas(&self) -> usize {
+        self.replicas.max(1)
+    }
+
+    fn board(&self) -> String {
+        "pjrt-cpu".to_string()
+    }
+}
+
 impl Measurer for PjrtMeasurer {
     fn measure(&self, task: &Task, batch: &[ConfigEntity]) -> Vec<MeasureResult> {
         let flops = task.def.total_flops() as f64;

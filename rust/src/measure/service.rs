@@ -1,0 +1,933 @@
+//! Asynchronous device-farm measurement service — the shared `f(x)`
+//! back-end of every tuning loop.
+//!
+//! The paper's system (§4) measures trials on a distributed fleet of
+//! boards behind an RPC tracker: jobs are sharded across replicas,
+//! boards flake and time out, and the tuner keeps going. This module is
+//! that fleet as a long-lived in-process **service**:
+//!
+//! ```text
+//!   submit_batch ──▶ sequence-numbered jobs ──▶ per-replica workers
+//!        │            (bounded in-flight:        (each builds its own
+//!        │             backpressure)              Measurer on-thread
+//!        │                                        via MeasurerFactory)
+//!        ▼                                              │ events
+//!   BatchTicket ◀── results keyed by seq ◀──────── monitor thread
+//!   (wait_batch = results                       (timeout / retry /
+//!    in submission order)                        quarantine policy)
+//! ```
+//!
+//! * **Thread affinity** — [`Measurer`] is deliberately not `Send`
+//!   (PJRT handles must stay on one thread). The service never moves a
+//!   measurer across threads: each worker constructs its own through a
+//!   [`MeasurerFactory`]; only the factory is shared.
+//! * **Deterministic accounting** — every job carries a sequence
+//!   number; job `seq` is dispatched to replica `seq % replicas`, and
+//!   each worker processes its jobs in sequence order. A fixed-seed sim
+//!   run is therefore bit-for-bit reproducible no matter how workers
+//!   interleave in wall-clock time, and with one replica the service is
+//!   bit-for-bit identical to calling the measurer directly. Results
+//!   are handed back strictly in submission order
+//!   ([`MeasureService::wait_batch`]), so the trial accountant
+//!   downstream observes the same history every run.
+//! * **Fault policy** — a worker panic, a measurer construction
+//!   failure, or a per-job timeout is a *board* fault: the job is
+//!   retried on a replica it has not been dispatched to (up to
+//!   [`ServiceOptions::retries`] times; no untried replica ⇒ the job
+//!   completes as an error rather than bouncing between broken
+//!   boards), and a board accumulating consecutive faults is
+//!   quarantined ([`ServiceOptions::quarantine_after`]). A timed-out
+//!   board is additionally marked *suspect* — skipped for new
+//!   dispatches until it answers again — and jobs queued behind the
+//!   timed-out one are relocated immediately (the timeout clock only
+//!   runs for started attempts, so queued jobs must not wait on a
+//!   wedged board). A [`MeasureResult`] carrying an `error` is a
+//!   *measurement* outcome (build error, resource-limit violation) —
+//!   returned as-is, exactly like failed trials in the paper, and never
+//!   retried. Retried jobs draw fresh measurement noise, so determinism
+//!   bends only in runs that actually fault.
+//! * **Backpressure** — at most [`ServiceOptions::max_inflight`] jobs
+//!   may be in flight; [`MeasureService::submit_batch`] blocks past
+//!   that, so a fast proposer cannot flood the farm.
+//!
+//! The service implements [`Measurer`], so every loop (`serial_loop`,
+//! the pipelined measure stage, graph-scheduler slices) runs through it
+//! unchanged — and because it overrides the asynchronous
+//! [`Measurer::submit`] / [`Measurer::wait`] pair, the pipelined
+//! measure stage keeps batch `k+1` measuring on the farm while batch
+//! `k`'s results drain into the accountant.
+
+use super::{BatchTicket, MeasureResult, Measurer};
+use crate::schedule::space::ConfigEntity;
+use crate::schedule::template::Task;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Builds one [`Measurer`] per farm replica, on the worker's own thread
+/// (the factory crosses threads; the measurers it builds never do).
+/// Implemented by [`DeviceFarm`](super::farm::DeviceFarm) for the
+/// simulated fleet; a PJRT deployment would hand out one thread-affine
+/// client per board here.
+pub trait MeasurerFactory: Send + Sync {
+    /// Construct the measurer of replica `replica`. Called on — and the
+    /// result only ever used from — that replica's worker thread; called
+    /// again to rebuild a measurer that panicked mid-job, and re-tried
+    /// on the next job after a failure. A construction error (or panic)
+    /// is a **board fault**: the job is retried on another replica and
+    /// the broken board accumulates strikes toward quarantine, rather
+    /// than burning trials on a board that cannot measure.
+    fn make(&self, replica: usize) -> anyhow::Result<Box<dyn Measurer>>;
+
+    /// Number of replicas in the farm.
+    fn replicas(&self) -> usize;
+
+    /// Board name for logs and records (e.g. `sim-gpu`).
+    fn board(&self) -> String;
+}
+
+/// Fault and flow-control policy of a [`MeasureService`].
+#[derive(Clone, Debug)]
+pub struct ServiceOptions {
+    /// Per-job wall-clock budget, measured from the moment a worker
+    /// *starts measuring* the job (neither queue wait nor back-end
+    /// construction counts — a PJRT client coming up slowly is not a
+    /// hung job). On expiry the job is treated as a board fault:
+    /// retried elsewhere or completed as an error. `None` (the default)
+    /// never times out — the right setting for deterministic simulator
+    /// runs.
+    pub timeout: Option<Duration>,
+    /// How many times a job may be re-dispatched after a board fault
+    /// (panic / timeout) before it completes as an error result.
+    pub retries: usize,
+    /// Consecutive board faults after which a replica stops receiving
+    /// new jobs. `0` disables quarantine. When every replica is
+    /// quarantined, dispatch ignores quarantine — degraded beats
+    /// deadlocked.
+    pub quarantine_after: usize,
+    /// Upper bound on jobs in flight; `submit_batch` blocks past it.
+    pub max_inflight: usize,
+}
+
+impl Default for ServiceOptions {
+    fn default() -> Self {
+        ServiceOptions { timeout: None, retries: 1, quarantine_after: 3, max_inflight: 1024 }
+    }
+}
+
+/// Snapshot of farm accounting (see [`MeasureService::stats`]).
+#[derive(Clone, Debug)]
+pub struct FarmStats {
+    /// Jobs dispatched to each replica (a retry counts again).
+    pub jobs: Vec<u64>,
+    /// Seconds each replica spent measuring.
+    pub busy_secs: Vec<f64>,
+    /// Jobs completed (one per submitted job, however many attempts).
+    pub completed: u64,
+    /// Re-dispatches after board faults.
+    pub retries: u64,
+    /// Attempts that hit the per-job timeout.
+    pub timeouts: u64,
+    /// Non-timeout board faults absorbed: worker panics (the measurer
+    /// is rebuilt afterwards) and measurer construction failures.
+    pub panics: u64,
+    /// Which replicas are currently quarantined.
+    pub quarantined: Vec<bool>,
+    /// Wall-clock span from the first job start to the last completion.
+    pub window_secs: f64,
+}
+
+impl FarmStats {
+    /// Average number of busy replicas over the measurement window —
+    /// `Σ busy_secs / window_secs`. Above 1.0 means the farm genuinely
+    /// measured in parallel; the ceiling is the replica count.
+    pub fn utilization(&self) -> f64 {
+        if self.window_secs <= 0.0 {
+            return 0.0;
+        }
+        self.busy_secs.iter().sum::<f64>() / self.window_secs
+    }
+}
+
+/// One dispatched measurement job.
+struct Job {
+    seq: u64,
+    attempt: u32,
+    task: Arc<Task>,
+    entity: ConfigEntity,
+}
+
+/// Worker → monitor event stream.
+enum Event {
+    /// A worker began measuring an attempt.
+    Started { seq: u64, attempt: u32, at: Instant },
+    /// An attempt finished: `Ok` is the measurement (which may itself be
+    /// an errored [`MeasureResult`]); `Err` is a worker panic message.
+    Done {
+        seq: u64,
+        attempt: u32,
+        replica: usize,
+        result: Result<MeasureResult, String>,
+        at: Instant,
+    },
+}
+
+/// In-flight bookkeeping for one job. Carries the task and entity so
+/// the monitor can re-dispatch on a board fault.
+struct Pending {
+    attempt: u32,
+    /// Replicas this job has been dispatched to (first = home replica,
+    /// last = the one currently holding it). Dispatches are never
+    /// repeated to the same replica.
+    tried: Vec<usize>,
+    /// Real board faults this job has suffered (panics / timeouts).
+    /// Only these consume the retry budget — a relocation off a stalled
+    /// board is not the job's fault.
+    faults: usize,
+    /// When the current attempt started on a worker (`None` while
+    /// queued).
+    started: Option<Instant>,
+    /// Last fault reason, reported if the job exhausts its retries.
+    last_fault: String,
+    task: Arc<Task>,
+    entity: ConfigEntity,
+}
+
+/// All mutable service state, under one lock. Workers never take it —
+/// they only read their own job queue and write the event channel — so
+/// the measurement hot path is lock-free with respect to this mutex.
+struct State {
+    next_seq: u64,
+    inflight: usize,
+    pending: HashMap<u64, Pending>,
+    results: HashMap<u64, MeasureResult>,
+    /// `None` once shutdown begins — dropping a sender closes that
+    /// worker's queue.
+    worker_txs: Vec<Option<mpsc::Sender<Job>>>,
+    consecutive_faults: Vec<usize>,
+    quarantined: Vec<bool>,
+    /// A replica whose running job timed out is *suspect* — skipped for
+    /// new dispatches (like quarantine, as a preference) until it
+    /// answers again, so a wedged board does not keep accumulating
+    /// queued jobs that can never start.
+    suspect: Vec<bool>,
+    // ---- accounting ----
+    jobs: Vec<u64>,
+    busy: Vec<Duration>,
+    completed: u64,
+    retries: u64,
+    timeouts: u64,
+    panics: u64,
+    first_start: Option<Instant>,
+    last_done: Option<Instant>,
+}
+
+fn complete(st: &mut State, seq: u64, result: MeasureResult, at: Instant) {
+    st.pending.remove(&seq);
+    st.results.insert(seq, result);
+    st.inflight = st.inflight.saturating_sub(1);
+    st.completed += 1;
+    st.last_done = Some(match st.last_done {
+        Some(t) if t > at => t,
+        _ => at,
+    });
+}
+
+struct Inner {
+    state: Mutex<State>,
+    /// Signals completions (wakes `wait_batch`) and in-flight drops
+    /// (wakes a backpressured `submit_batch`).
+    cv: Condvar,
+    opts: ServiceOptions,
+    n: usize,
+}
+
+impl Inner {
+    /// Deterministic replica choice for `seq`: home replica `seq % n`,
+    /// scanning forward past quarantined/suspect boards and past
+    /// `exclude` (replicas this job was already dispatched to).
+    /// Quarantine is a preference — a quarantined board still *answers*
+    /// (it panics or errors promptly), so when nothing better exists
+    /// the scan repeats allowing quarantined boards. A *suspect* board
+    /// is a hard veto: it is wedged mid-measurement, a job queued on it
+    /// may never start, and the timeout clock only arms for started
+    /// attempts — so with only suspect candidates left this returns
+    /// `None` and the caller fails the job instead of stranding it.
+    fn pick_replica(&self, st: &State, seq: u64, exclude: &[usize]) -> Option<usize> {
+        let start = (seq % self.n as u64) as usize;
+        for pass in 0..2 {
+            for i in 0..self.n {
+                let r = (start + i) % self.n;
+                if exclude.contains(&r)
+                    || st.suspect[r]
+                    || (pass == 0 && st.quarantined[r])
+                {
+                    continue;
+                }
+                return Some(r);
+            }
+        }
+        None
+    }
+
+    /// Re-dispatch job `seq` (whose `last_fault` the caller just set)
+    /// to a replica it has not been dispatched to yet, or — when its
+    /// fault-retry budget is exhausted or no untried replica exists —
+    /// complete it as an error result. Only real board faults count
+    /// against the budget (relocations off a stalled board are free),
+    /// and re-dispatching to an already-tried board is never useful (it
+    /// faulted or is wedged), so a farm with no healthy boards left
+    /// drains its jobs as errors instead of hanging.
+    fn requeue_or_fail(&self, st: &mut State, seq: u64, at: Instant) {
+        if st.pending[&seq].faults <= self.opts.retries {
+            let tried = st.pending[&seq].tried.clone();
+            if let Some(next) = self.pick_replica(st, seq, &tried) {
+                let job = {
+                    let p = st.pending.get_mut(&seq).expect("pending job");
+                    p.attempt += 1;
+                    p.started = None;
+                    p.tried.push(next);
+                    Job {
+                        seq,
+                        attempt: p.attempt,
+                        task: p.task.clone(),
+                        entity: p.entity.clone(),
+                    }
+                };
+                st.retries += 1;
+                st.jobs[next] += 1;
+                let sent = st.worker_txs[next]
+                    .as_ref()
+                    .map(|tx| tx.send(job).is_ok())
+                    .unwrap_or(false);
+                if sent {
+                    return;
+                }
+            }
+        }
+        let msg = format!(
+            "board fault after {} attempt(s): {}",
+            st.pending[&seq].tried.len(),
+            st.pending[&seq].last_fault
+        );
+        complete(st, seq, MeasureResult::err(msg), at);
+    }
+
+    /// Handle a board fault (panic, construction failure or timeout) on
+    /// `replica` for attempt `attempt` of job `seq`: strike the board
+    /// (possibly quarantining it; a timeout also marks it suspect), then
+    /// re-dispatch the job elsewhere or complete it as an error. Stale
+    /// attempts (a newer retry is already out) are ignored.
+    fn fault(
+        &self,
+        st: &mut State,
+        seq: u64,
+        attempt: u32,
+        replica: usize,
+        reason: String,
+        at: Instant,
+        timed_out: bool,
+    ) {
+        let current = st.pending.get(&seq).map_or(false, |p| p.attempt == attempt);
+        if !current {
+            return;
+        }
+        if timed_out {
+            st.timeouts += 1;
+            st.suspect[replica] = true;
+        } else {
+            st.panics += 1;
+        }
+        st.consecutive_faults[replica] += 1;
+        if self.opts.quarantine_after > 0
+            && st.consecutive_faults[replica] >= self.opts.quarantine_after
+        {
+            st.quarantined[replica] = true;
+        }
+        if let Some(started) = st.pending.get_mut(&seq).and_then(|p| p.started.take()) {
+            st.busy[replica] += at.saturating_duration_since(started);
+        }
+        {
+            let p = st.pending.get_mut(&seq).expect("current attempt checked");
+            p.last_fault = reason;
+            p.faults += 1;
+        }
+        self.requeue_or_fail(st, seq, at);
+    }
+
+    /// Move every queued-but-not-started job off `replica`: its running
+    /// job just timed out, so anything waiting behind that job could
+    /// wait forever (the timeout clock only runs for *started* attempts
+    /// — this relocation is what protects queued ones).
+    fn relocate_queued(&self, st: &mut State, replica: usize, at: Instant) {
+        let stuck: Vec<u64> = st
+            .pending
+            .iter()
+            .filter(|(_, p)| p.started.is_none() && p.tried.last() == Some(&replica))
+            .map(|(&seq, _)| seq)
+            .collect();
+        for seq in stuck {
+            if let Some(p) = st.pending.get_mut(&seq) {
+                p.last_fault =
+                    format!("requeued: board {replica} stalled on an earlier job");
+            }
+            self.requeue_or_fail(st, seq, at);
+        }
+    }
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".to_string()
+    }
+}
+
+fn worker_loop(
+    factory: Arc<dyn MeasurerFactory>,
+    replica: usize,
+    rx: mpsc::Receiver<Job>,
+    ev: mpsc::Sender<Event>,
+) {
+    let mut measurer: Option<Box<dyn Measurer>> = None;
+    while let Ok(job) = rx.recv() {
+        if measurer.is_none() {
+            // A construction error or panic is a board fault: the job is
+            // retried on another replica and this board takes a strike
+            // (construction is re-attempted on its next job, so a board
+            // that comes back later rejoins the farm).
+            let fault_msg = match catch_unwind(AssertUnwindSafe(|| factory.make(replica))) {
+                Ok(Ok(m)) => {
+                    measurer = Some(m);
+                    None
+                }
+                Ok(Err(e)) => Some(format!("measurer construction failed: {e:#}")),
+                Err(p) => Some(format!(
+                    "measurer construction panicked: {}",
+                    panic_message(p.as_ref())
+                )),
+            };
+            if let Some(msg) = fault_msg {
+                let _ = ev.send(Event::Done {
+                    seq: job.seq,
+                    attempt: job.attempt,
+                    replica,
+                    result: Err(msg),
+                    at: Instant::now(),
+                });
+                continue;
+            }
+        }
+        // Started only after the back-end exists: the per-job timeout
+        // clock must not charge measurer construction (a slow PJRT
+        // client coming up is not a hung job) against the job.
+        let _ = ev.send(Event::Started { seq: job.seq, attempt: job.attempt, at: Instant::now() });
+        let m = measurer.as_ref().expect("measurer built above");
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            m.measure(&job.task, std::slice::from_ref(&job.entity))
+        }));
+        let result = match outcome {
+            Ok(mut v) => match v.pop() {
+                Some(r) if v.is_empty() => Ok(r),
+                _ => Ok(MeasureResult::err("backend returned a result-count mismatch")),
+            },
+            Err(p) => {
+                measurer = None; // possibly poisoned: rebuild on the next job
+                Err(format!("worker panic: {}", panic_message(p.as_ref())))
+            }
+        };
+        let _ = ev.send(Event::Done {
+            seq: job.seq,
+            attempt: job.attempt,
+            replica,
+            result,
+            at: Instant::now(),
+        });
+    }
+}
+
+fn monitor_loop(inner: Arc<Inner>, rx: mpsc::Receiver<Event>) {
+    loop {
+        // Earliest running-attempt deadline, when a timeout is set.
+        let wait = inner.opts.timeout.and_then(|t| {
+            let st = inner.state.lock().unwrap();
+            st.pending
+                .values()
+                .filter_map(|p| p.started)
+                .min()
+                .map(|earliest| (earliest + t).saturating_duration_since(Instant::now()))
+        });
+        let ev = match wait {
+            Some(d) => match rx.recv_timeout(d) {
+                Ok(ev) => Some(ev),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            },
+            None => match rx.recv() {
+                Ok(ev) => Some(ev),
+                Err(_) => break,
+            },
+        };
+        let mut guard = inner.state.lock().unwrap();
+        let st = &mut *guard;
+        match ev {
+            Some(Event::Started { seq, attempt, at }) => {
+                if st.first_start.is_none() {
+                    st.first_start = Some(at);
+                }
+                if let Some(p) = st.pending.get_mut(&seq) {
+                    if p.attempt == attempt {
+                        p.started = Some(at);
+                    }
+                }
+            }
+            Some(Event::Done { seq, attempt, replica, result, at }) => match result {
+                Ok(r) => {
+                    // Any answer — even a stale, timed-out one — proves
+                    // the board is alive again: it may receive new
+                    // dispatches (suspicion lifted), though its strike
+                    // count below only clears on an in-time answer.
+                    st.suspect[replica] = false;
+                    let current =
+                        st.pending.get(&seq).map_or(false, |p| p.attempt == attempt);
+                    if current {
+                        // Only an in-time answer clears the board's
+                        // strike count and lifts quarantine — a stale
+                        // (timed-out) answer must not, or a consistently
+                        // slow board that always times out yet
+                        // eventually replies could never be quarantined.
+                        // (A quarantined board only receives work when
+                        // no healthy board exists, so lifting is rare —
+                        // that fallback doubles as its probation.)
+                        st.consecutive_faults[replica] = 0;
+                        st.quarantined[replica] = false;
+                        if let Some(s) =
+                            st.pending.get_mut(&seq).and_then(|p| p.started.take())
+                        {
+                            st.busy[replica] += at.saturating_duration_since(s);
+                        }
+                        complete(st, seq, r, at);
+                        inner.cv.notify_all();
+                    }
+                    // A stale success is discarded: the retry's result
+                    // stands (or will arrive).
+                }
+                Err(msg) => {
+                    // `msg` is already labeled by the worker (panic vs
+                    // construction failure).
+                    inner.fault(st, seq, attempt, replica, msg, at, false);
+                    inner.cv.notify_all();
+                }
+            },
+            None => {
+                // Timeout tick: fault every running attempt past its
+                // deadline.
+                let t = inner.opts.timeout.expect("tick implies a timeout");
+                let now = Instant::now();
+                let expired: Vec<(u64, u32, usize)> = st
+                    .pending
+                    .iter()
+                    .filter_map(|(&seq, p)| {
+                        let started = p.started?;
+                        if now.saturating_duration_since(started) >= t {
+                            Some((seq, p.attempt, *p.tried.last().expect("dispatched")))
+                        } else {
+                            None
+                        }
+                    })
+                    .collect();
+                let mut stalled: Vec<usize> = Vec::new();
+                for (seq, attempt, replica) in expired {
+                    inner.fault(
+                        st,
+                        seq,
+                        attempt,
+                        replica,
+                        format!("timeout after {t:?}"),
+                        now,
+                        true,
+                    );
+                    if !stalled.contains(&replica) {
+                        stalled.push(replica);
+                    }
+                }
+                // Anything queued behind a timed-out job would never
+                // start (and so never itself time out): move it now.
+                for replica in stalled {
+                    inner.relocate_queued(st, replica, now);
+                }
+                inner.cv.notify_all();
+            }
+        }
+    }
+    // Shutdown (every worker gone): fail anything still pending so no
+    // waiter can hang.
+    let mut guard = inner.state.lock().unwrap();
+    let st = &mut *guard;
+    let seqs: Vec<u64> = st.pending.keys().copied().collect();
+    let now = Instant::now();
+    for seq in seqs {
+        complete(st, seq, MeasureResult::err("measurement service shut down"), now);
+    }
+    inner.cv.notify_all();
+}
+
+/// The asynchronous device-farm measurement service (see the module
+/// docs for the full contract). Drive it through the [`Measurer`] impl
+/// (blocking batched measurement, sharded across replicas) or the
+/// asynchronous [`submit_batch`](Self::submit_batch) /
+/// [`wait_batch`](Self::wait_batch) pair. Dropping the service drains
+/// queued jobs and joins every thread — bounded by a grace period when
+/// a per-job timeout is configured, so a board wedged inside a
+/// measurement that never returns is detached rather than allowed to
+/// hang shutdown.
+pub struct MeasureService {
+    inner: Arc<Inner>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    monitor: Option<std::thread::JoinHandle<()>>,
+    target: String,
+}
+
+impl MeasureService {
+    /// Spawn the worker pool (one thread per factory replica, each
+    /// building its measurer on-thread) and the fault monitor.
+    pub fn new(factory: Arc<dyn MeasurerFactory>, opts: ServiceOptions) -> MeasureService {
+        let n = factory.replicas().max(1);
+        // The service's target is the *board* identity, not the farm
+        // topology: records streamed into the tuning DB (and warm-start
+        // lookups against it) must be keyed by the device they are valid
+        // for — a 4-replica sim-gpu farm produces sim-gpu records. The
+        // farm shape is run metadata, reported via `report()`.
+        let target = factory.board();
+        let (ev_tx, ev_rx) = mpsc::channel::<Event>();
+        let mut worker_txs = Vec::with_capacity(n);
+        let mut job_rxs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = mpsc::channel::<Job>();
+            worker_txs.push(Some(tx));
+            job_rxs.push(rx);
+        }
+        let inner = Arc::new(Inner {
+            state: Mutex::new(State {
+                next_seq: 0,
+                inflight: 0,
+                pending: HashMap::new(),
+                results: HashMap::new(),
+                worker_txs,
+                consecutive_faults: vec![0; n],
+                quarantined: vec![false; n],
+                suspect: vec![false; n],
+                jobs: vec![0; n],
+                busy: vec![Duration::ZERO; n],
+                completed: 0,
+                retries: 0,
+                timeouts: 0,
+                panics: 0,
+                first_start: None,
+                last_done: None,
+            }),
+            cv: Condvar::new(),
+            opts,
+            n,
+        });
+        let workers: Vec<_> = job_rxs
+            .into_iter()
+            .enumerate()
+            .map(|(r, rx)| {
+                let factory = factory.clone();
+                let ev = ev_tx.clone();
+                std::thread::Builder::new()
+                    .name(format!("measure-worker-{r}"))
+                    .spawn(move || worker_loop(factory, r, rx, ev))
+                    .expect("spawn measure worker")
+            })
+            .collect();
+        drop(ev_tx); // monitor exits when the last worker does
+        let monitor = {
+            let inner = inner.clone();
+            Some(
+                std::thread::Builder::new()
+                    .name("measure-monitor".to_string())
+                    .spawn(move || monitor_loop(inner, ev_rx))
+                    .expect("spawn measure monitor"),
+            )
+        };
+        MeasureService { inner, workers, monitor, target }
+    }
+
+    /// Service over `factory` with the default [`ServiceOptions`].
+    pub fn with_defaults(factory: Arc<dyn MeasurerFactory>) -> MeasureService {
+        MeasureService::new(factory, ServiceOptions::default())
+    }
+
+    /// Enqueue one job per candidate (home replica `seq % replicas`),
+    /// blocking only when the in-flight bound is reached. Returns the
+    /// batch's sequence numbers, to be redeemed with
+    /// [`wait_batch`](Self::wait_batch).
+    pub fn submit_batch(&self, task: &Task, batch: &[ConfigEntity]) -> Vec<u64> {
+        let task = Arc::new(task.clone());
+        let mut seqs = Vec::with_capacity(batch.len());
+        let mut st = self.inner.state.lock().unwrap();
+        for e in batch {
+            while st.inflight >= self.inner.opts.max_inflight.max(1) {
+                st = self.inner.cv.wait(st).unwrap();
+            }
+            let seq = st.next_seq;
+            st.next_seq += 1;
+            // No responsive board at all (every replica wedged
+            // mid-measurement): fail the job now rather than queue it
+            // where the timeout clock can never arm.
+            let Some(replica) = self.inner.pick_replica(&st, seq, &[]) else {
+                st.results
+                    .insert(seq, MeasureResult::err("no responsive board in the farm"));
+                st.completed += 1;
+                seqs.push(seq);
+                continue;
+            };
+            st.pending.insert(
+                seq,
+                Pending {
+                    attempt: 0,
+                    tried: vec![replica],
+                    faults: 0,
+                    started: None,
+                    last_fault: String::new(),
+                    task: task.clone(),
+                    entity: e.clone(),
+                },
+            );
+            st.inflight += 1;
+            st.jobs[replica] += 1;
+            let job = Job { seq, attempt: 0, task: task.clone(), entity: e.clone() };
+            let sent = st.worker_txs[replica]
+                .as_ref()
+                .map(|tx| tx.send(job).is_ok())
+                .unwrap_or(false);
+            if !sent {
+                complete(
+                    &mut st,
+                    seq,
+                    MeasureResult::err("measurement service shut down"),
+                    Instant::now(),
+                );
+            }
+            seqs.push(seq);
+        }
+        drop(st);
+        self.inner.cv.notify_all();
+        seqs
+    }
+
+    /// Block until every job of the batch has completed, returning the
+    /// results in submission order (the deterministic-accounting
+    /// contract: callers absorbing tickets FIFO observe the same history
+    /// every run).
+    pub fn wait_batch(&self, seqs: &[u64]) -> Vec<MeasureResult> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if seqs.iter().all(|s| st.results.contains_key(s)) {
+                return seqs
+                    .iter()
+                    .map(|s| st.results.remove(s).expect("presence checked"))
+                    .collect();
+            }
+            st = self.inner.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Snapshot of the farm accounting (jobs, busy time, faults,
+    /// quarantine, utilization window).
+    pub fn stats(&self) -> FarmStats {
+        let st = self.inner.state.lock().unwrap();
+        FarmStats {
+            jobs: st.jobs.clone(),
+            busy_secs: st.busy.iter().map(|d| d.as_secs_f64()).collect(),
+            completed: st.completed,
+            retries: st.retries,
+            timeouts: st.timeouts,
+            panics: st.panics,
+            quarantined: st.quarantined.clone(),
+            window_secs: match (st.first_start, st.last_done) {
+                (Some(a), Some(b)) if b > a => (b - a).as_secs_f64(),
+                _ => 0.0,
+            },
+        }
+    }
+
+    /// One-line human summary of [`stats`](Self::stats) for CLI reports.
+    pub fn report(&self) -> String {
+        let s = self.stats();
+        format!(
+            "farm: {} jobs on {} replicas, utilization {:.2}x \
+             (retries {}, timeouts {}, other faults {}, quarantined {})",
+            s.completed,
+            s.jobs.len(),
+            s.utilization(),
+            s.retries,
+            s.timeouts,
+            s.panics,
+            s.quarantined.iter().filter(|&&q| q).count(),
+        )
+    }
+}
+
+/// Join `handle`, but give up at `deadline` (if one is set) — a worker
+/// wedged inside a `measure()` call that never returns can never be
+/// joined, and detaching it beats hanging the process at shutdown.
+fn join_by(handle: std::thread::JoinHandle<()>, deadline: Option<Instant>) {
+    match deadline {
+        None => {
+            let _ = handle.join();
+        }
+        Some(d) => {
+            while !handle.is_finished() && Instant::now() < d {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            if handle.is_finished() {
+                let _ = handle.join();
+            }
+            // else: detached — the process outlives (or kills) it.
+        }
+    }
+}
+
+impl Drop for MeasureService {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            for tx in st.worker_txs.iter_mut() {
+                tx.take(); // closing the queue lets the worker drain and exit
+            }
+        }
+        // With no timeout configured the caller accepted indefinite
+        // measurements, so shutdown waits for them. With a timeout, a
+        // wedged board must not hang shutdown either: joins are bounded
+        // by a grace period and stragglers are detached.
+        let deadline = self
+            .inner
+            .opts
+            .timeout
+            .map(|t| Instant::now() + t.saturating_mul(2) + Duration::from_secs(1));
+        for w in self.workers.drain(..) {
+            join_by(w, deadline);
+        }
+        if let Some(m) = self.monitor.take() {
+            join_by(m, deadline);
+        }
+    }
+}
+
+impl Measurer for MeasureService {
+    fn measure(&self, task: &Task, batch: &[ConfigEntity]) -> Vec<MeasureResult> {
+        let seqs = self.submit_batch(task, batch);
+        self.wait_batch(&seqs)
+    }
+
+    fn target(&self) -> String {
+        self.target.clone()
+    }
+
+    fn submit(&self, task: &Task, batch: &[ConfigEntity]) -> BatchTicket {
+        BatchTicket::pending(self.submit_batch(task, batch))
+    }
+
+    fn wait(&self, ticket: BatchTicket) -> Vec<MeasureResult> {
+        match ticket.into_parts() {
+            (Some(ready), _) => ready,
+            (None, seqs) => self.wait_batch(&seqs),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::ops;
+    use crate::measure::farm::DeviceFarm;
+    use crate::measure::SimMeasurer;
+    use crate::schedule::template::TemplateKind;
+    use crate::sim::devices::sim_gpu;
+    use crate::util::Rng;
+
+    fn batch(task: &Task, n: usize, seed: u64) -> Vec<ConfigEntity> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..n).map(|_| task.space.sample(&mut rng)).collect()
+    }
+
+    #[test]
+    fn single_replica_service_equals_direct_measurer() {
+        let task = Task::new(ops::matmul(128, 128, 128), TemplateKind::Gpu);
+        let b = batch(&task, 24, 3);
+        let direct = SimMeasurer::with_seed(sim_gpu(), 7);
+        let want = direct.measure(&task, &b);
+        let farm = DeviceFarm::new(sim_gpu(), 1, 7);
+        let svc = MeasureService::with_defaults(Arc::new(farm));
+        let got = svc.measure(&task, &b);
+        assert_eq!(want.len(), got.len());
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.gflops, g.gflops);
+            assert_eq!(w.seconds, g.seconds);
+            assert_eq!(w.error, g.error);
+        }
+    }
+
+    #[test]
+    fn multi_replica_service_is_deterministic_and_ordered() {
+        let task = Task::new(ops::matmul(128, 128, 128), TemplateKind::Gpu);
+        let b = batch(&task, 30, 4);
+        let run = || {
+            let svc =
+                MeasureService::with_defaults(Arc::new(DeviceFarm::new(sim_gpu(), 4, 9)));
+            // two batches, so sequence numbers span submissions
+            let first = svc.measure(&task, &b[..16]);
+            let second = svc.measure(&task, &b[16..]);
+            (first, second)
+        };
+        let (a1, a2) = run();
+        let (b1, b2) = run();
+        for (x, y) in a1.iter().zip(&b1).chain(a2.iter().zip(&b2)) {
+            assert_eq!(x.gflops, y.gflops, "service results not deterministic");
+        }
+        assert_eq!(a1.len(), 16);
+        assert_eq!(a2.len(), 14);
+    }
+
+    #[test]
+    fn async_tickets_resolve_out_of_wait_order() {
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+        let b = batch(&task, 12, 5);
+        let svc = MeasureService::with_defaults(Arc::new(DeviceFarm::new(sim_gpu(), 2, 1)));
+        let t1 = Measurer::submit(&svc, &task, &b[..6]);
+        let t2 = Measurer::submit(&svc, &task, &b[6..]);
+        // waiting on the later ticket first must not deadlock or scramble
+        let r2 = Measurer::wait(&svc, t2);
+        let r1 = Measurer::wait(&svc, t1);
+        assert_eq!(r1.len(), 6);
+        assert_eq!(r2.len(), 6);
+        // replica 0 of the farm shares the direct measurer's seed, so
+        // its very first job (seq 0 = the first candidate) must match a
+        // direct measurement exactly
+        let direct = SimMeasurer::with_seed(sim_gpu(), 1);
+        let want = direct.measure(&task, &b[..1]);
+        assert_eq!(r1[0].gflops, want[0].gflops);
+    }
+
+    #[test]
+    fn stats_count_every_job() {
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+        let b = batch(&task, 20, 6);
+        let svc = MeasureService::with_defaults(Arc::new(DeviceFarm::new(sim_gpu(), 4, 2)));
+        let _ = svc.measure(&task, &b);
+        let s = svc.stats();
+        assert_eq!(s.completed, 20);
+        assert_eq!(s.jobs.iter().sum::<u64>(), 20);
+        assert_eq!(s.jobs, vec![5, 5, 5, 5], "round-robin home assignment");
+        assert_eq!(s.retries + s.timeouts + s.panics, 0);
+        assert!(s.window_secs >= 0.0);
+    }
+}

@@ -213,6 +213,62 @@ impl TransferModel {
         TransferModel { global, calib: (1.0, 0.0), local: None, params }
     }
 
+    /// The one warm-start entry point of the service layer: given the
+    /// shared DB and an inventory of `candidates` the caller knows how
+    /// to lower, build the Eq.-4 global model for `target_task` from
+    /// every *other* candidate's records on `target`, under the
+    /// invariant [`Representation::ContextRelation`] (the only
+    /// representation that transfers across operator types and
+    /// templates). Candidates without records are skipped before any
+    /// featurization. Returns `None` when the DB holds nothing usable,
+    /// so callers fall back to a cold start.
+    ///
+    /// Both warm-start paths — the coordinator's
+    /// (`experiments::warm_start_model`, over the full known-task
+    /// inventory) and the graph scheduler's (`LoopExecutor`, over the
+    /// plan's sibling tasks) — are thin wrappers over this function;
+    /// they differ only in which inventory they pass.
+    ///
+    /// [`Representation::ContextRelation`]: crate::features::Representation::ContextRelation
+    pub fn warm_start(
+        db: &crate::tuner::db::TuningDb,
+        candidates: &[crate::schedule::template::Task],
+        target_task: &crate::schedule::template::Task,
+        target: &str,
+        objective: crate::gbt::Objective,
+        seed: u64,
+    ) -> Option<TransferModel> {
+        if db.is_empty() {
+            return None;
+        }
+        let have: std::collections::HashSet<String> =
+            db.task_keys(target).into_iter().collect();
+        if have.is_empty() {
+            return None;
+        }
+        let target_key = target_task.key();
+        let sources: Vec<&crate::schedule::template::Task> = candidates
+            .iter()
+            .filter(|t| {
+                let k = t.key();
+                k != target_key && have.contains(&k)
+            })
+            .collect();
+        if sources.is_empty() {
+            return None;
+        }
+        let params = GbtParams { objective, seed, ..Default::default() };
+        TransferModel::from_db(
+            db,
+            &sources,
+            &target_key,
+            target,
+            crate::features::Representation::ContextRelation,
+            usize::MAX,
+            params,
+        )
+    }
+
     /// Build the Eq.-4 global model straight from the tuning-DB service
     /// layer: `D'` is every valid record of `source_tasks` on `target`
     /// (minus `exclude_task_key`, the task about to be tuned),
@@ -220,7 +276,8 @@ impl TransferModel {
     /// ([`Representation::ContextRelation`]) so the model transfers
     /// across operator types and templates. Returns `None` when the DB
     /// holds no usable source rows, so callers can fall back to a cold
-    /// start.
+    /// start. Most callers want the higher-level
+    /// [`warm_start`](Self::warm_start) instead.
     ///
     /// [`Representation::ContextRelation`]: crate::features::Representation::ContextRelation
     pub fn from_db(

@@ -21,6 +21,15 @@
 //! ε-greedy batch construction) and [`TrialAccountant`] (records,
 //! best-so-far curve, failure handling).
 //!
+//! Either driver measures through any [`Measurer`] — including the
+//! shared asynchronous device-farm service
+//! ([`MeasureService`](crate::measure::service::MeasureService)), which
+//! shards every batch across replica workers while preserving the
+//! deterministic trial history (one replica reproduces the direct
+//! measurer bit-for-bit). The pipelined driver additionally keeps the
+//! farm busy *across* batch boundaries via the async
+//! [`Measurer::submit`]/[`Measurer::wait`] pair.
+//!
 //! Transfer learning (§4): pass a [`TransferModel`] built from a prior
 //! database — the global model makes the very first SA round informed
 //! instead of random, in either driver. The coordinator builds that

@@ -29,6 +29,13 @@
 //! * The **measurement stage** runs on the calling thread — the
 //!   [`Measurer`] never crosses a thread boundary, so thread-affine
 //!   back-ends (PJRT) and the non-`Sync` trait contract are honored.
+//!   Batches are handed to the back-end through the asynchronous
+//!   [`Measurer::submit`]/[`Measurer::wait`] pair: against a
+//!   [`MeasureService`](crate::measure::service::MeasureService) the
+//!   batch is sharded across the farm's replica workers and the *next*
+//!   batch is already measuring while this one's results are absorbed;
+//!   against a plain measurer the default implementation degenerates to
+//!   the old synchronous call.
 //! * The **model stage** owns the cost model, accumulates every
 //!   measured [`TrialRecord`](super::TrialRecord)'s features and label,
 //!   refits after each batch (on all of `D`, like the paper) and
@@ -346,12 +353,58 @@ impl PipelinedTuner {
             // straight into the shared TuningDb (if a sink is
             // configured), so DB readers on other threads see records
             // live instead of a bulk dump when the run ends.
-            for _ in 0..n_batches {
-                let Ok(batch) = prop_rx.recv() else { break };
-                if batch.is_empty() {
-                    break; // space exhausted upstream
+            //
+            // Batches go to the back-end through the submit/wait pair:
+            // against an asynchronous MeasureService, batch `k+1` is
+            // already measuring on the device farm while batch `k`'s
+            // results are absorbed here; against a plain measurer the
+            // default submit measures synchronously and nothing changes.
+            // Submission order equals batch order either way, so the
+            // result stream — and every fixed-seed run — is identical
+            // whichever timing the farm exhibits. In-flight submissions
+            // are bounded by `depth`, and the stage never blocks on the
+            // proposal channel while a ticket is outstanding (labels
+            // the proposer's epoch wait needs are always absorbed
+            // first), so no stage can deadlock another.
+            let mut inflight: std::collections::VecDeque<(
+                Vec<ConfigEntity>,
+                crate::measure::BatchTicket,
+            )> = std::collections::VecDeque::new();
+            let mut received = 0usize;
+            let mut proposals_done = false;
+            'measure: loop {
+                // Top up the farm: take whatever the proposal stage has
+                // ready (blocking only when nothing is measuring).
+                while !proposals_done && received < n_batches && inflight.len() < depth {
+                    let next = if inflight.is_empty() {
+                        prop_rx.recv().map_err(|_| ())
+                    } else {
+                        match prop_rx.try_recv() {
+                            Ok(b) => Ok(b),
+                            Err(mpsc::TryRecvError::Empty) => break,
+                            Err(mpsc::TryRecvError::Disconnected) => Err(()),
+                        }
+                    };
+                    match next {
+                        Ok(batch) => {
+                            received += 1;
+                            if batch.is_empty() {
+                                proposals_done = true; // space exhausted upstream
+                            } else {
+                                let ticket = measurer.submit(&task, &batch);
+                                inflight.push_back((batch, ticket));
+                            }
+                        }
+                        Err(()) => proposals_done = true,
+                    }
                 }
-                let results = measurer.measure(&task, &batch);
+                // Absorb the oldest in-flight batch; results reach the
+                // accountant in submission order regardless of how the
+                // farm interleaved the work.
+                let Some((batch, ticket)) = inflight.pop_front() else {
+                    break 'measure;
+                };
+                let results = measurer.wait(ticket);
                 let labels = acct.absorb(&batch, &results);
                 stats.measured.fetch_add(1, Ordering::SeqCst);
                 if opts.verbose {
@@ -363,7 +416,7 @@ impl PipelinedTuner {
                     );
                 }
                 if train_tx.send((batch, labels)).is_err() {
-                    break;
+                    break 'measure;
                 }
             }
             // Unblock any stage still waiting, then drain the model

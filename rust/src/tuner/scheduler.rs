@@ -192,6 +192,19 @@ pub trait SliceExecutor {
     /// (`INFINITY` before any valid measurement).
     fn best_secs(&mut self, idx: usize) -> f64;
 
+    /// Cheap pre-tuning baseline latency of task `idx` in seconds —
+    /// what the task costs *before* any trial is spent (a default /
+    /// vendor schedule). A finite baseline gives the scheduler a real
+    /// slice-1 gain, so the curvature decay activates from a task's
+    /// second slice instead of its third. The default delegates to
+    /// [`best_secs`](Self::best_secs) (replayed curves are already
+    /// finite at zero trials); executors without a cheap baseline may
+    /// return `INFINITY`, which degrades gracefully to the old
+    /// zero-gain bootstrap.
+    fn baseline_secs(&mut self, idx: usize) -> f64 {
+        self.best_secs(idx)
+    }
+
     /// Spend up to `trials` more measurements on task `idx`. Returns
     /// the number actually measured — less than `trials` when the
     /// task's config space is exhausted (the scheduler then stops
@@ -251,6 +264,10 @@ pub struct LoopExecutor<'a> {
     pipelined: bool,
     warm_start: bool,
     drivers: Vec<Option<Driver>>,
+    /// Memoized default-schedule baseline latencies (one cheap
+    /// measurement of the vendor config per task, outside the trial
+    /// budget and the DB).
+    baselines: Vec<Option<f64>>,
 }
 
 impl<'a> LoopExecutor<'a> {
@@ -268,8 +285,9 @@ impl<'a> LoopExecutor<'a> {
         warm_start: bool,
     ) -> Self {
         let drivers = tasks.iter().map(|_| None).collect();
+        let baselines = tasks.iter().map(|_| None).collect();
         let target = measurer.target();
-        LoopExecutor { tasks, measurer, db, target, opts, pipelined, warm_start, drivers }
+        LoopExecutor { tasks, measurer, db, target, opts, pipelined, warm_start, drivers, baselines }
     }
 
     /// The shared tuning DB (read best configs from it after a run).
@@ -278,22 +296,14 @@ impl<'a> LoopExecutor<'a> {
     }
 
     /// Build the warm-start model for `task` from sibling records, if
-    /// the DB has any usable rows.
+    /// the DB has any usable rows — the shared
+    /// [`TransferModel::warm_start`] service entry point, with this
+    /// plan's sibling tasks as the source inventory.
     fn warm_model(&self, task: &Task, seed: u64) -> Option<TransferModel> {
-        if !self.warm_start || self.db.is_empty() {
+        if !self.warm_start {
             return None;
         }
-        let sources: Vec<&Task> = self.tasks.iter().collect();
-        let params = GbtParams { objective: Objective::Rank, seed, ..Default::default() };
-        TransferModel::from_db(
-            &self.db,
-            &sources,
-            &task.key(),
-            &self.target,
-            Representation::ContextRelation,
-            usize::MAX,
-            params,
-        )
+        TransferModel::warm_start(&self.db, &self.tasks, task, &self.target, Objective::Rank, seed)
     }
 
     fn ensure_driver(&mut self, idx: usize) {
@@ -328,6 +338,27 @@ impl<'a> LoopExecutor<'a> {
 }
 
 impl SliceExecutor for LoopExecutor<'_> {
+    fn baseline_secs(&mut self, idx: usize) -> f64 {
+        if let Some(s) = self.baselines[idx] {
+            return s;
+        }
+        // One measurement of the vendor (default-schedule) config —
+        // outside the trial budget, the accountant and the DB — so the
+        // scheduler has a finite pre-tuning latency to compute the
+        // slice-1 gain against.
+        let task = &self.tasks[idx];
+        let cfg = crate::baselines::vendor_config(task);
+        let r = self.measurer.measure(task, std::slice::from_ref(&cfg));
+        let s = match r.first() {
+            Some(res) if res.is_ok() && res.gflops > 0.0 => {
+                task.def.total_flops() as f64 / (res.gflops * 1e9)
+            }
+            _ => f64::INFINITY,
+        };
+        self.baselines[idx] = Some(s);
+        s
+    }
+
     fn best_secs(&mut self, idx: usize) -> f64 {
         let gflops = match &self.drivers[idx] {
             Some(Driver::Serial(t)) => t.best().map(|(_, g)| *g),
@@ -374,10 +405,12 @@ impl Gain {
     /// gain, decayed by the task's measured curvature (exact for
     /// exponential-decay curves at a fixed slice size).
     ///
-    /// On the real-loop path the slice-1 gain is recorded as 0 (there
-    /// is no finite pre-tuning baseline), so `prev` is 0 entering the
-    /// third slice and the decay only activates from slice 3 onward —
-    /// slice 2's gain is used undamped (see ROADMAP open items).
+    /// The slice-1 gain is measured against the executor's cheap
+    /// default-schedule baseline ([`SliceExecutor::baseline_secs`]), so
+    /// `prev` is already finite entering the second slice and the decay
+    /// activates from slice 2. Executors without a baseline (those
+    /// returning `INFINITY`) degrade to the old behavior: slice-1 gain
+    /// 0, decay from slice 3.
     fn predicted(self) -> f64 {
         match self.prev {
             None => self.last,
@@ -544,7 +577,15 @@ impl TaskScheduler {
         }
         // keep the slice small enough for two bootstrap slices per task
         let slice = self.opts.slice.max(1).min((self.opts.budget / (2 * k)).max(1));
-        let mut secs: Vec<f64> = (0..k).map(|i| exec.best_secs(i)).collect();
+        // Pre-tuning baselines: a finite default-schedule latency per
+        // task makes the very first slice's gain observable (curvature
+        // decay from slice 2; see `Gain::predicted`). Uniform allocation
+        // never reads gains, so it must not pay the per-task baseline
+        // measurement.
+        let mut secs: Vec<f64> = match self.opts.policy {
+            AllocPolicy::Gradient => (0..k).map(|i| exec.baseline_secs(i)).collect(),
+            AllocPolicy::Uniform => (0..k).map(|i| exec.best_secs(i)).collect(),
+        };
         let mut trials = vec![0usize; k];
         let mut gains = vec![Gain::default(); k];
         let mut exhausted = vec![false; k];

@@ -1,0 +1,349 @@
+//! Tier-1 tests for the asynchronous device-farm measurement service
+//! (`measure::service`): bit-for-bit equivalence of the 1-replica
+//! service with the direct measurer (serial and depth-1 pipelined),
+//! board-fault paths (worker panic mid-job, timeout → retry on another
+//! replica, all replicas broken, all replicas flaky), backpressure, and
+//! multi-replica utilization on a latency farm.
+
+use autotvm::expr::ops;
+use autotvm::measure::farm::DeviceFarm;
+use autotvm::measure::service::{MeasureService, MeasurerFactory, ServiceOptions};
+use autotvm::measure::{MeasureResult, Measurer, SimMeasurer};
+use autotvm::schedule::space::ConfigEntity;
+use autotvm::schedule::template::{Task, TemplateKind};
+use autotvm::sim::devices::{sim_cpu, sim_gpu};
+use autotvm::tuner::{tune_gbt, tune_gbt_pipelined, SaParams, TuneOptions, TuneResult};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn opts(n_trials: usize, batch: usize, seed: u64) -> TuneOptions {
+    TuneOptions {
+        n_trials,
+        batch,
+        sa: SaParams { n_chains: 16, n_steps: 25, ..Default::default() },
+        seed,
+        ..Default::default()
+    }
+}
+
+fn assert_same_result(a: &TuneResult, b: &TuneResult) {
+    assert_eq!(a.curve, b.curve, "best-so-far curves diverged");
+    assert_eq!(a.records.len(), b.records.len());
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.entity, rb.entity, "measured configs diverged");
+        assert_eq!(ra.gflops, rb.gflops);
+        assert_eq!(ra.error, rb.error);
+    }
+    assert_eq!(
+        a.best.as_ref().map(|(e, _)| e.clone()),
+        b.best.as_ref().map(|(e, _)| e.clone())
+    );
+}
+
+fn sample_batch(task: &Task, n: usize, seed: u64) -> Vec<ConfigEntity> {
+    let mut rng = autotvm::util::Rng::seed_from_u64(seed);
+    (0..n).map(|_| task.space.sample(&mut rng)).collect()
+}
+
+/// The acceptance proptest: across a sweep of tasks and seeds, the
+/// serial loop measured through a 1-replica `MeasureService` is
+/// bit-for-bit identical to the same loop over the direct measurer —
+/// the service's sequence-ordered dispatch never perturbs a fixed-seed
+/// run.
+#[test]
+fn prop_serial_loop_through_service_equals_direct_measurer() {
+    let cases: Vec<(Task, _)> = vec![
+        (Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu), sim_gpu()),
+        (Task::new(ops::matmul(128, 128, 128), TemplateKind::Gpu), sim_gpu()),
+        (Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu), sim_cpu()),
+        (Task::new(ops::dense(16, 256, 128), TemplateKind::Cpu), sim_cpu()),
+    ];
+    for (i, (task, dev)) in cases.into_iter().enumerate() {
+        let seed = 90 + i as u64;
+        let o = opts(32, 8, seed);
+        let direct = SimMeasurer::with_seed(dev.clone(), seed);
+        let want = tune_gbt(task.clone(), &direct, o.clone());
+        let svc = MeasureService::with_defaults(Arc::new(DeviceFarm::new(dev, 1, seed)));
+        let got = tune_gbt(task, &svc, o);
+        assert_same_result(&want, &got);
+    }
+}
+
+/// Depth-1 pipelined through the 1-replica service equals the serial
+/// loop over the direct measurer — the existing serial/pipelined
+/// invariant holds through the new service path too.
+#[test]
+fn depth1_pipelined_through_service_equals_serial_direct() {
+    let task = || Task::new(ops::matmul(128, 128, 128), TemplateKind::Gpu);
+    let mut o = opts(64, 16, 4);
+    o.pipeline_depth = 1;
+    let direct = SimMeasurer::with_seed(sim_gpu(), 3);
+    let serial = tune_gbt(task(), &direct, o.clone());
+    let svc = MeasureService::with_defaults(Arc::new(DeviceFarm::new(sim_gpu(), 1, 3)));
+    let piped = tune_gbt_pipelined(task(), &svc, o);
+    assert_same_result(&serial, &piped);
+}
+
+/// Pipelined through a multi-replica service: same budget, valid
+/// results, and two identical runs are bit-for-bit equal (deterministic
+/// job ordering across replica workers).
+#[test]
+fn pipelined_through_multi_replica_service_is_deterministic() {
+    let task = || Task::new(ops::matmul(128, 128, 128), TemplateKind::Gpu);
+    let o = opts(64, 16, 7);
+    let run = || {
+        let svc = MeasureService::with_defaults(Arc::new(DeviceFarm::new(sim_gpu(), 4, 11)));
+        tune_gbt_pipelined(task(), &svc, o.clone())
+    };
+    let a = run();
+    let b = run();
+    assert_same_result(&a, &b);
+    assert_eq!(a.curve.len(), 64);
+    assert!(a.best_gflops() > 0.0);
+}
+
+// ---------------------------------------------------------------------
+// Fault paths
+// ---------------------------------------------------------------------
+
+/// Measurer that panics on every call (a crashing board).
+struct PanicMeasurer;
+
+impl Measurer for PanicMeasurer {
+    fn measure(&self, _task: &Task, _batch: &[ConfigEntity]) -> Vec<MeasureResult> {
+        panic!("injected board crash");
+    }
+
+    fn target(&self) -> String {
+        "panic-board".to_string()
+    }
+}
+
+/// Measurer that sleeps per candidate, then answers (a hung board from
+/// the monitor's point of view once the timeout is shorter than the
+/// sleep). Reports a recognizable throughput so tests can tell whose
+/// answer won.
+struct SlowMeasurer {
+    delay: Duration,
+    gflops: f64,
+}
+
+impl Measurer for SlowMeasurer {
+    fn measure(&self, _task: &Task, batch: &[ConfigEntity]) -> Vec<MeasureResult> {
+        std::thread::sleep(self.delay * batch.len().max(1) as u32);
+        batch.iter().map(|_| MeasureResult::ok(self.gflops, 1e-3)).collect()
+    }
+
+    fn target(&self) -> String {
+        "slow-board".to_string()
+    }
+}
+
+/// Fast measurer with a recognizable throughput.
+struct FastMeasurer {
+    gflops: f64,
+}
+
+impl Measurer for FastMeasurer {
+    fn measure(&self, _task: &Task, batch: &[ConfigEntity]) -> Vec<MeasureResult> {
+        batch.iter().map(|_| MeasureResult::ok(self.gflops, 1e-3)).collect()
+    }
+
+    fn target(&self) -> String {
+        "fast-board".to_string()
+    }
+}
+
+/// Factory handing each replica a different test measurer.
+struct MixedFactory {
+    boards: Vec<fn() -> Box<dyn Measurer>>,
+}
+
+impl MeasurerFactory for MixedFactory {
+    fn make(&self, replica: usize) -> anyhow::Result<Box<dyn Measurer>> {
+        Ok((self.boards[replica])())
+    }
+
+    fn replicas(&self) -> usize {
+        self.boards.len()
+    }
+
+    fn board(&self) -> String {
+        "test-board".to_string()
+    }
+}
+
+/// A worker panic mid-job is absorbed: the job retries on the healthy
+/// replica and every result comes back valid, the crashing board is
+/// struck and eventually quarantined, and nothing hangs or is lost.
+#[test]
+fn worker_panic_mid_job_is_retried_on_another_replica() {
+    let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+    let batch = sample_batch(&task, 12, 1);
+    let factory = MixedFactory {
+        boards: vec![
+            || Box::new(PanicMeasurer),
+            || Box::new(FastMeasurer { gflops: 42.0 }),
+        ],
+    };
+    let svc = MeasureService::new(
+        Arc::new(factory),
+        ServiceOptions { retries: 1, quarantine_after: 2, ..Default::default() },
+    );
+    let results = svc.measure(&task, &batch);
+    assert_eq!(results.len(), 12);
+    for r in &results {
+        assert!(r.is_ok(), "panic leaked into a result: {:?}", r.error);
+        assert_eq!(r.gflops, 42.0, "result must come from the healthy replica");
+    }
+    let s = svc.stats();
+    assert!(s.panics >= 2, "panics not recorded: {s:?}");
+    assert!(s.retries >= 2, "no retries recorded: {s:?}");
+    assert!(s.quarantined[0], "crashing board never quarantined: {s:?}");
+    assert!(!s.quarantined[1]);
+    assert_eq!(s.completed, 12);
+}
+
+/// Every replica broken: jobs exhaust their retries and complete as
+/// error results (never hang), and the farm reports the carnage.
+#[test]
+fn all_replicas_broken_jobs_complete_as_errors() {
+    let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+    let batch = sample_batch(&task, 8, 2);
+    let factory = MixedFactory {
+        boards: vec![|| Box::new(PanicMeasurer), || Box::new(PanicMeasurer)],
+    };
+    let svc = MeasureService::new(
+        Arc::new(factory),
+        ServiceOptions { retries: 1, quarantine_after: 2, ..Default::default() },
+    );
+    let results = svc.measure(&task, &batch);
+    assert_eq!(results.len(), 8);
+    for r in &results {
+        assert!(!r.is_ok(), "a broken board produced a success");
+        let msg = r.error.as_deref().unwrap_or("");
+        assert!(msg.contains("board fault"), "unexpected error: {msg}");
+    }
+    // even with every board quarantined, a further batch still completes
+    let more = svc.measure(&task, &sample_batch(&task, 4, 3));
+    assert_eq!(more.len(), 4);
+    assert!(more.iter().all(|r| !r.is_ok()));
+    let s = svc.stats();
+    assert_eq!(s.completed, 12);
+    assert!(s.quarantined.iter().all(|&q| q), "both boards should be quarantined");
+}
+
+/// A job that exceeds the per-job timeout is retried on another replica
+/// and succeeds there; the slow board's late answer is discarded.
+#[test]
+fn timeout_retries_on_another_replica() {
+    let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+    let batch = sample_batch(&task, 4, 4);
+    let factory = MixedFactory {
+        boards: vec![
+            || Box::new(SlowMeasurer { delay: Duration::from_millis(400), gflops: 1.0 }),
+            || Box::new(FastMeasurer { gflops: 7.0 }),
+        ],
+    };
+    let svc = MeasureService::new(
+        Arc::new(factory),
+        ServiceOptions {
+            timeout: Some(Duration::from_millis(50)),
+            retries: 1,
+            quarantine_after: 0, // exercise the retry path alone
+            ..Default::default()
+        },
+    );
+    let results = svc.measure(&task, &batch);
+    assert_eq!(results.len(), 4);
+    for r in &results {
+        assert!(r.is_ok(), "timeout surfaced as an error: {:?}", r.error);
+        assert_eq!(r.gflops, 7.0, "result must come from the fast replica");
+    }
+    let s = svc.stats();
+    // The running job times out; jobs queued behind it on the stalled
+    // board are relocated without waiting for their own timeouts.
+    assert!(s.timeouts >= 1, "timeouts not recorded: {s:?}");
+    assert!(s.retries >= 2, "retry + stall relocation not recorded: {s:?}");
+    assert_eq!(s.completed, 4);
+}
+
+/// All replicas flaky (injected measurement failures, not crashes): the
+/// errors are legitimate results — not retried, recorded as 0-GFLOPS
+/// trials — and the tuning loop keeps going, exactly like the paper's
+/// farm absorbing board timeouts.
+#[test]
+fn all_replicas_flaky_tuning_survives() {
+    let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+    let farm = DeviceFarm::new(sim_gpu(), 2, 4).with_flakiness(1.0);
+    let svc = MeasureService::with_defaults(Arc::new(farm));
+    let res = tune_gbt(task, &svc, opts(32, 16, 1));
+    assert_eq!(res.records.len(), 32);
+    assert!(res.best.is_none(), "a failed trial became best");
+    assert!(res.records.iter().all(|r| r.error.is_some() && r.gflops == 0.0));
+    let s = svc.stats();
+    assert_eq!(s.completed, 32);
+    assert_eq!(s.retries, 0, "flaky results must not be retried as board faults");
+    assert_eq!(s.panics, 0);
+}
+
+/// Partially flaky farm: the loop still improves (mirrors the paper's
+/// robustness claim) with the flakiness injected per replica *inside*
+/// the service rather than wrapped around a monolithic farm.
+#[test]
+fn partially_flaky_service_farm_still_improves() {
+    let task = Task::new(ops::matmul(128, 128, 128), TemplateKind::Gpu);
+    let farm = DeviceFarm::new(sim_gpu(), 3, 2).with_flakiness(0.2);
+    let svc = MeasureService::with_defaults(Arc::new(farm));
+    let res = tune_gbt(task, &svc, opts(96, 32, 0));
+    assert_eq!(res.curve.len(), 96);
+    assert!(res.best_gflops() > 0.0);
+    assert!(res.records.iter().any(|r| r.error.is_some()), "no failures recorded");
+    assert!(
+        res.best_at(96) >= res.best_at(32),
+        "search failed to improve under failures"
+    );
+}
+
+/// Backpressure: a tiny in-flight bound still completes a large batch
+/// correctly (submission blocks instead of flooding the farm).
+#[test]
+fn bounded_inflight_backpressure_completes_batches() {
+    let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+    let batch = sample_batch(&task, 32, 6);
+    let svc = MeasureService::new(
+        Arc::new(DeviceFarm::new(sim_gpu(), 2, 3)),
+        ServiceOptions { max_inflight: 4, ..Default::default() },
+    );
+    let results = svc.measure(&task, &batch);
+    assert_eq!(results.len(), 32);
+    // same results as an unbounded service (backpressure is invisible
+    // to the caller)
+    let svc2 = MeasureService::with_defaults(Arc::new(DeviceFarm::new(sim_gpu(), 2, 3)));
+    let results2 = svc2.measure(&task, &batch);
+    for (a, b) in results.iter().zip(&results2) {
+        assert_eq!(a.gflops, b.gflops);
+    }
+}
+
+/// Concurrent-farm acceptance: a pipelined tune on a 4-replica latency
+/// farm must actually use the fleet — average busy replicas measurably
+/// above one board's worth.
+#[test]
+fn latency_farm_utilization_exceeds_one_replica() {
+    let task = autotvm::workloads::conv_task(6, TemplateKind::Gpu);
+    let farm = DeviceFarm::with_latency(sim_gpu(), 4, 1, Duration::from_millis(5));
+    let svc = MeasureService::with_defaults(Arc::new(farm));
+    let o = opts(96, 32, 0);
+    let res = tune_gbt_pipelined(task, &svc, o);
+    assert_eq!(res.curve.len(), 96);
+    let s = svc.stats();
+    assert_eq!(s.completed, 96);
+    assert!(
+        s.utilization() > 1.3,
+        "farm utilization {:.2} not above one replica ({s:?})",
+        s.utilization()
+    );
+    // round-robin home dispatch spreads jobs across every board
+    assert!(s.jobs.iter().all(|&j| j > 0), "idle replica: {:?}", s.jobs);
+}
