@@ -132,6 +132,23 @@ fn alloc_of(args: &Args, default: AllocPolicy) -> Result<AllocPolicy> {
     }
 }
 
+/// `--overlap N` (how many task-slices the scheduler keeps in flight;
+/// 1 = the barrier scheduler) and `--gain-ema A` (EMA smoothing factor
+/// for gain estimates, with restart detection; absent = raw last-slice
+/// gains).
+fn overlap_of(args: &Args) -> Result<(usize, Option<f64>)> {
+    let overlap = args.get_usize("overlap", 1).max(1);
+    let gain_ema = match args.get("gain-ema") {
+        None => None,
+        Some(v) => {
+            let a: f64 = v.parse().with_context(|| format!("--gain-ema {v} is not a number"))?;
+            anyhow::ensure!(a > 0.0 && a <= 1.0, "--gain-ema must be in (0, 1], got {a}");
+            Some(a)
+        }
+    };
+    Ok((overlap, gain_ema))
+}
+
 /// Build the asynchronous device-farm [`MeasureService`] when any farm
 /// flag is present (`--replicas N`, `--measure-timeout MS`,
 /// `--farm-latency-ms MS`, `--flaky P`); `None` keeps the plain
@@ -331,18 +348,23 @@ pub fn run(argv: &[String]) -> Result<()> {
                 let tasks: Vec<crate::schedule::template::Task> =
                     (1..=12).map(|wl| workloads::conv_task(wl, template)).collect();
                 let budget = args.get_usize("budget", tasks.len() * opts.trials);
+                let (overlap, gain_ema) = overlap_of(&args)?;
                 let sched = TaskScheduler::for_tasks(
                     tasks,
                     SchedulerOptions {
                         budget,
                         slice: args.get_usize("slice", opts.batch),
                         policy: AllocPolicy::Gradient,
+                        overlap,
+                        gain_ema,
                         verbose: true,
                         ..Default::default()
                     },
                 );
                 let measurer = farm.measurer();
-                println!("tune-all via gradient scheduler ({budget} trials total)");
+                println!(
+                    "tune-all via gradient scheduler ({budget} trials total, overlap {overlap})"
+                );
                 let alloc = sched.run_tuning(
                     measurer,
                     &db,
@@ -410,6 +432,7 @@ pub fn run(argv: &[String]) -> Result<()> {
             })?;
             let opts = exp_opts(&args);
             let policy = alloc_of(&args, AllocPolicy::Gradient)?;
+            let (overlap, gain_ema) = overlap_of(&args)?;
             // AutoTVM compiles the fused graph (§6.3)
             let fused = graph.fuse();
             let sched = TaskScheduler::from_graph(
@@ -420,6 +443,8 @@ pub fn run(argv: &[String]) -> Result<()> {
                     budget: 0, // set below once the task count is known
                     slice: args.get_usize("slice", opts.batch),
                     policy,
+                    overlap,
+                    gain_ema,
                     verbose: args.has("verbose"),
                     ..Default::default()
                 },
@@ -438,7 +463,7 @@ pub fn run(argv: &[String]) -> Result<()> {
             let measurer = farm.measurer();
             println!(
                 "tuning {name} end-to-end on {} — {} tasks, {budget} trials total, \
-                 {} allocation",
+                 {} allocation, overlap {overlap}",
                 dev.name,
                 sched.plans().len(),
                 policy.name()
@@ -588,10 +613,12 @@ USAGE:
                     [--warm-start] [--no-warm-start]
   autotvm tune-all  --device sim-gpu [--trials N] [--db file.jsonl] \\
                     [--pipeline] [--no-warm-start] [--alloc uniform|gradient] \\
+                    [--overlap N] [--gain-ema A] \\
                     [--replicas R] [--measure-timeout MS] \\
                     [--farm-latency-ms MS] [--flaky P]
   autotvm tune-graph <resnet18|mobilenet|dqn|lstm|dcgan> --device sim-gpu \\
                     [--budget N] [--slice S] [--alloc uniform|gradient] \\
+                    [--overlap N] [--gain-ema A] \\
                     [--db file.jsonl] [--pipeline] [--no-warm-start] [--verbose] \\
                     [--replicas R] [--measure-timeout MS] \\
                     [--farm-latency-ms MS] [--flaky P]
@@ -615,7 +642,14 @@ board failures; the run ends with a farm utilization report.
 tune-graph spreads one global trial budget across a network's tasks:
 --alloc gradient (default) allocates each round-slice to the task with
 the highest predicted end-to-end latency reduction; --alloc uniform is
-the equal-shares baseline."
+the equal-shares baseline.
+
+--overlap N keeps up to N task-slices in flight at once: task B
+proposes and refits while task A's batches drain on the farm, with
+allocation decisions still deterministic via versioned gain snapshots
+(overlap 1 is the barrier scheduler, bit-for-bit). --gain-ema A smooths
+gain-per-trial estimates with an EMA plus restart detection — useful
+when overlap makes raw last-slice differences noisy."
     );
 }
 

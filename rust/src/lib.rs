@@ -39,8 +39,12 @@
 //! * the graph-level task scheduler ([`tuner::scheduler`]): one global
 //!   trial budget spread across a network's tasks by expected marginal
 //!   reduction in end-to-end latency (gradient/bandit-style with an
-//!   ε starvation floor), closing the loop graph → tasks → tuner → db →
-//!   graph latency.
+//!   ε starvation floor, EMA gain smoothing with restart detection),
+//!   closing the loop graph → tasks → tuner → db → graph latency — and
+//!   overlapping slices *across tasks* through versioned gain snapshots
+//!   ([`GainLedger`](tuner::scheduler::GainLedger)): task B proposes
+//!   while task A's batches drain on the farm, with bit-for-bit
+//!   reproducible allocation decisions.
 //!
 //! See `README.md` for the quickstart and the paper-section → module
 //! map, and `docs/ARCHITECTURE.md` for the data-flow and determinism

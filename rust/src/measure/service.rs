@@ -137,6 +137,14 @@ pub struct FarmStats {
     pub quarantined: Vec<bool>,
     /// Wall-clock span from the first job start to the last completion.
     pub window_secs: f64,
+    /// Jobs currently in flight per task key (sorted by key) — the
+    /// live cross-task picture of the farm.
+    pub inflight_by_task: Vec<(String, usize)>,
+    /// Peak number of *distinct* tasks simultaneously in flight over
+    /// the service's lifetime — direct evidence that the overlapped
+    /// scheduler kept more than one task's slice on the farm at once
+    /// (a barrier scheduler never exceeds 1).
+    pub peak_tasks_overlapped: usize,
 }
 
 impl FarmStats {
@@ -191,6 +199,9 @@ struct Pending {
     started: Option<Instant>,
     /// Last fault reason, reported if the job exhausts its retries.
     last_fault: String,
+    /// Task identity for the per-task in-flight accounting (shared by
+    /// every job of a batch).
+    task_key: Arc<String>,
     task: Arc<Task>,
     entity: ConfigEntity,
 }
@@ -220,12 +231,24 @@ struct State {
     retries: u64,
     timeouts: u64,
     panics: u64,
+    /// Jobs in flight per task key (incremented at submit, decremented
+    /// at completion) — the cross-task overlap picture.
+    inflight_tasks: HashMap<String, usize>,
+    /// Peak distinct-task count of `inflight_tasks`.
+    peak_tasks: usize,
     first_start: Option<Instant>,
     last_done: Option<Instant>,
 }
 
 fn complete(st: &mut State, seq: u64, result: MeasureResult, at: Instant) {
-    st.pending.remove(&seq);
+    if let Some(p) = st.pending.remove(&seq) {
+        if let Some(n) = st.inflight_tasks.get_mut(p.task_key.as_str()) {
+            *n -= 1;
+            if *n == 0 {
+                st.inflight_tasks.remove(p.task_key.as_str());
+            }
+        }
+    }
     st.results.insert(seq, result);
     st.inflight = st.inflight.saturating_sub(1);
     st.completed += 1;
@@ -628,6 +651,8 @@ impl MeasureService {
                 retries: 0,
                 timeouts: 0,
                 panics: 0,
+                inflight_tasks: HashMap::new(),
+                peak_tasks: 0,
                 first_start: None,
                 last_done: None,
             }),
@@ -670,6 +695,7 @@ impl MeasureService {
     /// batch's sequence numbers, to be redeemed with
     /// [`wait_batch`](Self::wait_batch).
     pub fn submit_batch(&self, task: &Task, batch: &[ConfigEntity]) -> Vec<u64> {
+        let task_key = Arc::new(task.key());
         let task = Arc::new(task.clone());
         let mut seqs = Vec::with_capacity(batch.len());
         let mut st = self.inner.state.lock().unwrap();
@@ -697,10 +723,14 @@ impl MeasureService {
                     faults: 0,
                     started: None,
                     last_fault: String::new(),
+                    task_key: task_key.clone(),
                     task: task.clone(),
                     entity: e.clone(),
                 },
             );
+            *st.inflight_tasks.entry(task_key.as_ref().clone()).or_insert(0) += 1;
+            let distinct = st.inflight_tasks.len();
+            st.peak_tasks = st.peak_tasks.max(distinct);
             st.inflight += 1;
             st.jobs[replica] += 1;
             let job = Job { seq, attempt: 0, task: task.clone(), entity: e.clone() };
@@ -756,6 +786,13 @@ impl MeasureService {
                 (Some(a), Some(b)) if b > a => (b - a).as_secs_f64(),
                 _ => 0.0,
             },
+            inflight_by_task: {
+                let mut v: Vec<(String, usize)> =
+                    st.inflight_tasks.iter().map(|(k, &n)| (k.clone(), n)).collect();
+                v.sort();
+                v
+            },
+            peak_tasks_overlapped: st.peak_tasks,
         }
     }
 
@@ -763,11 +800,12 @@ impl MeasureService {
     pub fn report(&self) -> String {
         let s = self.stats();
         format!(
-            "farm: {} jobs on {} replicas, utilization {:.2}x \
+            "farm: {} jobs on {} replicas, utilization {:.2}x, peak task overlap {} \
              (retries {}, timeouts {}, other faults {}, quarantined {})",
             s.completed,
             s.jobs.len(),
             s.utilization(),
+            s.peak_tasks_overlapped,
             s.retries,
             s.timeouts,
             s.panics,
@@ -915,6 +953,26 @@ mod tests {
         let direct = SimMeasurer::with_seed(sim_gpu(), 1);
         let want = direct.measure(&task, &b[..1]);
         assert_eq!(r1[0].gflops, want[0].gflops);
+    }
+
+    #[test]
+    fn per_task_inflight_accounting_tracks_cross_task_overlap() {
+        let t1 = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+        let t2 = Task::new(ops::matmul(128, 64, 64), TemplateKind::Gpu);
+        let farm = DeviceFarm::with_latency(sim_gpu(), 2, 3, Duration::from_millis(20));
+        let svc = MeasureService::with_defaults(Arc::new(farm));
+        let b1 = batch(&t1, 4, 1);
+        let b2 = batch(&t2, 4, 2);
+        // both tasks' jobs are on the farm before either batch drains
+        let s1 = svc.submit_batch(&t1, &b1);
+        let s2 = svc.submit_batch(&t2, &b2);
+        let r1 = svc.wait_batch(&s1);
+        let r2 = svc.wait_batch(&s2);
+        assert_eq!(r1.len() + r2.len(), 8);
+        let s = svc.stats();
+        assert_eq!(s.peak_tasks_overlapped, 2, "both tasks were in flight at once");
+        assert!(s.inflight_by_task.is_empty(), "accounting must drain: {:?}", s.inflight_by_task);
+        assert!(svc.report().contains("peak task overlap 2"));
     }
 
     #[test]

@@ -55,6 +55,70 @@ impl TaskCurve {
     }
 }
 
+/// A deterministic best-so-far latency curve: seconds as a function of
+/// trials spent. The scheduler's
+/// [`CurveExecutor`](crate::tuner::scheduler::CurveExecutor) replays
+/// any implementation — [`TaskCurve`] for a single smooth regime,
+/// [`StagedCurve`] for curves with genuine regime changes — so
+/// allocation behavior (including slices interleaved across tasks by
+/// the overlapped scheduler, and EMA restart detection) is testable
+/// exactly.
+pub trait LatencyCurve {
+    /// Best-so-far latency after `trials` measurements (seconds).
+    fn secs_after(&self, trials: usize) -> f64;
+}
+
+impl LatencyCurve for TaskCurve {
+    fn secs_after(&self, trials: usize) -> f64 {
+        TaskCurve::secs_after(self, trials)
+    }
+}
+
+/// Piecewise tuning curve: several exponential-decay regimes, each
+/// activating at a trial offset. Models a *regime change* — a task that
+/// flatlines, then suddenly finds fresh headroom (a new template
+/// region, a transferred model kicking in). The best-so-far latency is
+/// the minimum over every active regime, so the curve stays monotone
+/// nonincreasing; when a later regime decays below the earlier floor,
+/// per-slice gains jump back up — exactly the signal the scheduler's
+/// EMA restart detection must catch (and must catch exactly once).
+#[derive(Clone, Debug)]
+pub struct StagedCurve {
+    /// `(start_trial, regime)` pairs; the first must start at 0.
+    pub stages: Vec<(usize, TaskCurve)>,
+}
+
+impl StagedCurve {
+    /// Single-regime curve (equivalent to the plain [`TaskCurve`]).
+    pub fn new(first: TaskCurve) -> Self {
+        StagedCurve { stages: vec![(0, first)] }
+    }
+
+    /// Builder: add a regime activating at `start_trial`.
+    pub fn then(mut self, start_trial: usize, regime: TaskCurve) -> Self {
+        self.stages.push((start_trial, regime));
+        self
+    }
+
+    /// Best-so-far latency after `trials` measurements (seconds): the
+    /// minimum over all regimes active by then.
+    pub fn secs_after(&self, trials: usize) -> f64 {
+        let mut best = f64::INFINITY;
+        for (start, regime) in &self.stages {
+            if trials >= *start {
+                best = best.min(regime.secs_after(trials - start));
+            }
+        }
+        best
+    }
+}
+
+impl LatencyCurve for StagedCurve {
+    fn secs_after(&self, trials: usize) -> f64 {
+        StagedCurve::secs_after(self, trials)
+    }
+}
+
 /// TITAN-X-class server GPU (`sim-gpu`): 28 SMs, ~11 TFLOPS fp32,
 /// 480 GB/s GDDR5X, 48 KiB shared memory per block, 1024-thread blocks.
 pub fn sim_gpu() -> DeviceModel {
@@ -213,6 +277,28 @@ mod tests {
         // a different device yields a different (still deterministic) curve
         let c = TaskCurve::for_task(&task, &sim_cpu());
         assert!(c.floor != a.floor);
+    }
+
+    #[test]
+    fn staged_curve_is_monotone_and_changes_regime() {
+        // flat by ~trial 40, then a second regime at trial 64 opens
+        // fresh headroom below the first floor
+        let c = StagedCurve::new(TaskCurve { floor: 1.0, span: 1.0, tau: 8.0 })
+            .then(64, TaskCurve { floor: 0.2, span: 0.7, tau: 8.0 });
+        let mut prev = c.secs_after(0);
+        for n in 1..256 {
+            let s = c.secs_after(n);
+            assert!(s <= prev + 1e-15, "not monotone at {n}: {s} > {prev}");
+            prev = s;
+        }
+        // before the regime change: pinned at the first floor
+        assert!((c.secs_after(60) - 1.0).abs() < 1e-2);
+        // after: well below it
+        assert!(c.secs_after(200) < 0.3);
+        // the regime change produces a fresh burst of per-trial gain
+        let gain_before = c.secs_after(48) - c.secs_after(56);
+        let gain_after = c.secs_after(72) - c.secs_after(80);
+        assert!(gain_after > 10.0 * gain_before.max(1e-12));
     }
 
     #[test]

@@ -40,9 +40,13 @@
 //!
 //! Both drivers are **incremental**: SA chains, the dedup set, the
 //! model and the training set persist across calls, so a budget can be
-//! spent in slices (`tune_more`). The graph-level [`scheduler`] builds
-//! on exactly that contract to allocate one global budget across all
-//! tasks of a network by expected end-to-end gain.
+//! spent in slices (`tune_more`) — or in *pollable* slices
+//! (`begin_slice`/`step_slice` returning a [`SliceRun`]), which cut the
+//! same op sequence into single-batch steps so the overlapped
+//! graph-level [`scheduler`] can interleave several tasks' slices on
+//! one thread while their batches drain on the farm. The scheduler
+//! builds on exactly that contract to allocate one global budget across
+//! all tasks of a network by expected end-to-end gain.
 //!
 //! [`TransferModel`]: crate::model::TransferModel
 
@@ -53,14 +57,14 @@ pub mod scheduler;
 use crate::explore::{diverse_select, random_batch, ParallelSa, Scorer};
 use crate::features::Representation;
 use crate::gbt::Matrix;
-use crate::measure::{MeasureResult, Measurer};
+use crate::measure::{BatchTicket, MeasureResult, Measurer};
 use crate::model::{Acquisition, CostModel};
 use crate::schedule::space::ConfigEntity;
 use crate::schedule::template::Task;
 use crate::util::Rng;
 use db::{Record, TuningDb};
 use std::cell::RefCell;
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
 
 pub use crate::explore::SaParams;
 
@@ -492,6 +496,116 @@ pub(crate) fn serial_steps(
     }
 }
 
+/// Progress report of one [`SliceRun`] step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SliceStep {
+    /// The step performed one unit of work (a batch proposed and
+    /// submitted, or a measured batch absorbed and refitted); call
+    /// again.
+    Working,
+    /// The slice is finished: every proposed batch has been measured,
+    /// **absorbed and streamed into the DB sink** (if one is
+    /// configured). Nothing of the slice is still in flight — the
+    /// completion barrier covers the sink, so a caller computing gains
+    /// from DB-served state at this point sees every record of the
+    /// slice.
+    Complete,
+}
+
+/// A cooperative (pollable) slice of an incremental tuning run — the
+/// joinable-`tune_more` contract, cut into single-batch steps so a
+/// caller can interleave several tasks' slices on one thread while
+/// their measurement batches drain on a shared asynchronous farm.
+///
+/// Obtained from [`Tuner::begin_slice`] /
+/// [`pipeline::PipelinedTuner::begin_slice`] and advanced with the
+/// matching `step_slice`. Each step either proposes-and-submits one
+/// batch (through the asynchronous [`Measurer::submit`] pair, so the
+/// farm measures it in the background) or waits-absorbs-refits the
+/// oldest in-flight batch. The op sequence is identical to the blocking
+/// drivers — `begin_slice` + steps on the serial [`Tuner`] reproduces
+/// [`Tuner::tune_more`] bit-for-bit, and on the pipelined driver it
+/// reproduces the threaded epoch discipline (batch `k` proposed from
+/// the model state of epoch `max(0, k − (depth − 1))`) — so polled and
+/// joined slices are interchangeable under a fixed seed.
+pub struct SliceRun {
+    /// Absolute accountant trial count at which the slice is complete.
+    target: usize,
+    /// In-flight ticket bound: 1 = the serial schedule, `d` = the
+    /// pipelined epoch discipline at depth `d`.
+    depth: usize,
+    /// Trials proposed so far (absorbed + in flight), absolute.
+    proposed: usize,
+    /// Submitted-but-unabsorbed batches, oldest first.
+    inflight: VecDeque<(Vec<ConfigEntity>, BatchTicket)>,
+    /// The proposer returned an empty batch: the space is exhausted.
+    exhausted: bool,
+}
+
+impl SliceRun {
+    /// Whether any submitted batch is still unabsorbed.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.len()
+    }
+}
+
+/// One cooperative step of a slice: fill the slice's own pipeline (one
+/// propose + submit) if there is room, else absorb + refit the oldest
+/// in-flight batch. Returns [`SliceStep::Complete`] only when nothing
+/// is proposed, in flight, or left to propose — i.e. after the last
+/// absorb has streamed its records into the sink, never before.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn slice_step(
+    task: &Task,
+    opts: &TuneOptions,
+    proposer: &mut BatchProposer,
+    model: &mut dyn CostModel,
+    fit_feat: Option<&Featurizer>,
+    measurer: &dyn Measurer,
+    state: &mut LoopState,
+    run: &mut SliceRun,
+) -> SliceStep {
+    if !run.exhausted && run.proposed < run.target && run.inflight.len() < run.depth {
+        let b = opts.batch.min(run.target - run.proposed);
+        let batch =
+            proposer.propose(task, opts, model, b, state.acct.best_gflops());
+        if batch.is_empty() {
+            run.exhausted = true;
+        } else {
+            run.proposed += batch.len();
+            let ticket = measurer.submit(task, &batch);
+            run.inflight.push_back((batch, ticket));
+            return SliceStep::Working;
+        }
+    }
+    if let Some((batch, ticket)) = run.inflight.pop_front() {
+        let results = measurer.wait(ticket);
+        let labels = state.acct.absorb(&batch, &results);
+        state.xs.extend(batch.iter().cloned());
+        state.ys.extend(labels);
+        state.groups.push(batch.len());
+        // refit f̂ on all of D (the fit featurizer is the proposal cache
+        // for the serial schedule, a dedicated one for the pipelined)
+        let feat = fit_feat.unwrap_or(&proposer.feat);
+        let x = feat.features(task, &state.xs);
+        model.fit(&x, &state.ys, &state.groups);
+        if opts.verbose {
+            println!(
+                "[{}|slice] trials={:4} best={:.1} GFLOPS",
+                measurer.target(),
+                state.acct.trials,
+                state.acct.best_gflops()
+            );
+        }
+        if !run.inflight.is_empty()
+            || (!run.exhausted && state.acct.trials < run.target)
+        {
+            return SliceStep::Working;
+        }
+    }
+    SliceStep::Complete
+}
+
 /// The serial Algorithm-1 driver (reference loop). The pipelined
 /// production driver is [`pipeline::PipelinedTuner`].
 ///
@@ -559,6 +673,42 @@ impl Tuner {
     /// Snapshot of the accounting so far (curve, records, best).
     pub fn result(&self) -> TuneResult {
         self.state.acct.result_snapshot()
+    }
+
+    /// Begin a *pollable* slice of `extra` trials: the cooperative
+    /// counterpart of [`tune_more`](Self::tune_more), advanced one
+    /// batch at a time with [`step_slice`](Self::step_slice) so a
+    /// caller (the overlapped graph scheduler) can interleave several
+    /// tasks' slices on one thread. Stepping a slice to completion
+    /// performs exactly the `tune_more` op sequence — bit-for-bit
+    /// identical results under a fixed seed.
+    pub fn begin_slice(&mut self, extra: usize) -> SliceRun {
+        let at = self.state.acct.trials;
+        SliceRun {
+            target: at + extra,
+            depth: 1,
+            proposed: at,
+            inflight: VecDeque::new(),
+            exhausted: false,
+        }
+    }
+
+    /// Advance a slice from [`begin_slice`](Self::begin_slice) by one
+    /// unit of work (propose-and-submit one batch, or absorb-and-refit
+    /// the oldest in-flight one). Only one slice may be in flight per
+    /// tuner at a time; interleave slices of *different* tuners.
+    pub fn step_slice(&mut self, measurer: &dyn Measurer, run: &mut SliceRun) -> SliceStep {
+        let opts = self.options.clone();
+        slice_step(
+            &self.task,
+            &opts,
+            &mut self.proposer,
+            self.model.as_mut(),
+            None,
+            measurer,
+            &mut self.state,
+            run,
+        )
     }
 }
 

@@ -69,7 +69,10 @@
 //! run is still in flight. Streaming is a pure side effect and does not
 //! perturb the determinism contract above.
 
-use super::{serial_steps, BatchProposer, Featurizer, LoopState, TuneOptions, TuneResult};
+use super::{
+    serial_steps, slice_step, BatchProposer, Featurizer, LoopState, SliceRun, SliceStep,
+    TuneOptions, TuneResult,
+};
 use crate::measure::Measurer;
 use crate::model::CostModel;
 use crate::schedule::space::ConfigEntity;
@@ -149,6 +152,10 @@ pub struct PipelinedTuner {
     /// Loop configuration (batch size, depth, seed, sink, …).
     pub options: TuneOptions,
     model: Option<Box<dyn CostModel + Send>>,
+    /// Whether the model supports [`CostModel::snapshot`] (probed once
+    /// at construction — snapshot support is a property of the model
+    /// type, and probing clones the model).
+    snapshottable: bool,
     proposer: BatchProposer,
     state: LoopState,
     /// Fit-stage feature memo, persisted across slices so a new slice
@@ -163,10 +170,12 @@ impl PipelinedTuner {
     pub fn new(task: Task, model: Box<dyn CostModel + Send>, options: TuneOptions) -> Self {
         let proposer = BatchProposer::new(&options);
         let state = LoopState::new(options.sink.clone());
+        let snapshottable = model.snapshot().is_some();
         PipelinedTuner {
             task,
             options,
             model: Some(model),
+            snapshottable,
             proposer,
             state,
             fit_feat: None,
@@ -202,6 +211,56 @@ impl PipelinedTuner {
     /// Snapshot of the accounting so far (curve, records, best).
     pub fn result(&self) -> TuneResult {
         self.state.acct.result_snapshot()
+    }
+
+    /// Begin a *pollable* slice of `extra` trials: the cooperative
+    /// counterpart of [`tune_more`](Self::tune_more). Advanced one
+    /// batch at a time with [`step_slice`](Self::step_slice), the slice
+    /// keeps up to `pipeline_depth` measurement batches in flight
+    /// through the asynchronous [`Measurer::submit`]/[`Measurer::wait`]
+    /// pair, honoring the threaded loop's epoch discipline exactly —
+    /// batch `k` is proposed from the model state of epoch
+    /// `max(0, k − (depth − 1))`, so a polled slice reproduces a joined
+    /// `tune_more` bit-for-bit under a fixed seed. Models without
+    /// snapshot support run the slice at depth 1 (the serial schedule),
+    /// mirroring the threaded fallback.
+    pub fn begin_slice(&mut self, extra: usize) -> SliceRun {
+        let depth = if self.snapshottable { self.options.pipeline_depth.max(1) } else { 1 };
+        // The fit-stage featurizer persists across slices, exactly as
+        // in the threaded driver.
+        let fresh = match &self.fit_feat {
+            Some(f) if f.repr == self.options.repr => None,
+            _ => Some(Featurizer::new(self.options.repr)),
+        };
+        if let Some(f) = fresh {
+            self.fit_feat = Some(f);
+        }
+        let at = self.state.acct.trials;
+        SliceRun {
+            target: at + extra,
+            depth,
+            proposed: at,
+            inflight: std::collections::VecDeque::new(),
+            exhausted: false,
+        }
+    }
+
+    /// Advance a slice from [`begin_slice`](Self::begin_slice) by one
+    /// unit of work. Only one slice may be in flight per tuner at a
+    /// time; interleave slices of *different* tuners.
+    pub fn step_slice(&mut self, measurer: &dyn Measurer, run: &mut SliceRun) -> SliceStep {
+        let opts = self.options.clone();
+        let model = self.model.as_mut().expect("model present");
+        slice_step(
+            &self.task,
+            &opts,
+            &mut self.proposer,
+            model.as_mut(),
+            self.fit_feat.as_ref(),
+            measurer,
+            &mut self.state,
+            run,
+        )
     }
 
     /// Spend `extra` more measurement trials through the three-stage

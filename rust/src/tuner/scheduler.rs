@@ -46,6 +46,33 @@
 //! equal budget, gradient allocation must beat uniform on the simulated
 //! farm deterministically, not on a lucky seed.
 //!
+//! ## Cross-task overlap and the gain ledger
+//!
+//! With [`SchedulerOptions::overlap`]` = N > 1` the scheduler keeps up
+//! to `N` task-slices in flight at once: while task A's measurement
+//! batches drain on the shared asynchronous farm
+//! ([`MeasureService`](crate::measure::service::MeasureService)), task
+//! B's proposal and refit stages run on the caller thread — the farm
+//! never idles behind one task's slice barrier. Determinism survives
+//! through the [`GainLedger`]: every allocation decision records the
+//! ledger *version* (number of committed slices) it read, slices
+//! **retire in issue order** no matter which one's measurements
+//! physically return first, and in-flight slices are stepped in a fixed
+//! rotation rather than by wall-clock readiness — so a fixed-seed run
+//! produces bit-for-bit identical allocation decisions at any replica
+//! count or farm timing, and `overlap = 1` reproduces the barrier
+//! scheduler exactly (asserted by `tests/scheduler_overlap.rs`).
+//!
+//! Because overlapped decisions read gains up to `N − 1` slices stale,
+//! raw last-slice gain differences get noisier;
+//! [`SchedulerOptions::gain_ema`] smooths gain-per-trial with an
+//! exponential moving average and adds *restart detection* — a task
+//! whose fresh slice beats its
+//! decayed estimate by [`SchedulerOptions::restart_margin`]× resets the
+//! estimator (and its curvature decay), so a genuine regime change
+//! ([`StagedCurve`](crate::sim::devices::StagedCurve)) is chased
+//! immediately instead of being averaged away.
+//!
 //! ```
 //! use autotvm::expr::ops;
 //! use autotvm::schedule::template::{Task, TemplateKind};
@@ -86,15 +113,16 @@
 
 use super::db::TuningDb;
 use super::pipeline::PipelinedTuner;
-use super::{DbSink, TuneOptions, Tuner};
+use super::{DbSink, SliceRun, SliceStep, TuneOptions, Tuner};
 use crate::features::Representation;
 use crate::gbt::{GbtParams, Objective};
 use crate::graph::{task_salt, Graph};
 use crate::measure::Measurer;
 use crate::model::{CostModel, GbtModel, TransferModel};
 use crate::schedule::template::{Task, TemplateKind};
-use crate::sim::devices::TaskCurve;
+use crate::sim::devices::{LatencyCurve, TaskCurve};
 use crate::sim::DeviceModel;
+use std::collections::{HashMap, VecDeque};
 
 /// How the global trial budget is spread across tasks.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -140,6 +168,24 @@ pub struct SchedulerOptions {
     /// Starvation floor: a task whose trial share drops below
     /// `eps × (spent / tasks)` is topped up next round.
     pub eps: f64,
+    /// How many task-slices may be in flight at once. `1` (the
+    /// default) is the barrier scheduler: each slice fully drains
+    /// before the next allocation decision. `N > 1` overlaps slices
+    /// across tasks through the [`GainLedger`] — task B proposes and
+    /// refits while task A's batches drain on the farm — with
+    /// allocation decisions still bit-for-bit reproducible (see the
+    /// module docs).
+    pub overlap: usize,
+    /// EMA smoothing factor `α ∈ (0, 1]` for the gain-per-trial
+    /// estimate, with restart detection. `None` (the default) keeps
+    /// the raw last-slice gain — the historical estimator, and the one
+    /// the `overlap = 1` bit-for-bit equivalence is stated against.
+    pub gain_ema: Option<f64>,
+    /// Restart-detection margin (only read when `gain_ema` is set): a
+    /// task whose fresh slice gain exceeds `margin ×` its decayed
+    /// estimate resets the estimator and its curvature decay — a
+    /// genuine regime change is chased, not averaged away.
+    pub restart_margin: f64,
     /// Print one line per round (task picked, gain estimate, latency).
     pub verbose: bool,
 }
@@ -151,6 +197,9 @@ impl Default for SchedulerOptions {
             slice: 64,
             policy: AllocPolicy::Gradient,
             eps: 0.05,
+            overlap: 1,
+            gain_ema: None,
+            restart_margin: 3.0,
             verbose: false,
         }
     }
@@ -182,6 +231,14 @@ pub struct Allocation {
     /// Estimated end-to-end latency: fixed glue cost plus the
     /// weighted sum of `secs`.
     pub est_latency: f64,
+    /// The allocation decision log: one [`LedgerEntry`] per issued
+    /// slice, in issue order, each tagged with the ledger version it
+    /// read. Two runs that made the same decisions have equal logs —
+    /// the replay-equivalence artifact of the [`GainLedger`].
+    pub log: Vec<LedgerEntry>,
+    /// EMA restart-detection events per task (all zero unless
+    /// [`SchedulerOptions::gain_ema`] is set).
+    pub restarts: Vec<usize>,
 }
 
 /// Executes trial slices for the scheduler — the boundary between the
@@ -210,18 +267,63 @@ pub trait SliceExecutor {
     /// task's config space is exhausted (the scheduler then stops
     /// allocating to that task).
     fn run_slice(&mut self, idx: usize, trials: usize) -> usize;
+
+    /// Begin slice `no` of `trials` on task `idx` without waiting for
+    /// it — the overlapped scheduler's entry point. The default defers
+    /// everything to the first [`step_slice`](Self::step_slice) call,
+    /// which executes the whole slice synchronously, so plain barrier
+    /// executors participate in overlapped runs unchanged (each slice
+    /// simply completes at its first step).
+    fn begin_slice(&mut self, no: u64, idx: usize, trials: usize) {
+        let _ = (no, idx, trials);
+    }
+
+    /// Advance slice `no` (of `trials` on task `idx`) by one unit of
+    /// work, returning its [`SliceOutcome`] once **everything** of the
+    /// slice — including streamed DB-sink records — has landed; `None`
+    /// while work remains. The scheduler steps in-flight slices in a
+    /// fixed rotation and never steps a slice while an earlier
+    /// incomplete slice of the *same* task exists (per-task execution
+    /// is strictly sequential).
+    fn step_slice(&mut self, no: u64, idx: usize, trials: usize) -> Option<SliceOutcome> {
+        let _ = no;
+        let spent = self.run_slice(idx, trials);
+        Some(SliceOutcome { spent, secs_after: self.best_secs(idx) })
+    }
 }
 
-/// Replays deterministic [`TaskCurve`]s instead of running tuning loops
-/// — the simulated farm the allocator is tested against.
+/// What one completed slice reported back to the allocator.
+#[derive(Clone, Copy, Debug)]
+pub struct SliceOutcome {
+    /// Trials actually measured (less than planned ⇒ the task's space
+    /// is exhausted).
+    pub spent: usize,
+    /// The task's best per-invocation latency at the moment the slice
+    /// completed — captured *at completion*, not at commit, so a later
+    /// slice of the same task can never pollute this slice's gain.
+    pub secs_after: f64,
+}
+
+/// Replays deterministic latency curves ([`TaskCurve`] /
+/// [`StagedCurve`](crate::sim::devices::StagedCurve)) instead of
+/// running tuning loops — the simulated farm the allocator is tested
+/// against.
 pub struct CurveExecutor {
-    curves: Vec<TaskCurve>,
+    curves: Vec<Box<dyn LatencyCurve>>,
     spent: Vec<usize>,
 }
 
 impl CurveExecutor {
     /// Executor over one curve per task (same order as the plans).
     pub fn new(curves: Vec<TaskCurve>) -> Self {
+        CurveExecutor::from_curves(
+            curves.into_iter().map(|c| Box::new(c) as Box<dyn LatencyCurve>).collect(),
+        )
+    }
+
+    /// Executor over arbitrary curve models — staged curves with
+    /// regime changes, hand-built shapes — one per task.
+    pub fn from_curves(curves: Vec<Box<dyn LatencyCurve>>) -> Self {
         let spent = vec![0; curves.len()];
         CurveExecutor { curves, spent }
     }
@@ -249,6 +351,29 @@ enum Driver {
     Pipelined(PipelinedTuner),
 }
 
+impl Driver {
+    fn trials(&self) -> usize {
+        match self {
+            Driver::Serial(t) => t.trials(),
+            Driver::Pipelined(t) => t.trials(),
+        }
+    }
+}
+
+/// One pollable slice in flight on a [`LoopExecutor`].
+struct ActiveLoopSlice {
+    idx: usize,
+    /// Trials planned for the slice.
+    planned: usize,
+    /// Armed at the slice's first step: the driver trial count when it
+    /// actually began (spent = now − start), and its slice session.
+    /// Deferred because an earlier slice of the same task may still be
+    /// in flight at issue time — the driver's incremental state only
+    /// becomes this slice's starting point once the scheduler's
+    /// per-task FIFO lets it step.
+    session: Option<(usize, SliceRun)>,
+}
+
 /// Drives the real incremental tuning loops: one persistent driver per
 /// task (created lazily at its first slice), every measured trial
 /// streamed into the shared [`TuningDb`], and — when the DB already
@@ -268,6 +393,9 @@ pub struct LoopExecutor<'a> {
     /// measurement of the vendor config per task, outside the trial
     /// budget and the DB).
     baselines: Vec<Option<f64>>,
+    /// Pollable slices in flight (overlapped scheduling), by slice
+    /// number.
+    active: HashMap<u64, ActiveLoopSlice>,
 }
 
 impl<'a> LoopExecutor<'a> {
@@ -287,7 +415,18 @@ impl<'a> LoopExecutor<'a> {
         let drivers = tasks.iter().map(|_| None).collect();
         let baselines = tasks.iter().map(|_| None).collect();
         let target = measurer.target();
-        LoopExecutor { tasks, measurer, db, target, opts, pipelined, warm_start, drivers, baselines }
+        LoopExecutor {
+            tasks,
+            measurer,
+            db,
+            target,
+            opts,
+            pipelined,
+            warm_start,
+            drivers,
+            baselines,
+            active: HashMap::new(),
+        }
     }
 
     /// The shared tuning DB (read best configs from it after a run).
@@ -389,20 +528,115 @@ impl SliceExecutor for LoopExecutor<'_> {
             }
         }
     }
+
+    fn begin_slice(&mut self, no: u64, idx: usize, trials: usize) {
+        // Construct the driver (and its warm-start model) at issue
+        // time; the slice session itself is armed lazily at the first
+        // step, once any earlier slice of the same task has drained.
+        self.ensure_driver(idx);
+        self.active.insert(no, ActiveLoopSlice { idx, planned: trials, session: None });
+    }
+
+    fn step_slice(&mut self, no: u64, idx: usize, trials: usize) -> Option<SliceOutcome> {
+        if !self.active.contains_key(&no) {
+            // begin_slice was never called for this slice (a
+            // barrier-style caller): run it synchronously.
+            let spent = self.run_slice(idx, trials);
+            let secs_after = self.best_secs(idx);
+            return Some(SliceOutcome { spent, secs_after });
+        }
+        let measurer = self.measurer;
+        let step = {
+            let slot = self.active.get_mut(&no).expect("checked above");
+            let driver = self.drivers[slot.idx].as_mut().expect("driver ensured at begin");
+            if slot.session.is_none() {
+                let start = driver.trials();
+                let run = match driver {
+                    Driver::Serial(t) => t.begin_slice(slot.planned),
+                    Driver::Pipelined(t) => t.begin_slice(slot.planned),
+                };
+                slot.session = Some((start, run));
+            }
+            let (_, run) = slot.session.as_mut().expect("armed above");
+            match driver {
+                Driver::Serial(t) => t.step_slice(measurer, run),
+                Driver::Pipelined(t) => t.step_slice(measurer, run),
+            }
+        };
+        match step {
+            SliceStep::Working => None,
+            SliceStep::Complete => {
+                // The slice's last batch is absorbed — and with it,
+                // every record is already streamed through the DB sink
+                // (the completion barrier covers the sink; see
+                // `SliceStep::Complete`). Only now is the outcome — and
+                // the best-latency snapshot gains are computed from —
+                // released to the allocator.
+                let slot = self.active.remove(&no).expect("checked above");
+                let (start, _) = slot.session.expect("stepped at least once");
+                let spent =
+                    self.drivers[slot.idx].as_ref().expect("driver present").trials() - start;
+                let secs_after = self.best_secs(slot.idx);
+                Some(SliceOutcome { spent, secs_after })
+            }
+        }
+    }
 }
 
-/// Per-task gain history: weighted latency reduction per trial of the
-/// last slice, and of the one before (for the curvature estimate).
+/// Per-task gain history: the smoothed weighted latency reduction per
+/// trial (raw last-slice by default, EMA under
+/// [`SchedulerOptions::gain_ema`]) and the estimate before it (for the
+/// curvature decay), plus restart-detection accounting.
 #[derive(Clone, Copy, Default)]
 struct Gain {
     slices: usize,
+    /// Raw gain of the last committed slice.
     last: f64,
+    /// Estimate before the last observation (curvature denominator).
     prev: Option<f64>,
+    /// Current estimate: equals `last` in raw mode, the EMA otherwise.
+    est: f64,
+    /// Restart-detection events (EMA mode only).
+    restarts: usize,
 }
 
 impl Gain {
-    /// Predicted per-trial gain of the *next* slice: the last observed
-    /// gain, decayed by the task's measured curvature (exact for
+    /// Fold in one committed slice's observed gain-per-trial.
+    ///
+    /// Raw mode (`gain_ema: None`) keeps the historical estimator
+    /// exactly: estimate = the last observation, curvature = ratio of
+    /// the last two. EMA mode smooths the estimate
+    /// (`est ← α·δ + (1−α)·est`) and detects restarts: a fresh
+    /// observation beating the decayed estimate by the margin resets
+    /// the estimator to the observation and forgets the curvature — a
+    /// regime change must be chased at full strength, not blended into
+    /// a stale average.
+    fn observe(&mut self, delta: f64, opts: &SchedulerOptions) {
+        match opts.gain_ema {
+            None => {
+                self.prev = if self.slices == 0 { None } else { Some(self.last) };
+                self.est = delta;
+            }
+            Some(alpha) => {
+                if self.slices == 0 {
+                    self.prev = None;
+                    self.est = delta;
+                } else if delta > 0.0 && delta > opts.restart_margin * self.predicted() {
+                    self.prev = None;
+                    self.est = delta;
+                    self.restarts += 1;
+                } else {
+                    self.prev = Some(self.est);
+                    self.est = alpha * delta + (1.0 - alpha) * self.est;
+                }
+            }
+        }
+        self.last = delta;
+        self.slices += 1;
+    }
+
+    /// Predicted per-trial gain of the *next* slice: the current
+    /// estimate, decayed by the task's measured curvature (exact for
     /// exponential-decay curves at a fixed slice size).
     ///
     /// The slice-1 gain is measured against the executor's cheap
@@ -413,10 +647,128 @@ impl Gain {
     /// 0, decay from slice 3.
     fn predicted(self) -> f64 {
         match self.prev {
-            None => self.last,
-            Some(prev) if prev > 0.0 => self.last * (self.last / prev).clamp(0.0, 1.0),
-            Some(_) => self.last,
+            None => self.est,
+            Some(prev) if prev > 0.0 => self.est * (self.est / prev).clamp(0.0, 1.0),
+            Some(_) => self.est,
         }
+    }
+}
+
+/// One allocation decision recorded by the [`GainLedger`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LedgerEntry {
+    /// Global slice sequence number (issue order).
+    pub slice: usize,
+    /// Plan index the slice was allocated to.
+    pub task: usize,
+    /// Ledger version — the number of committed slices — the decision
+    /// read. Replayed fixed-seed runs produce identical `(slice, task,
+    /// version)` sequences regardless of farm timing.
+    pub version: u64,
+    /// Trials planned for the slice.
+    pub trials: usize,
+}
+
+/// Versioned per-task gain snapshots — the bookkeeping that lets the
+/// scheduler overlap slices across tasks *without* giving up
+/// deterministic gain accounting.
+///
+/// The ledger's **version** is the number of committed slices. Every
+/// allocation decision reads the ledger at its current version (and is
+/// recorded in the [`log`](Self::log) with that version); a completed
+/// slice **commits** in issue order — never in physical completion
+/// order — bumping the version by one. Issued-but-uncommitted slices
+/// are visible only through optimistic trial/slice counters (so the
+/// bootstrap round-robin and ε floor account for in-flight work), while
+/// gains, latencies and exhaustion flags change exclusively at commit.
+/// Decisions are therefore a pure function of the commit sequence: a
+/// replayed fixed-seed run makes bit-for-bit identical decisions no
+/// matter which task's measurements return first, and `overlap = 1`
+/// degenerates to the barrier scheduler exactly.
+pub struct GainLedger {
+    version: u64,
+    gains: Vec<Gain>,
+    /// Best per-invocation latency per task, as of the last commit.
+    secs: Vec<f64>,
+    /// Trials issued per task (optimistic: charged at issue, corrected
+    /// at commit when a space exhausts mid-slice).
+    issued: Vec<usize>,
+    /// Trials actually measured per task (commit-time truth).
+    committed: Vec<usize>,
+    /// Slices issued per task (feeds the bootstrap round-robin).
+    slices_issued: Vec<usize>,
+    exhausted: Vec<bool>,
+    log: Vec<LedgerEntry>,
+}
+
+impl GainLedger {
+    /// Ledger over `secs0.len()` tasks with their pre-tuning latencies.
+    fn new(secs0: Vec<f64>) -> Self {
+        let k = secs0.len();
+        GainLedger {
+            version: 0,
+            gains: vec![Gain::default(); k],
+            secs: secs0,
+            issued: vec![0; k],
+            committed: vec![0; k],
+            slices_issued: vec![0; k],
+            exhausted: vec![false; k],
+            log: Vec::new(),
+        }
+    }
+
+    /// Number of committed slices.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// The decision log so far (issue order).
+    pub fn log(&self) -> &[LedgerEntry] {
+        &self.log
+    }
+
+    /// Record an allocation decision at the current version and charge
+    /// the task optimistically.
+    fn issue(&mut self, task: usize, trials: usize) {
+        self.log.push(LedgerEntry {
+            slice: self.log.len(),
+            task,
+            version: self.version,
+            trials,
+        });
+        self.issued[task] += trials;
+        self.slices_issued[task] += 1;
+    }
+
+    /// Commit one completed slice (in issue order): fold the observed
+    /// gain into the task's estimate, update its latency, refund
+    /// unspendable trials and mark exhaustion. Returns the observed
+    /// weighted gain-per-trial.
+    fn commit(
+        &mut self,
+        task: usize,
+        planned: usize,
+        spent: usize,
+        secs_after: f64,
+        weight: f64,
+        opts: &SchedulerOptions,
+    ) -> f64 {
+        if spent < planned {
+            // the space ran dry mid-slice: stop allocating here, and
+            // hand the un-measurable trials back for live tasks
+            self.exhausted[task] = true;
+            self.issued[task] -= planned - spent;
+        }
+        let delta = if self.secs[task].is_finite() && secs_after.is_finite() && spent > 0 {
+            (self.secs[task] - secs_after).max(0.0) * weight / spent as f64
+        } else {
+            0.0
+        };
+        self.gains[task].observe(delta, opts);
+        self.secs[task] = secs_after;
+        self.committed[task] += spent;
+        self.version += 1;
+        delta
     }
 }
 
@@ -487,7 +839,18 @@ impl TaskScheduler {
     /// Pick the task for the next slice, skipping exhausted spaces.
     /// Deterministic: ties break on the lowest index. `None` when every
     /// task is exhausted.
-    fn pick(&self, trials: &[usize], gains: &[Gain], exhausted: &[bool]) -> Option<usize> {
+    ///
+    /// `trials` and `slices` count *issued* work (committed plus
+    /// in-flight under overlap — the bootstrap and ε floor must see
+    /// what is already on the farm), while `gains`/`exhausted` are
+    /// commit-time truth. In a barrier run the two views coincide.
+    fn pick(
+        &self,
+        trials: &[usize],
+        slices: &[usize],
+        gains: &[Gain],
+        exhausted: &[bool],
+    ) -> Option<usize> {
         let k = self.plans.len();
         let argmin_trials = |trials: &[usize]| -> Option<usize> {
             let mut best: Option<usize> = None;
@@ -509,10 +872,10 @@ impl TaskScheduler {
                 // gets a second, so small budgets still cover all tasks)
                 let mut boot: Option<usize> = None;
                 for i in 0..k {
-                    if exhausted[i] || gains[i].slices >= 2 {
+                    if exhausted[i] || slices[i] >= 2 {
                         continue;
                     }
-                    if boot.map_or(true, |b: usize| gains[i].slices < gains[b].slices) {
+                    if boot.map_or(true, |b: usize| slices[i] < slices[b]) {
                         boot = Some(i);
                     }
                 }
@@ -546,9 +909,10 @@ impl TaskScheduler {
     /// Convenience driver over the real tuning loops: builds a
     /// [`LoopExecutor`] for this plan's tasks (streaming into `db`,
     /// with optional pipelined slices and cross-task warm starts) and
-    /// runs the allocation. Best configs are served from `db`
-    /// afterwards. One entry point shared by `tune-graph`, `tune-all
-    /// --alloc gradient` and the fig11 driver.
+    /// runs the allocation — overlapped across tasks when
+    /// [`SchedulerOptions::overlap`]` > 1`. Best configs are served
+    /// from `db` afterwards. One entry point shared by `tune-graph`,
+    /// `tune-all --alloc gradient` and the fig11 driver.
     pub fn run_tuning(
         &self,
         measurer: &dyn Measurer,
@@ -565,80 +929,242 @@ impl TaskScheduler {
 
     /// Run the allocation loop: spend the whole budget in slices,
     /// returning where it went and the resulting latency estimate.
+    /// With [`SchedulerOptions::overlap`]` > 1` this is the overlapped
+    /// loop ([`run_overlapped`](Self::run_overlapped)); otherwise the
+    /// historical barrier loop — each slice fully drains before the
+    /// next allocation decision.
     pub fn run(&self, exec: &mut dyn SliceExecutor) -> Allocation {
-        let k = self.plans.len();
-        if k == 0 || self.opts.budget == 0 {
-            return Allocation {
-                trials: vec![0; k],
-                secs: vec![f64::INFINITY; k],
-                rounds: 0,
-                est_latency: self.fixed_secs,
-            };
+        if self.opts.overlap > 1 {
+            self.run_overlapped(exec)
+        } else {
+            self.run_barrier(exec)
         }
-        // keep the slice small enough for two bootstrap slices per task
-        let slice = self.opts.slice.max(1).min((self.opts.budget / (2 * k)).max(1));
-        // Pre-tuning baselines: a finite default-schedule latency per
-        // task makes the very first slice's gain observable (curvature
-        // decay from slice 2; see `Gain::predicted`). Uniform allocation
-        // never reads gains, so it must not pay the per-task baseline
-        // measurement.
-        let mut secs: Vec<f64> = match self.opts.policy {
+    }
+
+    /// Empty-plan / zero-budget result.
+    fn empty_allocation(&self) -> Allocation {
+        let k = self.plans.len();
+        Allocation {
+            trials: vec![0; k],
+            secs: vec![f64::INFINITY; k],
+            rounds: 0,
+            est_latency: self.fixed_secs,
+            log: Vec::new(),
+            restarts: vec![0; k],
+        }
+    }
+
+    /// Normalized slice size: small enough for two bootstrap slices per
+    /// task, at least 1.
+    fn norm_slice(&self, k: usize) -> usize {
+        self.opts.slice.max(1).min((self.opts.budget / (2 * k)).max(1))
+    }
+
+    /// Pre-tuning latencies: finite default-schedule baselines so the
+    /// very first slice's gain is observable (curvature decay from
+    /// slice 2; see `Gain::predicted`). Uniform allocation never reads
+    /// gains, so it must not pay the per-task baseline measurement.
+    fn initial_secs(&self, exec: &mut dyn SliceExecutor, k: usize) -> Vec<f64> {
+        match self.opts.policy {
             AllocPolicy::Gradient => (0..k).map(|i| exec.baseline_secs(i)).collect(),
             AllocPolicy::Uniform => (0..k).map(|i| exec.best_secs(i)).collect(),
-        };
-        let mut trials = vec![0usize; k];
-        let mut gains = vec![Gain::default(); k];
-        let mut exhausted = vec![false; k];
+        }
+    }
+
+    fn round_report(
+        &self,
+        rounds: usize,
+        i: usize,
+        spent: usize,
+        total: usize,
+        delta: f64,
+        new: f64,
+    ) {
+        if self.opts.verbose {
+            println!(
+                "# round {rounds:3}: {} +{spent} trials (total {total}), {:.3} ms/invocation, \
+                 gain {:.3e} s/trial",
+                self.plans[i].task.key(),
+                new * 1e3,
+                delta
+            );
+        }
+    }
+
+    /// The barrier allocation loop: one slice at a time, each fully
+    /// drained before the next decision.
+    fn run_barrier(&self, exec: &mut dyn SliceExecutor) -> Allocation {
+        let k = self.plans.len();
+        if k == 0 || self.opts.budget == 0 {
+            return self.empty_allocation();
+        }
+        let slice = self.norm_slice(k);
+        let mut ledger = GainLedger::new(self.initial_secs(exec, k));
         let mut rounds = 0usize;
         let mut remaining = self.opts.budget;
         while remaining > 0 {
             let s = slice.min(remaining);
-            let Some(i) = self.pick(&trials, &gains, &exhausted) else {
+            let Some(i) = self.pick(
+                &ledger.issued,
+                &ledger.slices_issued,
+                &ledger.gains,
+                &ledger.exhausted,
+            ) else {
                 break; // every config space is exhausted
             };
+            ledger.issue(i, s);
             let spent = exec.run_slice(i, s).min(s);
-            if spent < s {
-                // the space ran dry mid-slice: stop allocating here
-                exhausted[i] = true;
-            }
             let new = exec.best_secs(i);
             // weighted latency reduction per trial; unknown (±∞) states
             // contribute no gradient and are left to the ε floor
-            let delta = if secs[i].is_finite() && new.is_finite() && spent > 0 {
-                (secs[i] - new).max(0.0) * self.plans[i].weight / spent as f64
-            } else {
-                0.0
-            };
-            gains[i] = Gain { slices: gains[i].slices + 1, last: delta, prev: Some(gains[i].last) };
-            if gains[i].slices == 1 {
-                gains[i].prev = None;
-            }
-            secs[i] = new;
-            trials[i] += spent;
+            let delta = ledger.commit(i, s, spent, new, self.plans[i].weight, &self.opts);
             // unspent budget stays available for the remaining live
             // tasks; the loop ends when it is gone or everyone is
             // exhausted (at most k zero-spend probe rounds)
             remaining -= spent;
             rounds += 1;
-            if self.opts.verbose {
-                println!(
-                    "# round {rounds:3}: {} +{spent} trials (total {}), {:.3} ms/invocation, \
-                     gain {:.3e} s/trial",
-                    self.plans[i].task.key(),
-                    trials[i],
-                    new * 1e3,
-                    delta
+            self.round_report(rounds, i, spent, ledger.committed[i], delta, new);
+        }
+        self.finish(ledger, rounds)
+    }
+
+    /// The overlapped allocation loop: up to
+    /// [`SchedulerOptions::overlap`] task-slices in flight at once,
+    /// with deterministic gain accounting through the [`GainLedger`]
+    /// (see the module docs). In-flight slices are stepped in a fixed
+    /// oldest-first rotation — never by wall-clock readiness — and a
+    /// slice only steps when it is the earliest incomplete slice of its
+    /// task; completed slices retire strictly in issue order. The
+    /// decision sequence is therefore a pure function of the committed
+    /// outcomes, regardless of which task's measurements physically
+    /// return first.
+    pub fn run_overlapped(&self, exec: &mut dyn SliceExecutor) -> Allocation {
+        let k = self.plans.len();
+        let overlap = self.opts.overlap.max(1);
+        if k == 0 || self.opts.budget == 0 {
+            return self.empty_allocation();
+        }
+        let slice = self.norm_slice(k);
+        let mut ledger = GainLedger::new(self.initial_secs(exec, k));
+        /// One issued slice awaiting completion (FIFO retire order).
+        struct InFlight {
+            no: u64,
+            idx: usize,
+            planned: usize,
+            outcome: Option<SliceOutcome>,
+        }
+        let mut active: VecDeque<InFlight> = VecDeque::new();
+        let mut remaining = self.opts.budget;
+        let mut rounds = 0usize;
+        let mut next_no = 0u64;
+        // Issue one slice at the ledger's current version (a decision),
+        // if budget and a live task allow. The optimistic
+        // issued-counters keep the bootstrap round-robin and ε floor
+        // aware of in-flight work.
+        let fill_one = |ledger: &mut GainLedger,
+                            active: &mut VecDeque<InFlight>,
+                            remaining: &mut usize,
+                            next_no: &mut u64,
+                            exec: &mut dyn SliceExecutor|
+         -> bool {
+            if *remaining == 0 {
+                return false;
+            }
+            let s = slice.min(*remaining);
+            let Some(i) = self.pick(
+                &ledger.issued,
+                &ledger.slices_issued,
+                &ledger.gains,
+                &ledger.exhausted,
+            ) else {
+                return false; // nothing issuable: every live task exhausted
+            };
+            ledger.issue(i, s);
+            exec.begin_slice(*next_no, i, s);
+            active.push_back(InFlight { no: *next_no, idx: i, planned: s, outcome: None });
+            *remaining -= s;
+            *next_no += 1;
+            true
+        };
+        loop {
+            // (Re)fill an empty window up to the overlap bound — the
+            // initial fill, and the restart after refunds revive a
+            // drained budget. Otherwise slices are issued ONLY at
+            // commits (one per commit, below): slice k's decision then
+            // always reads version max(0, k − N + 1), however
+            // completions bunch in wall-clock — the timing-invariance
+            // half of the determinism story.
+            if active.is_empty() {
+                while active.len() < overlap
+                    && fill_one(&mut ledger, &mut active, &mut remaining, &mut next_no, &mut *exec)
+                {}
+                if active.is_empty() {
+                    break; // budget spent (or refunded but unissuable)
+                }
+            }
+            // Advance every in-flight slice by one step, oldest first —
+            // a fixed rotation, so the executor's op sequence (and with
+            // it every RNG and farm-sequence draw) is reproducible. A
+            // slice waits while an earlier incomplete slice of the same
+            // task exists: per-task execution is strictly sequential.
+            for pos in 0..active.len() {
+                if active[pos].outcome.is_some() {
+                    continue;
+                }
+                let idx = active[pos].idx;
+                let blocked =
+                    (0..pos).any(|q| active[q].idx == idx && active[q].outcome.is_none());
+                if blocked {
+                    continue;
+                }
+                let (no, planned) = (active[pos].no, active[pos].planned);
+                active[pos].outcome = exec.step_slice(no, idx, planned);
+            }
+            // Retire strictly in issue order: a slice that finished
+            // early waits for its predecessors, so commits — and the
+            // ledger versions later decisions read — form the same
+            // sequence every run. Each commit releases exactly one new
+            // decision at the just-bumped version.
+            while let Some(front) = active.front() {
+                let Some(out) = front.outcome else { break };
+                let (idx, planned) = (front.idx, front.planned);
+                active.pop_front();
+                let spent = out.spent.min(planned);
+                remaining += planned - spent; // refund unspendable budget
+                let delta = ledger.commit(
+                    idx,
+                    planned,
+                    spent,
+                    out.secs_after,
+                    self.plans[idx].weight,
+                    &self.opts,
                 );
+                rounds += 1;
+                self.round_report(rounds, idx, spent, ledger.committed[idx], delta, out.secs_after);
+                fill_one(&mut ledger, &mut active, &mut remaining, &mut next_no, &mut *exec);
             }
         }
+        self.finish(ledger, rounds)
+    }
+
+    /// Fold a finished ledger into the [`Allocation`] report.
+    fn finish(&self, ledger: GainLedger, rounds: usize) -> Allocation {
         let est_latency = self.fixed_secs
             + self
                 .plans
                 .iter()
-                .zip(&secs)
+                .zip(&ledger.secs)
                 .map(|(p, s)| p.weight * s)
                 .sum::<f64>();
-        Allocation { trials, secs, rounds, est_latency }
+        let restarts = ledger.gains.iter().map(|g| g.restarts).collect();
+        Allocation {
+            trials: ledger.committed,
+            secs: ledger.secs,
+            rounds,
+            est_latency,
+            log: ledger.log,
+            restarts,
+        }
     }
 }
 

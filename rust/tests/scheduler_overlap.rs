@@ -1,0 +1,543 @@
+//! Chaos & equivalence suite for the overlapped task scheduler
+//! (`tuner::scheduler` with `SchedulerOptions::overlap > 1`).
+//!
+//! The claims under test, in order of importance:
+//!
+//! 1. `overlap = 1` reproduces the barrier scheduler **bit-for-bit** —
+//!    on replayed curves and on the real tuning loops (same allocation
+//!    log, same trials, same latencies, same DB contents).
+//! 2. At any overlap, allocation decisions are a pure function of the
+//!    commit sequence: the [`GainLedger`] pins slice `k`'s decision to
+//!    ledger version `max(0, k − N + 1)`, so wall-clock completion
+//!    order (modeled by an executor with arbitrary completion delays,
+//!    and by a real farm with/without per-board RTT) cannot leak into
+//!    the allocation.
+//! 3. Chaos: a flaky multi-replica farm under overlap loses nothing —
+//!    the budget is exactly spent, every trial (including injected
+//!    board errors) is streamed into the DB exactly once, and the farm
+//!    really did hold more than one task in flight.
+//! 4. Gain-accounting edge cases: spaces exhausting mid-slice under
+//!    overlap refund their budget; all-tasks-exhausted terminates; EMA
+//!    restart detection fires exactly once per genuine regime change.
+//! 5. The pollable slice sessions (`begin_slice`/`step_slice`) match
+//!    the joined `tune_more` drivers bit-for-bit, and a slice's outcome
+//!    is only released after its DB sink has fully flushed.
+//!
+//! [`GainLedger`]: autotvm::tuner::scheduler::GainLedger
+
+use autotvm::expr::ops;
+use autotvm::gbt::GbtParams;
+use autotvm::measure::farm::DeviceFarm;
+use autotvm::measure::service::MeasureService;
+use autotvm::measure::SimMeasurer;
+use autotvm::model::GbtModel;
+use autotvm::schedule::template::{Task, TemplateKind};
+use autotvm::sim::devices::{sim_cpu, sim_gpu, LatencyCurve, StagedCurve, TaskCurve};
+use autotvm::tuner::db::Database;
+use autotvm::tuner::pipeline::PipelinedTuner;
+use autotvm::tuner::scheduler::{
+    AllocPolicy, Allocation, CurveExecutor, LoopExecutor, SchedulerOptions, SliceExecutor,
+    SliceOutcome, TaskScheduler,
+};
+use autotvm::tuner::{SaParams, SliceStep, TuneOptions, TuneResult, Tuner};
+use autotvm::util::Rng;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tiny_tasks(n: usize, template: TemplateKind) -> Vec<Task> {
+    (0..n).map(|i| Task::new(ops::matmul(64 << i, 64, 64), template)).collect()
+}
+
+fn small_tune_options(batch: usize, seed: u64) -> TuneOptions {
+    TuneOptions {
+        batch,
+        sa: SaParams { n_chains: 16, n_steps: 25, ..Default::default() },
+        seed,
+        ..Default::default()
+    }
+}
+
+fn assert_same_alloc(a: &Allocation, b: &Allocation) {
+    assert_eq!(a.log, b.log, "allocation decision logs diverged");
+    assert_eq!(a.trials, b.trials);
+    assert_eq!(a.rounds, b.rounds);
+    assert_eq!(a.secs, b.secs, "per-task latencies diverged");
+    assert_eq!(a.est_latency, b.est_latency);
+    assert_eq!(a.restarts, b.restarts);
+}
+
+fn assert_same_result(a: &TuneResult, b: &TuneResult) {
+    assert_eq!(a.curve, b.curve, "best-so-far curves diverged");
+    assert_eq!(a.records.len(), b.records.len());
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.entity, rb.entity, "measured configs diverged");
+        assert_eq!(ra.gflops, rb.gflops);
+        assert_eq!(ra.error, rb.error);
+    }
+    assert_eq!(
+        a.best.as_ref().map(|(e, _)| e.clone()),
+        b.best.as_ref().map(|(e, _)| e.clone())
+    );
+}
+
+/// Hand-built curves: no hashing, so the test controls the shape.
+fn curves(params: &[(f64, f64, f64)]) -> CurveExecutor {
+    CurveExecutor::new(
+        params.iter().map(|&(floor, span, tau)| TaskCurve { floor, span, tau }).collect(),
+    )
+}
+
+// ---------------------------------------------------------------------
+// 1. overlap = 1 ≡ barrier, bit-for-bit
+// ---------------------------------------------------------------------
+
+#[test]
+fn overlap1_matches_barrier_bit_for_bit_on_curves() {
+    let shapes = [(1.0, 1.0, 10.0), (2.0, 3.0, 40.0), (0.5, 0.1, 5.0)];
+    let opts = SchedulerOptions {
+        budget: 3 * 16 * 4,
+        slice: 16,
+        policy: AllocPolicy::Gradient,
+        ..Default::default()
+    };
+    let sched = TaskScheduler::for_tasks(tiny_tasks(3, TemplateKind::Cpu), opts);
+    let mut barrier_exec = curves(&shapes);
+    let barrier = sched.run(&mut barrier_exec); // overlap = 1 → barrier loop
+    let mut overlap_exec = curves(&shapes);
+    let overlapped = sched.run_overlapped(&mut overlap_exec); // same N, cooperative loop
+    assert_same_alloc(&barrier, &overlapped);
+    assert_eq!(barrier_exec.spent(), overlap_exec.spent());
+    // the log records one decision per round, versions counting up
+    assert_eq!(barrier.log.len(), barrier.rounds);
+    for (k, e) in barrier.log.iter().enumerate() {
+        assert_eq!(e.slice, k);
+        assert_eq!(e.version, k as u64, "barrier decisions read every prior commit");
+    }
+}
+
+#[test]
+fn overlap1_matches_barrier_bit_for_bit_on_real_loops() {
+    let dev = sim_cpu();
+    let tasks = tiny_tasks(2, TemplateKind::Cpu);
+    let budget = 2 * 16 * 2;
+    let sched = TaskScheduler::for_tasks(
+        tasks.clone(),
+        SchedulerOptions {
+            budget,
+            slice: 16,
+            policy: AllocPolicy::Gradient,
+            ..Default::default()
+        },
+    );
+    let run = |overlapped: bool| {
+        let db = Database::new();
+        let m = SimMeasurer::with_seed(dev.clone(), 42);
+        let mut exec = LoopExecutor::new(
+            tasks.clone(),
+            &m,
+            db.clone(),
+            small_tune_options(8, 5),
+            false,
+            true,
+        );
+        let alloc =
+            if overlapped { sched.run_overlapped(&mut exec) } else { sched.run(&mut exec) };
+        (alloc, db)
+    };
+    let (barrier, db_a) = run(false);
+    let (overlapped, db_b) = run(true);
+    assert_same_alloc(&barrier, &overlapped);
+    assert_eq!(barrier.trials.iter().sum::<usize>(), budget);
+    // the DBs saw the same record stream
+    assert_eq!(db_a.len(), db_b.len());
+    for t in &tasks {
+        let (ea, ga) = db_a.best_config(&t.key(), dev.name).expect("tuned");
+        let (eb, gb) = db_b.best_config(&t.key(), dev.name).expect("tuned");
+        assert_eq!(ea, eb, "best config diverged for {}", t.key());
+        assert_eq!(ga, gb);
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. decisions are invariant to physical completion timing
+// ---------------------------------------------------------------------
+
+/// Wraps [`CurveExecutor`] with per-slice completion delays: a slice
+/// reports `None` for a seed-dependent number of polls before
+/// completing — the model of "task B's measurements returned first".
+/// The ledger must make the allocation blind to it.
+struct DelayedCurves {
+    inner: CurveExecutor,
+    delays: Vec<usize>,
+    pending: HashMap<u64, usize>,
+    begun: usize,
+}
+
+impl SliceExecutor for DelayedCurves {
+    fn best_secs(&mut self, idx: usize) -> f64 {
+        self.inner.best_secs(idx)
+    }
+
+    fn run_slice(&mut self, idx: usize, trials: usize) -> usize {
+        self.inner.run_slice(idx, trials)
+    }
+
+    fn begin_slice(&mut self, no: u64, _idx: usize, _trials: usize) {
+        let d = self.delays[self.begun % self.delays.len()];
+        self.begun += 1;
+        self.pending.insert(no, d);
+    }
+
+    fn step_slice(&mut self, no: u64, idx: usize, trials: usize) -> Option<SliceOutcome> {
+        let left = self.pending.get_mut(&no).expect("begun");
+        if *left > 0 {
+            *left -= 1;
+            return None;
+        }
+        self.pending.remove(&no);
+        let spent = self.inner.run_slice(idx, trials);
+        Some(SliceOutcome { spent, secs_after: self.inner.best_secs(idx) })
+    }
+}
+
+#[test]
+fn overlap_decisions_invariant_to_completion_timing() {
+    let shapes =
+        [(1.0, 2.0, 12.0), (0.7, 1.5, 30.0), (1.3, 0.4, 8.0), (0.9, 2.5, 50.0)];
+    for overlap in [2usize, 3, 4] {
+        let sched = TaskScheduler::for_tasks(
+            tiny_tasks(4, TemplateKind::Cpu),
+            SchedulerOptions {
+                budget: 4 * 8 * 6,
+                slice: 8,
+                policy: AllocPolicy::Gradient,
+                overlap,
+                ..Default::default()
+            },
+        );
+        // reference: every slice completes at its first poll
+        let mut instant = DelayedCurves {
+            inner: curves(&shapes),
+            delays: vec![0],
+            pending: HashMap::new(),
+            begun: 0,
+        };
+        let reference = sched.run_overlapped(&mut instant);
+        assert_eq!(reference.trials.iter().sum::<usize>(), 4 * 8 * 6);
+        // the ledger pins decision k to version max(0, k − N + 1)
+        for (k, e) in reference.log.iter().enumerate() {
+            let want = (k + 1).saturating_sub(overlap) as u64;
+            assert_eq!(e.version, want, "slice {k} at overlap {overlap}");
+        }
+        // chaos over completion orderings: seeded delay patterns
+        for delay_seed in 0..12u64 {
+            let mut rng = Rng::seed_from_u64(delay_seed * 7919 + 3);
+            let delays: Vec<usize> = (0..17).map(|_| rng.gen_range(0..4)).collect();
+            let mut delayed = DelayedCurves {
+                inner: curves(&shapes),
+                delays,
+                pending: HashMap::new(),
+                begun: 0,
+            };
+            let chaotic = sched.run_overlapped(&mut delayed);
+            assert_same_alloc(&reference, &chaotic);
+        }
+    }
+}
+
+#[test]
+fn overlap_run_identical_with_and_without_farm_latency() {
+    // Same 4-replica farm, same seeds — only the wall-clock timing of
+    // completions differs (per-board RTT). The allocation, and every
+    // measured record, must be identical.
+    let tasks = tiny_tasks(3, TemplateKind::Gpu);
+    let budget = 3 * 16 * 2;
+    let sched = TaskScheduler::for_tasks(
+        tasks.clone(),
+        SchedulerOptions {
+            budget,
+            slice: 16,
+            policy: AllocPolicy::Gradient,
+            overlap: 3,
+            ..Default::default()
+        },
+    );
+    let run = |latency_ms: u64| {
+        let farm =
+            DeviceFarm::with_latency(sim_gpu(), 4, 9, Duration::from_millis(latency_ms));
+        let svc = MeasureService::with_defaults(Arc::new(farm));
+        let db = Database::new();
+        let mut exec = LoopExecutor::new(
+            tasks.clone(),
+            &svc,
+            db.clone(),
+            small_tune_options(8, 3),
+            false,
+            false,
+        );
+        let alloc = sched.run_overlapped(&mut exec);
+        (alloc, db)
+    };
+    let (fast, db_fast) = run(0);
+    let (slow, db_slow) = run(3);
+    assert_same_alloc(&fast, &slow);
+    assert_eq!(fast.trials.iter().sum::<usize>(), budget);
+    assert_eq!(db_fast.len(), db_slow.len());
+    for t in &tasks {
+        let a = db_fast.best_config(&t.key(), "sim-gpu");
+        let b = db_slow.best_config(&t.key(), "sim-gpu");
+        assert_eq!(a.map(|(_, g)| g), b.map(|(_, g)| g), "{}", t.key());
+    }
+}
+
+// ---------------------------------------------------------------------
+// 3. chaos: flaky multi-replica farm under overlap
+// ---------------------------------------------------------------------
+
+#[test]
+fn chaos_flaky_overlap_farm_loses_nothing() {
+    let tasks = tiny_tasks(3, TemplateKind::Gpu);
+    let budget = 3 * 16 * 3;
+    // 50 ms per job: a batch wave (8 jobs on 4 boards) outlives the
+    // tiny SA proposals below by a wide margin, so both tasks' jobs
+    // really coexist on the farm (the peak assertion at the bottom).
+    let farm = DeviceFarm::with_latency(sim_gpu(), 4, 11, Duration::from_millis(50))
+        .with_flakiness(0.2);
+    let svc = MeasureService::with_defaults(Arc::new(farm));
+    let db = Database::new();
+    let sched = TaskScheduler::for_tasks(
+        tasks.clone(),
+        SchedulerOptions {
+            budget,
+            slice: 16,
+            policy: AllocPolicy::Gradient,
+            overlap: 2,
+            ..Default::default()
+        },
+    );
+    let mut tune = small_tune_options(8, 7);
+    tune.sa = SaParams { n_chains: 8, n_steps: 15, ..Default::default() };
+    // pipelined slices: up to depth × overlap batches on the farm
+    let mut exec = LoopExecutor::new(tasks.clone(), &svc, db.clone(), tune, true, true);
+    let alloc = sched.run_overlapped(&mut exec);
+    // budget exactly spent: injected board errors are measurement
+    // outcomes and consume trials, never retried or double-counted
+    assert_eq!(alloc.trials.iter().sum::<usize>(), budget, "budget exactly spent");
+    assert_eq!(db.len(), budget, "no lost or double-counted trials");
+    for (i, t) in tasks.iter().enumerate() {
+        assert_eq!(
+            db.for_task(&t.key(), "sim-gpu").len(),
+            alloc.trials[i],
+            "per-task record count diverged for {}",
+            t.key()
+        );
+    }
+    // the flaky farm really did inject failures, and they were recorded
+    let errored = db.records().iter().filter(|r| r.error.is_some()).count();
+    assert!(errored > 0, "flakiness 0.2 produced no errors?");
+    let stats = svc.stats();
+    // every trial plus one vendor-baseline measurement per task
+    assert_eq!(stats.completed as usize, budget + tasks.len());
+    assert!(stats.inflight_by_task.is_empty(), "in-flight accounting must drain");
+    assert!(
+        stats.peak_tasks_overlapped >= 2,
+        "overlap 2 never had two tasks on the farm at once (peak {})",
+        stats.peak_tasks_overlapped
+    );
+}
+
+// ---------------------------------------------------------------------
+// 4. gain-accounting edge cases
+// ---------------------------------------------------------------------
+
+/// Executor whose tasks run out of configs (default synchronous slice
+/// protocol — exhaustion semantics are the scheduler's to handle).
+struct CappedExecutor {
+    caps: Vec<usize>,
+    spent: Vec<usize>,
+}
+
+impl SliceExecutor for CappedExecutor {
+    fn best_secs(&mut self, idx: usize) -> f64 {
+        1.0 / (1.0 + self.spent[idx] as f64)
+    }
+
+    fn run_slice(&mut self, idx: usize, trials: usize) -> usize {
+        let n = trials.min(self.caps[idx] - self.spent[idx]);
+        self.spent[idx] += n;
+        n
+    }
+}
+
+#[test]
+fn overlap_exhaustion_mid_slice_refunds_and_reallocates() {
+    // task 0 dies mid-slice; its refunded budget must flow to task 1
+    let sched = TaskScheduler::for_tasks(
+        tiny_tasks(2, TemplateKind::Cpu),
+        SchedulerOptions {
+            budget: 160,
+            slice: 16,
+            policy: AllocPolicy::Gradient,
+            overlap: 2,
+            ..Default::default()
+        },
+    );
+    let mut exec = CappedExecutor { caps: vec![24, 1000], spent: vec![0, 0] };
+    let alloc = sched.run_overlapped(&mut exec);
+    assert_eq!(alloc.trials[0], 24, "exhausted task charged phantom trials");
+    assert_eq!(exec.spent, alloc.trials);
+    // the full budget still lands: what task 0 couldn't spend, task 1 did
+    assert_eq!(alloc.trials.iter().sum::<usize>(), 160);
+}
+
+#[test]
+fn overlap_all_tasks_exhausted_terminates() {
+    let sched = TaskScheduler::for_tasks(
+        tiny_tasks(2, TemplateKind::Cpu),
+        SchedulerOptions {
+            budget: 320,
+            slice: 16,
+            policy: AllocPolicy::Gradient,
+            overlap: 3,
+            ..Default::default()
+        },
+    );
+    // total capacity (40) far below the budget (320): must terminate
+    // without charging phantom trials, with bounded probe rounds
+    let mut exec = CappedExecutor { caps: vec![24, 16], spent: vec![0, 0] };
+    let alloc = sched.run_overlapped(&mut exec);
+    assert_eq!(alloc.trials, vec![24, 16], "trials must reflect real spend");
+    assert_eq!(exec.spent, vec![24, 16]);
+    assert!(alloc.rounds <= 10, "{} rounds", alloc.rounds);
+}
+
+#[test]
+fn ema_restart_fires_exactly_once_per_regime_change() {
+    // task 0: smooth decay that flattens, then a genuine regime change
+    // at trial 96 (fresh headroom below the old floor); task 1: one
+    // smooth regime throughout. Uniform policy pins the trial schedule
+    // (16-trial slices, strict alternation), so the gain sequence — and
+    // the single restart — is exact.
+    let staged = StagedCurve::new(TaskCurve { floor: 1.0, span: 2.0, tau: 12.0 })
+        .then(96, TaskCurve { floor: 0.1, span: 0.88, tau: 6.0 });
+    let plain = TaskCurve { floor: 0.8, span: 1.0, tau: 30.0 };
+    let mk_exec = || {
+        CurveExecutor::from_curves(vec![
+            Box::new(staged.clone()) as Box<dyn LatencyCurve>,
+            Box::new(plain.clone()),
+        ])
+    };
+    let mk_sched = |overlap: usize, gain_ema: Option<f64>| {
+        TaskScheduler::for_tasks(
+            tiny_tasks(2, TemplateKind::Cpu),
+            SchedulerOptions {
+                budget: 320,
+                slice: 16,
+                policy: AllocPolicy::Uniform,
+                overlap,
+                gain_ema,
+                ..Default::default()
+            },
+        )
+    };
+    let mut exec = mk_exec();
+    let alloc = mk_sched(1, Some(0.5)).run(&mut exec);
+    assert_eq!(alloc.trials, vec![160, 160]);
+    assert_eq!(
+        alloc.restarts,
+        vec![1, 0],
+        "exactly one restart, on the regime-changing task only"
+    );
+    // the detection is overlap-independent (same commit sequence)
+    let mut exec2 = mk_exec();
+    let alloc2 = mk_sched(2, Some(0.5)).run(&mut exec2);
+    assert_eq!(alloc2.restarts, vec![1, 0]);
+    // raw mode has no restart detection at all
+    let mut exec3 = mk_exec();
+    let alloc3 = mk_sched(1, None).run(&mut exec3);
+    assert_eq!(alloc3.restarts, vec![0, 0]);
+}
+
+// ---------------------------------------------------------------------
+// 5. pollable slice sessions
+// ---------------------------------------------------------------------
+
+#[test]
+fn polled_serial_slices_match_joined_tune_more() {
+    let mk_task = || Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu);
+    let mk_model = || {
+        let params = GbtParams { seed: 5, ..Default::default() };
+        Box::new(GbtModel::new(params))
+    };
+    let o = small_tune_options(16, 5);
+
+    let m1 = SimMeasurer::with_seed(sim_cpu(), 21);
+    let mut joined = Tuner::new(mk_task(), mk_model(), o.clone());
+    joined.tune_more(&m1, 32);
+    joined.tune_more(&m1, 32);
+
+    let m2 = SimMeasurer::with_seed(sim_cpu(), 21);
+    let mut polled = Tuner::new(mk_task(), mk_model(), o.clone());
+    for _ in 0..2 {
+        let mut run = polled.begin_slice(32);
+        while polled.step_slice(&m2, &mut run) == SliceStep::Working {}
+    }
+    assert_same_result(&joined.result(), &polled.result());
+}
+
+#[test]
+fn polled_pipelined_slices_match_joined_tune_more() {
+    let mk_task = || Task::new(ops::matmul(128, 128, 128), TemplateKind::Gpu);
+    let mk_model = || {
+        let params = GbtParams { seed: 3, ..Default::default() };
+        Box::new(GbtModel::new(params))
+    };
+    let mut o = small_tune_options(16, 9);
+    o.pipeline_depth = 2;
+
+    let m1 = SimMeasurer::with_seed(sim_gpu(), 7);
+    let mut joined = PipelinedTuner::new(mk_task(), mk_model(), o.clone());
+    joined.tune_more(&m1, 48);
+    joined.tune_more(&m1, 32);
+
+    let m2 = SimMeasurer::with_seed(sim_gpu(), 7);
+    let mut polled = PipelinedTuner::new(mk_task(), mk_model(), o.clone());
+    for extra in [48usize, 32] {
+        let mut run = polled.begin_slice(extra);
+        while polled.step_slice(&m2, &mut run) == SliceStep::Working {}
+    }
+    assert_same_result(&joined.result(), &polled.result());
+}
+
+/// Regression (gain-vs-sink race): a slice's outcome must not be
+/// released while any of its measurement batches — and therefore any of
+/// its DB-sink appends — is still in flight. With pipelined slices the
+/// session keeps up to `depth` batches submitted; an implementation
+/// that reported completion when the last batch was *proposed* (rather
+/// than absorbed) would leave the DB short exactly here.
+#[test]
+fn slice_outcome_waits_for_sink_flush() {
+    let dev = sim_cpu();
+    let tasks = tiny_tasks(2, TemplateKind::Cpu);
+    let db = Database::new();
+    let m = SimMeasurer::with_seed(dev.clone(), 11);
+    let mut o = small_tune_options(8, 7);
+    o.pipeline_depth = 2;
+    let mut exec = LoopExecutor::new(tasks.clone(), &m, db.clone(), o, true, false);
+    exec.begin_slice(0, 0, 24); // 3 batches, depth-2 pipelined slice
+    let mut steps = 0;
+    let out = loop {
+        assert!(db.len() <= 24, "sink overshot the slice");
+        if let Some(out) = exec.step_slice(0, 0, 24) {
+            break out;
+        }
+        steps += 1;
+        assert!(steps < 100, "slice did not complete");
+    };
+    assert_eq!(out.spent, 24);
+    // the completion barrier covers the sink: at the instant the
+    // outcome is released, every record of the slice is in the DB
+    assert_eq!(db.len(), out.spent, "slice outcome released before sink flush");
+    assert!(out.secs_after.is_finite());
+}
