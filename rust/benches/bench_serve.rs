@@ -1,0 +1,144 @@
+//! Serving-tier acceptance bench: O(1) `best_config` lookups at 1M+
+//! records under a 64-thread query storm with live writers, plus the
+//! compaction payoff (snapshot-then-tail `open` vs full-history
+//! replay). Emits `BENCH_serve.json` for the perf-trajectory record.
+//!
+//! Scale knobs (env): `SERVE_RECORDS` (default 1_000_000),
+//! `SERVE_THREADS` (64), `SERVE_WRITERS` (4), `SERVE_STORM_MS` (2000),
+//! `BENCH_SERVE_JSON` (output path). The hard acceptance asserts (p99
+//! storm ≤ 2× idle, compacted open ≪ full replay) fire only at full
+//! scale — reduced CI smokes record results without gating on a
+//! loaded shared runner's scheduling jitter.
+
+use autotvm::tuner::db::{Database, RetentionPolicy};
+use autotvm::tuner::serve::{fill_synthetic, query_storm, ServeConfig, StormOptions};
+use autotvm::util::bench::Bench;
+use autotvm::util::json::Json;
+use std::time::{Duration, Instant};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let records = env_usize("SERVE_RECORDS", 1_000_000);
+    let threads = env_usize("SERVE_THREADS", 64);
+    let writers = env_usize("SERVE_WRITERS", 4);
+    let storm_ms = env_usize("SERVE_STORM_MS", 2000);
+    let json_path = std::env::var("BENCH_SERVE_JSON")
+        .unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    let full_scale = records >= 1_000_000;
+
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("autotvm-bench-serve-{}.jsonl", std::process::id()));
+    let snap = {
+        let mut os = path.as_os_str().to_os_string();
+        os.push(".snap");
+        std::path::PathBuf::from(os)
+    };
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&snap);
+
+    // Build the WAL fast: fill in memory (64 tasks × 2 targets = 128
+    // shards), then stream it out once.
+    println!("bench_serve: building {records}-record WAL ...");
+    let mem = Database::new();
+    fill_synthetic(&mem, records, 64, 2, 42);
+    mem.save(&path).expect("streaming save");
+    drop(mem);
+
+    // Full-history replay: the pre-compaction startup cost.
+    let t0 = Instant::now();
+    let db = Database::open(&path).expect("open full WAL");
+    let open_full_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(db.len(), records, "full replay lost records");
+    println!("open (full replay, {records} records): {open_full_ms:.1} ms");
+
+    // Single-thread hot path through the Bench harness.
+    let serve = ServeConfig::new(db.clone());
+    let keys = db.shard_keys();
+    let (task, target) = keys[keys.len() / 2].clone();
+    let mut b = Bench::new("serve");
+    b.run(&format!("best_config_{}k", records / 1000), || {
+        serve.best_config(&task, &target)
+    });
+
+    // Idle baseline vs contended storm.
+    let duration = Duration::from_millis(storm_ms as u64);
+    let idle = query_storm(
+        &serve,
+        &StormOptions { threads: 1, writers: 0, duration, seed: 7 },
+    );
+    println!("idle  {idle}");
+    let storm = query_storm(
+        &serve,
+        &StormOptions { threads, writers, duration, seed: 7 },
+    );
+    println!("storm {storm}");
+    let idle_p99 = idle.p99_ns.max(1);
+    let p99_ratio = storm.p99_ns as f64 / idle_p99 as f64;
+    println!(
+        "p99 ratio storm/idle: {p99_ratio:.2} ({} ns vs {} ns)",
+        storm.p99_ns, idle_p99
+    );
+
+    // Compact under the serving retention policy and measure the
+    // snapshot-then-tail reopen.
+    let stats = db.compact(&RetentionPolicy::newest(64)).expect("compact");
+    println!(
+        "compacted to gen {}: kept {}, dropped {}, snapshot {} bytes",
+        stats.gen, stats.kept, stats.dropped, stats.snapshot_bytes
+    );
+    drop(serve);
+    drop(db);
+    let t0 = Instant::now();
+    let back = Database::open(&path).expect("open compacted");
+    let open_compacted_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(back.len(), stats.kept, "snapshot-then-tail load diverged");
+    let tail_lines = std::fs::read_to_string(&path).map(|t| t.lines().count()).unwrap_or(0);
+    assert_eq!(tail_lines, 1, "post-compaction tail still replays history");
+    println!(
+        "open (snapshot-then-tail, {} records): {open_compacted_ms:.1} ms",
+        stats.kept
+    );
+
+    if full_scale {
+        assert!(
+            p99_ratio <= 2.0,
+            "storm p99 {} ns exceeds 2x idle p99 {} ns",
+            storm.p99_ns,
+            idle_p99
+        );
+        assert!(
+            stats.kept * 5 < records,
+            "retention barely evicted: kept {} of {records}",
+            stats.kept
+        );
+        assert!(
+            open_compacted_ms * 5.0 < open_full_ms,
+            "compacted open ({open_compacted_ms:.1} ms) not clearly faster than full \
+             replay ({open_full_ms:.1} ms)"
+        );
+    }
+
+    let report = Json::obj(vec![
+        ("records", Json::from(records)),
+        ("threads", Json::from(threads)),
+        ("writers", Json::from(writers)),
+        ("storm_ms", Json::from(storm_ms)),
+        ("full_scale", Json::from(full_scale)),
+        ("open_full_ms", Json::from(open_full_ms)),
+        ("open_compacted_ms", Json::from(open_compacted_ms)),
+        ("retained", Json::from(stats.kept)),
+        ("dropped", Json::from(stats.dropped)),
+        ("snapshot_bytes", Json::from(stats.snapshot_bytes)),
+        ("idle", idle.to_json()),
+        ("storm", storm.to_json()),
+        ("p99_ratio", Json::from(p99_ratio)),
+    ]);
+    std::fs::write(&json_path, report.dump()).expect("write bench json");
+    println!("wrote {json_path}");
+
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&snap);
+}

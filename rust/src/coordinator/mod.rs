@@ -23,6 +23,12 @@
 //!   uniform|gradient`), then reports tuned vs vendor latency.
 //! * `e2e` — end-to-end network latency vs the vendor baseline.
 //! * `fig` — regenerate a paper figure (4–11).
+//! * `serve` — open a tuned DB as a long-lived config-serving tier:
+//!   optionally compact it under a retention policy
+//!   (`--retain-per-task N`), then run a concurrent lookup storm
+//!   ([`query_storm`](crate::tuner::serve::query_storm)) and report
+//!   QPS + p50/p99 lookup latency (`--bench-json FILE` dumps the
+//!   report as JSON).
 //! * `pjrt-demo` — tune the Pallas matmul tile family where `f(x)` is
 //!   real wall-clock through PJRT.
 
@@ -33,8 +39,9 @@ use crate::measure::service::{MeasureService, ServiceOptions};
 use crate::measure::{Measurer, SimMeasurer};
 use crate::schedule::template::TemplateKind;
 use crate::sim::devices;
-use crate::tuner::db::Database;
+use crate::tuner::db::{Database, RetentionPolicy};
 use crate::tuner::scheduler::{AllocPolicy, SchedulerOptions, TaskScheduler};
+use crate::tuner::serve::{fill_synthetic, query_storm, ServeConfig, StormOptions};
 use crate::tuner::{DbSink, TuneOptions};
 use crate::workloads;
 use anyhow::{bail, Context, Result};
@@ -558,6 +565,53 @@ pub fn run(argv: &[String]) -> Result<()> {
                 other => bail!("no figure {other}; supported: 4..11"),
             }
         }
+        "serve" => {
+            let path = args.get("db").context("serve requires --db FILE")?;
+            let t0 = std::time::Instant::now();
+            let db = Database::open(path)?;
+            let open_ms = t0.elapsed().as_secs_f64() * 1e3;
+            let synthetic = args.get_usize("synthetic", 0);
+            if synthetic > 0 {
+                fill_synthetic(&db, synthetic, (synthetic / 1000).max(16), 2, 0);
+                println!("filled {synthetic} synthetic records");
+            }
+            println!(
+                "opened {path}: {} records (snapshot gen {}, WAL tail {} bytes) in {:.1} ms",
+                db.len(),
+                db.snapshot_gen().unwrap_or(0),
+                db.wal_bytes().unwrap_or(0),
+                open_ms
+            );
+            if args.has("compact") || args.has("retain-per-task") {
+                let policy = match args.get("retain-per-task") {
+                    Some(v) => RetentionPolicy::newest(
+                        v.parse().context("--retain-per-task expects a count")?,
+                    ),
+                    None => RetentionPolicy::keep_all(),
+                };
+                let c = db.compact(&policy)?;
+                println!(
+                    "compacted to gen {}: kept {} records, dropped {}, snapshot {} bytes",
+                    c.gen, c.kept, c.dropped, c.snapshot_bytes
+                );
+            }
+            let opts = StormOptions {
+                threads: args.get_usize("threads", 64),
+                writers: args.get_usize("writers", 0),
+                duration: Duration::from_millis(
+                    args.get_usize("duration-ms", 2000) as u64
+                ),
+                seed: args.get_usize("seed", 0) as u64,
+            };
+            let serve = ServeConfig::new(db);
+            let report = query_storm(&serve, &opts);
+            println!("{report}");
+            if let Some(out) = args.get("bench-json") {
+                std::fs::write(out, report.to_json().dump())
+                    .with_context(|| format!("writing {out}"))?;
+                println!("wrote {out}");
+            }
+        }
         "pjrt-demo" => {
             use crate::measure::pjrt::{matmul_variant_task, PjrtMeasurer};
             let rt = crate::runtime::PjrtRuntime::cpu()?;
@@ -624,6 +678,9 @@ USAGE:
                     [--farm-latency-ms MS] [--flaky P]
   autotvm e2e       --network resnet18 --device sim-gpu [--trials N]
   autotvm fig <4|5|6|7|8|9|10|11> [--full] [--all-workloads] [--neural] [--device D]
+  autotvm serve     --db file.jsonl [--threads N] [--writers W] \\
+                    [--duration-ms MS] [--seed S] [--synthetic M] \\
+                    [--compact] [--retain-per-task N] [--bench-json FILE]
   autotvm pjrt-demo [--trials N]
 
 devices: sim-gpu (TITAN-X-class), sim-cpu (A53-class), sim-mali, sim-tpu
@@ -649,7 +706,15 @@ proposes and refits while task A's batches drain on the farm, with
 allocation decisions still deterministic via versioned gain snapshots
 (overlap 1 is the barrier scheduler, bit-for-bit). --gain-ema A smooths
 gain-per-trial estimates with an EMA plus restart detection — useful
-when overlap makes raw last-slice differences noisy."
+when overlap makes raw last-slice differences noisy.
+
+serve opens a tuned DB as the config-serving tier and storms it with
+--threads concurrent readers (plus --writers live appenders) for
+--duration-ms, reporting QPS and p50/p99 lookup latency. --compact
+folds the WAL into a snapshot first; --retain-per-task N additionally
+evicts all but each task's best top-k and newest N records, bounding
+memory and startup time. --synthetic M fills M generated records before
+the storm (benchmarking without a tuned DB)."
     );
 }
 

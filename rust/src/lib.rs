@@ -33,7 +33,13 @@
 //!   thread-safe [`TuningDb`](tuner::db::TuningDb) with O(1) best-config
 //!   serving, a JSONL write-ahead log, per-task feature caches, live
 //!   record streaming from every loop and automatic cross-workload
-//!   transfer warm starts,
+//!   transfer warm starts — kept production-sized by WAL compaction +
+//!   snapshotting under a [`RetentionPolicy`](tuner::db::RetentionPolicy),
+//! * the serving tier ([`tuner::serve`]): a
+//!   [`ServeConfig`](tuner::serve::ServeConfig) front-end answering
+//!   concurrent best-config / top-k lookups with lock-free latency
+//!   histograms, plus the query-storm harness behind `bench_serve` and
+//!   the coordinator's `serve` subcommand,
 //! * a mini graph compiler for end-to-end workloads ([`graph`],
 //!   [`workloads`], [`baselines`]),
 //! * the graph-level task scheduler ([`tuner::scheduler`]): one global

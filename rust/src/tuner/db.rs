@@ -22,6 +22,14 @@
 //!   loses at most the line being written; `open` tolerates (and
 //!   drops) a torn trailing line, while any other malformed record is
 //!   a hard parse error ([`Record::from_json`] is strict).
+//! * **Compaction + snapshotting** — [`TuningDb::compact`] folds the
+//!   grown WAL into a snapshot file (`<wal>.snap`) holding only the
+//!   records a [`RetentionPolicy`] retains (per-shard best top-k plus
+//!   the newest-N tail), then rename-swaps a fresh, marker-led WAL
+//!   tail into place. `open` loads snapshot-then-tail, so startup cost
+//!   is bounded by the retention policy instead of the full append
+//!   history, and every crash window recovers to a consistent state
+//!   (the protocol is documented on [`TuningDb::compact`]).
 //! * **Per-task feature cache** — [`TuningDb::to_training`] memoizes
 //!   lowered+extracted feature rows per `(shard, representation)`, so
 //!   building `D'` for a transfer model re-featurizes only records it
@@ -40,12 +48,13 @@ use crate::schedule::space::ConfigEntity;
 use crate::schedule::template::Task;
 use crate::tuner::TrialRecord;
 use crate::util::json::Json;
+use anyhow::Context as _;
 use std::collections::hash_map::DefaultHasher;
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::fs::{File, OpenOptions};
 use std::hash::{Hash, Hasher};
-use std::io::Write;
-use std::path::Path;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -156,6 +165,51 @@ impl Record {
 /// a foreign record; such rows are skipped when building `D'`).
 type FeatureCache = HashMap<Representation, HashMap<usize, Option<Vec<f64>>>>;
 
+/// What [`TuningDb::compact`] keeps per `(task_key, target)` shard;
+/// everything else is evicted from the index and the snapshot.
+#[derive(Clone, Copy, Debug)]
+pub struct RetentionPolicy {
+    /// Best valid records to keep (capped at [`TOP_K`] — the index
+    /// never tracks more than that many ranked records).
+    pub top_k: usize,
+    /// Newest records to keep regardless of quality (the tail a refit
+    /// still learns from). `usize::MAX` keeps everything.
+    pub newest: usize,
+}
+
+impl Default for RetentionPolicy {
+    fn default() -> Self {
+        RetentionPolicy::keep_all()
+    }
+}
+
+impl RetentionPolicy {
+    /// Keep every record: compaction only folds the WAL into a
+    /// snapshot, evicting nothing.
+    pub fn keep_all() -> Self {
+        RetentionPolicy { top_k: TOP_K, newest: usize::MAX }
+    }
+
+    /// Keep the best [`TOP_K`] plus the newest `n` records per shard
+    /// (the `--retain-per-task n` serving knob).
+    pub fn newest(n: usize) -> Self {
+        RetentionPolicy { top_k: TOP_K, newest: n }
+    }
+}
+
+/// Outcome of one [`TuningDb::compact`] call.
+#[derive(Clone, Copy, Debug)]
+pub struct CompactStats {
+    /// Snapshot generation this compaction produced (monotonic, ≥ 1).
+    pub gen: u64,
+    /// Records retained (the DB's new `len`).
+    pub kept: usize,
+    /// Records evicted by the retention policy.
+    pub dropped: usize,
+    /// Size of the written snapshot file in bytes.
+    pub snapshot_bytes: u64,
+}
+
 /// All records of one `(task_key, target)` pair plus its incremental
 /// serving indexes and feature cache.
 #[derive(Default)]
@@ -167,9 +221,58 @@ struct TaskShard {
     /// most [`TOP_K`] entries.
     top_k: Vec<(usize, f64)>,
     feat_cache: FeatureCache,
+    /// Bumped whenever records are renumbered (compaction eviction), so
+    /// phase-split readers like `to_training` can detect that indices
+    /// captured under an earlier lock are stale.
+    epoch: u64,
 }
 
 impl TaskShard {
+    /// Apply a retention policy: keep the union of the best
+    /// `policy.top_k` valid records and the newest `policy.newest`
+    /// records, renumbering the survivors in their original order (and
+    /// remapping the feature cache with them). Returns how many records
+    /// were dropped.
+    fn retain(&mut self, policy: &RetentionPolicy) -> usize {
+        let n = self.records.len();
+        let mut keep: BTreeSet<usize> =
+            self.top_k.iter().take(policy.top_k).map(|&(i, _)| i).collect();
+        keep.extend(n.saturating_sub(policy.newest)..n);
+        if keep.len() == n {
+            return 0;
+        }
+        let dropped = n - keep.len();
+        let old_records = std::mem::take(&mut self.records);
+        let old_cache = std::mem::take(&mut self.feat_cache);
+        self.best = None;
+        self.top_k.clear();
+        // old index → new index, in ascending (insertion) order
+        let mut new_idx: HashMap<usize, usize> = HashMap::with_capacity(keep.len());
+        for (new, &old) in keep.iter().enumerate() {
+            new_idx.insert(old, new);
+        }
+        let mut it = old_records.into_iter().enumerate();
+        for &old in &keep {
+            // advance to record `old` (enumerate preserves positions)
+            let rec = loop {
+                let (i, r) = it.next().expect("keep index within records");
+                if i == old {
+                    break r;
+                }
+            };
+            self.insert(rec);
+        }
+        for (repr, rows) in old_cache {
+            let remapped: HashMap<usize, Option<Vec<f64>>> = rows
+                .into_iter()
+                .filter_map(|(old, row)| new_idx.get(&old).map(|&new| (new, row)))
+                .collect();
+            self.feat_cache.insert(repr, remapped);
+        }
+        self.epoch += 1;
+        dropped
+    }
+
     fn insert(&mut self, rec: Record) {
         let idx = self.records.len();
         let valid = rec.is_valid();
@@ -198,11 +301,20 @@ impl TaskShard {
 
 type ShardKey = (String, String); // (task_key, target)
 
+/// The live WAL tail of a file-backed DB.
+struct Wal {
+    file: File,
+    /// WAL path; the snapshot lives beside it at `<path>.snap`.
+    path: PathBuf,
+    /// Snapshot generation this tail belongs to (0 = never compacted).
+    gen: u64,
+}
+
 struct DbInner {
     shards: Vec<Mutex<HashMap<ShardKey, TaskShard>>>,
     /// Append-only JSONL write-ahead log (file-backed DBs only). Held
     /// across the index update so file order matches insertion order.
-    wal: Mutex<Option<File>>,
+    wal: Mutex<Option<Wal>>,
     /// Fast-path flag mirroring `wal.is_some()`: in-memory DBs skip the
     /// global WAL lock entirely, so their writers contend only on the
     /// touched shard bucket (the concurrency the sharding exists for).
@@ -225,6 +337,74 @@ fn torn_tail(text: &str) -> Option<&str> {
         Ok(_) => None,
         Err(_) => Some(tail),
     }
+}
+
+/// `<wal>.snap` — the snapshot file beside a WAL.
+fn snapshot_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".snap");
+    PathBuf::from(os)
+}
+
+/// `<file>.tmp` — the staging name rename-swapped over `file`.
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// First line of `text`, without the newline.
+fn first_line(text: &str) -> &str {
+    match text.find('\n') {
+        Some(i) => &text[..i],
+        None => text,
+    }
+}
+
+/// A meta line (snapshot header or WAL generation marker) — stored
+/// alongside records in the log files but never a record itself.
+fn is_meta(j: &Json) -> bool {
+    j.get("autotvm_snapshot").is_some() || j.get("autotvm_wal_gen").is_some()
+}
+
+/// The generation a WAL tail declares in its leading marker line, if it
+/// has one. Fresh post-compaction tails do; pre-compaction logs (and
+/// empty files) do not.
+fn wal_gen_of(text: &str) -> Option<u64> {
+    Json::parse(first_line(text)).ok()?.get("autotvm_wal_gen")?.as_u64()
+}
+
+fn wal_marker_line(gen: u64) -> String {
+    let mut s = Json::obj(vec![("autotvm_wal_gen", Json::from(gen))]).dump();
+    s.push('\n');
+    s
+}
+
+/// Parse a snapshot file into its generation and record section.
+fn parse_snapshot(text: &str) -> anyhow::Result<(u64, &str)> {
+    let j = Json::parse(first_line(text)).context("snapshot header")?;
+    anyhow::ensure!(j.get("autotvm_snapshot").is_some(), "snapshot file missing header");
+    let gen = j
+        .get("gen")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow::anyhow!("snapshot header missing gen"))?;
+    let rest = match text.find('\n') {
+        Some(i) => &text[i + 1..],
+        None => "",
+    };
+    Ok((gen, rest))
+}
+
+/// Rename-swap a fresh, marker-only WAL tail over `path` — the last
+/// step of the compaction protocol, also run by `open` to complete a
+/// swap that a crash interrupted.
+fn swap_in_fresh_wal(path: &Path, gen: u64) -> anyhow::Result<()> {
+    let tmp = tmp_path(path);
+    let mut f = File::create(&tmp)?;
+    f.write_all(wal_marker_line(gen).as_bytes())?;
+    f.sync_all()?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
 }
 
 fn shard_idx(task_key: &str, target: &str) -> usize {
@@ -272,53 +452,131 @@ impl TuningDb {
 
     /// Open (or create) a WAL-backed DB at `path`: existing records are
     /// loaded and indexed, and every subsequent [`append`](Self::append)
-    /// is written through to the file immediately. A torn trailing line
-    /// (crash mid-append, i.e. an unparseable fragment after the last
-    /// newline) is dropped AND truncated from the file — so the next
-    /// append starts on a clean line instead of concatenating onto the
-    /// fragment. Any other malformed record is a hard error.
+    /// is written through to the file immediately.
+    ///
+    /// Loading is **snapshot-then-tail**: if a compaction snapshot
+    /// (`<path>.snap`) exists, its retained records load first and only
+    /// the fresh WAL tail is replayed on top — startup cost is bounded
+    /// by the retention policy, not the full append history. Without a
+    /// snapshot the whole WAL is replayed.
+    ///
+    /// Crash recovery, by window:
+    /// * a torn trailing WAL line (crash mid-append, i.e. an
+    ///   unparseable fragment after the last newline) is dropped AND
+    ///   truncated from the file, so the next append starts on a clean
+    ///   line instead of concatenating onto the fragment;
+    /// * leftover `.tmp` staging files (crash mid-compaction before the
+    ///   snapshot rename committed) are deleted — the pre-compaction
+    ///   state is still fully intact;
+    /// * a committed snapshot whose WAL swap was interrupted (the WAL
+    ///   still holds the pre-compaction history, every line of which
+    ///   was folded into the snapshot before the rename) — the snapshot
+    ///   wins and `open` completes the swap, yielding exactly the
+    ///   retained records.
+    ///
+    /// Any other malformed record is a hard error.
     pub fn open(path: impl AsRef<Path>) -> anyhow::Result<TuningDb> {
         let path = path.as_ref();
         let db = TuningDb::new();
-        if path.exists() {
-            let text = std::fs::read_to_string(path)?;
-            let valid = match torn_tail(&text) {
-                Some(tail) => {
-                    eprintln!(
-                        "tuning-db: truncating torn trailing WAL line ({} bytes)",
-                        tail.len()
-                    );
-                    // In-place truncation to the last newline: the valid
-                    // prefix is never rewritten, so a crash during
-                    // recovery cannot lose durably-appended records.
-                    let keep = text.len() - tail.len();
-                    OpenOptions::new().write(true).open(path)?.set_len(keep as u64)?;
-                    &text[..keep]
-                }
-                None => {
-                    if !text.is_empty() && !text.ends_with('\n') {
-                        // Valid but unterminated last line: append the
-                        // missing newline so the next record doesn't
-                        // merge with it (append-only, crash-safe).
-                        OpenOptions::new().append(true).open(path)?.write_all(b"\n")?;
+        let snap = snapshot_path(path);
+        // Staging leftovers are dead weight: a compaction commits at
+        // the snapshot rename, never at a tmp write.
+        let _ = std::fs::remove_file(tmp_path(&snap));
+        let _ = std::fs::remove_file(tmp_path(path));
+        let mut gen = 0u64;
+        if snap.exists() {
+            let text = std::fs::read_to_string(&snap)?;
+            let (snap_gen, records) = parse_snapshot(&text)?;
+            gen = snap_gen;
+            // The snapshot was rename-committed, so it is never torn:
+            // load it strictly.
+            db.load_lines(records)
+                .map_err(|e| e.context(format!("snapshot {}", snap.display())))?;
+            let tail_current = if path.exists() {
+                let wtext = std::fs::read_to_string(path)?;
+                match wal_gen_of(&wtext) {
+                    Some(wg) if wg == gen => {
+                        db.load_wal_text(path, &wtext)?;
+                        true
                     }
-                    text.as_str()
+                    Some(wg) if wg > gen => anyhow::bail!(
+                        "WAL tail generation {wg} is newer than snapshot generation {gen} \
+                         at {} — inconsistent snapshot/WAL pair",
+                        path.display()
+                    ),
+                    // A stale marker (wg < gen) or no marker at all is
+                    // the pre-compaction log an interrupted rename-swap
+                    // left behind; its records are already in the
+                    // snapshot, so the snapshot wins.
+                    _ => false,
                 }
+            } else {
+                false
             };
-            db.load_lines(valid)?;
+            if !tail_current {
+                // Complete the interrupted swap so appends land on a
+                // clean, marker-led tail.
+                swap_in_fresh_wal(path, gen)?;
+            }
+        } else if path.exists() {
+            let text = std::fs::read_to_string(path)?;
+            anyhow::ensure!(
+                wal_gen_of(&text).is_none(),
+                "WAL {} declares a snapshot generation but {} is missing",
+                path.display(),
+                snap.display()
+            );
+            db.load_wal_text(path, &text)?;
         }
         let file = OpenOptions::new().create(true).append(true).open(path)?;
-        *db.inner.wal.lock().unwrap() = Some(file);
+        *db.inner.wal.lock().unwrap() =
+            Some(Wal { file, path: path.to_path_buf(), gen });
         db.inner.wal_enabled.store(true, Ordering::Release);
         Ok(db)
     }
 
     /// Load a JSONL log into an in-memory DB (strict: every line must
-    /// parse). Use [`open`](Self::open) for the live service path.
+    /// parse; meta lines from compacted logs are skipped). Works on WAL
+    /// and snapshot files alike. Use [`open`](Self::open) for the live
+    /// service path.
     pub fn load(path: impl AsRef<Path>) -> anyhow::Result<TuningDb> {
         let db = TuningDb::new();
-        db.load_lines(&std::fs::read_to_string(path)?)?;
+        let text = std::fs::read_to_string(path)?;
+        let body = match parse_snapshot(&text) {
+            Ok((_, records)) => records,
+            Err(_) => &text,
+        };
+        db.load_lines(body)?;
         Ok(db)
+    }
+
+    /// Load WAL `text` into the index with torn-tail handling: an
+    /// unparseable fragment after the last newline (crash mid-append)
+    /// is dropped and truncated from the file; a valid but unterminated
+    /// last line gets its newline appended so the next record starts
+    /// clean. Any complete malformed line is a hard error.
+    fn load_wal_text(&self, path: &Path, text: &str) -> anyhow::Result<()> {
+        let valid = match torn_tail(text) {
+            Some(tail) => {
+                eprintln!(
+                    "tuning-db: truncating torn trailing WAL line ({} bytes)",
+                    tail.len()
+                );
+                // In-place truncation to the last newline: the valid
+                // prefix is never rewritten, so a crash during recovery
+                // cannot lose durably-appended records.
+                let keep = text.len() - tail.len();
+                OpenOptions::new().write(true).open(path)?.set_len(keep as u64)?;
+                &text[..keep]
+            }
+            None => {
+                if !text.is_empty() && !text.ends_with('\n') {
+                    OpenOptions::new().append(true).open(path)?.write_all(b"\n")?;
+                }
+                text
+            }
+        };
+        self.load_lines(valid)
     }
 
     fn load_lines(&self, text: &str) -> anyhow::Result<()> {
@@ -326,8 +584,16 @@ impl TuningDb {
             if line.trim().is_empty() {
                 continue;
             }
-            match Json::parse(line).and_then(|j| Record::from_json(&j)) {
-                Ok(r) => self.insert(r),
+            let parsed = Json::parse(line).and_then(|j| {
+                if is_meta(&j) {
+                    Ok(None) // snapshot header / WAL marker, not a record
+                } else {
+                    Record::from_json(&j).map(Some)
+                }
+            });
+            match parsed {
+                Ok(Some(r)) => self.insert(r),
+                Ok(None) => {}
                 Err(e) => return Err(e.context(format!("tuning-db record on line {}", i + 1))),
             }
         }
@@ -364,12 +630,12 @@ impl TuningDb {
         let mut wal = self.inner.wal.lock().unwrap();
         let mut wal_err: Option<std::io::Error> = None;
         let mut disable = false;
-        if let Some(f) = wal.as_mut() {
+        if let Some(w) = wal.as_mut() {
             let mut line = rec.to_json().dump();
             line.push('\n');
-            let prev_len = f.metadata().ok().map(|m| m.len());
-            if let Err(e) = f.write_all(line.as_bytes()) {
-                let repaired = prev_len.map_or(false, |p| f.set_len(p).is_ok());
+            let prev_len = w.file.metadata().ok().map(|m| m.len());
+            if let Err(e) = w.file.write_all(line.as_bytes()) {
+                let repaired = prev_len.map_or(false, |p| w.file.set_len(p).is_ok());
                 disable = !repaired;
                 wal_err = Some(e);
             }
@@ -392,23 +658,34 @@ impl TuningDb {
 
     /// Append the trials of one tuning run (bulk path; the live path is
     /// [`crate::tuner::DbSink`] streaming through [`append`](Self::append)).
+    ///
+    /// `append`'s serving-continues-while-persistence-degrades contract
+    /// holds for the whole batch: every record is indexed in memory
+    /// even when WAL writes fail mid-batch, and the first WAL error is
+    /// returned at the end instead of aborting the loop.
     pub fn add_run(
         &self,
         task: &Task,
         target: &str,
         records: &[TrialRecord],
     ) -> anyhow::Result<()> {
+        let mut first_err: Option<anyhow::Error> = None;
         for r in records {
-            self.append(Record {
+            if let Err(e) = self.append(Record {
                 task_key: task.key(),
                 target: target.to_string(),
                 choices: r.entity.choices.clone(),
                 gflops: r.gflops,
                 seconds: r.seconds.unwrap_or(0.0),
                 error: r.error.clone(),
-            })?;
+            }) {
+                first_err.get_or_insert(e);
+            }
         }
-        Ok(())
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
     /// Total number of records across all shards.
@@ -421,30 +698,136 @@ impl TuningDb {
         self.len() == 0
     }
 
-    /// Deterministic snapshot of every record: shards in sorted
-    /// `(task_key, target)` order, records in insertion order.
-    pub fn records(&self) -> Vec<Record> {
-        let mut groups: Vec<(ShardKey, Vec<Record>)> = Vec::new();
+    /// Sorted list of every `(task_key, target)` shard key — the query
+    /// population for serving storms and the iteration order of
+    /// [`write_jsonl`](Self::write_jsonl).
+    pub fn shard_keys(&self) -> Vec<(String, String)> {
+        let mut keys: Vec<ShardKey> = Vec::new();
         for bucket in &self.inner.shards {
-            let bucket = bucket.lock().unwrap();
-            for (k, s) in bucket.iter() {
-                groups.push((k.clone(), s.records.clone()));
-            }
+            keys.extend(bucket.lock().unwrap().keys().cloned());
         }
-        groups.sort_by(|a, b| a.0.cmp(&b.0));
-        groups.into_iter().flat_map(|(_, r)| r).collect()
+        keys.sort();
+        keys
     }
 
-    /// Export the whole DB as JSONL (for in-memory DBs; a file-backed
-    /// DB's WAL is already on disk).
-    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
-        let mut out = String::new();
-        for r in self.records() {
-            out.push_str(&r.to_json().dump());
-            out.push('\n');
+    /// Deterministic copy of every record: shards in sorted
+    /// `(task_key, target)` order, records in insertion order. Clones
+    /// the whole DB into one `Vec` — tests and small exports only; the
+    /// bounded-memory path is [`write_jsonl`](Self::write_jsonl).
+    pub fn records(&self) -> Vec<Record> {
+        let mut out = Vec::new();
+        for (task, target) in self.shard_keys() {
+            out.extend(self.for_task(&task, &target));
         }
-        std::fs::write(path, out)?;
+        out
+    }
+
+    /// Stream every record as JSONL into `out`, shard by shard in
+    /// sorted key order (insertion order within a shard). Buffers one
+    /// shard at a time, never the whole DB — at millions of records
+    /// this is the difference between a snapshot write and a memory
+    /// spike. Shared by [`save`](Self::save) and
+    /// [`compact`](Self::compact).
+    pub fn write_jsonl(&self, out: &mut dyn Write) -> anyhow::Result<()> {
+        for key in self.shard_keys() {
+            let buf = {
+                let bucket = self.inner.shards[shard_idx(&key.0, &key.1)].lock().unwrap();
+                let Some(shard) = bucket.get(&key) else { continue };
+                let mut buf = String::new();
+                for r in &shard.records {
+                    buf.push_str(&r.to_json().dump());
+                    buf.push('\n');
+                }
+                buf
+            };
+            out.write_all(buf.as_bytes())?;
+        }
         Ok(())
+    }
+
+    /// Export the whole DB as JSONL, streamed shard-by-shard (for
+    /// in-memory DBs; a file-backed DB's WAL is already on disk).
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        self.write_jsonl(&mut w)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Size of the live WAL tail in bytes (`None` for in-memory DBs) —
+    /// the signal a serving deployment watches to schedule compaction.
+    pub fn wal_bytes(&self) -> Option<u64> {
+        let wal = self.inner.wal.lock().unwrap();
+        wal.as_ref().and_then(|w| w.file.metadata().ok()).map(|m| m.len())
+    }
+
+    /// Snapshot generation of the live WAL tail (`None` for in-memory
+    /// DBs; 0 = never compacted).
+    pub fn snapshot_gen(&self) -> Option<u64> {
+        self.inner.wal.lock().unwrap().as_ref().map(|w| w.gen)
+    }
+
+    /// Fold the WAL into a snapshot and swap in a fresh tail — the
+    /// production answer to an append-only log that otherwise grows
+    /// without bound.
+    ///
+    /// Protocol (each step leaves a state [`open`](Self::open) recovers
+    /// from; see its crash-window list):
+    /// 1. **Evict** — the retention policy runs in memory: every
+    ///    `(task, target)` shard keeps its best `policy.top_k` valid
+    ///    records plus its newest `policy.newest` records, dropping the
+    ///    rest from the index. The WAL lock is held for the whole
+    ///    compaction, so writers are parked and the snapshot observes a
+    ///    frozen DB; readers take only shard locks and are never
+    ///    blocked for longer than one shard's serialization.
+    /// 2. **Snapshot** — the retained records stream shard-by-shard
+    ///    into `<wal>.snap.tmp` (header line first), which is fsynced
+    ///    and renamed to `<wal>.snap`. The rename is the commit point.
+    /// 3. **Swap** — a fresh tail holding only the generation marker
+    ///    line is rename-swapped over the WAL; subsequent appends land
+    ///    on the new tail and `open` loads snapshot-then-tail.
+    ///
+    /// Fails (without touching any state) on in-memory DBs and on DBs
+    /// whose WAL was disabled after an unrecoverable write error.
+    pub fn compact(&self, policy: &RetentionPolicy) -> anyhow::Result<CompactStats> {
+        let mut wal = self.inner.wal.lock().unwrap();
+        let Some(w) = wal.as_mut() else {
+            anyhow::bail!("compact requires a file-backed DB with a live WAL");
+        };
+        let gen = w.gen + 1;
+        // 1. Evict. Shard locks nest inside the WAL lock, same order as
+        // `append`.
+        let mut dropped = 0usize;
+        for bucket in &self.inner.shards {
+            let mut bucket = bucket.lock().unwrap();
+            for shard in bucket.values_mut() {
+                dropped += shard.retain(policy);
+            }
+        }
+        self.inner.len.fetch_sub(dropped, Ordering::SeqCst);
+        // 2. Snapshot: stream to the staging file, fsync, rename.
+        let snap = snapshot_path(&w.path);
+        let staging = tmp_path(&snap);
+        {
+            let mut out = BufWriter::new(File::create(&staging)?);
+            let header = Json::obj(vec![
+                ("autotvm_snapshot", Json::from(1u64)),
+                ("gen", Json::from(gen)),
+                ("records", Json::from(self.len())),
+            ]);
+            out.write_all(header.dump().as_bytes())?;
+            out.write_all(b"\n")?;
+            self.write_jsonl(&mut out)?;
+            out.flush()?;
+            out.get_ref().sync_all()?;
+        }
+        std::fs::rename(&staging, &snap)?;
+        let snapshot_bytes = std::fs::metadata(&snap).map(|m| m.len()).unwrap_or(0);
+        // 3. Swap in the fresh tail and move the append handle onto it.
+        swap_in_fresh_wal(&w.path, gen)?;
+        w.file = OpenOptions::new().append(true).open(&w.path)?;
+        w.gen = gen;
+        Ok(CompactStats { gen, kept: self.len(), dropped, snapshot_bytes })
     }
 
     /// Records belonging to one task+target, in insertion order.
@@ -549,17 +932,38 @@ impl TuningDb {
             let bucket_idx = shard_idx(&key.0, target);
             // Phase 1 (locked, cheap): pick the valid records and find
             // which of them the feature cache is missing.
-            let (sel, missing_idx, missing_ents) = {
+            let (sel, epoch0, missing_idx, missing_ents) = {
                 let mut bucket = self.inner.shards[bucket_idx].lock().unwrap();
                 let Some(shard) = bucket.get_mut(&key) else { continue };
-                let TaskShard { records, feat_cache, .. } = shard;
-                let sel: Vec<usize> = records
+                let epoch0 = shard.epoch;
+                let TaskShard { records, feat_cache, top_k, .. } = shard;
+                let valid: Vec<usize> = records
                     .iter()
                     .enumerate()
                     .filter(|(_, r)| r.is_valid())
                     .map(|(i, _)| i)
-                    .take(limit_per_task)
                     .collect();
+                // Past the cap, D' keeps the shard's best half plus the
+                // newest rest (emitted in insertion order): a record
+                // appended after the task crossed `limit_per_task`
+                // still reaches the training set, so refits keep
+                // learning, while the top of the ranking stays
+                // represented. (Taking the *first* N would freeze D'
+                // at the task's cold start forever.)
+                let sel: Vec<usize> = if valid.len() <= limit_per_task {
+                    valid
+                } else {
+                    let k_best = limit_per_task / 2;
+                    let mut keep: BTreeSet<usize> =
+                        top_k.iter().take(k_best).map(|&(i, _)| i).collect();
+                    for &i in valid.iter().rev() {
+                        if keep.len() >= limit_per_task {
+                            break;
+                        }
+                        keep.insert(i);
+                    }
+                    keep.into_iter().collect()
+                };
                 if sel.is_empty() {
                     continue;
                 }
@@ -579,11 +983,13 @@ impl TuningDb {
                         cache.insert(i, None);
                     }
                 }
-                (sel, missing_idx, missing_ents)
+                (sel, epoch0, missing_idx, missing_ents)
             };
             // Phase 2 (no locks): the expensive lower+analyze+extract —
-            // writers streaming into this shard are not stalled. Records
-            // are append-only, so the selected indices stay valid.
+            // writers streaming into this shard are not stalled.
+            // Appends never renumber existing records, so the selected
+            // indices stay valid unless a compaction evicts (detected
+            // below via the shard epoch).
             let computed = if missing_ents.is_empty() {
                 Vec::new()
             } else {
@@ -593,6 +999,13 @@ impl TuningDb {
             // emit the training rows in selection order.
             let mut bucket = self.inner.shards[bucket_idx].lock().unwrap();
             let Some(shard) = bucket.get_mut(&key) else { continue };
+            if shard.epoch != epoch0 {
+                // A compaction renumbered this shard between the
+                // phases: the captured indices (and the rows computed
+                // for them) are stale. Skip the task this call; the
+                // next call re-selects and re-featurizes.
+                continue;
+            }
             let TaskShard { records, feat_cache, .. } = shard;
             let cache = feat_cache.entry(repr).or_default();
             for (i, f) in missing_idx.into_iter().zip(computed) {
@@ -947,5 +1360,156 @@ mod tests {
         assert_eq!(db.len(), 6, "reopen must append, not clobber");
         assert_eq!(db.for_task(&task.key(), "sim-cpu").len(), 6);
         let _ = std::fs::remove_file(&path);
+    }
+
+    /// Satellite regression: a mid-batch WAL failure used to abort
+    /// `add_run` (`?` inside the loop), silently dropping the remaining
+    /// records from the in-memory index. Every record must be indexed
+    /// (serving continues while persistence degrades) and the first WAL
+    /// error returned at the end.
+    #[test]
+    fn add_run_indexes_past_wal_failure() {
+        let dir = std::env::temp_dir().join("autotvm-test-db");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("walfail-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu);
+        let recs: Vec<TrialRecord> = (0..6)
+            .map(|i| TrialRecord {
+                entity: task.space.entity(i),
+                gflops: (i + 1) as f64,
+                seconds: Some(0.1),
+                error: None,
+            })
+            .collect();
+        let db = Database::open(&path).unwrap();
+        // Poison the WAL: swap the append handle for a read-only one,
+        // so every write fails (and so does the truncate repair, which
+        // then disables the WAL).
+        db.inner.wal.lock().unwrap().as_mut().unwrap().file = File::open(&path).unwrap();
+        let res = db.add_run(&task, "sim-cpu", &recs);
+        assert!(res.is_err(), "WAL failure must surface to the caller");
+        assert_eq!(db.len(), 6, "records dropped from the index on WAL failure");
+        assert_eq!(db.for_task(&task.key(), "sim-cpu").len(), 6);
+        // serving still works from memory
+        assert_eq!(db.best_config(&task.key(), "sim-cpu").unwrap().1, 6.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    /// Satellite regression: `limit_per_task` used to take the *first*
+    /// N valid records, so a task past the cap never got new trials
+    /// into D'. Selection is now best-half ∪ newest-rest: a record
+    /// appended past the cap reaches the training set.
+    #[test]
+    fn to_training_limit_prefers_best_and_newest() {
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu);
+        let db = Database::new();
+        let mut rng = Rng::seed_from_u64(9);
+        // 20 valid records with known gflops 1..=20 (ascending)
+        for g in 1..=20u32 {
+            db.append(Record {
+                task_key: task.key(),
+                target: "sim-cpu".into(),
+                choices: task.space.sample(&mut rng).choices,
+                gflops: g as f64,
+                seconds: 0.1,
+                error: None,
+            })
+            .unwrap();
+        }
+        let limit = 8;
+        let (x, y, _) =
+            db.to_training(&[&task], "sim-cpu", Representation::ContextRelation, limit);
+        assert_eq!(x.rows, limit);
+        // best half = {20,19,18,17}, newest rest = {16,15,14,13}: the
+        // cold-start records 1..=8 (which the old first-N selection
+        // would have returned) are all gone.
+        let selected: Vec<f64> = y.iter().map(|v| v * 20.0).collect();
+        assert!(
+            selected.iter().all(|&g| g >= 12.5),
+            "stale cold-start records selected: {selected:?}"
+        );
+        // a mediocre record appended past the cap must reach the next
+        // training set (only the newest-rest rule can admit it)
+        db.append(Record {
+            task_key: task.key(),
+            target: "sim-cpu".into(),
+            choices: task.space.sample(&mut rng).choices,
+            gflops: 5.0,
+            seconds: 0.1,
+            error: None,
+        })
+        .unwrap();
+        let (x2, y2, _) =
+            db.to_training(&[&task], "sim-cpu", Representation::ContextRelation, limit);
+        assert_eq!(x2.rows, limit);
+        assert!(
+            y2.iter().any(|&v| (v * 20.0 - 5.0).abs() < 1e-9),
+            "past-cap record missing from D'"
+        );
+    }
+
+    /// Tentpole smoke: compaction folds the WAL into a snapshot + fresh
+    /// marker-led tail; reopening loads snapshot-then-tail with
+    /// identical serving answers, and a retention policy bounds the
+    /// index while keeping best/top-k intact.
+    #[test]
+    fn compact_snapshot_roundtrip_and_retention() {
+        let dir = std::env::temp_dir().join("autotvm-test-db");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("compact-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(snapshot_path(&path));
+        let mk = |i: u32, g: f64| Record {
+            task_key: "t@Cpu".into(),
+            target: "d".into(),
+            choices: vec![i],
+            gflops: g,
+            seconds: 0.1,
+            error: None,
+        };
+        let db = Database::open(&path).unwrap();
+        // descending gflops: top-k = the oldest records, newest = the
+        // youngest — the retention union is exercised from both ends
+        for i in 0..40u32 {
+            db.append(mk(i, (100 - i) as f64)).unwrap();
+        }
+        let stats = db.compact(&RetentionPolicy::keep_all()).unwrap();
+        assert_eq!((stats.gen, stats.kept, stats.dropped), (1, 40, 0));
+        assert!(snapshot_path(&path).exists());
+        // the fresh tail holds only the generation marker
+        let tail = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(tail.lines().count(), 1, "tail still replays history");
+        assert_eq!(wal_gen_of(&tail), Some(1));
+        db.append(mk(40, 60.5)).unwrap();
+        db.append(mk(41, 60.6)).unwrap();
+
+        let before_best = db.best_config("t@Cpu", "d").unwrap();
+        let before_top: Vec<f64> = db.top_k("t@Cpu", "d", TOP_K).iter().map(|r| r.1).collect();
+        let back = Database::open(&path).unwrap();
+        assert_eq!(back.len(), 42, "snapshot-then-tail load lost records");
+        assert_eq!(back.best_config("t@Cpu", "d").unwrap().1, before_best.1);
+        let back_top: Vec<f64> =
+            back.top_k("t@Cpu", "d", TOP_K).iter().map(|r| r.1).collect();
+        assert_eq!(back_top, before_top, "top-k diverged across compaction reload");
+
+        // retention: top-16 (oldest) ∪ newest-4 = 20 records
+        let stats = back.compact(&RetentionPolicy::newest(4)).unwrap();
+        assert_eq!((stats.gen, stats.kept, stats.dropped), (2, 20, 22));
+        assert_eq!(back.len(), 20);
+        assert_eq!(back.best_config("t@Cpu", "d").unwrap().1, before_best.1);
+        let kept_top: Vec<f64> =
+            back.top_k("t@Cpu", "d", TOP_K).iter().map(|r| r.1).collect();
+        assert_eq!(kept_top, before_top, "eviction disturbed the retained top-k");
+        // and the evicted state round-trips through open again
+        let again = Database::open(&path).unwrap();
+        assert_eq!(again.len(), 20);
+        assert_eq!(again.snapshot_gen(), Some(2));
+        assert_eq!(
+            again.top_k("t@Cpu", "d", TOP_K).iter().map(|r| r.1).collect::<Vec<_>>(),
+            before_top
+        );
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(snapshot_path(&path));
     }
 }

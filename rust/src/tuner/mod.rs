@@ -53,6 +53,7 @@
 pub mod db;
 pub mod pipeline;
 pub mod scheduler;
+pub mod serve;
 
 use crate::explore::{diverse_select, random_batch, ParallelSa, Scorer};
 use crate::features::Representation;

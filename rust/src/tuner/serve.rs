@@ -1,0 +1,427 @@
+//! ServeConfig — the long-lived config-serving front-end.
+//!
+//! Once tuned, "best config for (task, target)" is the hot path a
+//! compiler stack hits on every build (the role the config log plays
+//! in TVM): many concurrent readers, occasional tuning loops streaming
+//! writes through [`crate::tuner::DbSink`]. This module wraps the
+//! [`TuningDb`] index in a service handle that:
+//!
+//! * answers [`ServeConfig::best_config`] / [`ServeConfig::top_k`]
+//!   straight from the O(1) incremental index, recording each lookup's
+//!   latency into a lock-free log-linear histogram ([`ServeStats`],
+//!   ~12.5% bucket granularity) so p50/p99 under load are observable
+//!   without perturbing the serve path;
+//! * drives reproducible load tests: [`query_storm`] hammers the DB
+//!   from N reader threads (with optional live writer threads) and
+//!   reports QPS + latency percentiles as a [`StormReport`] — the
+//!   `coordinator serve` subcommand and `bench_serve` are thin shells
+//!   around it.
+//!
+//! Serving and tuning stay split: tuning owns the write path (sinks,
+//! WAL, compaction), serving owns the read path; both share one
+//! `TuningDb` handle and contend only on the touched shard bucket.
+
+use crate::schedule::space::ConfigEntity;
+use crate::tuner::db::{Record, TuningDb};
+use crate::util::json::Json;
+use crate::util::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Exact buckets for latencies below 8 ns.
+const HIST_EXACT: usize = 8;
+/// Octaves 2^3 .. 2^39 ns (~9 minutes), 8 sub-buckets each.
+const HIST_OCTAVES: usize = 37;
+/// Total histogram buckets.
+const HIST_BUCKETS: usize = HIST_EXACT + HIST_OCTAVES * 8;
+
+/// Lock-free lookup statistics: counters plus a log-linear latency
+/// histogram (8 sub-buckets per power of two, ~12.5% resolution) —
+/// precise enough to compare p99s at a 2× threshold without a lock or
+/// an allocation on the serve path.
+pub struct ServeStats {
+    lookups: AtomicU64,
+    hits: AtomicU64,
+    hist: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Default for ServeStats {
+    fn default() -> Self {
+        ServeStats {
+            lookups: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            hist: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Histogram bucket for a latency of `ns` nanoseconds.
+fn bucket_of(ns: u64) -> usize {
+    if ns < HIST_EXACT as u64 {
+        return ns as usize;
+    }
+    let o = (63 - ns.leading_zeros() as usize).min(HIST_OCTAVES + 2);
+    let sub = ((ns >> (o - 3)) & 7) as usize;
+    HIST_EXACT + (o - 3) * 8 + sub
+}
+
+/// Inclusive upper bound (in ns) of histogram bucket `idx`.
+fn upper_ns(idx: usize) -> u64 {
+    if idx < HIST_EXACT {
+        return idx as u64;
+    }
+    let o = 3 + (idx - HIST_EXACT) / 8;
+    let sub = ((idx - HIST_EXACT) % 8) as u64;
+    (1u64 << o) + (sub + 1) * (1u64 << (o - 3)) - 1
+}
+
+impl ServeStats {
+    /// Record one lookup: its latency and whether it found a config.
+    fn record(&self, elapsed: Duration, hit: bool) {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        if hit {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        let ns = elapsed.as_nanos().min(u64::MAX as u128) as u64;
+        self.hist[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total lookups recorded.
+    pub fn lookups(&self) -> u64 {
+        self.lookups.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that found at least one config.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Latency percentile (`p` in 0..=1) as the upper bound of the
+    /// histogram bucket containing it, in nanoseconds. 0 when no
+    /// lookups have been recorded.
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        let counts: Vec<u64> =
+            self.hist.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return upper_ns(i);
+            }
+        }
+        upper_ns(HIST_BUCKETS - 1)
+    }
+}
+
+/// The config-serving service handle: a cheap clone wrapping a shared
+/// [`TuningDb`] plus shared lookup stats. Many threads hold clones and
+/// query concurrently while tuning loops stream writes into the same
+/// DB.
+#[derive(Clone)]
+pub struct ServeConfig {
+    db: TuningDb,
+    stats: Arc<ServeStats>,
+}
+
+impl ServeConfig {
+    /// Serve lookups from `db` (shared, not copied).
+    pub fn new(db: TuningDb) -> Self {
+        ServeConfig { db, stats: Arc::new(ServeStats::default()) }
+    }
+
+    /// The underlying DB handle.
+    pub fn db(&self) -> &TuningDb {
+        &self.db
+    }
+
+    /// The shared lookup statistics.
+    pub fn stats(&self) -> &ServeStats {
+        &self.stats
+    }
+
+    /// Same DB, fresh zeroed stats — so separate measurement phases
+    /// (idle vs. storm) don't pollute each other.
+    pub fn fresh_stats(&self) -> ServeConfig {
+        ServeConfig { db: self.db.clone(), stats: Arc::new(ServeStats::default()) }
+    }
+
+    /// Timed [`TuningDb::best_config`]: the serve hot path.
+    pub fn best_config(&self, task_key: &str, target: &str) -> Option<(ConfigEntity, f64)> {
+        let t0 = Instant::now();
+        let res = self.db.best_config(task_key, target);
+        self.stats.record(t0.elapsed(), res.is_some());
+        res
+    }
+
+    /// Timed [`TuningDb::top_k`].
+    pub fn top_k(&self, task_key: &str, target: &str, k: usize) -> Vec<(ConfigEntity, f64)> {
+        let t0 = Instant::now();
+        let res = self.db.top_k(task_key, target, k);
+        self.stats.record(t0.elapsed(), !res.is_empty());
+        res
+    }
+}
+
+/// Parameters for one [`query_storm`] run.
+#[derive(Clone, Copy, Debug)]
+pub struct StormOptions {
+    /// Concurrent reader threads.
+    pub threads: usize,
+    /// Concurrent writer threads streaming appends during the storm.
+    pub writers: usize,
+    /// How long the storm runs.
+    pub duration: Duration,
+    /// Seed for the per-thread query key sequences.
+    pub seed: u64,
+}
+
+impl Default for StormOptions {
+    fn default() -> Self {
+        StormOptions { threads: 64, writers: 0, duration: Duration::from_secs(2), seed: 0 }
+    }
+}
+
+/// Outcome of one [`query_storm`] run.
+#[derive(Clone, Debug)]
+pub struct StormReport {
+    /// Total lookups completed.
+    pub lookups: u64,
+    /// Lookups that found a config.
+    pub hits: u64,
+    /// Records appended by the writer threads during the storm.
+    pub writes: u64,
+    /// Lookups per second across all reader threads.
+    pub qps: f64,
+    /// Median lookup latency (histogram bucket upper bound).
+    pub p50_ns: u64,
+    /// 99th-percentile lookup latency (histogram bucket upper bound).
+    pub p99_ns: u64,
+    /// Actual wall-clock duration of the storm.
+    pub duration_secs: f64,
+    /// Reader threads used.
+    pub threads: usize,
+    /// Writer threads used.
+    pub writers: usize,
+}
+
+impl StormReport {
+    /// JSON form for `BENCH_serve.json` / `--bench-json` dumps.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("lookups", Json::from(self.lookups)),
+            ("hits", Json::from(self.hits)),
+            ("writes", Json::from(self.writes)),
+            ("qps", Json::from(self.qps)),
+            ("p50_ns", Json::from(self.p50_ns)),
+            ("p99_ns", Json::from(self.p99_ns)),
+            ("duration_secs", Json::from(self.duration_secs)),
+            ("threads", Json::from(self.threads)),
+            ("writers", Json::from(self.writers)),
+        ])
+    }
+}
+
+impl std::fmt::Display for StormReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "storm: {} lookups ({:.0}/s) p50 {} ns p99 {} ns, {} hits, {} live writes, \
+             {} readers + {} writers over {:.2}s",
+            self.lookups,
+            self.qps,
+            self.p50_ns,
+            self.p99_ns,
+            self.hits,
+            self.writes,
+            self.threads,
+            self.writers,
+            self.duration_secs
+        )
+    }
+}
+
+/// Hammer the serve path: `opts.threads` reader threads issue
+/// `best_config` (and occasional `top_k`) lookups against random shard
+/// keys for `opts.duration`, while `opts.writers` threads stream
+/// appends into the same shards. Returns the aggregate QPS/latency
+/// report (measured on fresh stats, so prior lookups don't pollute it).
+pub fn query_storm(serve: &ServeConfig, opts: &StormOptions) -> StormReport {
+    let serve = serve.fresh_stats();
+    let mut keys = serve.db().shard_keys();
+    if keys.is_empty() {
+        // Nothing tuned yet: storm a single (missing) key — lookups
+        // still exercise the full path and report misses.
+        keys.push(("storm@Serve".to_string(), "storm".to_string()));
+    }
+    let keys = Arc::new(keys);
+    let writes = AtomicU64::new(0);
+    let deadline = Instant::now() + opts.duration;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..opts.threads.max(1) {
+            let serve = serve.clone();
+            let keys = Arc::clone(&keys);
+            let mut rng = Rng::seed_from_u64(opts.seed ^ (t as u64).wrapping_mul(0x9e37));
+            s.spawn(move || {
+                let mut n = 0u64;
+                while Instant::now() < deadline {
+                    let (task, target) = &keys[rng.gen_range(0..keys.len())];
+                    if n % 8 == 7 {
+                        serve.top_k(task, target, 8);
+                    } else {
+                        serve.best_config(task, target);
+                    }
+                    n += 1;
+                }
+            });
+        }
+        for wtr in 0..opts.writers {
+            let db = serve.db().clone();
+            let keys = Arc::clone(&keys);
+            let writes = &writes;
+            let mut rng =
+                Rng::seed_from_u64(opts.seed ^ 0xA11CE ^ (wtr as u64).wrapping_mul(0x9e37));
+            s.spawn(move || {
+                let mut i = wtr;
+                while Instant::now() < deadline {
+                    let (task, target) = &keys[i % keys.len()];
+                    let rec = Record {
+                        task_key: task.clone(),
+                        target: target.clone(),
+                        choices: vec![
+                            rng.next_u64() as u32,
+                            rng.next_u64() as u32,
+                            rng.next_u64() as u32,
+                            rng.next_u64() as u32,
+                        ],
+                        gflops: rng.gen_f64() * 100.0,
+                        seconds: 1e-4,
+                        error: None,
+                    };
+                    if db.append(rec).is_ok() {
+                        writes.fetch_add(1, Ordering::Relaxed);
+                    }
+                    i += 1;
+                }
+            });
+        }
+    });
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    let stats = serve.stats();
+    StormReport {
+        lookups: stats.lookups(),
+        hits: stats.hits(),
+        writes: writes.load(Ordering::Relaxed),
+        qps: stats.lookups() as f64 / elapsed,
+        p50_ns: stats.percentile_ns(0.50),
+        p99_ns: stats.percentile_ns(0.99),
+        duration_secs: elapsed,
+        threads: opts.threads.max(1),
+        writers: opts.writers,
+    }
+}
+
+/// Fill `db` with `n` synthetic records spread over `tasks` task keys ×
+/// `targets` targets — the record population for serve benchmarks
+/// (serving never lowers a config, so opaque choices are fine).
+pub fn fill_synthetic(db: &TuningDb, n: usize, tasks: usize, targets: usize, seed: u64) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let tasks = tasks.max(1);
+    let targets = targets.max(1);
+    for i in 0..n {
+        let rec = Record {
+            task_key: format!("task{}@Serve", i % tasks),
+            target: format!("dev{}", (i / tasks) % targets),
+            choices: vec![
+                rng.next_u64() as u32,
+                rng.next_u64() as u32,
+                rng.next_u64() as u32,
+                rng.next_u64() as u32,
+            ],
+            gflops: rng.gen_f64() * 100.0,
+            seconds: 1e-4,
+            error: None,
+        };
+        // In-memory fills never fail; WAL-backed fills surface errors
+        // via the caller checking `db.len()`.
+        let _ = db.append(rec);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_are_monotone_and_consistent() {
+        // every ns value lands in a bucket whose bounds contain it
+        for ns in [0u64, 1, 7, 8, 9, 100, 1000, 12345, 1 << 20, u64::MAX >> 1] {
+            let b = bucket_of(ns);
+            assert!(b < HIST_BUCKETS, "bucket out of range for {ns}");
+            assert!(upper_ns(b) >= ns.min(upper_ns(HIST_BUCKETS - 1)), "upper bound below {ns}");
+            if b > 0 {
+                assert!(upper_ns(b - 1) < upper_ns(b), "bounds not monotone at {b}");
+            }
+        }
+        // monotone: larger latency never maps to a smaller bucket
+        let mut prev = 0usize;
+        for shift in 0..40 {
+            let b = bucket_of(1u64 << shift);
+            assert!(b >= prev);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn percentiles_track_recorded_latencies() {
+        let stats = ServeStats::default();
+        for ns in 1..=1000u64 {
+            stats.record(Duration::from_nanos(ns), true);
+        }
+        assert_eq!(stats.lookups(), 1000);
+        assert_eq!(stats.hits(), 1000);
+        let p50 = stats.percentile_ns(0.50);
+        let p99 = stats.percentile_ns(0.99);
+        // log-linear buckets: within one 12.5% bucket of the true value
+        assert!((440..=580).contains(&p50), "p50 {p50} far from 500");
+        assert!((900..=1200).contains(&p99), "p99 {p99} far from 990");
+        assert!(p50 <= p99);
+    }
+
+    #[test]
+    fn storm_on_empty_db_reports_misses() {
+        let serve = ServeConfig::new(TuningDb::new());
+        let report = query_storm(
+            &serve,
+            &StormOptions {
+                threads: 2,
+                writers: 0,
+                duration: Duration::from_millis(30),
+                seed: 1,
+            },
+        );
+        assert!(report.lookups > 0);
+        assert_eq!(report.hits, 0, "empty DB cannot hit");
+        assert_eq!(report.writes, 0);
+    }
+
+    #[test]
+    fn fill_synthetic_populates_expected_shards() {
+        let db = TuningDb::new();
+        fill_synthetic(&db, 1000, 10, 2, 7);
+        assert_eq!(db.len(), 1000);
+        let keys = db.shard_keys();
+        assert!(keys.len() <= 20);
+        assert!(keys.iter().all(|(t, _)| t.ends_with("@Serve")));
+        let serve = ServeConfig::new(db);
+        let (task, target) = &keys[0];
+        assert!(serve.best_config(task, target).is_some());
+        assert_eq!(serve.stats().hits(), 1);
+    }
+}

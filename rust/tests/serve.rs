@@ -1,0 +1,306 @@
+//! Serving-tier tests: compaction crash-safety (snapshot / torn tail /
+//! interrupted rename-swap recovery), retention-policy eviction bounds,
+//! the streaming save path, and the concurrent ServeConfig storm.
+
+use autotvm::tuner::db::{Database, Record, RetentionPolicy, TOP_K};
+use autotvm::tuner::serve::{fill_synthetic, query_storm, ServeConfig, StormOptions};
+use autotvm::util::Rng;
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Mini property harness (proptest is not vendored): run `f` over `n`
+/// seeded cases, reporting the failing seed.
+fn forall(n: u64, mut f: impl FnMut(&mut Rng, u64)) {
+    for seed in 0..n {
+        let mut rng = Rng::seed_from_u64(seed * 7919 + 13);
+        f(&mut rng, seed);
+    }
+}
+
+fn temp_path(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("autotvm-serve-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{name}-{}.jsonl", std::process::id()))
+}
+
+fn snap_of(path: &PathBuf) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".snap");
+    PathBuf::from(os)
+}
+
+fn cleanup(path: &PathBuf) {
+    let _ = std::fs::remove_file(path);
+    let _ = std::fs::remove_file(snap_of(path));
+}
+
+/// A random record: mostly valid, some errored, some NaN (invalid but
+/// parseable) — the population the WAL sees in production.
+fn rand_record(rng: &mut Rng, tasks: usize) -> Record {
+    Record {
+        task_key: format!("t{}@Serve", rng.gen_range(0..tasks)),
+        target: format!("dev{}", rng.gen_range(0..2)),
+        choices: vec![rng.next_u64() as u32, rng.next_u64() as u32],
+        gflops: if rng.gen_bool(0.05) { f64::NAN } else { rng.gen_f64() * 100.0 },
+        seconds: 1e-4,
+        error: if rng.gen_bool(0.1) { Some("boom".into()) } else { None },
+    }
+}
+
+/// Every shard's serving answers, comparable across reloads (record
+/// indices are renumbered by compaction, so compare configs + gflops).
+type Answers = Vec<((String, String), Option<(Vec<u32>, f64)>, Vec<(Vec<u32>, f64)>)>;
+
+fn serving_answers(db: &Database) -> Answers {
+    db.shard_keys()
+        .into_iter()
+        .map(|(t, d)| {
+            let best = db.best_config(&t, &d).map(|(e, g)| (e.choices, g));
+            let top: Vec<(Vec<u32>, f64)> = db
+                .top_k(&t, &d, TOP_K)
+                .into_iter()
+                .map(|(e, g)| (e.choices, g))
+                .collect();
+            ((t, d), best, top)
+        })
+        .collect()
+}
+
+/// Compact-then-open equals never-compacted serving answers: a keep-all
+/// compaction must be invisible to `best_config`/`top_k`, both live and
+/// across a snapshot-then-tail reload (including post-compaction
+/// appends landing on the fresh tail).
+#[test]
+fn prop_compact_then_open_preserves_serving() {
+    forall(6, |rng, seed| {
+        let path = temp_path(&format!("roundtrip-{seed}"));
+        cleanup(&path);
+        let db = Database::open(&path).unwrap();
+        for _ in 0..rng.gen_range(30..120) {
+            db.append(rand_record(rng, 5)).unwrap();
+        }
+        let n = db.len();
+        let before = serving_answers(&db);
+        let stats = db.compact(&RetentionPolicy::keep_all()).unwrap();
+        assert_eq!(stats.dropped, 0, "seed {seed}: keep-all evicted records");
+        assert_eq!(db.len(), n);
+        assert_eq!(serving_answers(&db), before, "seed {seed}: live answers changed");
+        // post-compaction appends land on the fresh tail
+        let extra = rand_record(rng, 5);
+        db.append(extra.clone()).unwrap();
+        drop(db);
+        let back = Database::open(&path).unwrap();
+        assert_eq!(back.len(), n + 1, "seed {seed}: snapshot+tail reload lost records");
+        let tail_rec = back.for_task(&extra.task_key, &extra.target);
+        assert_eq!(tail_rec.last().unwrap().choices, extra.choices, "seed {seed}");
+        // reloading again (snapshot + tail, no crash) is stable
+        drop(back);
+        let again = Database::open(&path).unwrap();
+        assert_eq!(again.len(), n + 1);
+        assert_eq!(again.snapshot_gen(), Some(1));
+        cleanup(&path);
+    });
+}
+
+/// A retention policy bounds every shard at top-k + newest-N while
+/// leaving best/top-k answers untouched, live and across reload.
+#[test]
+fn prop_compact_retention_bounds_memory() {
+    forall(6, |rng, seed| {
+        let path = temp_path(&format!("retain-{seed}"));
+        cleanup(&path);
+        let db = Database::open(&path).unwrap();
+        for _ in 0..rng.gen_range(100..300) {
+            db.append(rand_record(rng, 3)).unwrap();
+        }
+        let before = serving_answers(&db);
+        let newest = rng.gen_range(2..10);
+        let stats = db.compact(&RetentionPolicy::newest(newest)).unwrap();
+        let shards = db.shard_keys().len();
+        assert!(
+            db.len() <= shards * (TOP_K + newest),
+            "seed {seed}: {} records retained above the {}-shard bound",
+            db.len(),
+            shards
+        );
+        assert_eq!(stats.kept, db.len());
+        assert_eq!(
+            serving_answers(&db),
+            before,
+            "seed {seed}: eviction disturbed best/top-k"
+        );
+        drop(db);
+        let back = Database::open(&path).unwrap();
+        assert_eq!(back.len(), stats.kept, "seed {seed}: reload diverged");
+        assert_eq!(serving_answers(&back), before, "seed {seed}: reload answers diverged");
+        cleanup(&path);
+    });
+}
+
+/// Crash window 3 of the rename-swap protocol: the snapshot committed
+/// but the WAL swap never happened, so the WAL still holds the full
+/// pre-compaction history (with no generation marker). `open` must
+/// prefer the snapshot, yield exactly the retained records, and
+/// complete the swap.
+#[test]
+fn interrupted_rename_swap_recovers() {
+    forall(4, |rng, seed| {
+        let path = temp_path(&format!("swapcrash-{seed}"));
+        cleanup(&path);
+        let db = Database::open(&path).unwrap();
+        for _ in 0..rng.gen_range(60..150) {
+            db.append(rand_record(rng, 4)).unwrap();
+        }
+        let old_wal = std::fs::read(&path).unwrap();
+        let stats = db.compact(&RetentionPolicy::newest(5)).unwrap();
+        let retained = serving_answers(&db);
+        let kept = db.len();
+        drop(db);
+        // simulate the crash: snapshot is committed, WAL swap is undone
+        std::fs::write(&path, &old_wal).unwrap();
+        let back = Database::open(&path).unwrap();
+        assert_eq!(back.len(), kept, "seed {seed}: recovery duplicated/lost records");
+        assert_eq!(
+            serving_answers(&back),
+            retained,
+            "seed {seed}: recovered answers diverged from the retained set"
+        );
+        // open completed the swap: the tail is now the marker line only
+        let tail = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(tail.lines().count(), 1, "seed {seed}: swap not completed");
+        assert!(tail.contains("autotvm_wal_gen"), "seed {seed}: marker missing");
+        assert_eq!(back.snapshot_gen(), Some(stats.gen));
+        drop(back);
+        // and the recovered state is stable across another reload
+        let again = Database::open(&path).unwrap();
+        assert_eq!(again.len(), kept);
+        assert_eq!(serving_answers(&again), retained, "seed {seed}: second reload");
+        cleanup(&path);
+    });
+}
+
+/// Crash window 1 after a compaction: a torn trailing line on the fresh
+/// tail is dropped and truncated, keeping every durable record.
+#[test]
+fn torn_tail_after_compaction_recovers() {
+    let path = temp_path("torntail");
+    cleanup(&path);
+    let mut rng = Rng::seed_from_u64(99);
+    let db = Database::open(&path).unwrap();
+    for _ in 0..50 {
+        db.append(rand_record(&mut rng, 3)).unwrap();
+    }
+    db.compact(&RetentionPolicy::keep_all()).unwrap();
+    db.append(rand_record(&mut rng, 3)).unwrap();
+    db.append(rand_record(&mut rng, 3)).unwrap();
+    drop(db);
+    // crash mid-append: an unparseable fragment with no newline
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"task\":\"t0@S").unwrap();
+    }
+    let back = Database::open(&path).unwrap();
+    assert_eq!(back.len(), 52, "torn tail cost durable records");
+    // the fragment was truncated from the file, so appends start clean
+    back.append(rand_record(&mut rng, 3)).unwrap();
+    drop(back);
+    assert_eq!(Database::open(&path).unwrap().len(), 53);
+    cleanup(&path);
+}
+
+/// Crash window 2: leftover `.tmp` staging files (snapshot or WAL) from
+/// a compaction that died before its rename are ignored and removed.
+#[test]
+fn staging_leftovers_are_ignored() {
+    let path = temp_path("staging");
+    cleanup(&path);
+    let mut rng = Rng::seed_from_u64(7);
+    {
+        let db = Database::open(&path).unwrap();
+        for _ in 0..20 {
+            db.append(rand_record(&mut rng, 2)).unwrap();
+        }
+    }
+    let snap_tmp = {
+        let mut os = snap_of(&path).into_os_string();
+        os.push(".tmp");
+        PathBuf::from(os)
+    };
+    let wal_tmp = {
+        let mut os = path.clone().into_os_string();
+        os.push(".tmp");
+        PathBuf::from(os)
+    };
+    std::fs::write(&snap_tmp, "half-written garbage").unwrap();
+    std::fs::write(&wal_tmp, "more garbage").unwrap();
+    let db = Database::open(&path).unwrap();
+    assert_eq!(db.len(), 20, "staging garbage corrupted the load");
+    assert!(!snap_tmp.exists(), "stale snapshot staging file not removed");
+    assert!(!wal_tmp.exists(), "stale WAL staging file not removed");
+    cleanup(&path);
+}
+
+/// A WAL that declares a snapshot generation without its snapshot file
+/// is an inconsistent pair, not silently-loadable data.
+#[test]
+fn marker_without_snapshot_is_rejected() {
+    let path = temp_path("orphan-marker");
+    cleanup(&path);
+    std::fs::write(&path, "{\"autotvm_wal_gen\":3}\n").unwrap();
+    assert!(Database::open(&path).is_err(), "orphaned WAL marker must not open");
+    cleanup(&path);
+}
+
+/// Satellite regression (streaming save): `save` streams shard-by-shard
+/// through the Write sink and its output round-trips exactly.
+#[test]
+fn streaming_save_matches_records() {
+    let path = temp_path("stream-save");
+    cleanup(&path);
+    let db = Database::new();
+    let mut rng = Rng::seed_from_u64(21);
+    for _ in 0..200 {
+        // no NaN here: Record equality below is exact
+        let mut r = rand_record(&mut rng, 6);
+        if r.gflops.is_nan() {
+            r.gflops = 1.0;
+        }
+        db.append(r).unwrap();
+    }
+    db.save(&path).unwrap();
+    let back = Database::load(&path).unwrap();
+    assert_eq!(back.len(), db.len());
+    assert_eq!(back.records(), db.records(), "streamed save lost ordering or data");
+    // write_jsonl agrees with save byte-for-byte
+    let mut buf: Vec<u8> = Vec::new();
+    db.write_jsonl(&mut buf).unwrap();
+    assert_eq!(buf, std::fs::read(&path).unwrap());
+    cleanup(&path);
+}
+
+/// The ServeConfig front-end under concurrent readers and a live
+/// writer: lookups succeed, latency percentiles are recorded, and the
+/// DB keeps growing under the storm.
+#[test]
+fn serve_config_concurrent_storm() {
+    let db = Database::new();
+    fill_synthetic(&db, 500, 8, 2, 3);
+    assert_eq!(db.len(), 500);
+    let serve = ServeConfig::new(db.clone());
+    let report = query_storm(
+        &serve,
+        &StormOptions {
+            threads: 8,
+            writers: 1,
+            duration: Duration::from_millis(200),
+            seed: 11,
+        },
+    );
+    assert!(report.lookups > 0, "storm issued no lookups");
+    assert!(report.hits > 0, "filled DB served no hits");
+    assert!(report.writes > 0, "live writer appended nothing");
+    assert!(report.qps > 0.0);
+    assert!(report.p50_ns <= report.p99_ns);
+    assert!(db.len() > 500, "writer appends not visible in the shared DB");
+}
