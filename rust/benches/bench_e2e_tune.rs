@@ -20,9 +20,21 @@
 //!
 //! `E2E_TUNE_SMOKE=1` shrinks the budget for CI check-only runs.
 //!
+//! A final **model-bound** configuration isolates the hot-path speed
+//! pass: instant simulated measurement + a heavy SA budget under the
+//! Config representation, so wall-clock is dominated by model queries
+//! and featurization. The same fixed-seed run is timed with the fast
+//! paths off (scalar tree walk, full per-neighbor re-extraction) and on
+//! (compiled [`PredictPlan`], incremental featurization); results are
+//! asserted bit-identical and the trials/sec ratio is recorded in
+//! `BENCH_e2e_tune.json`. Acceptance (full scale only): ≥ 2×.
+//!
 //! [`MeasureService`]: autotvm::measure::service::MeasureService
+//! [`PredictPlan`]: autotvm::gbt::PredictPlan
+mod harness;
 
 use autotvm::explore::SaParams;
+use autotvm::features::Representation;
 use autotvm::measure::farm::{DeviceFarm, LatencyMeasurer};
 use autotvm::measure::service::MeasureService;
 use autotvm::measure::SimMeasurer;
@@ -33,12 +45,14 @@ use autotvm::tuner::scheduler::{AllocPolicy, SchedulerOptions, TaskScheduler};
 use autotvm::tuner::{tune_gbt, tune_gbt_pipelined, TuneOptions};
 use autotvm::util::bench::Bench;
 use autotvm::workloads;
+use autotvm::util::json::Json;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 fn main() {
     let smoke = std::env::var("E2E_TUNE_SMOKE").is_ok();
     let mut b = Bench::new("e2e_tune");
+    let mut report = harness::Report::new("e2e_tune");
     let opts = TuneOptions {
         n_trials: if smoke { 32 } else { 128 },
         batch: 32,
@@ -142,4 +156,62 @@ fn main() {
          (ratio {:.2})",
         ou / bu.max(1e-9)
     );
+
+    // --- model-bound configuration: the hot-path speed pass ---
+    // Instant measurement + heavy SA budget under the Config
+    // representation: wall-clock is model queries + featurization, the
+    // exact surface the compiled plan and the incremental featurizer
+    // accelerate. Scalar and fast runs share one seed and are timed in
+    // this same process run.
+    let model_bound = TuneOptions {
+        n_trials: if smoke { 48 } else { 192 },
+        batch: 16,
+        repr: Representation::Config,
+        sa: SaParams {
+            n_chains: if smoke { 32 } else { 128 },
+            n_steps: if smoke { 40 } else { 300 },
+            ..Default::default()
+        },
+        seed: 7,
+        ..Default::default()
+    };
+    let timed_run = |fast: bool| {
+        let mut o = model_bound.clone();
+        o.fast_paths = fast;
+        let m = SimMeasurer::with_seed(sim_gpu(), 2);
+        let t0 = Instant::now();
+        let res = tune_gbt(task(), &m, o);
+        (res, t0.elapsed())
+    };
+    let (res_scalar, dt_scalar) = timed_run(false);
+    let (res_fast, dt_fast) = timed_run(true);
+    // Fast paths are bit-exact: same trials, same curve, same best.
+    assert_eq!(res_scalar.curve, res_fast.curve, "fast paths changed the tuning curve");
+    assert_eq!(
+        res_scalar.records.iter().map(|r| &r.entity).collect::<Vec<_>>(),
+        res_fast.records.iter().map(|r| &r.entity).collect::<Vec<_>>(),
+        "fast paths changed the trial sequence"
+    );
+    let trials = res_fast.curve.len() as f64;
+    let tps_scalar = trials / dt_scalar.as_secs_f64();
+    let tps_fast = trials / dt_fast.as_secs_f64();
+    let speedup = tps_fast / tps_scalar;
+    println!(
+        "e2e_tune/model_bound_trials_per_sec               scalar {tps_scalar:.1} \
+         fast {tps_fast:.1} ({speedup:.2}x, target >= 2.00x at full scale)"
+    );
+    if !smoke {
+        assert!(
+            speedup >= 2.0,
+            "model-bound fast-path speedup {speedup:.2}x below the 2x acceptance bar"
+        );
+    }
+
+    report.import(&b);
+    report.field("smoke", Json::from(smoke));
+    report.field("model_bound_trials", Json::from(trials));
+    report.field("trials_per_sec_scalar", Json::from(tps_scalar));
+    report.field("trials_per_sec_fast", Json::from(tps_fast));
+    report.field("speedup_trials_per_sec", Json::from(speedup));
+    report.write();
 }

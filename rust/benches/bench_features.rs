@@ -1,15 +1,27 @@
 //! Feature-extraction throughput — the per-candidate hot path of the SA
 //! inner loop (lower → analyze → featurize). Perf target (DESIGN.md
 //! §Perf): the model pipeline must stay far below measurement cost.
+//!
+//! The incremental cases time what the fast paths actually replace: a
+//! full lower+analyze+extract per SA neighbor vs the Config-repr
+//! skip-lower path and the per-knob slice update
+//! ([`Featurizer::neighbor_features`]). Emits `BENCH_features.json`.
+//!
+//! [`Featurizer::neighbor_features`]: autotvm::tuner::Featurizer::neighbor_features
+mod harness;
+
 use autotvm::ast::analysis::analyze;
 use autotvm::features::{self, Representation};
+use autotvm::schedule::space::ConfigEntity;
 use autotvm::schedule::template::TemplateKind;
+use autotvm::tuner::Featurizer;
 use autotvm::util::bench::Bench;
 use autotvm::util::Rng;
 use autotvm::workloads;
 
 fn main() {
     let mut b = Bench::new("features");
+    let mut report = harness::Report::new("features");
     let task = workloads::conv_task(6, TemplateKind::Gpu);
     let mut rng = Rng::seed_from_u64(1);
     let e = task.space.sample(&mut rng);
@@ -25,4 +37,41 @@ fn main() {
         let a = analyze(&p);
         features::extract(Representation::Full, &task, &e, &a)
     });
+
+    // --- SA-neighbor featurization: the batch shape the tuner issues ---
+    let parents: Vec<ConfigEntity> =
+        (0..128).map(|_| task.space.sample(&mut rng)).collect();
+    let mut knobs = Vec::new();
+    let proposals: Vec<ConfigEntity> = parents
+        .iter()
+        .map(|p| {
+            let (n, j) = task.space.mutate_knob(p, &mut rng);
+            knobs.push(j);
+            n
+        })
+        .collect();
+
+    // Reference: full Config extraction, fresh featurizer each time
+    // (what every SA step paid before this pass).
+    let full_batch = b.run("config_batch_128_full_extract", || {
+        Featurizer::with_fast(Representation::Config, false).features(&task, &proposals)
+    });
+    // Skip-lower Config path, fresh cache (still computes every row).
+    b.run("config_batch_128_skip_lower", || {
+        Featurizer::new(Representation::Config).features(&task, &proposals)
+    });
+    // Incremental: parent rows cached, only the mutated knob slice is
+    // rewritten per neighbor — the steady state of the SA inner loop.
+    let warm = Featurizer::new(Representation::Config);
+    warm.features(&task, &parents);
+    let incremental = b.run("config_batch_128_incremental", || {
+        warm.neighbor_features(&task, &parents, &proposals, &knobs)
+            .expect("parents cached")
+    });
+    let speedup = full_batch.mean_ns / incremental.mean_ns;
+    println!("features/incremental_speedup_128                  {speedup:.2}x");
+
+    report.import(&b);
+    report.field("incremental_speedup_128", speedup.into());
+    report.write();
 }

@@ -1,7 +1,18 @@
 //! GBT cost-model train/predict throughput (paper §2: "model training
 //! and inference must be fast ... otherwise no benefit over profiling").
+//!
+//! The headline comparison is scalar pointer-chasing `predict_batch`
+//! vs the compiled [`PredictPlan`] (binned SoA arena, tree-at-a-time
+//! over row blocks) on the SA-sized batches the tuner actually issues.
+//! Both paths are asserted bit-identical before timing. Emits
+//! `BENCH_gbt.json` with a recorded `plan_speedup_8k` ratio.
+//!
+//! [`PredictPlan`]: autotvm::gbt::PredictPlan
+mod harness;
+
 use autotvm::gbt::{Gbt, GbtParams, Matrix, Objective};
 use autotvm::util::bench::Bench;
+use autotvm::util::json::Json;
 use autotvm::util::Rng;
 
 fn synth(n: usize, cols: usize, seed: u64) -> (Matrix, Vec<f64>) {
@@ -14,15 +25,66 @@ fn synth(n: usize, cols: usize, seed: u64) -> (Matrix, Vec<f64>) {
 
 fn main() {
     let mut b = Bench::new("gbt");
+    let mut report = harness::Report::new("gbt");
     let (x1k, y1k) = synth(1000, 361, 1); // FULL_DIM-sized features
     let (x8k, y8k) = synth(8000, 361, 2);
     let params = GbtParams { objective: Objective::Rank, ..Default::default() };
 
     b.run("train_1k_rows_50_trees", || Gbt::train(&x1k, &y1k, &[], params.clone()));
     let model = Gbt::train(&x8k, &y8k, &[], params.clone());
-    let s = b.run("predict_8k_rows", || model.predict_batch(&x8k));
-    let _ = s;
-    b.throughput("predict_8k_rows", 8000.0, "rows");
+    let plan = model.compile();
+    println!(
+        "gbt: plan has {} trees / {} nodes (narrow bins: {})",
+        plan.n_trees(),
+        plan.n_nodes(),
+        plan.is_narrow()
+    );
+    // The toggle exists because the plan is bit-exact — prove it before
+    // timing anything.
+    for x in [&x8k, &x1k] {
+        let a = model.predict_batch(x);
+        let p = plan.predict_batch(x);
+        assert_eq!(a.len(), p.len());
+        for (l, r) in a.iter().zip(&p) {
+            assert_eq!(l.to_bits(), r.to_bits(), "plan diverged from scalar walk");
+        }
+    }
+
+    b.run("compile_plan", || model.compile());
+    let scalar = b.run("predict_8k_rows_scalar", || model.predict_batch(&x8k));
+    let planned = b.run("predict_8k_rows_plan", || plan.predict_batch(&x8k));
+    b.throughput("predict_8k_rows_plan", 8000.0, "rows");
+    let speedup = scalar.mean_ns / planned.mean_ns;
+    println!("gbt/plan_speedup_8k                               {speedup:.2}x");
+
+    // SA-sized batch (the per-step proposal pool of the tuner loop).
     let (x128, _) = synth(128, 361, 3);
-    b.run("predict_sa_batch_128", || model.predict_batch(&x128));
+    let scalar128 = b.run("predict_sa_batch_128_scalar", || model.predict_batch(&x128));
+    let plan128 = b.run("predict_sa_batch_128_plan", || plan.predict_batch(&x128));
+    println!(
+        "gbt/plan_speedup_sa_128                           {:.2}x",
+        scalar128.mean_ns / plan128.mean_ns
+    );
+
+    // Parallel-cutoff sweep: where row-parallel prediction starts to pay.
+    for cutoff in [usize::MAX, 256] {
+        let p = GbtParams {
+            objective: Objective::Rank,
+            parallel_cutoff: cutoff,
+            ..Default::default()
+        };
+        let m = Gbt::train(&x8k, &y8k, &[], p);
+        let label = if cutoff == usize::MAX {
+            "predict_8k_serial_cutoff_off"
+        } else {
+            "predict_8k_parallel_cutoff_256"
+        };
+        b.run(label, || m.predict_batch(&x8k));
+    }
+
+    report.import(&b);
+    report.field("plan_speedup_8k", Json::from(speedup));
+    report.field("plan_trees", Json::from(plan.n_trees()));
+    report.field("plan_nodes", Json::from(plan.n_nodes()));
+    report.write();
 }

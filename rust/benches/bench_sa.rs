@@ -1,13 +1,56 @@
 //! Simulated-annealing proposal throughput (128-chain step rate).
+//!
+//! Beyond the cheap-scorer machinery baseline, the model-guided cases
+//! time the real SA inner loop the tuner runs: score every neighbor
+//! batch with a trained GBT under the Config representation, scalar
+//! reference (full re-extraction + scalar tree walk) vs fast paths
+//! (incremental per-knob featurization + compiled [`PredictPlan`]).
+//! Both are asserted to pick identical candidates before timing.
+//! Emits `BENCH_sa.json`.
+//!
+//! [`PredictPlan`]: autotvm::gbt::PredictPlan
+mod harness;
+
 use autotvm::explore::{ParallelSa, SaParams, Scorer};
+use autotvm::model::{CostModel, GbtModel};
 use autotvm::schedule::space::ConfigEntity;
-use autotvm::schedule::template::TemplateKind;
+use autotvm::schedule::template::{Task, TemplateKind};
+use autotvm::tuner::Featurizer;
 use autotvm::util::bench::Bench;
 use autotvm::util::Rng;
 use autotvm::workloads;
 
+/// The tuner's scoring shape, rebuilt from public parts (the in-crate
+/// `TunerScorer` is private): features through a [`Featurizer`], scores
+/// through a [`CostModel`], neighbor batches through the incremental
+/// path when the featurizer allows it.
+struct ModelScorer<'a> {
+    task: &'a Task,
+    feat: Featurizer,
+    model: &'a GbtModel,
+}
+
+impl Scorer for ModelScorer<'_> {
+    fn score(&self, entities: &[ConfigEntity]) -> Vec<f64> {
+        self.model.predict(&self.feat.features(self.task, entities))
+    }
+
+    fn score_neighbors(
+        &self,
+        parents: &[ConfigEntity],
+        proposals: &[ConfigEntity],
+        knobs: &[usize],
+    ) -> Vec<f64> {
+        if let Some(x) = self.feat.neighbor_features(self.task, parents, proposals, knobs) {
+            return self.model.predict(&x);
+        }
+        self.score(proposals)
+    }
+}
+
 fn main() {
     let mut b = Bench::new("sa");
+    let mut report = harness::Report::new("sa");
     let task = workloads::conv_task(6, TemplateKind::Gpu);
     // cheap synthetic scorer isolates SA machinery from featurization
     let scorer = |es: &[ConfigEntity]| -> Vec<f64> {
@@ -22,4 +65,51 @@ fn main() {
     b.run("mutate_128", || {
         (0..128).map(|_| task.space.sample(&mut rng)).collect::<Vec<_>>()
     });
+
+    // --- model-guided collect: the tuner's actual inner loop ---
+    // Train one GBT per path on identical data (Config representation);
+    // the fast model carries a compiled plan, the scalar one does not.
+    let train_feat = Featurizer::new(autotvm::features::Representation::Config);
+    let configs: Vec<ConfigEntity> =
+        (0..512).map(|_| task.space.sample(&mut rng)).collect();
+    let x = train_feat.features(&task, &configs);
+    let y: Vec<f64> = configs
+        .iter()
+        .map(|e| e.choices.iter().map(|&c| (c as f64 + 1.0).ln()).sum())
+        .collect();
+    let mut fast_model = GbtModel::with_fast_paths(Default::default(), true);
+    fast_model.fit(&x, &y, &[]);
+    let mut scalar_model = GbtModel::with_fast_paths(Default::default(), false);
+    scalar_model.fit(&x, &y, &[]);
+
+    let sa_params = SaParams { n_chains: 64, n_steps: 60, ..Default::default() };
+
+    // Identical candidates from both paths (fixed RNG stream) — the
+    // fast path must change wall-clock only.
+    let run_collect = |model: &GbtModel, fast: bool, seed: u64| {
+        let scorer = ModelScorer {
+            task: &task,
+            feat: Featurizer::with_fast(autotvm::features::Representation::Config, fast),
+            model,
+        };
+        let mut sa = ParallelSa::new(sa_params.clone());
+        let mut r = Rng::seed_from_u64(seed);
+        sa.collect(&task.space, &scorer, 128, &mut r)
+    };
+    let a = run_collect(&scalar_model, false, 77);
+    let c = run_collect(&fast_model, true, 77);
+    assert_eq!(a.len(), c.len());
+    for ((ea, sa_), (ec, sc)) in a.iter().zip(&c) {
+        assert_eq!(ea, ec, "fast SA path picked different candidates");
+        assert_eq!(sa_.to_bits(), sc.to_bits(), "fast SA path changed scores");
+    }
+
+    let scalar = b.run("sa_collect_model_scalar", || run_collect(&scalar_model, false, 5));
+    let fast = b.run("sa_collect_model_fast", || run_collect(&fast_model, true, 5));
+    let speedup = scalar.mean_ns / fast.mean_ns;
+    println!("sa/fast_collect_speedup                           {speedup:.2}x");
+
+    report.import(&b);
+    report.field("fast_collect_speedup", speedup.into());
+    report.write();
 }

@@ -1,0 +1,85 @@
+//! Shared perf-report plumbing for the bench binaries: every hot-path
+//! bench (`bench_features`, `bench_gbt`, `bench_sa`, `bench_e2e_tune`)
+//! funnels its measured [`Stats`] through a [`Report`] and writes one
+//! `BENCH_<area>.json` artifact — the same record-the-trajectory shape
+//! `bench_serve` established, so CI uploads a uniform set of files the
+//! `scripts/check_bench_json.py` validator can gate on.
+//!
+//! JSON shape:
+//!
+//! ```json
+//! {
+//!   "area": "gbt",
+//!   "cases": {
+//!     "predict_8k_rows": {"mean_ns": ..., "median_ns": ..., "p95_ns": ..., "iters": ...}
+//!   },
+//!   "<extra field>": ...
+//! }
+//! ```
+//!
+//! Output lands in the working directory as `BENCH_<area>.json`;
+//! `BENCH_<AREA>_JSON` overrides the path (mirroring
+//! `BENCH_SERVE_JSON`). Not a bench target itself — each bench binary
+//! pulls this file in with `mod harness;` (autobenches is off in
+//! Cargo.toml so cargo does not try to compile it standalone).
+
+use autotvm::util::bench::{Bench, Stats};
+use autotvm::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Accumulates a bench binary's measured cases plus free-form summary
+/// fields, then serializes the `BENCH_<area>.json` artifact.
+pub struct Report {
+    area: String,
+    cases: BTreeMap<String, Json>,
+    extra: Vec<(String, Json)>,
+}
+
+#[allow(dead_code)] // each bench uses the subset it needs
+impl Report {
+    /// Empty report for one bench area (`gbt`, `sa`, ...).
+    pub fn new(area: &str) -> Self {
+        Report { area: area.to_string(), cases: BTreeMap::new(), extra: Vec::new() }
+    }
+
+    /// Record one measured case.
+    pub fn stats(&mut self, name: &str, s: &Stats) {
+        self.cases.insert(
+            name.to_string(),
+            Json::obj(vec![
+                ("mean_ns", Json::from(s.mean_ns)),
+                ("median_ns", Json::from(s.median_ns)),
+                ("p95_ns", Json::from(s.p95_ns)),
+                ("iters", Json::from(s.iters)),
+            ]),
+        );
+    }
+
+    /// Record every case a [`Bench`] has run so far.
+    pub fn import(&mut self, b: &Bench) {
+        for (name, s) in b.results() {
+            self.stats(name, s);
+        }
+    }
+
+    /// Attach a top-level summary field (speedup ratios, scale knobs).
+    pub fn field(&mut self, key: &str, value: Json) {
+        self.extra.push((key.to_string(), value));
+    }
+
+    /// Write `BENCH_<area>.json` (or the `BENCH_<AREA>_JSON` override)
+    /// and print the path, like `bench_serve` does.
+    pub fn write(self) {
+        let env_key = format!("BENCH_{}_JSON", self.area.to_uppercase());
+        let json_path = std::env::var(&env_key)
+            .unwrap_or_else(|_| format!("BENCH_{}.json", self.area));
+        let mut fields: BTreeMap<String, Json> = BTreeMap::new();
+        fields.insert("area".to_string(), Json::from(self.area.clone()));
+        fields.insert("cases".to_string(), Json::Obj(self.cases));
+        for (k, v) in self.extra {
+            fields.insert(k, v);
+        }
+        std::fs::write(&json_path, Json::Obj(fields).dump()).expect("write bench json");
+        println!("wrote {json_path}");
+    }
+}

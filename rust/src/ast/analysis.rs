@@ -224,12 +224,24 @@ fn has_guard(v: &Value) -> bool {
 
 /// Analyze a program.
 pub fn analyze(program: &Program) -> ProgramAnalysis {
-    let mut w = Walker { program, loops: Vec::new(), chains: Vec::new() };
+    let mut out = ProgramAnalysis { chains: Vec::new() };
+    analyze_into(program, &mut out);
+    out
+}
+
+/// [`analyze`] into an existing [`ProgramAnalysis`], reusing its
+/// `chains` allocation. Hot loops that analyze one mutated program per
+/// SA step (the batch featurizer) keep a per-thread scratch analysis
+/// and call this instead of allocating a fresh one per neighbor.
+pub fn analyze_into(program: &Program, out: &mut ProgramAnalysis) {
+    let mut chains = std::mem::take(&mut out.chains);
+    chains.clear();
+    let mut w = Walker { program, loops: Vec::new(), chains };
     for s in &program.stmts {
         w.visit(s);
     }
     assert!(!w.chains.is_empty(), "program {} has no store", program.name);
-    ProgramAnalysis { chains: w.chains }
+    out.chains = w.chains;
 }
 
 #[cfg(test)]

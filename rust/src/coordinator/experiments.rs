@@ -45,6 +45,10 @@ pub struct ExpOpts {
     pub sink: Option<DbSink>,
     /// Per-round progress printing (see [`TuneOptions::verbose`]).
     pub verbose: bool,
+    /// Bit-exact hot paths (compiled GBT plan, incremental SA
+    /// featurization — see [`TuneOptions::fast_paths`]); `false` is the
+    /// `--no-fast-paths` scalar reference.
+    pub fast_paths: bool,
 }
 
 impl Default for ExpOpts {
@@ -59,6 +63,7 @@ impl Default for ExpOpts {
             pipeline_depth: 2,
             sink: None,
             verbose: false,
+            fast_paths: true,
         }
     }
 }
@@ -84,6 +89,7 @@ impl ExpOpts {
             pipeline_depth: self.pipeline_depth,
             sink: self.sink.clone(),
             verbose: self.verbose,
+            fast_paths: self.fast_paths,
             ..Default::default()
         }
     }
@@ -161,7 +167,7 @@ fn snapshot_model(
                 Objective::Regression
             };
             let params = GbtParams { objective, seed: o.seed, ..Default::default() };
-            Some(Box::new(GbtModel::new(params)))
+            Some(Box::new(GbtModel::with_fast_paths(params, o.fast_paths)))
         }
         Method::EnsembleMean | Method::EnsembleUcb | Method::EnsembleEi => {
             // the paper's Fig. 7 setup: 5 bootstrap models, regression
@@ -177,7 +183,7 @@ fn snapshot_model(
                 Method::EnsembleEi => Acquisition::Ei,
                 _ => Acquisition::Mean,
             };
-            Some(Box::new(EnsembleModel::new(params, 5)))
+            Some(Box::new(EnsembleModel::with_fast_paths(params, 5, o.fast_paths)))
         }
         _ => None,
     }

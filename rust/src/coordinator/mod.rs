@@ -231,7 +231,26 @@ fn exp_opts(args: &Args) -> ExpOpts {
     o.all_workloads = args.has("all-workloads");
     o.seed = args.get_usize("seed", 0) as u64;
     o.pipeline_depth = args.get_usize("depth", o.pipeline_depth);
+    // Fast paths are bit-exact, so on by default; --no-fast-paths is
+    // the scalar reference for perf A/B runs.
+    o.fast_paths = !args.has("no-fast-paths");
     o
+}
+
+/// `--auto-compact-bytes N` arms threshold-triggered WAL folding on a
+/// live DB: the appender whose write pushes the WAL tail past N bytes
+/// folds everything into a fresh snapshot under the keep-all policy
+/// (nothing is evicted, so served configs and fixed-seed tuning results
+/// are unchanged). No-op for in-memory DBs.
+fn arm_auto_compact(args: &Args, db: &Database) -> Result<()> {
+    if let Some(v) = args.get("auto-compact-bytes") {
+        let bytes: u64 = v
+            .parse()
+            .with_context(|| format!("--auto-compact-bytes {v} is not a byte count"))?;
+        db.set_auto_compact_bytes(bytes);
+        println!("auto-compaction armed at {bytes} WAL bytes");
+    }
+    Ok(())
 }
 
 /// CLI entry point (called by `main`).
@@ -264,6 +283,7 @@ pub fn run(argv: &[String]) -> Result<()> {
             // accountant, so a crash loses at most one record.
             let db = args.get("db").map(Database::open).transpose()?;
             if let Some(db) = &db {
+                arm_auto_compact(&args, db)?;
                 opts.sink = Some(DbSink::new(db, &task, dev.name));
             }
             // --replicas N measures through the asynchronous device-farm
@@ -340,6 +360,7 @@ pub fn run(argv: &[String]) -> Result<()> {
             let base_seed = opts.seed;
             let path = args.get("db").unwrap_or("tuning_db.jsonl").to_string();
             let db = Database::open(&path)?;
+            arm_auto_compact(&args, &db)?;
             let pipelined = args.has("pipeline");
             // One shared measurement service (if any farm flag is set)
             // spans every task's loop — the whole C1–C12 run measures on
@@ -463,6 +484,7 @@ pub fn run(argv: &[String]) -> Result<()> {
                 Some(p) => Database::open(p)?,
                 None => Database::new(),
             };
+            arm_auto_compact(&args, &db)?;
             // Every task's slices measure on one shared service when a
             // farm flag is set (the scheduler's loops all feed the same
             // fleet); otherwise the plain single-board simulator.
@@ -570,6 +592,7 @@ pub fn run(argv: &[String]) -> Result<()> {
             let t0 = std::time::Instant::now();
             let db = Database::open(path)?;
             let open_ms = t0.elapsed().as_secs_f64() * 1e3;
+            arm_auto_compact(&args, &db)?;
             let synthetic = args.get_usize("synthetic", 0);
             if synthetic > 0 {
                 fill_synthetic(&db, synthetic, (synthetic / 1000).max(16), 2, 0);
@@ -664,23 +687,27 @@ USAGE:
                     [--trials N] [--db file.jsonl] [--full] \\
                     [--pipeline] [--depth D] [--replicas R] \\
                     [--measure-timeout MS] [--farm-latency-ms MS] [--flaky P] \\
-                    [--warm-start] [--no-warm-start]
+                    [--warm-start] [--no-warm-start] [--no-fast-paths] \\
+                    [--auto-compact-bytes N]
   autotvm tune-all  --device sim-gpu [--trials N] [--db file.jsonl] \\
                     [--pipeline] [--no-warm-start] [--alloc uniform|gradient] \\
-                    [--overlap N] [--gain-ema A] \\
+                    [--overlap N] [--gain-ema A] [--no-fast-paths] \\
+                    [--auto-compact-bytes N] \\
                     [--replicas R] [--measure-timeout MS] \\
                     [--farm-latency-ms MS] [--flaky P]
   autotvm tune-graph <resnet18|mobilenet|dqn|lstm|dcgan> --device sim-gpu \\
                     [--budget N] [--slice S] [--alloc uniform|gradient] \\
-                    [--overlap N] [--gain-ema A] \\
+                    [--overlap N] [--gain-ema A] [--no-fast-paths] \\
                     [--db file.jsonl] [--pipeline] [--no-warm-start] [--verbose] \\
+                    [--auto-compact-bytes N] \\
                     [--replicas R] [--measure-timeout MS] \\
                     [--farm-latency-ms MS] [--flaky P]
   autotvm e2e       --network resnet18 --device sim-gpu [--trials N]
   autotvm fig <4|5|6|7|8|9|10|11> [--full] [--all-workloads] [--neural] [--device D]
   autotvm serve     --db file.jsonl [--threads N] [--writers W] \\
                     [--duration-ms MS] [--seed S] [--synthetic M] \\
-                    [--compact] [--retain-per-task N] [--bench-json FILE]
+                    [--compact] [--retain-per-task N] [--bench-json FILE] \\
+                    [--auto-compact-bytes N]
   autotvm pjrt-demo [--trials N]
 
 devices: sim-gpu (TITAN-X-class), sim-cpu (A53-class), sim-mali, sim-tpu
@@ -688,6 +715,13 @@ methods: random, ga, gbt_rank, gbt_reg, neural, neural_reg
 
 --db opens a WAL-backed tuning DB: trials stream in live, and new tasks
 warm-start a transfer model from other tasks' records by default.
+--auto-compact-bytes N folds the WAL into a fresh snapshot whenever an
+append pushes the tail past N bytes (keep-all: nothing is evicted, and
+fixed-seed results are bit-identical with or without it).
+
+--no-fast-paths disables the bit-exact hot paths (compiled GBT predict
+plan, incremental SA featurization) and runs the scalar reference —
+same results, more wall-clock; the perf A/B toggle of bench_e2e_tune.
 
 --replicas R measures through the asynchronous device-farm service: R
 per-replica workers, sequence-ordered jobs (fixed-seed runs stay

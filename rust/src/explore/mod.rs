@@ -23,6 +23,24 @@ use std::collections::HashMap;
 /// (higher = better). Implemented by the tuner as featurize + model.
 pub trait Scorer {
     fn score(&self, entities: &[ConfigEntity]) -> Vec<f64>;
+
+    /// Score single-knob SA neighbors: `proposals[i]` differs from
+    /// `parents[i]` in knob `knobs[i]` only. Scorers with an
+    /// incremental featurization path (the tuner's, under
+    /// `Representation::Config`) override this to patch just the
+    /// mutated knob's feature slice; the default falls back to the
+    /// full [`Scorer::score`] path. Must return the identical scores
+    /// as `score(proposals)` — SA acceptance (and therefore fixed-seed
+    /// determinism) depends on it.
+    fn score_neighbors(
+        &self,
+        parents: &[ConfigEntity],
+        proposals: &[ConfigEntity],
+        knobs: &[usize],
+    ) -> Vec<f64> {
+        let _ = (parents, knobs);
+        self.score(proposals)
+    }
 }
 
 impl<F: Fn(&[ConfigEntity]) -> Vec<f64>> Scorer for F {
@@ -98,9 +116,17 @@ impl ParallelSa {
         // Scale the metropolis criterion by the score spread so the
         // schedule is insensitive to the model's output units.
         for _ in 0..steps {
-            let proposals: Vec<ConfigEntity> =
-                self.chains.iter().map(|c| space.mutate(c, rng)).collect();
-            let scores = scorer.score(&proposals);
+            let mut knobs = Vec::with_capacity(n);
+            let proposals: Vec<ConfigEntity> = self
+                .chains
+                .iter()
+                .map(|c| {
+                    let (p, j) = space.mutate_knob(c, rng);
+                    knobs.push(j);
+                    p
+                })
+                .collect();
+            let scores = scorer.score_neighbors(&self.chains, &proposals, &knobs);
             let spread = score_spread(&self.chain_scores).max(1e-9);
             for i in 0..n {
                 visited.entry(proposals[i].clone()).or_insert(scores[i]);

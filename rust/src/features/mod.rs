@@ -261,10 +261,20 @@ pub fn featurize_batch(
     task: &crate::schedule::template::Task,
     entities: &[crate::schedule::space::ConfigEntity],
 ) -> Vec<Option<Vec<f64>>> {
+    // Per-thread scratch analysis: `analyze_into` reuses the chains
+    // allocation across the thousands of (entity × SA step) calls of a
+    // proposal round instead of re-allocating per neighbor.
+    thread_local! {
+        static SCRATCH: std::cell::RefCell<ProgramAnalysis> =
+            std::cell::RefCell::new(ProgramAnalysis { chains: Vec::new() });
+    }
     crate::util::parallel_map(entities, crate::util::default_threads(), |e| {
         let program = task.lower(e).ok()?;
-        let analysis = crate::ast::analysis::analyze(&program);
-        Some(extract(repr, task, e, &analysis))
+        SCRATCH.with(|sc| {
+            let mut analysis = sc.borrow_mut();
+            crate::ast::analysis::analyze_into(&program, &mut analysis);
+            Some(extract(repr, task, e, &analysis))
+        })
     })
 }
 

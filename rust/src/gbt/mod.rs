@@ -12,9 +12,12 @@
 //! energy (negated).
 
 pub mod persist;
+pub mod plan;
 pub mod tree;
 
-use crate::util::{parallel_map, Rng};
+pub use plan::PredictPlan;
+
+use crate::util::Rng;
 use tree::{Binner, Tree};
 
 /// Row-major f32 feature matrix.
@@ -83,6 +86,10 @@ pub struct GbtParams {
     pub rank_pairs: usize,
     /// RNG seed for subsampling / pair sampling.
     pub seed: u64,
+    /// Minimum batch size before [`Gbt::predict_batch`] goes
+    /// thread-parallel over rows; smaller batches stay serial (thread
+    /// spawn cost dominates). Benches sweep this knob.
+    pub parallel_cutoff: usize,
 }
 
 impl Default for GbtParams {
@@ -97,6 +104,7 @@ impl Default for GbtParams {
             colsample: 0.9,
             rank_pairs: 16,
             seed: 0,
+            parallel_cutoff: 256,
         }
     }
 }
@@ -185,11 +193,11 @@ impl Gbt {
 
     /// Predict a batch (parallel over rows for large batches).
     pub fn predict_batch(&self, x: &Matrix) -> Vec<f64> {
-        if x.rows < 256 {
+        let threads = crate::util::default_threads();
+        if x.rows < self.params.parallel_cutoff || threads <= 1 {
             (0..x.rows).map(|i| self.predict(x.row(i))).collect()
         } else {
-            let idx: Vec<usize> = (0..x.rows).collect();
-            parallel_map(&idx, crate::util::default_threads(), |&i| self.predict(x.row(i)))
+            crate::util::parallel_map_range(x.rows, threads, |i| self.predict(x.row(i)))
         }
     }
 
@@ -291,16 +299,23 @@ impl GbtEnsemble {
     /// (mean, std) per row.
     pub fn predict_stats(&self, x: &Matrix) -> Vec<(f64, f64)> {
         let per: Vec<Vec<f64>> = self.members.iter().map(|m| m.predict_batch(x)).collect();
-        (0..x.rows)
-            .map(|i| {
-                let vals: Vec<f64> = per.iter().map(|p| p[i]).collect();
-                let mean = crate::util::mean(&vals);
-                let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
-                    / vals.len() as f64;
-                (mean, var.sqrt())
-            })
-            .collect()
+        stats_from_members(&per, x.rows)
     }
+}
+
+/// (mean, std) per row from per-member prediction vectors, in member
+/// order. Shared by [`GbtEnsemble::predict_stats`] and the plan-routed
+/// ensemble path in `model` so both compute the identical f64 sums.
+pub fn stats_from_members(per: &[Vec<f64>], rows: usize) -> Vec<(f64, f64)> {
+    (0..rows)
+        .map(|i| {
+            let vals: Vec<f64> = per.iter().map(|p| p[i]).collect();
+            let mean = crate::util::mean(&vals);
+            let var =
+                vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / vals.len() as f64;
+            (mean, var.sqrt())
+        })
+        .collect()
 }
 
 /// Kendall-tau-style pairwise ranking accuracy on a held-out set:

@@ -1,0 +1,333 @@
+//! Compiled batch-prediction plan: all trees of a trained [`Gbt`]
+//! flattened into one contiguous SoA node arena, queried over rows that
+//! are quantized **once** through a [`Binner`] built from the union of
+//! split thresholds.
+//!
+//! The scalar walk in [`Gbt::predict`] chases `enum Node` pointers and
+//! re-compares raw `f32` features at every split of every tree for
+//! every row. The plan instead:
+//!
+//! 1. keeps only feature columns referenced by ≥1 split (`used`),
+//! 2. bins each row's used columns once per batch block (`u8` bins when
+//!    every used feature has ≤255 cuts, `u16` otherwise),
+//! 3. walks the arena tree-at-a-time over the block with a branchless
+//!    child select (`bin > t` indexes a `[left, right]` pair),
+//! 4. accumulates eta-pre-scaled leaf values per row in tree order.
+//!
+//! Bit-exactness: `Binner::bin_value` returns the first cut index `lo`
+//! with `v <= cuts[lo]`, so for a split stored at cut index `t`,
+//! `bin(v) <= t ⟺ v <= cuts[t] = threshold` — exactly the scalar
+//! comparison, including NaN (bins past every cut → right, like
+//! `NaN <= thr == false`). Leaf values are scaled by `eta` at compile
+//! time with the same single f64 multiply the scalar loop performs, and
+//! accumulation runs in the same tree order from the same `base`, so
+//! sums are bit-identical. `tests/perf_paths.rs` proptests this against
+//! random trained models.
+
+use super::tree::{Binner, Node};
+use super::{Gbt, Matrix};
+
+/// Rows per cache-friendly prediction block: the binned block
+/// (`64 × used`) and its accumulator stay L1-resident while the arena
+/// streams through once per tree.
+const BLOCK_ROWS: usize = 64;
+
+/// Marker in [`PredictPlan::feat`] for leaf nodes.
+const LEAF: u32 = u32::MAX;
+
+/// A compiled, immutable batch-prediction plan for one [`Gbt`].
+#[derive(Clone, Debug)]
+pub struct PredictPlan {
+    /// Cut points per *dense* used-feature column (union of split
+    /// thresholds, ascending).
+    binner: Binner,
+    /// Original feature columns referenced by ≥1 split, ascending.
+    used: Vec<u32>,
+    /// Rows must have at least this many columns (max split feature+1).
+    min_features: usize,
+    base: f64,
+    /// Arena index of each tree's root, in boosting order.
+    roots: Vec<u32>,
+    /// Dense used-feature index per node; [`LEAF`] marks a leaf.
+    feat: Vec<u32>,
+    /// Cut index per split node: go left iff `row_bin <= bin[n]`.
+    bin: Vec<u16>,
+    /// `[left, right]` arena children per split node.
+    children: Vec<[u32; 2]>,
+    /// Eta-pre-scaled leaf value per leaf node (0.0 for splits).
+    value: Vec<f64>,
+    /// Every used feature has ≤255 cuts → rows bin to `u8`.
+    narrow: bool,
+    /// Batch size at which prediction goes thread-parallel over blocks.
+    parallel_cutoff: usize,
+}
+
+impl Gbt {
+    /// Compile this model into a [`PredictPlan`]. The plan's batch
+    /// output is bit-identical to [`Gbt::predict`] /
+    /// [`Gbt::predict_batch`]; the scalar walk remains the reference.
+    pub fn compile(&self) -> PredictPlan {
+        // Union of split thresholds per original feature column.
+        let mut per_feat: std::collections::BTreeMap<u32, Vec<f32>> =
+            std::collections::BTreeMap::new();
+        for t in &self.trees {
+            for n in t.nodes() {
+                if let Node::Split { feature, threshold, .. } = n {
+                    per_feat.entry(*feature).or_default().push(*threshold);
+                }
+            }
+        }
+        let used: Vec<u32> = per_feat.keys().copied().collect();
+        let mut dense_of = std::collections::HashMap::with_capacity(used.len());
+        let mut cuts = Vec::with_capacity(used.len());
+        for (d, (f, mut thr)) in per_feat.into_iter().enumerate() {
+            thr.sort_by(|a, b| a.total_cmp(b));
+            thr.dedup();
+            assert!(thr.len() <= u16::MAX as usize, "feature {f}: too many cuts");
+            dense_of.insert(f, d as u32);
+            cuts.push(thr);
+        }
+        let narrow = cuts.iter().all(|c| c.len() <= u8::MAX as usize);
+        let min_features = used.last().map_or(0, |&f| f as usize + 1);
+        let binner = Binner { cuts };
+
+        // Flatten every tree into the shared arena. Child indices are
+        // tree-local in `Tree::nodes`, so offset them by the tree base.
+        let mut roots = Vec::with_capacity(self.trees.len());
+        let mut feat = Vec::new();
+        let mut bin = Vec::new();
+        let mut children = Vec::new();
+        let mut value = Vec::new();
+        for t in &self.trees {
+            let off = feat.len() as u32;
+            roots.push(off);
+            for n in t.nodes() {
+                match n {
+                    Node::Leaf { value: v } => {
+                        feat.push(LEAF);
+                        bin.push(0);
+                        children.push([0, 0]);
+                        value.push(self.params.eta * v);
+                    }
+                    Node::Split { feature, threshold, left, right } => {
+                        let d = dense_of[feature];
+                        let c = &binner.cuts[d as usize];
+                        let t = c
+                            .binary_search_by(|x| x.total_cmp(threshold))
+                            .expect("split threshold present in plan cuts");
+                        feat.push(d);
+                        bin.push(t as u16);
+                        children.push([off + left, off + right]);
+                        value.push(0.0);
+                    }
+                }
+            }
+        }
+        PredictPlan {
+            binner,
+            used,
+            min_features,
+            base: self.base,
+            roots,
+            feat,
+            bin,
+            children,
+            value,
+            narrow,
+            parallel_cutoff: self.params.parallel_cutoff,
+        }
+    }
+}
+
+impl PredictPlan {
+    /// Number of compiled trees.
+    pub fn n_trees(&self) -> usize {
+        self.roots.len()
+    }
+
+    /// Total arena nodes across all trees.
+    pub fn n_nodes(&self) -> usize {
+        self.feat.len()
+    }
+
+    /// Whether rows quantize to `u8` bins (every used feature ≤255
+    /// cuts) — the common case for in-process models, whose training
+    /// `Binner` caps at 128 bins.
+    pub fn is_narrow(&self) -> bool {
+        self.narrow
+    }
+
+    /// Predict one raw feature row (bit-identical to [`Gbt::predict`]).
+    pub fn predict(&self, row: &[f32]) -> f64 {
+        assert!(row.len() >= self.min_features, "row narrower than model");
+        let w = self.used.len();
+        let mut bins: Vec<u16> = Vec::with_capacity(w);
+        for (d, &f) in self.used.iter().enumerate() {
+            bins.push(self.binner.bin_value_wide(d, row[f as usize]));
+        }
+        let mut acc = [self.base];
+        self.walk_rows(&bins, w, &mut acc);
+        acc[0]
+    }
+
+    /// Predict a batch in cache-friendly blocks, thread-parallel over
+    /// blocks for large batches. Bit-identical to
+    /// [`Gbt::predict_batch`].
+    pub fn predict_batch(&self, x: &Matrix) -> Vec<f64> {
+        if x.rows == 0 {
+            return Vec::new();
+        }
+        assert!(x.cols >= self.min_features, "matrix narrower than model");
+        let threads = crate::util::default_threads();
+        let n_blocks = x.rows.div_ceil(BLOCK_ROWS);
+        if x.rows < self.parallel_cutoff || threads <= 1 {
+            let mut out = Vec::with_capacity(x.rows);
+            for b in 0..n_blocks {
+                let lo = b * BLOCK_ROWS;
+                let hi = (lo + BLOCK_ROWS).min(x.rows);
+                out.extend(self.predict_block(x, lo, hi));
+            }
+            out
+        } else {
+            let blocks = crate::util::parallel_map_range(n_blocks, threads, |b| {
+                let lo = b * BLOCK_ROWS;
+                let hi = (lo + BLOCK_ROWS).min(x.rows);
+                self.predict_block(x, lo, hi)
+            });
+            let mut out = Vec::with_capacity(x.rows);
+            for v in blocks {
+                out.extend(v);
+            }
+            out
+        }
+    }
+
+    /// Bin then predict rows `lo..hi`.
+    fn predict_block(&self, x: &Matrix, lo: usize, hi: usize) -> Vec<f64> {
+        let rows = hi - lo;
+        let w = self.used.len();
+        let mut acc = vec![self.base; rows];
+        if self.narrow {
+            let mut bins: Vec<u8> = Vec::with_capacity(rows * w);
+            for i in lo..hi {
+                let row = x.row(i);
+                for (d, &f) in self.used.iter().enumerate() {
+                    bins.push(self.binner.bin_value(d, row[f as usize]));
+                }
+            }
+            self.walk_rows(&bins, w, &mut acc);
+        } else {
+            let mut bins: Vec<u16> = Vec::with_capacity(rows * w);
+            for i in lo..hi {
+                let row = x.row(i);
+                for (d, &f) in self.used.iter().enumerate() {
+                    bins.push(self.binner.bin_value_wide(d, row[f as usize]));
+                }
+            }
+            self.walk_rows(&bins, w, &mut acc);
+        }
+        acc
+    }
+
+    /// Tree-at-a-time arena walk over row-major binned rows of width
+    /// `w`, accumulating eta-scaled leaf values into `acc` (pre-seeded
+    /// with `base`). Generic over the bin width so the narrow path
+    /// walks `u8` rows without widening them in memory.
+    fn walk_rows<T: Copy + Into<u16>>(&self, bins: &[T], w: usize, acc: &mut [f64]) {
+        for &root in &self.roots {
+            for (r, a) in acc.iter_mut().enumerate() {
+                let rowb = &bins[r * w..r * w + self.used.len()];
+                let mut n = root as usize;
+                loop {
+                    let f = self.feat[n];
+                    if f == LEAF {
+                        break;
+                    }
+                    let go_right = (rowb[f as usize].into() > self.bin[n]) as usize;
+                    n = self.children[n][go_right] as usize;
+                }
+                *a += self.value[n];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Gbt, GbtParams, Matrix, Objective};
+    use crate::util::Rng;
+
+    fn synthetic(n: usize, cols: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut data = Vec::with_capacity(n * cols);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let row: Vec<f32> = (0..cols).map(|_| rng.gen_f64() as f32 * 4.0).collect();
+            let t = 2.0 * row[0] as f64 - (row[1] as f64) * (row[2 % cols] as f64);
+            data.extend_from_slice(&row);
+            y.push(t);
+        }
+        (Matrix::new(n, cols, data), y)
+    }
+
+    #[test]
+    fn plan_matches_scalar_bitwise() {
+        let (x, y) = synthetic(600, 8, 11);
+        for obj in [Objective::Regression, Objective::Rank] {
+            let p = GbtParams { objective: obj, n_trees: 25, seed: 4, ..Default::default() };
+            let m = Gbt::train(&x, &y, &[], p);
+            let plan = m.compile();
+            assert!(plan.is_narrow());
+            let (xt, _) = synthetic(333, 8, 12);
+            let scalar = m.predict_batch(&xt);
+            let fast = plan.predict_batch(&xt);
+            assert_eq!(scalar, fast, "batch diverged ({obj:?})");
+            for i in 0..xt.rows {
+                assert_eq!(m.predict(xt.row(i)).to_bits(), plan.predict(xt.row(i)).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn plan_handles_out_of_range_and_nan() {
+        let (x, y) = synthetic(300, 6, 13);
+        let m = Gbt::train(&x, &y, &[], GbtParams { n_trees: 10, ..Default::default() });
+        let plan = m.compile();
+        let weird = vec![
+            vec![-1e30f32, 1e30, f32::NAN, 0.0, -0.0, f32::INFINITY],
+            vec![f32::NEG_INFINITY, f32::NAN, f32::NAN, 1e-30, 4.0, 2.0],
+        ];
+        for row in &weird {
+            assert_eq!(m.predict(row).to_bits(), plan.predict(row).to_bits());
+        }
+    }
+
+    #[test]
+    fn stump_free_model_compiles() {
+        // constant labels → trees may be single leaves (no used features)
+        let (x, _) = synthetic(50, 4, 14);
+        let y = vec![2.0; 50];
+        let m = Gbt::train(
+            &x,
+            &y,
+            &[],
+            GbtParams { objective: Objective::Regression, n_trees: 3, ..Default::default() },
+        );
+        let plan = m.compile();
+        assert_eq!(m.predict_batch(&x), plan.predict_batch(&x));
+    }
+
+    #[test]
+    fn plan_parallel_path_matches_serial() {
+        let (x, y) = synthetic(400, 8, 15);
+        let mut params = GbtParams { n_trees: 15, ..Default::default() };
+        let m = Gbt::train(&x, &y, &[], params.clone());
+        let (xt, _) = synthetic(2000, 8, 16);
+        let serial_plan = m.compile();
+        params.parallel_cutoff = 1;
+        let mut m2 = m.clone();
+        m2.params = params;
+        let parallel_plan = m2.compile();
+        assert_eq!(serial_plan.predict_batch(&xt), parallel_plan.predict_batch(&xt));
+    }
+}

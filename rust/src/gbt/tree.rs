@@ -61,6 +61,26 @@ impl Binner {
         lo as u8
     }
 
+    #[inline]
+    /// Bin index of value `v` in feature column `f`, without the u8
+    /// truncation of [`Binner::bin_value`]. Used by
+    /// [`super::plan::PredictPlan`], whose per-feature cut lists are
+    /// derived from split thresholds and may exceed 255 entries.
+    pub fn bin_value_wide(&self, f: usize, v: f32) -> u16 {
+        let cuts = &self.cuts[f];
+        let mut lo = 0usize;
+        let mut hi = cuts.len();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if v <= cuts[mid] {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        lo as u16
+    }
+
     /// Bin a whole matrix (column-major output for cache-friendly
     /// histogram accumulation).
     pub fn bin(&self, x: &Matrix) -> BinnedMatrix {

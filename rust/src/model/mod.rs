@@ -14,7 +14,7 @@
 
 pub mod neural;
 
-use crate::gbt::{Gbt, GbtEnsemble, GbtParams, Matrix};
+use crate::gbt::{Gbt, GbtEnsemble, GbtParams, Matrix, PredictPlan};
 
 /// A trainable cost model. Scores follow "higher = better".
 /// (Driven from the tuner thread; PJRT-backed models are thread-affine.)
@@ -46,25 +46,38 @@ pub trait CostModel {
     }
 }
 
-/// GBT-backed cost model.
+/// GBT-backed cost model. With fast paths on (the default), every
+/// `fit` compiles the trained model into a [`PredictPlan`] and
+/// `predict` routes through the plan's binned batch walk — bit-exact
+/// with the scalar reference, so the toggle exists purely for honest
+/// A/B timing (`TuneOptions::fast_paths`, `bench_gbt`).
 pub struct GbtModel {
     /// Boosting hyper-parameters.
     pub params: GbtParams,
     model: Option<Gbt>,
+    plan: Option<PredictPlan>,
+    use_plan: bool,
 }
 
 impl GbtModel {
-    /// Unfitted model with the given hyper-parameters.
+    /// Unfitted model with the given hyper-parameters (plan-routed
+    /// prediction on).
     pub fn new(params: GbtParams) -> Self {
-        GbtModel { params, model: None }
+        Self::with_fast_paths(params, true)
+    }
+
+    /// Unfitted model; `fast` selects plan-routed vs scalar prediction.
+    pub fn with_fast_paths(params: GbtParams, fast: bool) -> Self {
+        GbtModel { params, model: None, plan: None, use_plan: fast }
     }
 }
 
 impl CostModel for GbtModel {
     fn predict(&self, x: &Matrix) -> Vec<f64> {
-        match &self.model {
-            Some(m) => m.predict_batch(x),
-            None => vec![0.0; x.rows],
+        match (&self.plan, &self.model) {
+            (Some(p), _) => p.predict_batch(x),
+            (None, Some(m)) => m.predict_batch(x),
+            (None, None) => vec![0.0; x.rows],
         }
     }
 
@@ -72,7 +85,9 @@ impl CostModel for GbtModel {
         if x.rows == 0 {
             return;
         }
-        self.model = Some(Gbt::train(x, y, groups, self.params.clone()));
+        let m = Gbt::train(x, y, groups, self.params.clone());
+        self.plan = self.use_plan.then(|| m.compile());
+        self.model = Some(m);
     }
 
     fn ready(&self) -> bool {
@@ -80,24 +95,41 @@ impl CostModel for GbtModel {
     }
 
     fn snapshot(&self) -> Option<Box<dyn CostModel + Send>> {
-        Some(Box::new(GbtModel { params: self.params.clone(), model: self.model.clone() }))
+        Some(Box::new(GbtModel {
+            params: self.params.clone(),
+            model: self.model.clone(),
+            plan: self.plan.clone(),
+            use_plan: self.use_plan,
+        }))
     }
 }
 
 /// Bootstrap-ensemble model with uncertainty (Fig. 7 ablation). The
-/// paper uses 5 bootstrap models with the regression objective.
+/// paper uses 5 bootstrap models with the regression objective. With
+/// fast paths on, each member compiles to a [`PredictPlan`] at fit
+/// time and `predict_stats` runs every member through its plan; the
+/// (mean, std) reduction is shared with the scalar path
+/// ([`crate::gbt::stats_from_members`]), so stats stay bit-identical.
 pub struct EnsembleModel {
     /// Per-member boosting hyper-parameters.
     pub params: GbtParams,
     /// Number of bootstrap members.
     pub k: usize,
     model: Option<GbtEnsemble>,
+    plans: Vec<PredictPlan>,
+    use_plan: bool,
 }
 
 impl EnsembleModel {
-    /// Unfitted `k`-member ensemble.
+    /// Unfitted `k`-member ensemble (plan-routed prediction on).
     pub fn new(params: GbtParams, k: usize) -> Self {
-        EnsembleModel { params, k, model: None }
+        Self::with_fast_paths(params, k, true)
+    }
+
+    /// Unfitted `k`-member ensemble; `fast` selects plan-routed vs
+    /// scalar member prediction.
+    pub fn with_fast_paths(params: GbtParams, k: usize, fast: bool) -> Self {
+        EnsembleModel { params, k, model: None, plans: Vec::new(), use_plan: fast }
     }
 }
 
@@ -107,6 +139,11 @@ impl CostModel for EnsembleModel {
     }
 
     fn predict_stats(&self, x: &Matrix) -> Vec<(f64, f64)> {
+        if !self.plans.is_empty() {
+            let per: Vec<Vec<f64>> =
+                self.plans.iter().map(|p| p.predict_batch(x)).collect();
+            return crate::gbt::stats_from_members(&per, x.rows);
+        }
         match &self.model {
             Some(m) => m.predict_stats(x),
             None => vec![(0.0, 0.0); x.rows],
@@ -117,7 +154,13 @@ impl CostModel for EnsembleModel {
         if x.rows == 0 {
             return;
         }
-        self.model = Some(GbtEnsemble::train(x, y, self.k, self.params.clone()));
+        let ens = GbtEnsemble::train(x, y, self.k, self.params.clone());
+        self.plans = if self.use_plan {
+            ens.members.iter().map(Gbt::compile).collect()
+        } else {
+            Vec::new()
+        };
+        self.model = Some(ens);
     }
 
     fn ready(&self) -> bool {
@@ -129,6 +172,8 @@ impl CostModel for EnsembleModel {
             params: self.params.clone(),
             k: self.k,
             model: self.model.clone(),
+            plans: self.plans.clone(),
+            use_plan: self.use_plan,
         }))
     }
 }
@@ -194,9 +239,13 @@ fn erf(x: f64) -> f64 {
 /// combination of the paper.
 pub struct TransferModel {
     global: Gbt,
+    /// Compiled at construction: global scoring is always plan-routed
+    /// (bit-exact with the scalar walk, so no toggle is needed here).
+    global_plan: PredictPlan,
     /// linear calibration of global scores to local label scale
     calib: (f64, f64),
     local: Option<Gbt>,
+    local_plan: Option<PredictPlan>,
     /// Hyper-parameters of the local model.
     pub params: GbtParams,
 }
@@ -210,7 +259,15 @@ impl TransferModel {
         params: GbtParams,
     ) -> TransferModel {
         let global = Gbt::train(x, y, groups, params.clone());
-        TransferModel { global, calib: (1.0, 0.0), local: None, params }
+        let global_plan = global.compile();
+        TransferModel {
+            global,
+            global_plan,
+            calib: (1.0, 0.0),
+            local: None,
+            local_plan: None,
+            params,
+        }
     }
 
     /// The one warm-start entry point of the service layer: given the
@@ -305,7 +362,7 @@ impl TransferModel {
     }
 
     fn global_scores(&self, x: &Matrix) -> Vec<f64> {
-        self.global.predict_batch(x)
+        self.global_plan.predict_batch(x)
     }
 }
 
@@ -313,7 +370,7 @@ impl CostModel for TransferModel {
     fn predict(&self, x: &Matrix) -> Vec<f64> {
         let g = self.global_scores(x);
         let (a, b) = self.calib;
-        match &self.local {
+        match &self.local_plan {
             Some(l) => {
                 let lp = l.predict_batch(x);
                 g.iter().zip(lp).map(|(gi, li)| a * gi + b + li).collect()
@@ -337,8 +394,9 @@ impl CostModel for TransferModel {
         let b = my - a * mg;
         self.calib = (a, b);
         let margin: Vec<f64> = g.iter().map(|gi| a * gi + b).collect();
-        self.local =
-            Some(Gbt::train_with_margin(x, y, groups, &margin, self.params.clone()));
+        let local = Gbt::train_with_margin(x, y, groups, &margin, self.params.clone());
+        self.local_plan = Some(local.compile());
+        self.local = Some(local);
     }
 
     /// Global model alone is already usable.
@@ -352,8 +410,10 @@ impl CostModel for TransferModel {
     fn snapshot(&self) -> Option<Box<dyn CostModel + Send>> {
         Some(Box::new(TransferModel {
             global: self.global.clone(),
+            global_plan: self.global_plan.clone(),
             calib: self.calib,
             local: self.local.clone(),
+            local_plan: self.local_plan.clone(),
             params: self.params.clone(),
         }))
     }
@@ -391,6 +451,23 @@ mod tests {
         assert!(m.ready());
         let acc = crate::gbt::rank_accuracy(&m.predict(&x), &y);
         assert!(acc > 0.9, "in-sample rank acc {acc}");
+    }
+
+    #[test]
+    fn fast_and_scalar_models_agree_bitwise() {
+        let (x, y) = synth(400, 9, 0.0);
+        let params =
+            GbtParams { objective: Objective::Regression, n_trees: 20, ..Default::default() };
+        let mut fast = GbtModel::new(params.clone());
+        let mut scalar = GbtModel::with_fast_paths(params.clone(), false);
+        fast.fit(&x, &y, &[]);
+        scalar.fit(&x, &y, &[]);
+        assert_eq!(fast.predict(&x), scalar.predict(&x));
+        let mut efast = EnsembleModel::new(params.clone(), 3);
+        let mut escalar = EnsembleModel::with_fast_paths(params, 3, false);
+        efast.fit(&x, &y, &[]);
+        escalar.fit(&x, &y, &[]);
+        assert_eq!(efast.predict_stats(&x), escalar.predict_stats(&x));
     }
 
     #[test]

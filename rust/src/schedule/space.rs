@@ -164,6 +164,19 @@ impl ConfigSpace {
 
     /// SA/GA neighbor: re-draw one random knob.
     pub fn mutate(&self, e: &ConfigEntity, rng: &mut crate::util::Rng) -> ConfigEntity {
+        self.mutate_knob(e, rng).0
+    }
+
+    /// [`ConfigSpace::mutate`], also reporting *which* knob was
+    /// re-drawn — the incremental featurizer recomputes only that
+    /// knob's feature slice. Draws the identical RNG sequence as
+    /// `mutate` (it *is* `mutate`), so fixed-seed runs are unchanged by
+    /// callers switching between the two.
+    pub fn mutate_knob(
+        &self,
+        e: &ConfigEntity,
+        rng: &mut crate::util::Rng,
+    ) -> (ConfigEntity, usize) {
         let mut out = e.clone();
         let j = rng.gen_range(0..self.knobs.len());
         let c = self.knobs[j].cardinality();
@@ -174,7 +187,7 @@ impl ConfigSpace {
             }
             out.choices[j] = nv;
         }
-        out
+        (out, j)
     }
 
     /// Knob-wise uniform crossover (GA baseline).
@@ -194,22 +207,51 @@ impl ConfigSpace {
         }
     }
 
+    /// Number of feature dimensions knob `j` contributes to
+    /// [`ConfigSpace::config_features`] (split → one per tile level,
+    /// choice → 1).
+    pub fn knob_feature_dim(&self, j: usize) -> usize {
+        match &self.knobs[j] {
+            Knob::Split { parts, .. } => *parts,
+            Knob::Choice { .. } => 1,
+        }
+    }
+
+    /// Offset of knob `j`'s slice within the
+    /// [`ConfigSpace::config_features`] vector (knob slices are
+    /// contiguous, in knob order).
+    pub fn knob_feature_offset(&self, j: usize) -> usize {
+        (0..j).map(|i| self.knob_feature_dim(i)).sum()
+    }
+
+    /// Write knob `j`'s feature slice for option `choice` into `out`
+    /// (length [`ConfigSpace::knob_feature_dim`]). The single source of
+    /// truth for per-knob features — `config_features` delegates here,
+    /// so incremental slice updates cannot drift from the full path.
+    pub fn knob_features_into(&self, j: usize, choice: u32, out: &mut [f64]) {
+        match &self.knobs[j] {
+            Knob::Split { options, .. } => {
+                for (o, &v) in out.iter_mut().zip(&options[choice as usize]) {
+                    *o = (v as f64).log2();
+                }
+            }
+            Knob::Choice { options, .. } => {
+                out[0] = (options[choice as usize] as f64 + 1.0).log2();
+            }
+        }
+    }
+
     /// Configuration-space feature vector (the non-invariant
     /// representation of Fig. 9): log2 tile factors for split knobs,
     /// raw value for choices.
     pub fn config_features(&self, e: &ConfigEntity) -> Vec<f64> {
-        let mut f = Vec::new();
-        for (k, &c) in self.knobs.iter().zip(&e.choices) {
-            match k {
-                Knob::Split { options, .. } => {
-                    for &v in &options[c as usize] {
-                        f.push((v as f64).log2());
-                    }
-                }
-                Knob::Choice { options, .. } => {
-                    f.push((options[c as usize] as f64 + 1.0).log2());
-                }
-            }
+        let dim: usize = (0..self.knobs.len()).map(|j| self.knob_feature_dim(j)).sum();
+        let mut f = vec![0.0; dim];
+        let mut off = 0;
+        for (j, &c) in e.choices.iter().enumerate() {
+            let d = self.knob_feature_dim(j);
+            self.knob_features_into(j, c, &mut f[off..off + d]);
+            off += d;
         }
         f
     }
@@ -295,5 +337,39 @@ mod tests {
         let e = s.entity(0);
         // split of 2 parts -> 2 dims, choice -> 1 dim
         assert_eq!(s.config_features(&e).len(), 3);
+    }
+
+    #[test]
+    fn knob_slices_tile_the_feature_vector() {
+        let s = space();
+        assert_eq!(s.knob_feature_dim(0), 2);
+        assert_eq!(s.knob_feature_dim(1), 1);
+        assert_eq!(s.knob_feature_offset(0), 0);
+        assert_eq!(s.knob_feature_offset(1), 2);
+        // updating one knob's slice in place == recomputing from scratch
+        let mut rng = Rng::seed_from_u64(5);
+        for _ in 0..30 {
+            let e = s.sample(&mut rng);
+            let (m, j) = s.mutate_knob(&e, &mut rng);
+            let mut row = s.config_features(&e);
+            let off = s.knob_feature_offset(j);
+            let d = s.knob_feature_dim(j);
+            s.knob_features_into(j, m.choices[j], &mut row[off..off + d]);
+            assert_eq!(row, s.config_features(&m));
+        }
+    }
+
+    #[test]
+    fn mutate_knob_matches_mutate_rng_stream() {
+        let s = space();
+        let e = s.sample(&mut Rng::seed_from_u64(9));
+        let mut r1 = Rng::seed_from_u64(77);
+        let mut r2 = Rng::seed_from_u64(77);
+        for _ in 0..50 {
+            let a = s.mutate(&e, &mut r1);
+            let (b, j) = s.mutate_knob(&e, &mut r2);
+            assert_eq!(a, b);
+            assert!(j < s.num_knobs());
+        }
     }
 }

@@ -29,7 +29,11 @@
 //!   tail into place. `open` loads snapshot-then-tail, so startup cost
 //!   is bounded by the retention policy instead of the full append
 //!   history, and every crash window recovers to a consistent state
-//!   (the protocol is documented on [`TuningDb::compact`]).
+//!   (the protocol is documented on [`TuningDb::compact`]). A long
+//!   tuning run can arm the same fold automatically:
+//!   [`TuningDb::set_auto_compact_bytes`] makes any append that sees
+//!   the WAL tail past a byte threshold trigger a keep-all compaction
+//!   in place (`--auto-compact-bytes` on the CLI).
 //! * **Per-task feature cache** — [`TuningDb::to_training`] memoizes
 //!   lowered+extracted feature rows per `(shard, representation)`, so
 //!   building `D'` for a transfer model re-featurizes only records it
@@ -55,7 +59,7 @@ use std::fs::{File, OpenOptions};
 use std::hash::{Hash, Hasher};
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Cap on the incrementally maintained per-task top-k index.
@@ -320,6 +324,14 @@ struct DbInner {
     /// touched shard bucket (the concurrency the sharding exists for).
     wal_enabled: AtomicBool,
     len: AtomicUsize,
+    /// WAL-size threshold (bytes) past which an append triggers an
+    /// automatic keep-all compaction; 0 = off (the default).
+    auto_compact_bytes: AtomicU64,
+    /// Re-entrancy guard: exactly one appender runs the triggered
+    /// compaction while the others keep appending.
+    auto_compacting: AtomicBool,
+    /// Completed automatic compactions (for tests and ops visibility).
+    auto_compactions: AtomicUsize,
 }
 
 /// The unparseable fragment a crashed append leaves after the last
@@ -446,6 +458,9 @@ impl TuningDb {
                 wal: Mutex::new(None),
                 wal_enabled: AtomicBool::new(false),
                 len: AtomicUsize::new(0),
+                auto_compact_bytes: AtomicU64::new(0),
+                auto_compacting: AtomicBool::new(false),
+                auto_compactions: AtomicUsize::new(0),
             }),
         }
     }
@@ -627,33 +642,92 @@ impl TuningDb {
             self.insert(rec);
             return Ok(());
         }
-        let mut wal = self.inner.wal.lock().unwrap();
-        let mut wal_err: Option<std::io::Error> = None;
-        let mut disable = false;
-        if let Some(w) = wal.as_mut() {
-            let mut line = rec.to_json().dump();
-            line.push('\n');
-            let prev_len = w.file.metadata().ok().map(|m| m.len());
-            if let Err(e) = w.file.write_all(line.as_bytes()) {
-                let repaired = prev_len.map_or(false, |p| w.file.set_len(p).is_ok());
-                disable = !repaired;
-                wal_err = Some(e);
+        let wal_err = {
+            let mut wal = self.inner.wal.lock().unwrap();
+            let mut wal_err: Option<std::io::Error> = None;
+            let mut disable = false;
+            if let Some(w) = wal.as_mut() {
+                let mut line = rec.to_json().dump();
+                line.push('\n');
+                let prev_len = w.file.metadata().ok().map(|m| m.len());
+                if let Err(e) = w.file.write_all(line.as_bytes()) {
+                    let repaired = prev_len.map_or(false, |p| w.file.set_len(p).is_ok());
+                    disable = !repaired;
+                    wal_err = Some(e);
+                }
             }
+            if disable {
+                eprintln!(
+                    "tuning-db: WAL unrecoverable after failed write; disabling persistence"
+                );
+                *wal = None;
+                self.inner.wal_enabled.store(false, Ordering::Release);
+            }
+            // Still under the WAL lock: file order == insertion order even
+            // with concurrent appenders.
+            self.insert(rec);
+            wal_err
+        };
+        // WAL lock released above — `compact` re-takes it, so the
+        // threshold check must run outside the guard.
+        if wal_err.is_none() {
+            self.maybe_auto_compact();
         }
-        if disable {
-            eprintln!(
-                "tuning-db: WAL unrecoverable after failed write; disabling persistence"
-            );
-            *wal = None;
-            self.inner.wal_enabled.store(false, Ordering::Release);
-        }
-        // Still under the WAL lock: file order == insertion order even
-        // with concurrent appenders.
-        self.insert(rec);
         match wal_err {
             Some(e) => Err(e.into()),
             None => Ok(()),
         }
+    }
+
+    /// Arm (or disarm, with 0) automatic compaction: whenever a
+    /// successful [`append`](Self::append) observes the live WAL tail at
+    /// or past `bytes`, it folds the tail into the snapshot with
+    /// [`RetentionPolicy::keep_all`] — no record is evicted, so serving
+    /// answers and training sets are untouched; only the on-disk layout
+    /// changes. One appender runs the compaction while concurrent
+    /// appenders keep writing (they land on the fresh tail). No-op for
+    /// in-memory DBs.
+    pub fn set_auto_compact_bytes(&self, bytes: u64) {
+        self.inner.auto_compact_bytes.store(bytes, Ordering::Release);
+    }
+
+    /// Automatic compactions completed so far.
+    pub fn auto_compactions(&self) -> usize {
+        self.inner.auto_compactions.load(Ordering::SeqCst)
+    }
+
+    /// Run the threshold-triggered keep-all compaction if armed and due.
+    /// Must be called WITHOUT the WAL lock held ([`compact`](Self::compact)
+    /// takes it). Failures are reported, not fatal — the WAL simply
+    /// keeps growing until the next trigger.
+    fn maybe_auto_compact(&self) {
+        let threshold = self.inner.auto_compact_bytes.load(Ordering::Acquire);
+        if threshold == 0 {
+            return;
+        }
+        match self.wal_bytes() {
+            Some(bytes) if bytes >= threshold => {}
+            _ => return,
+        }
+        if self.inner.auto_compacting.swap(true, Ordering::AcqRel) {
+            return; // another appender is already compacting
+        }
+        // Re-check under the guard: a racing appender may have just
+        // folded the tail below the threshold.
+        let due = self.wal_bytes().map_or(false, |b| b >= threshold);
+        if due {
+            match self.compact(&RetentionPolicy::keep_all()) {
+                Ok(stats) => {
+                    self.inner.auto_compactions.fetch_add(1, Ordering::SeqCst);
+                    eprintln!(
+                        "tuning-db: auto-compacted to gen {} ({} records kept)",
+                        stats.gen, stats.kept
+                    );
+                }
+                Err(e) => eprintln!("tuning-db: auto-compaction failed: {e:#}"),
+            }
+        }
+        self.inner.auto_compacting.store(false, Ordering::Release);
     }
 
     /// Append the trials of one tuning run (bulk path; the live path is
@@ -1447,6 +1521,48 @@ mod tests {
             y2.iter().any(|&v| (v * 20.0 - 5.0).abs() < 1e-9),
             "past-cap record missing from D'"
         );
+    }
+
+    /// Threshold-armed appends compact automatically (keep-all fold):
+    /// the tail shrinks, nothing is evicted, serving is unchanged, and
+    /// an unarmed or in-memory DB never triggers.
+    #[test]
+    fn auto_compaction_triggers_on_threshold() {
+        let dir = std::env::temp_dir().join("autotvm-test-db");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("autocompact-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(snapshot_path(&path));
+        let mk = |i: u32, g: f64| Record {
+            task_key: "t@Cpu".into(),
+            target: "d".into(),
+            choices: vec![i],
+            gflops: g,
+            seconds: 0.1,
+            error: None,
+        };
+        let db = Database::open(&path).unwrap();
+        db.set_auto_compact_bytes(512);
+        for i in 0..40u32 {
+            db.append(mk(i, (i + 1) as f64)).unwrap();
+        }
+        assert!(db.auto_compactions() >= 1, "threshold never triggered");
+        // keep-all fold: nothing evicted, serving unchanged
+        assert_eq!(db.len(), 40);
+        assert_eq!(db.best_config("t@Cpu", "d").unwrap().1, 40.0);
+        // the live tail was swapped under the threshold at the last fold
+        assert!(db.snapshot_gen().unwrap() >= 1);
+        // the folded state round-trips through open
+        let back = Database::open(&path).unwrap();
+        assert_eq!(back.len(), 40);
+        assert_eq!(back.best_config("t@Cpu", "d").unwrap().1, 40.0);
+        // in-memory DBs ignore the knob entirely
+        let mem = Database::new();
+        mem.set_auto_compact_bytes(1);
+        mem.append(mk(0, 1.0)).unwrap();
+        assert_eq!(mem.auto_compactions(), 0);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(snapshot_path(&path));
     }
 
     /// Tentpole smoke: compaction folds the WAL into a snapshot + fresh

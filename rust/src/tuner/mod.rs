@@ -108,6 +108,15 @@ pub struct TuneOptions {
     /// warm-starting coordinator — see records immediately. `None` (the
     /// default) keeps the loop side-effect free.
     pub sink: Option<DbSink>,
+    /// Use the bit-exact fast paths on the model-query loop: compiled
+    /// [`PredictPlan`](crate::gbt::PredictPlan) batch inference instead
+    /// of the scalar tree walk, and (under
+    /// [`Representation::Config`]) incremental per-knob SA neighbor
+    /// featurization instead of a full re-extraction per mutation.
+    /// Both paths produce bit-identical scores, so this toggle exists
+    /// only for A/B timing (`--no-fast-paths`, the perf harness) —
+    /// fixed-seed results are unchanged either way.
+    pub fast_paths: bool,
 }
 
 impl Default for TuneOptions {
@@ -126,6 +135,7 @@ impl Default for TuneOptions {
             verbose: false,
             pipeline_depth: 2,
             sink: None,
+            fast_paths: true,
         }
     }
 }
@@ -220,39 +230,130 @@ impl TuneResult {
     }
 }
 
-/// Shared feature extraction with a per-owner memo cache
-/// (entity → feature row). One implementation serves the serial loop,
+/// Shared feature extraction with a per-owner memo cache keyed by the
+/// config's flat space index (`u64` — cheaper to hash and compare than
+/// a full choices vector). One implementation serves the serial loop,
 /// the pipelined proposal stage and the pipelined model stage — each
 /// stage owns its own `Featurizer`, so no locks sit on the SA hot path.
+///
+/// With `fast` on (the default) two bit-exact shortcuts apply:
+///
+/// * [`Representation::Config`] rows are computed directly from the
+///   knob choices ([`config_padded`](crate::features::config_padded))
+///   without lowering the program — the Config arm of
+///   [`extract`](crate::features::extract) never reads the analysis.
+/// * [`neighbor_features`](Self::neighbor_features) updates only the
+///   mutated knob's feature slice of the cached parent row for
+///   single-knob SA moves (Config representation only — the other
+///   representations flow every knob through the lowered-program
+///   analysis, so they get memoization but no slice reuse).
 pub struct Featurizer {
     /// Representation rows are extracted under.
     pub repr: Representation,
-    cache: RefCell<HashMap<ConfigEntity, Vec<f64>>>,
+    fast: bool,
+    cache: RefCell<HashMap<u64, Vec<f64>>>,
 }
 
 impl Featurizer {
-    /// Empty-cache featurizer for a representation.
+    /// Empty-cache featurizer for a representation, fast paths on.
     pub fn new(repr: Representation) -> Self {
-        Featurizer { repr, cache: RefCell::new(HashMap::new()) }
+        Featurizer::with_fast(repr, true)
+    }
+
+    /// Empty-cache featurizer with the fast paths toggled explicitly
+    /// (`fast = false` forces the reference full-extraction path; see
+    /// [`TuneOptions::fast_paths`]).
+    pub fn with_fast(repr: Representation, fast: bool) -> Self {
+        Featurizer { repr, fast, cache: RefCell::new(HashMap::new()) }
+    }
+
+    /// Whether the bit-exact fast paths are enabled.
+    pub fn is_fast(&self) -> bool {
+        self.fast
     }
 
     /// Feature matrix for `entities`, computing missing rows in
     /// parallel and memoizing them.
     pub fn features(&self, task: &Task, entities: &[ConfigEntity]) -> Matrix {
-        let missing: Vec<ConfigEntity> = {
+        let keys: Vec<u64> = entities.iter().map(|e| task.space.index_of(e)).collect();
+        let missing: Vec<(u64, ConfigEntity)> = {
             let c = self.cache.borrow();
-            entities.iter().filter(|e| !c.contains_key(*e)).cloned().collect()
+            keys.iter()
+                .zip(entities)
+                .filter(|(k, _)| !c.contains_key(*k))
+                .map(|(&k, e)| (k, e.clone()))
+                .collect()
         };
         if !missing.is_empty() {
-            let rows = crate::features::featurize_batch(self.repr, task, &missing);
+            let rows: Vec<Option<Vec<f64>>> =
+                if self.fast && self.repr == Representation::Config {
+                    // Config features depend only on the knob choices:
+                    // identical to extract(Config, ..) minus the lower +
+                    // analyze the Config arm ignores anyway.
+                    missing
+                        .iter()
+                        .map(|(_, e)| Some(crate::features::config_padded(&task.space, e)))
+                        .collect()
+                } else {
+                    let es: Vec<ConfigEntity> =
+                        missing.iter().map(|(_, e)| e.clone()).collect();
+                    crate::features::featurize_batch(self.repr, task, &es)
+                };
             let mut c = self.cache.borrow_mut();
-            for (e, r) in missing.into_iter().zip(rows) {
-                c.insert(e, r.expect("template configs must lower"));
+            for ((k, _), r) in missing.into_iter().zip(rows) {
+                c.insert(k, r.expect("template configs must lower"));
             }
         }
         let c = self.cache.borrow();
-        let rows: Vec<Vec<f64>> = entities.iter().map(|e| c[e].clone()).collect();
+        let rows: Vec<Vec<f64>> = keys.iter().map(|k| c[k].clone()).collect();
         Matrix::from_rows(&rows)
+    }
+
+    /// Feature matrix for single-knob SA neighbors: each `proposals[i]`
+    /// differs from `parents[i]` in (at most) knob `knobs[i]`, so the
+    /// row is the cached parent row with only that knob's feature slice
+    /// rewritten — bit-identical to a fresh extraction (the slice
+    /// helpers on [`ConfigSpace`](crate::schedule::space::ConfigSpace)
+    /// are the single source of truth for both paths). Computed rows
+    /// are memoized like any other. Returns `None` (caller falls back
+    /// to the full path) when a parent row is not cached or the
+    /// representation is not [`Representation::Config`].
+    pub fn neighbor_features(
+        &self,
+        task: &Task,
+        parents: &[ConfigEntity],
+        proposals: &[ConfigEntity],
+        knobs: &[usize],
+    ) -> Option<Matrix> {
+        if !self.fast || self.repr != Representation::Config {
+            return None;
+        }
+        debug_assert_eq!(parents.len(), proposals.len());
+        debug_assert_eq!(parents.len(), knobs.len());
+        let space = &task.space;
+        let mut rows: Vec<Vec<f64>> = Vec::with_capacity(proposals.len());
+        let mut cache = self.cache.borrow_mut();
+        for ((p, e), &j) in parents.iter().zip(proposals).zip(knobs) {
+            let key = space.index_of(e);
+            if let Some(r) = cache.get(&key) {
+                rows.push(r.clone());
+                continue;
+            }
+            let mut row = cache.get(&space.index_of(p))?.clone();
+            let off = space.knob_feature_offset(j);
+            // Rows are padded/truncated to CONFIG_DIM; a slice past the
+            // end was truncated away by the full path too.
+            if off < row.len() {
+                let d = space.knob_feature_dim(j);
+                let mut buf = vec![0.0; d];
+                space.knob_features_into(j, e.choices[j], &mut buf);
+                let end = (off + d).min(row.len());
+                row[off..end].copy_from_slice(&buf[..end - off]);
+            }
+            cache.insert(key, row.clone());
+            rows.push(row);
+        }
+        Some(Matrix::from_rows(&rows))
     }
 
     /// Number of memoized feature rows.
@@ -269,18 +370,43 @@ struct TunerScorer<'a> {
     best: f64,
 }
 
-impl Scorer for TunerScorer<'_> {
-    fn score(&self, entities: &[ConfigEntity]) -> Vec<f64> {
-        let x = self.feat.features(self.task, entities);
+impl TunerScorer<'_> {
+    /// Acquisition scores for an already-featurized batch (shared by
+    /// the full and incremental paths, so they cannot drift).
+    fn score_rows(&self, x: &Matrix) -> Vec<f64> {
         match self.acquisition {
-            Acquisition::Mean => self.model.predict(&x),
+            Acquisition::Mean => self.model.predict(x),
             acq => self
                 .model
-                .predict_stats(&x)
+                .predict_stats(x)
                 .into_iter()
                 .map(|(m, s)| acq.score(m, s, self.best))
                 .collect(),
         }
+    }
+}
+
+impl Scorer for TunerScorer<'_> {
+    fn score(&self, entities: &[ConfigEntity]) -> Vec<f64> {
+        let x = self.feat.features(self.task, entities);
+        self.score_rows(&x)
+    }
+
+    fn score_neighbors(
+        &self,
+        parents: &[ConfigEntity],
+        proposals: &[ConfigEntity],
+        knobs: &[usize],
+    ) -> Vec<f64> {
+        // Incremental per-knob featurization (Config representation,
+        // fast paths on); the feature rows are bit-identical to a fresh
+        // extraction, so this changes wall-clock only, never scores.
+        if let Some(x) =
+            self.feat.neighbor_features(self.task, parents, proposals, knobs)
+        {
+            return self.score_rows(&x);
+        }
+        self.score(proposals)
     }
 }
 
@@ -377,7 +503,7 @@ impl BatchProposer {
     /// Fresh proposer (SA chains, RNG stream, dedup set) for a run.
     pub fn new(options: &TuneOptions) -> Self {
         BatchProposer {
-            feat: Featurizer::new(options.repr),
+            feat: Featurizer::with_fast(options.repr, options.fast_paths),
             sa: ParallelSa::new(options.sa.clone()),
             rng: Rng::seed_from_u64(options.seed ^ 0x7u64.wrapping_mul(0x9E3779B97F4A7C15)),
             proposed: HashSet::new(),
@@ -720,7 +846,7 @@ pub fn tune_gbt(
     options: TuneOptions,
 ) -> TuneResult {
     let params = crate::gbt::GbtParams { seed: options.seed, ..Default::default() };
-    let model = Box::new(crate::model::GbtModel::new(params));
+    let model = Box::new(crate::model::GbtModel::with_fast_paths(params, options.fast_paths));
     Tuner::new(task, model, options).tune(measurer)
 }
 
@@ -734,7 +860,7 @@ pub fn tune_gbt_pipelined(
     options: TuneOptions,
 ) -> TuneResult {
     let params = crate::gbt::GbtParams { seed: options.seed, ..Default::default() };
-    let model = Box::new(crate::model::GbtModel::new(params));
+    let model = Box::new(crate::model::GbtModel::with_fast_paths(params, options.fast_paths));
     pipeline::PipelinedTuner::new(task, model, options).tune(measurer)
 }
 
@@ -856,6 +982,63 @@ mod tests {
         for r in &res.records {
             assert!(uniq.insert(r.entity.clone()), "config measured twice");
         }
+    }
+
+    #[test]
+    fn fast_paths_do_not_change_fixed_seed_results() {
+        // the fast-path determinism contract: compiled-plan inference +
+        // incremental Config featurization are bit-exact, so the whole
+        // run is identical with them on or off.
+        for repr in [Representation::Config, Representation::Full] {
+            let mk_task = || Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+            let mut o = small_options(64);
+            o.repr = repr;
+            o.fast_paths = true;
+            let fast =
+                tune_gbt(mk_task(), &SimMeasurer::with_seed(sim_gpu(), 11), o.clone());
+            o.fast_paths = false;
+            let slow = tune_gbt(mk_task(), &SimMeasurer::with_seed(sim_gpu(), 11), o);
+            assert_eq!(fast.curve, slow.curve, "curve diverged under {repr:?}");
+            let fe: Vec<_> = fast.records.iter().map(|r| r.entity.clone()).collect();
+            let se: Vec<_> = slow.records.iter().map(|r| r.entity.clone()).collect();
+            assert_eq!(fe, se, "trial sequence diverged under {repr:?}");
+            assert_eq!(
+                fast.best_gflops().to_bits(),
+                slow.best_gflops().to_bits(),
+                "best diverged under {repr:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn neighbor_features_match_fresh_extraction() {
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+        let feat = Featurizer::new(Representation::Config);
+        let mut rng = Rng::seed_from_u64(21);
+        let parents: Vec<ConfigEntity> =
+            (0..16).map(|_| task.space.sample(&mut rng)).collect();
+        feat.features(&task, &parents); // seed the cache with parent rows
+        let mut knobs = Vec::new();
+        let proposals: Vec<ConfigEntity> = parents
+            .iter()
+            .map(|p| {
+                let (e, j) = task.space.mutate_knob(p, &mut rng);
+                knobs.push(j);
+                e
+            })
+            .collect();
+        let inc = feat
+            .neighbor_features(&task, &parents, &proposals, &knobs)
+            .expect("parents are cached");
+        let fresh = Featurizer::with_fast(Representation::Config, false)
+            .features(&task, &proposals);
+        assert_eq!(inc.rows, fresh.rows);
+        for i in 0..inc.rows {
+            assert_eq!(inc.row(i), fresh.row(i), "row {i} diverged");
+        }
+        // a fast featurizer without cached parents falls back cleanly
+        let cold = Featurizer::new(Representation::Config);
+        assert!(cold.neighbor_features(&task, &parents, &proposals, &knobs).is_none());
     }
 
     #[test]

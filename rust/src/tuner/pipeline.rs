@@ -229,8 +229,13 @@ impl PipelinedTuner {
         // The fit-stage featurizer persists across slices, exactly as
         // in the threaded driver.
         let fresh = match &self.fit_feat {
-            Some(f) if f.repr == self.options.repr => None,
-            _ => Some(Featurizer::new(self.options.repr)),
+            Some(f)
+                if f.repr == self.options.repr
+                    && f.is_fast() == self.options.fast_paths =>
+            {
+                None
+            }
+            _ => Some(Featurizer::with_fast(self.options.repr, self.options.fast_paths)),
         };
         if let Some(f) = fresh {
             self.fit_feat = Some(f);
@@ -315,8 +320,8 @@ impl PipelinedTuner {
         // Fit-stage featurizer persists across slices (recreated only if
         // the representation changed between calls).
         let fit_feat = match self.fit_feat.take() {
-            Some(f) if f.repr == opts.repr => f,
-            _ => Featurizer::new(opts.repr),
+            Some(f) if f.repr == opts.repr && f.is_fast() == opts.fast_paths => f,
+            _ => Featurizer::with_fast(opts.repr, opts.fast_paths),
         };
         let state = &mut self.state;
         // The persistent training set moves into the model stage for

@@ -108,6 +108,12 @@ impl Bench {
         stats
     }
 
+    /// Every `(case, stats)` measured so far, in run order — the perf
+    /// harness reads these to emit its `BENCH_<area>.json` artifact.
+    pub fn results(&self) -> &[(String, Stats)] {
+        &self.results
+    }
+
     /// Report a throughput line for an already-run case.
     pub fn throughput(&self, case: &str, items: f64, unit: &str) {
         if let Some((_, s)) = self.results.iter().find(|(c, _)| c == case) {

@@ -48,6 +48,43 @@ pub fn parallel_map<T: Sync, R: Send>(
     out.into_iter().map(|o| o.expect("worker filled slot")).collect()
 }
 
+/// Run `f` over the index range `0..n` on `threads` worker threads,
+/// preserving order.
+///
+/// Same work-stealing scheme as [`parallel_map`] but driven by an index
+/// range directly, so hot paths (batched GBT prediction) don't have to
+/// allocate an index `Vec` just to parallel-map over it.
+pub fn parallel_map_range<R: Send>(
+    n: usize,
+    threads: usize,
+    f: impl Fn(usize) -> R + Sync,
+) -> Vec<R> {
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(&f).collect();
+    }
+    let counter = std::sync::atomic::AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots: Vec<std::sync::Mutex<Option<R>>> =
+        (0..n).map(|_| std::sync::Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    for (o, slot) in out.iter_mut().zip(slots) {
+        *o = slot.into_inner().unwrap();
+    }
+    out.into_iter().map(|o| o.expect("worker filled slot")).collect()
+}
+
 /// Number of worker threads to use by default.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
@@ -84,6 +121,14 @@ mod tests {
     fn parallel_map_single_thread_path() {
         let items = vec![1, 2, 3];
         assert_eq!(parallel_map(&items, 1, |&x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn parallel_map_range_matches_serial() {
+        let out = parallel_map_range(1000, 8, |i| i * 3);
+        assert_eq!(out, (0..1000).map(|i| i * 3).collect::<Vec<_>>());
+        assert_eq!(parallel_map_range(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map_range(3, 1, |i| i + 1), vec![1, 2, 3]);
     }
 
     #[test]

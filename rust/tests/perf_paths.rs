@@ -1,0 +1,212 @@
+//! Hot-path equivalence properties (own mini-harness; proptest is not
+//! vendored): the compiled [`PredictPlan`] must be bit-identical to the
+//! scalar tree walk on random models and batches (including rows with
+//! out-of-range and non-finite values), incremental SA featurization
+//! must equal fresh extraction, and fixed-seed tuning runs must be
+//! bit-for-bit unchanged by the fast paths and by mid-tune WAL
+//! auto-compaction.
+//!
+//! [`PredictPlan`]: autotvm::gbt::PredictPlan
+
+use autotvm::explore::SaParams;
+use autotvm::gbt::{Gbt, GbtParams, Matrix, Objective};
+use autotvm::measure::SimMeasurer;
+use autotvm::schedule::template::TemplateKind;
+use autotvm::tuner::db::Database;
+use autotvm::tuner::{tune_gbt, DbSink, Featurizer, TuneOptions, TuneResult};
+use autotvm::util::Rng;
+use autotvm::workloads;
+
+/// Mini property harness: run `f` over `n` seeded cases, reporting the
+/// failing seed through the assertion messages.
+fn forall(n: u64, mut f: impl FnMut(&mut Rng, u64)) {
+    for seed in 0..n {
+        let mut rng = Rng::seed_from_u64(seed * 6151 + 29);
+        f(&mut rng, seed);
+    }
+}
+
+/// Random training matrix with values in `[0, 1)`.
+fn random_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+    let data: Vec<f32> = (0..rows * cols).map(|_| rng.gen_f64() as f32).collect();
+    Matrix::new(rows, cols, data)
+}
+
+/// Query batch that deliberately strays outside the training range:
+/// negatives, huge magnitudes, infinities and NaNs — the plan's binning
+/// must route all of them exactly like the scalar comparisons do.
+fn hostile_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+    let data: Vec<f32> = (0..rows * cols)
+        .map(|_| match rng.gen_range(0..8) {
+            0 => -(rng.gen_f64() as f32) * 100.0,
+            1 => rng.gen_f64() as f32 * 1e6,
+            2 => f32::INFINITY,
+            3 => f32::NEG_INFINITY,
+            4 => f32::NAN,
+            _ => rng.gen_f64() as f32,
+        })
+        .collect();
+    Matrix::new(rows, cols, data)
+}
+
+#[test]
+fn prop_plan_bitmatches_scalar_walk() {
+    forall(24, |rng, seed| {
+        let cols = 2 + rng.gen_range(0..30);
+        let n = 40 + rng.gen_range(0..300);
+        let x = random_matrix(rng, n, cols);
+        let y: Vec<f64> = (0..n)
+            .map(|i| {
+                let r = x.row(i);
+                r[0] as f64 * 3.0 - r[cols / 2] as f64 + (r[cols - 1] as f64).abs()
+            })
+            .collect();
+        let params = GbtParams {
+            objective: if rng.gen_bool(0.5) { Objective::Rank } else { Objective::Regression },
+            n_trees: 1 + rng.gen_range(0..40),
+            max_depth: 1 + rng.gen_range(0..7),
+            seed,
+            ..Default::default()
+        };
+        let model = Gbt::train(&x, &y, &[], params);
+        let plan = model.compile();
+
+        // in-range, out-of-range, empty and single-row batches
+        let batches = [
+            random_matrix(rng, 1 + rng.gen_range(0..200), cols),
+            hostile_matrix(rng, 1 + rng.gen_range(0..64), cols),
+            Matrix::new(0, cols, Vec::new()),
+            random_matrix(rng, 1, cols),
+        ];
+        for (bi, q) in batches.iter().enumerate() {
+            let scalar = model.predict_batch(q);
+            let planned = plan.predict_batch(q);
+            assert_eq!(scalar.len(), planned.len(), "seed {seed} batch {bi}");
+            for (i, (a, b)) in scalar.iter().zip(&planned).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "seed {seed} batch {bi} row {i}: plan {b} != scalar {a}"
+                );
+            }
+            // single-row entry point agrees too
+            for i in 0..q.rows.min(4) {
+                assert_eq!(
+                    model.predict(q.row(i)).to_bits(),
+                    plan.predict(q.row(i)).to_bits(),
+                    "seed {seed} batch {bi}: single-row predict diverged"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_incremental_featurization_matches_fresh() {
+    use autotvm::features::Representation;
+    forall(12, |rng, seed| {
+        let wl = 1 + (seed as usize % 12);
+        let template = if rng.gen_bool(0.5) { TemplateKind::Gpu } else { TemplateKind::Cpu };
+        let task = workloads::conv_task(wl, template);
+        let parents: Vec<_> = (0..24).map(|_| task.space.sample(rng)).collect();
+        let mut knobs = Vec::new();
+        let proposals: Vec<_> = parents
+            .iter()
+            .map(|p| {
+                let (n, j) = task.space.mutate_knob(p, rng);
+                knobs.push(j);
+                n
+            })
+            .collect();
+
+        // warm cache: parents featurized once, then per-knob updates
+        let warm = Featurizer::new(Representation::Config);
+        warm.features(&task, &parents);
+        let inc = warm
+            .neighbor_features(&task, &parents, &proposals, &knobs)
+            .expect("parents are cached, Config repr is incremental");
+        // reference: full extraction with the fast paths off
+        let fresh =
+            Featurizer::with_fast(Representation::Config, false).features(&task, &proposals);
+        assert_eq!(inc.rows, fresh.rows, "seed {seed}");
+        assert_eq!(inc.cols, fresh.cols, "seed {seed}");
+        for i in 0..inc.rows {
+            assert_eq!(
+                inc.row(i),
+                fresh.row(i),
+                "seed {seed} row {i} (knob {}): incremental row diverged",
+                knobs[i]
+            );
+        }
+
+        // a cold featurizer has no parent rows to patch: must decline
+        let cold = Featurizer::new(Representation::Config);
+        assert!(cold.neighbor_features(&task, &parents, &proposals, &knobs).is_none());
+    });
+}
+
+fn fixed_seed_run(fast: bool, sink: Option<DbSink>) -> TuneResult {
+    let task = workloads::conv_task(6, TemplateKind::Gpu);
+    let measurer = SimMeasurer::with_seed(autotvm::sim::devices::sim_gpu(), 17);
+    let opts = TuneOptions {
+        n_trials: 48,
+        batch: 16,
+        sa: SaParams { n_chains: 16, n_steps: 25, ..Default::default() },
+        seed: 5,
+        fast_paths: fast,
+        sink,
+        ..Default::default()
+    };
+    tune_gbt(task, &measurer, opts)
+}
+
+fn assert_bit_identical(a: &TuneResult, b: &TuneResult, what: &str) {
+    assert_eq!(a.curve.len(), b.curve.len(), "{what}: trial counts diverged");
+    for (i, (x, y)) in a.curve.iter().zip(&b.curve).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: curve[{i}] diverged");
+    }
+    for (i, (ra, rb)) in a.records.iter().zip(&b.records).enumerate() {
+        assert_eq!(ra.entity, rb.entity, "{what}: trial {i} config diverged");
+        assert_eq!(ra.gflops.to_bits(), rb.gflops.to_bits(), "{what}: trial {i} gflops");
+    }
+}
+
+#[test]
+fn fixed_seed_tune_bit_identical_with_fast_paths_off() {
+    let fast = fixed_seed_run(true, None);
+    let scalar = fixed_seed_run(false, None);
+    assert_bit_identical(&fast, &scalar, "fast vs scalar");
+}
+
+/// Satellite regression: auto-compaction kicking in mid-tune (tiny WAL
+/// threshold, every append crosses it) must not perturb the fixed-seed
+/// trial sequence — compaction folds the WAL under the keep-all policy
+/// and the model trains from the in-memory store, so only the on-disk
+/// layout may change.
+#[test]
+fn mid_tune_auto_compaction_preserves_fixed_seed_results() {
+    let dir = std::env::temp_dir().join("autotvm-test-autocompact");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("midtune-{}.jsonl", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+
+    let baseline = fixed_seed_run(true, None);
+
+    let db = Database::open(&path).unwrap();
+    db.set_auto_compact_bytes(256); // every batch of appends crosses this
+    let task = workloads::conv_task(6, TemplateKind::Gpu);
+    let compacted = fixed_seed_run(true, Some(DbSink::new(&db, &task, "sim-gpu")));
+
+    assert!(
+        db.auto_compactions() >= 1,
+        "threshold of 256 bytes never triggered ({} WAL bytes)",
+        db.wal_bytes().unwrap_or(0)
+    );
+    assert_bit_identical(&baseline, &compacted, "auto-compaction mid-tune");
+    assert_eq!(db.len(), baseline.curve.len(), "sink lost records across compactions");
+
+    // and the compacted file reopens to the same record set
+    let reopened = Database::open(&path).unwrap();
+    assert_eq!(reopened.len(), db.len(), "compacted DB lost records on reopen");
+    let _ = std::fs::remove_file(&path);
+}

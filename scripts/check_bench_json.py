@@ -1,0 +1,93 @@
+#!/usr/bin/env python3
+"""Validate BENCH_*.json perf artifacts before CI uploads them.
+
+Usage: check_bench_json.py FILE [FILE ...]
+
+Every file must parse as a JSON object. Files produced by the shared
+bench harness (benches/harness.rs) must carry:
+
+  * "area": non-empty string,
+  * "cases": non-empty object whose values each have numeric
+    "mean_ns" / "median_ns" / "p95_ns" and a positive integer "iters".
+
+BENCH_e2e_tune.json must additionally record the fast-vs-scalar
+trajectory: "trials_per_sec_scalar", "trials_per_sec_fast" and
+"speedup_trials_per_sec", all positive numbers.
+
+BENCH_serve.json predates the harness and keeps its own shape (see
+benches/bench_serve.rs); it is only required to be a JSON object.
+
+Exit status is non-zero on the first malformed file, so the CI bench
+smoke job fails instead of uploading garbage.
+"""
+
+import json
+import os
+import sys
+
+HARNESS_STAT_KEYS = ("mean_ns", "median_ns", "p95_ns")
+E2E_EXTRA_KEYS = (
+    "trials_per_sec_scalar",
+    "trials_per_sec_fast",
+    "speedup_trials_per_sec",
+)
+
+
+def fail(path, msg):
+    print(f"check_bench_json: {path}: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def is_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check_harness_shape(path, doc):
+    area = doc.get("area")
+    if not isinstance(area, str) or not area:
+        fail(path, '"area" must be a non-empty string')
+    cases = doc.get("cases")
+    if not isinstance(cases, dict) or not cases:
+        fail(path, '"cases" must be a non-empty object')
+    for name, stats in cases.items():
+        if not isinstance(stats, dict):
+            fail(path, f'case "{name}" is not an object')
+        for key in HARNESS_STAT_KEYS:
+            if not is_num(stats.get(key)):
+                fail(path, f'case "{name}" missing numeric "{key}"')
+        iters = stats.get("iters")
+        if not isinstance(iters, (int, float)) or iters < 1:
+            fail(path, f'case "{name}" missing positive "iters"')
+
+
+def check_e2e_extras(path, doc):
+    for key in E2E_EXTRA_KEYS:
+        v = doc.get(key)
+        if not is_num(v) or v <= 0:
+            fail(path, f'missing positive "{key}" (perf trajectory not recorded)')
+
+
+def main(paths):
+    if not paths:
+        print(__doc__.strip().splitlines()[2], file=sys.stderr)
+        sys.exit(2)
+    for path in paths:
+        try:
+            with open(path, encoding="utf-8") as f:
+                doc = json.load(f)
+        except OSError as e:
+            fail(path, f"unreadable: {e}")
+        except json.JSONDecodeError as e:
+            fail(path, f"malformed JSON: {e}")
+        if not isinstance(doc, dict):
+            fail(path, "top level is not a JSON object")
+        name = os.path.basename(path)
+        if name != "BENCH_serve.json":
+            check_harness_shape(path, doc)
+        if name == "BENCH_e2e_tune.json":
+            check_e2e_extras(path, doc)
+        print(f"check_bench_json: {path}: ok")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])
