@@ -410,14 +410,17 @@ fn known_tasks() -> Vec<Task> {
 }
 
 /// Automatic cross-workload warm start: query `db` for records of
-/// *other* known tasks on the same `target`, build `D'` under the
-/// invariant `ContextRelation` representation and train the Eq.-4
-/// global model. Returns `None` when the DB holds nothing usable.
+/// *other* known tasks on the same `target` (tier 1, full weight) and
+/// of known tasks on *other* targets (tier 2, down-weighted — the
+/// heterogeneous-fleet transfer path), build `D'` under the invariant
+/// `ContextRelation` representation and train the Eq.-4 global model.
+/// Returns `None` when the DB holds nothing usable.
 ///
-/// Thin wrapper over the shared [`TransferModel::warm_start`] entry
-/// point (the graph scheduler's `LoopExecutor` wraps the same function
-/// with its plan's sibling tasks as the inventory) — source discovery,
-/// representation and model hyper-parameters live in one place.
+/// Thin wrapper over the shared [`TransferModel::warm_start_tiered`]
+/// entry point (the graph scheduler's `LoopExecutor` wraps the same
+/// function with its plan's sibling tasks as the inventory) — source
+/// discovery, representation and model hyper-parameters live in one
+/// place.
 pub fn warm_start_model(
     db: &Database,
     target_task: &Task,
@@ -426,8 +429,17 @@ pub fn warm_start_model(
     seed: u64,
 ) -> Option<TransferModel> {
     let inventory = known_tasks();
-    let model = TransferModel::warm_start(db, &inventory, target_task, target, objective, seed)?;
+    let (model, stats) =
+        TransferModel::warm_start_tiered(db, &inventory, target_task, target, objective, seed)?;
     println!("# warm-start: global model from sibling task records on {target} (ContextRelation D')");
+    if stats.used_cross_target() {
+        println!(
+            "# warm-start: cross-target D' on {target}: {} rows from [{}] at weight {}",
+            stats.cross_target_rows,
+            stats.cross_targets.join(", "),
+            crate::model::CROSS_TARGET_WEIGHT,
+        );
+    }
     Some(model)
 }
 

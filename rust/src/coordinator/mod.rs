@@ -20,7 +20,12 @@
 //!   [`TaskScheduler`](crate::tuner::scheduler::TaskScheduler) spreads
 //!   one global trial budget across the network's tasks by expected
 //!   marginal reduction in end-to-end latency (`--alloc
-//!   uniform|gradient`), then reports tuned vs vendor latency.
+//!   uniform|gradient`), then reports tuned vs vendor latency. With
+//!   `--targets cpu,gpu` the budget spans the cross-product of tasks ×
+//!   targets on a heterogeneous farm
+//!   ([`HeteroFarm`](crate::measure::farm::HeteroFarm)): class-aware
+//!   dispatch keeps each trial on boards of its target, and records of
+//!   one target warm-start searches on the others.
 //! * `e2e` — end-to-end network latency vs the vendor baseline.
 //! * `fig` — regenerate a paper figure (4–11).
 //! * `serve` — open a tuned DB as a long-lived config-serving tier:
@@ -34,8 +39,8 @@
 
 pub mod experiments;
 
-use crate::measure::farm::DeviceFarm;
-use crate::measure::service::{MeasureService, ServiceOptions};
+use crate::measure::farm::{BoardClass, DeviceFarm, HeteroFarm};
+use crate::measure::service::{MeasureService, ServiceOptions, TargetedMeasurer};
 use crate::measure::{Measurer, SimMeasurer};
 use crate::schedule::template::TemplateKind;
 use crate::sim::devices;
@@ -110,6 +115,27 @@ fn template_of(dev: &crate::sim::DeviceModel) -> TemplateKind {
         crate::sim::DeviceClass::Gpu => TemplateKind::Gpu,
         crate::sim::DeviceClass::Cpu => TemplateKind::Cpu,
     }
+}
+
+/// `--targets a,b` resolves a comma-separated device list for the
+/// heterogeneous `tune-graph` path. Short class names resolve through
+/// the `sim-` registry prefix (`cpu` → `sim-cpu`); full registry names
+/// (`sim-mali`) pass through. `None` when the flag is absent (the
+/// single-device path).
+fn targets_of(args: &Args) -> Result<Option<Vec<crate::sim::DeviceModel>>> {
+    let Some(spec) = args.get("targets") else { return Ok(None) };
+    let mut devs: Vec<crate::sim::DeviceModel> = Vec::new();
+    for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        let dev = devices::by_name(tok)
+            .or_else(|| devices::by_name(&format!("sim-{tok}")))
+            .with_context(|| {
+                format!("unknown target {tok}; try cpu/gpu/mali/tpu or sim-* names")
+            })?;
+        anyhow::ensure!(devs.iter().all(|d| d.name != dev.name), "duplicate target {tok}");
+        devs.push(dev);
+    }
+    anyhow::ensure!(!devs.is_empty(), "--targets needs at least one device");
+    Ok(Some(devs))
 }
 
 fn workload_of(args: &Args) -> Result<usize> {
@@ -463,20 +489,125 @@ pub fn run(argv: &[String]) -> Result<()> {
             let (overlap, gain_ema) = overlap_of(&args)?;
             // AutoTVM compiles the fused graph (§6.3)
             let fused = graph.fuse();
-            let sched = TaskScheduler::from_graph(
-                &fused,
-                &dev,
-                template,
-                SchedulerOptions {
-                    budget: 0, // set below once the task count is known
-                    slice: args.get_usize("slice", opts.batch),
-                    policy,
-                    overlap,
-                    gain_ema,
-                    verbose: args.has("verbose"),
+            let sched_opts = SchedulerOptions {
+                budget: 0, // set below once the task count is known
+                slice: args.get_usize("slice", opts.batch),
+                policy,
+                overlap,
+                gain_ema,
+                verbose: args.has("verbose"),
+                ..Default::default()
+            };
+            // --targets cpu,gpu: the heterogeneous-fleet path — one
+            // plan per (task, target) under one global budget, measured
+            // on a class-aware HeteroFarm service where a job for
+            // target T only lands on boards serving T.
+            if let Some(devs) = targets_of(&args)? {
+                let sched = TaskScheduler::from_graph_multi(&fused, &devs, sched_opts)?;
+                let budget =
+                    args.get_usize("budget", sched.plans().len().max(1) * opts.trials);
+                let sched = sched.with_budget(budget);
+                let db = match args.get("db") {
+                    Some(p) => Database::open(p)?,
+                    None => Database::new(),
+                };
+                arm_auto_compact(&args, &db)?;
+                let replicas = args.get_usize("replicas", 1).max(1);
+                let latency =
+                    Duration::from_millis(args.get_usize("farm-latency-ms", 0) as u64);
+                let flaky: f64 = args.get("flaky").and_then(|v| v.parse().ok()).unwrap_or(0.0);
+                let classes: Vec<BoardClass> = devs
+                    .iter()
+                    .map(|d| {
+                        BoardClass::new(d.clone(), replicas)
+                            .with_latency(latency)
+                            .with_flakiness(flaky)
+                    })
+                    .collect();
+                let svc_opts = ServiceOptions {
+                    timeout: args
+                        .get("measure-timeout")
+                        .and_then(|v| v.parse::<u64>().ok())
+                        .map(Duration::from_millis),
                     ..Default::default()
-                },
-            )?;
+                };
+                let svc = MeasureService::new(
+                    Arc::new(HeteroFarm::new(classes, opts.seed + 1)),
+                    svc_opts,
+                );
+                let views: Vec<(String, TargetedMeasurer<'_>)> = devs
+                    .iter()
+                    .map(|d| (d.name.to_string(), svc.for_target(d.name)))
+                    .collect();
+                let measurers: Vec<(String, &dyn Measurer)> =
+                    views.iter().map(|(n, v)| (n.clone(), v as &dyn Measurer)).collect();
+                let fleet: Vec<&str> = devs.iter().map(|d| d.name).collect();
+                println!(
+                    "tuning {name} end-to-end across [{}] — {} tasks, {budget} trials \
+                     total, {} allocation, overlap {overlap}, {replicas} board(s)/target",
+                    fleet.join(", "),
+                    sched.plans().len(),
+                    policy.name()
+                );
+                let alloc = sched.run_tuning_multi(
+                    &measurers,
+                    &db,
+                    opts.tune_options(),
+                    args.has("pipeline"),
+                    !args.has("no-warm-start"),
+                );
+                println!(
+                    "task                                    target    weight  trials  best ms"
+                );
+                for (i, plan) in sched.plans().iter().enumerate() {
+                    println!(
+                        "{:<40} {:<9} {:>5}  {:>6}  {:>8.4}",
+                        plan.task.key(),
+                        plan.target.as_deref().unwrap_or("-"),
+                        plan.weight,
+                        alloc.trials[i],
+                        alloc.secs[i] * 1e3
+                    );
+                }
+                for d in &devs {
+                    let total: usize = sched
+                        .plans()
+                        .iter()
+                        .zip(&alloc.trials)
+                        .filter(|(p, _)| p.target.as_deref() == Some(d.name))
+                        .map(|(_, &t)| t)
+                        .sum();
+                    println!("target {}: {} trials", d.name, total);
+                }
+                // per-target end-to-end: vendor baseline on the unfused
+                // graph vs tuned configs served from the shared DB
+                for d in &devs {
+                    let template = TemplateKind::for_class(d.class);
+                    let (base_s, _) = graph
+                        .latency(d, template, |t| Some(crate::baselines::vendor_config(t)))?;
+                    let (auto_s, _) = fused.latency(d, template, |t| {
+                        db.best_config(&t.key(), d.name).map(|(e, _)| e)
+                    })?;
+                    println!(
+                        "end-to-end on {}: vendor {:.3} ms, autotvm {:.3} ms ({:.2}x)",
+                        d.name,
+                        base_s * 1e3,
+                        auto_s * 1e3,
+                        base_s / auto_s
+                    );
+                }
+                println!(
+                    "scheduler estimate {:.3} ms across the fleet (fixed glue {:.3} ms)",
+                    alloc.est_latency * 1e3,
+                    sched.fixed_secs() * 1e3
+                );
+                if let Some(path) = args.get("db") {
+                    println!("tuning DB: {path} ({} records)", db.len());
+                }
+                println!("{}", svc.report());
+                return Ok(());
+            }
+            let sched = TaskScheduler::from_graph(&fused, &dev, template, sched_opts)?;
             let budget =
                 args.get_usize("budget", sched.plans().len().max(1) * opts.trials);
             let sched = sched.with_budget(budget);
@@ -696,6 +827,7 @@ USAGE:
                     [--replicas R] [--measure-timeout MS] \\
                     [--farm-latency-ms MS] [--flaky P]
   autotvm tune-graph <resnet18|mobilenet|dqn|lstm|dcgan> --device sim-gpu \\
+                    [--targets cpu,gpu] \\
                     [--budget N] [--slice S] [--alloc uniform|gradient] \\
                     [--overlap N] [--gain-ema A] [--no-fast-paths] \\
                     [--db file.jsonl] [--pipeline] [--no-warm-start] [--verbose] \\
@@ -734,6 +866,15 @@ tune-graph spreads one global trial budget across a network's tasks:
 --alloc gradient (default) allocates each round-slice to the task with
 the highest predicted end-to-end latency reduction; --alloc uniform is
 the equal-shares baseline.
+
+--targets cpu,gpu deploys the network to several devices at once: the
+scheduler spends one global budget across the tasks × targets
+cross-product, measurement runs on a heterogeneous farm (one board
+class per target, --replicas boards each, class-aware dispatch so a
+trial for target T only lands on boards serving T), and each target's
+searches warm-start from the records of the others (cross-target
+transfer at reduced weight). Accepts cpu/gpu/mali/tpu or full sim-*
+device names.
 
 --overlap N keeps up to N task-slices in flight at once: task B
 proposes and refits while task A's batches drain on the farm, with

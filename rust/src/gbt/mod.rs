@@ -123,7 +123,24 @@ impl Gbt {
     /// contiguous group sizes for the rank objective (empty = one
     /// global group).
     pub fn train(x: &Matrix, y: &[f64], groups: &[usize], params: GbtParams) -> Gbt {
-        Self::train_impl(x, y, groups, None, params)
+        Self::train_impl(x, y, groups, None, None, params)
+    }
+
+    /// [`train`](Self::train) with a weight per rank group (must match
+    /// `groups` in length): each group's gradient and hessian
+    /// contributions are scaled by its weight, down-weighting
+    /// lower-trust sources without dropping them. The cross-target
+    /// warm-start tier uses this — same-target sibling groups at 1.0,
+    /// other-target groups below. Weights of 1.0 everywhere reproduce
+    /// [`train`](Self::train) bit-for-bit (no extra RNG draws).
+    pub fn train_weighted(
+        x: &Matrix,
+        y: &[f64],
+        groups: &[usize],
+        group_weights: &[f64],
+        params: GbtParams,
+    ) -> Gbt {
+        Self::train_impl(x, y, groups, None, Some(group_weights), params)
     }
 
     /// Train with a per-row base margin (XGBoost's `base_margin`):
@@ -138,7 +155,7 @@ impl Gbt {
         margin: &[f64],
         params: GbtParams,
     ) -> Gbt {
-        Self::train_impl(x, y, groups, Some(margin), params)
+        Self::train_impl(x, y, groups, Some(margin), None, params)
     }
 
     fn train_impl(
@@ -146,6 +163,7 @@ impl Gbt {
         y: &[f64],
         groups: &[usize],
         margin: Option<&[f64]>,
+        group_weights: Option<&[f64]>,
         params: GbtParams,
     ) -> Gbt {
         assert_eq!(x.rows, y.len());
@@ -156,6 +174,9 @@ impl Gbt {
         let groups_vec: Vec<usize> =
             if groups.is_empty() { vec![x.rows] } else { groups.to_vec() };
         assert_eq!(groups_vec.iter().sum::<usize>(), x.rows, "groups must cover rows");
+        if let Some(w) = group_weights {
+            assert_eq!(w.len(), groups_vec.len(), "one weight per group");
+        }
 
         let base = match (margin, params.objective) {
             (Some(_), _) => 0.0,
@@ -172,7 +193,7 @@ impl Gbt {
         let mut trees = Vec::with_capacity(params.n_trees);
         let threads = crate::util::default_threads();
         for _ in 0..params.n_trees {
-            let (g, h) = gradients(&params, y, &preds, &groups_vec, &mut rng);
+            let (g, h) = gradients(&params, y, &preds, &groups_vec, group_weights, &mut rng);
             let tree = Tree::fit(&binned, &binner, &g, &h, &params, &mut rng, threads);
             for i in 0..x.rows {
                 preds[i] += params.eta * tree.predict(x.row(i));
@@ -215,24 +236,42 @@ fn gradients(
     y: &[f64],
     preds: &[f64],
     groups: &[usize],
+    group_weights: Option<&[f64]>,
     rng: &mut Rng,
 ) -> (Vec<f64>, Vec<f64>) {
     let n = y.len();
     let mut g = vec![0f64; n];
     let mut h = vec![0f64; n];
     match params.objective {
-        Objective::Regression => {
-            for i in 0..n {
-                g[i] = preds[i] - y[i];
-                h[i] = 1.0;
+        Objective::Regression => match group_weights {
+            None => {
+                for i in 0..n {
+                    g[i] = preds[i] - y[i];
+                    h[i] = 1.0;
+                }
             }
-        }
+            Some(ws) => {
+                // per-row weight = weight of the row's group
+                let mut start = 0;
+                for (gi, &len) in groups.iter().enumerate() {
+                    for i in start..start + len {
+                        g[i] = ws[gi] * (preds[i] - y[i]);
+                        h[i] = ws[gi];
+                    }
+                    start += len;
+                }
+            }
+        },
         Objective::Rank => {
             // pairwise logistic: loss = Σ log(1 + exp(-(f_i - f_j)))
-            // over pairs with y_i > y_j, pairs sampled per group
+            // over pairs with y_i > y_j, pairs sampled per group; a
+            // group weight scales its pairs' g/h contributions (1.0 —
+            // or no weights at all — leaves the math untouched, and the
+            // RNG stream never depends on the weights)
             let mut start = 0;
-            for &len in groups {
+            for (gi, &len) in groups.iter().enumerate() {
                 let end = start + len;
+                let w = group_weights.map_or(1.0, |ws| ws[gi]);
                 if len >= 2 {
                     for i in start..end {
                         for _ in 0..params.rank_pairs.min(len - 1) {
@@ -243,9 +282,9 @@ fn gradients(
                             let (hi, lo) = if y[i] > y[j] { (i, j) } else { (j, i) };
                             let s = preds[hi] - preds[lo];
                             let sig = 1.0 / (1.0 + s.exp()); // d loss/d s (neg)
-                            g[hi] -= sig;
-                            g[lo] += sig;
-                            let hh = (sig * (1.0 - sig)).max(1e-6);
+                            g[hi] -= w * sig;
+                            g[lo] += w * sig;
+                            let hh = w * (sig * (1.0 - sig)).max(1e-6);
                             h[hi] += hh;
                             h[lo] += hh;
                         }
@@ -360,6 +399,54 @@ mod tests {
             y.push(t);
         }
         (Matrix::new(n, cols, data), y)
+    }
+
+    #[test]
+    fn unit_group_weights_match_unweighted_bitwise() {
+        let (x, y) = synthetic(300, 6, 3);
+        let groups = vec![100, 100, 100];
+        for objective in [Objective::Regression, Objective::Rank] {
+            let params = GbtParams { objective, n_trees: 20, seed: 5, ..Default::default() };
+            let a = Gbt::train(&x, &y, &groups, params.clone());
+            let b = Gbt::train_weighted(&x, &y, &groups, &[1.0, 1.0, 1.0], params);
+            for i in 0..x.rows {
+                assert_eq!(
+                    a.predict(x.row(i)),
+                    b.predict(x.row(i)),
+                    "all-1.0 weights must be bit-identical ({objective:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn down_weighted_group_pulls_less() {
+        // two groups with conflicting labels on identical features: the
+        // heavier group must dominate the fit
+        let mut data = Vec::new();
+        let mut y = Vec::new();
+        let mut rng = Rng::seed_from_u64(9);
+        let n = 200;
+        let rows: Vec<Vec<f32>> =
+            (0..n).map(|_| (0..4).map(|_| rng.gen_f64() as f32).collect()).collect();
+        for r in &rows {
+            data.extend_from_slice(r);
+            y.push(1.0);
+        }
+        for r in &rows {
+            data.extend_from_slice(r);
+            y.push(-1.0);
+        }
+        let x = Matrix::new(2 * n, 4, data);
+        let params = GbtParams {
+            objective: Objective::Regression,
+            n_trees: 30,
+            ..Default::default()
+        };
+        let m = Gbt::train_weighted(&x, &y, &[n, n], &[1.0, 0.25], params);
+        let preds = m.predict_batch(&x);
+        let mu = crate::util::mean(&preds);
+        assert!(mu > 0.3, "weight-1.0 group (+1 labels) should dominate, mean {mu}");
     }
 
     #[test]

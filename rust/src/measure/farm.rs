@@ -8,9 +8,14 @@
 //! farm) and as the sim-backed [`MeasurerFactory`] behind the
 //! asynchronous [`MeasureService`] (each service worker builds its own
 //! per-replica board, with the farm's RTT and flakiness applied
-//! per-board). [`FlakyMeasurer`] injects seeded failures into any
-//! back-end and [`LatencyMeasurer`] adds per-candidate round-trip
-//! latency, so tests and benches can emulate slow, unreliable fleets.
+//! per-board). [`HeteroFarm`] generalizes the factory path to a
+//! *heterogeneous* fleet: several [`BoardClass`]es with distinct
+//! perf/noise/RTT/flakiness profiles behind one factory, each board
+//! advertising its device via [`MeasurerFactory::target_of`] so the
+//! service can dispatch class-aware. [`FlakyMeasurer`] injects seeded
+//! failures into any back-end and [`LatencyMeasurer`] adds
+//! per-candidate round-trip latency, so tests and benches can emulate
+//! slow, unreliable fleets.
 //!
 //! [`MeasureService`]: super::service::MeasureService
 //! [`MeasurerFactory`]: super::service::MeasurerFactory
@@ -26,6 +31,14 @@ use std::time::Duration;
 /// Decorrelated per-replica noise seed (real boards differ run to run).
 fn replica_seed(base: u64, replica: usize) -> u64 {
     base.wrapping_add(replica as u64 * 1_000_003)
+}
+
+/// Decorrelated per-class seed base. Class 0 maps to `base` unchanged,
+/// so a single-class [`HeteroFarm`] reproduces a [`DeviceFarm`] with
+/// the same seed bit-for-bit — and resizing class `k` never perturbs
+/// the noise streams of any other class.
+fn class_seed(base: u64, class: usize) -> u64 {
+    base.wrapping_add(class as u64 * 0x9E37_79B9_7F4A_7C15)
 }
 
 /// A farm of simulated boards of the same device type.
@@ -118,6 +131,124 @@ impl MeasurerFactory for DeviceFarm {
 
     fn board(&self) -> String {
         self.device.name.to_string()
+    }
+}
+
+/// One class of boards in a heterogeneous fleet: a device model plus
+/// the class's own replica count, RTT and flakiness profile. Real
+/// fleets mix low-power CPUs, mobile GPUs and server GPUs with very
+/// different perf/noise/latency characteristics — a [`HeteroFarm`] is a
+/// list of these.
+#[derive(Clone)]
+pub struct BoardClass {
+    /// The simulated device every board of this class measures on
+    /// (its `noise_sigma` is the class's noise profile).
+    pub device: crate::sim::DeviceModel,
+    /// Boards of this class in the fleet.
+    pub replicas: usize,
+    /// Per-candidate RPC round-trip of this class's boards.
+    pub latency: Duration,
+    /// Per-candidate failure probability of this class's boards.
+    pub fail_prob: f64,
+}
+
+impl BoardClass {
+    /// `replicas` reliable, zero-RTT boards of `device`.
+    pub fn new(device: crate::sim::DeviceModel, replicas: usize) -> Self {
+        BoardClass { device, replicas, latency: Duration::ZERO, fail_prob: 0.0 }
+    }
+
+    /// Builder: per-candidate RTT of this class's boards.
+    pub fn with_latency(mut self, latency: Duration) -> Self {
+        self.latency = latency;
+        self
+    }
+
+    /// Builder: per-candidate failure probability of this class's
+    /// boards (seeded per board on the factory path).
+    pub fn with_flakiness(mut self, fail_prob: f64) -> Self {
+        self.fail_prob = fail_prob;
+        self
+    }
+}
+
+/// A heterogeneous device fleet: several [`BoardClass`]es behind one
+/// [`MeasurerFactory`]. Global replica indices are assigned
+/// contiguously class by class (class 0 gets `0..n0`, class 1 gets
+/// `n0..n0+n1`, …), each board draws its noise stream from a
+/// class-local seed base ([`class_seed`]), and
+/// [`MeasurerFactory::target_of`] reports each board's device name —
+/// the hook the [`MeasureService`] uses for class-aware dispatch, so a
+/// job submitted for target T only ever lands on boards serving T.
+///
+/// [`MeasureService`]: super::service::MeasureService
+pub struct HeteroFarm {
+    classes: Vec<BoardClass>,
+    base_seed: u64,
+}
+
+impl HeteroFarm {
+    /// Fleet of the given classes (at least one, each with at least one
+    /// board — a fleet advertising a target it cannot serve would turn
+    /// every job for that target into an immediate error).
+    pub fn new(classes: Vec<BoardClass>, seed: u64) -> Self {
+        assert!(!classes.is_empty(), "heterogeneous farm needs at least one class");
+        assert!(
+            classes.iter().all(|c| c.replicas > 0),
+            "every board class needs at least one replica"
+        );
+        HeteroFarm { classes, base_seed: seed }
+    }
+
+    /// The fleet's classes, in replica-index order.
+    pub fn classes(&self) -> &[BoardClass] {
+        &self.classes
+    }
+
+    /// `(class index, index within class)` of a global replica index.
+    fn locate(&self, replica: usize) -> (usize, usize) {
+        let mut offset = 0;
+        for (ci, c) in self.classes.iter().enumerate() {
+            if replica < offset + c.replicas {
+                return (ci, replica - offset);
+            }
+            offset += c.replicas;
+        }
+        panic!("replica {replica} out of range for {}-board fleet", offset);
+    }
+}
+
+impl MeasurerFactory for HeteroFarm {
+    fn make(&self, replica: usize) -> anyhow::Result<Box<dyn Measurer>> {
+        let (ci, within) = self.locate(replica);
+        let class = &self.classes[ci];
+        let seed_base = class_seed(self.base_seed, ci);
+        let board = LatencyMeasurer {
+            inner: SimMeasurer::with_seed(class.device.clone(), replica_seed(seed_base, within)),
+            latency: class.latency,
+        };
+        Ok(if class.fail_prob > 0.0 {
+            Box::new(FlakyMeasurer::new(
+                board,
+                class.fail_prob,
+                replica_seed(seed_base ^ 0x5EED_F1A2, within),
+            ))
+        } else {
+            Box::new(board)
+        })
+    }
+
+    fn replicas(&self) -> usize {
+        self.classes.iter().map(|c| c.replicas).sum::<usize>().max(1)
+    }
+
+    fn board(&self) -> String {
+        self.classes[0].device.name.to_string()
+    }
+
+    fn target_of(&self, replica: usize) -> String {
+        let (ci, _) = self.locate(replica);
+        self.classes[ci].device.name.to_string()
     }
 }
 
@@ -266,6 +397,58 @@ mod tests {
         let rs = m.measure(&task, &batch);
         let failures = rs.iter().filter(|r| !r.is_ok()).count();
         assert!((30..100).contains(&failures), "failure count {failures}");
+    }
+
+    #[test]
+    fn single_class_hetero_farm_boards_match_device_farm() {
+        // regression anchor: a one-class HeteroFarm hands out the exact
+        // boards a DeviceFarm with the same seed would (class 0's seed
+        // base is the farm seed unchanged)
+        let task = Task::new(ops::matmul(128, 128, 128), TemplateKind::Gpu);
+        let mut rng = Rng::seed_from_u64(11);
+        let batch: Vec<ConfigEntity> =
+            (0..16).map(|_| task.space.sample(&mut rng)).collect();
+        let mono = DeviceFarm::new(sim_gpu(), 3, 42);
+        let hetero = HeteroFarm::new(vec![BoardClass::new(sim_gpu(), 3)], 42);
+        assert_eq!(mono.replicas(), hetero.replicas());
+        assert_eq!(mono.board(), hetero.board());
+        for r in 0..3 {
+            let a = mono.make(r).unwrap().measure(&task, &batch);
+            let b = hetero.make(r).unwrap().measure(&task, &batch);
+            assert_eq!(hetero.target_of(r), "sim-gpu");
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.gflops, y.gflops);
+                assert_eq!(x.error, y.error);
+            }
+        }
+    }
+
+    #[test]
+    fn hetero_farm_maps_replicas_to_classes() {
+        use crate::sim::devices::sim_cpu;
+        let farm = HeteroFarm::new(
+            vec![BoardClass::new(sim_cpu(), 2), BoardClass::new(sim_gpu(), 3)],
+            7,
+        );
+        assert_eq!(farm.replicas(), 5);
+        let targets: Vec<String> = (0..5).map(|r| farm.target_of(r)).collect();
+        assert_eq!(targets, ["sim-cpu", "sim-cpu", "sim-gpu", "sim-gpu", "sim-gpu"]);
+        // growing one class never perturbs another class's seed base:
+        // replica 2 here (gpu board 0) matches gpu board 0 of a fleet
+        // with a different cpu-class size
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+        let mut rng = Rng::seed_from_u64(3);
+        let batch: Vec<ConfigEntity> =
+            (0..8).map(|_| task.space.sample(&mut rng)).collect();
+        let farm2 = HeteroFarm::new(
+            vec![BoardClass::new(sim_cpu(), 4), BoardClass::new(sim_gpu(), 3)],
+            7,
+        );
+        let a = farm.make(2).unwrap().measure(&task, &batch);
+        let b = farm2.make(4).unwrap().measure(&task, &batch);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.gflops, y.gflops);
+        }
     }
 
     #[test]

@@ -16,7 +16,11 @@
 //!   [`service::MeasurerFactory`]), sequence-numbered job queues with
 //!   bounded in-flight backpressure, and timeout/retry/quarantine
 //!   board-fault policies, with results delivered deterministically in
-//!   submission order.
+//!   submission order. A heterogeneous fleet
+//!   ([`farm::HeteroFarm`], built from [`farm::BoardClass`] profiles)
+//!   plugs in through the same factory: the service dispatches
+//!   class-aware, so a job for target T only lands on boards serving T
+//!   ([`service::MeasureService::for_target`]).
 
 pub mod farm;
 pub mod pjrt;

@@ -49,6 +49,16 @@
 //! * **Backpressure** — at most [`ServiceOptions::max_inflight`] jobs
 //!   may be in flight; [`MeasureService::submit_batch`] blocks past
 //!   that, so a fast proposer cannot flood the farm.
+//! * **Class-aware dispatch** — a heterogeneous fleet
+//!   ([`HeteroFarm`](super::farm::HeteroFarm)) reports each replica's
+//!   device through [`MeasurerFactory::target_of`];
+//!   [`MeasureService::submit_batch_for`] (and the per-class
+//!   [`TargetedMeasurer`] views from
+//!   [`for_target`](MeasureService::for_target)) then restrict
+//!   dispatch, retry, and relocation to boards serving the job's
+//!   target. When no board of the class can accept work the job
+//!   degrades to an error result — measuring on another class's board
+//!   would produce numbers for the wrong device.
 //!
 //! The service implements [`Measurer`], so every loop (`serial_loop`,
 //! the pipelined measure stage, graph-scheduler slices) runs through it
@@ -86,6 +96,17 @@ pub trait MeasurerFactory: Send + Sync {
 
     /// Board name for logs and records (e.g. `sim-gpu`).
     fn board(&self) -> String;
+
+    /// Target (device) served by replica `replica` — the class-aware
+    /// dispatch hook. Homogeneous farms serve one target everywhere
+    /// (the default); a heterogeneous fleet
+    /// ([`HeteroFarm`](super::farm::HeteroFarm)) reports each board's
+    /// own device so [`MeasureService::submit_batch_for`] only lands a
+    /// job for target T on boards serving T.
+    fn target_of(&self, replica: usize) -> String {
+        let _ = replica;
+        self.board()
+    }
 }
 
 /// Fault and flow-control policy of a [`MeasureService`].
@@ -122,6 +143,10 @@ impl Default for ServiceOptions {
 pub struct FarmStats {
     /// Jobs dispatched to each replica (a retry counts again).
     pub jobs: Vec<u64>,
+    /// Target (device) served by each replica — parallel to `jobs`;
+    /// all entries equal for a homogeneous farm, per-class for a
+    /// [`HeteroFarm`](super::farm::HeteroFarm).
+    pub targets: Vec<String>,
     /// Seconds each replica spent measuring.
     pub busy_secs: Vec<f64>,
     /// Jobs completed (one per submitted job, however many attempts).
@@ -156,6 +181,28 @@ impl FarmStats {
             return 0.0;
         }
         self.busy_secs.iter().sum::<f64>() / self.window_secs
+    }
+
+    /// Jobs dispatched to replicas serving `target` (retries count
+    /// again) — the class-aware slice of `jobs`.
+    pub fn jobs_for(&self, target: &str) -> u64 {
+        self.jobs
+            .iter()
+            .zip(&self.targets)
+            .filter(|(_, t)| t.as_str() == target)
+            .map(|(&j, _)| j)
+            .sum()
+    }
+
+    /// Distinct targets served by the farm, in replica order.
+    pub fn distinct_targets(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for t in &self.targets {
+            if !out.contains(t) {
+                out.push(t.clone());
+            }
+        }
+        out
     }
 }
 
@@ -202,6 +249,10 @@ struct Pending {
     /// Task identity for the per-task in-flight accounting (shared by
     /// every job of a batch).
     task_key: Arc<String>,
+    /// Class-aware dispatch filter: `Some(t)` restricts every dispatch
+    /// (including retries and relocations) to replicas serving target
+    /// `t`; `None` means any replica may run the job.
+    target: Option<Arc<String>>,
     task: Arc<Task>,
     entity: ConfigEntity,
 }
@@ -265,6 +316,10 @@ struct Inner {
     cv: Condvar,
     opts: ServiceOptions,
     n: usize,
+    /// Target served by each replica (`MeasurerFactory::target_of`),
+    /// immutable for the service's lifetime — the class map that
+    /// target-filtered dispatch consults.
+    replica_targets: Vec<String>,
 }
 
 impl Inner {
@@ -278,7 +333,18 @@ impl Inner {
     /// may never start, and the timeout clock only arms for started
     /// attempts — so with only suspect candidates left this returns
     /// `None` and the caller fails the job instead of stranding it.
-    fn pick_replica(&self, st: &State, seq: u64, exclude: &[usize]) -> Option<usize> {
+    /// With `target = Some(t)`, only replicas serving target `t` are
+    /// candidates in *both* passes — a job for one device class never
+    /// lands on another class's board, even when the serving class is
+    /// fully quarantined or suspect (degrading that class's jobs to
+    /// errors rather than producing measurements for the wrong device).
+    fn pick_replica(
+        &self,
+        st: &State,
+        seq: u64,
+        exclude: &[usize],
+        target: Option<&str>,
+    ) -> Option<usize> {
         let start = (seq % self.n as u64) as usize;
         for pass in 0..2 {
             for i in 0..self.n {
@@ -286,6 +352,7 @@ impl Inner {
                 if exclude.contains(&r)
                     || st.suspect[r]
                     || (pass == 0 && st.quarantined[r])
+                    || target.map_or(false, |t| self.replica_targets[r] != t)
                 {
                     continue;
                 }
@@ -306,7 +373,9 @@ impl Inner {
     fn requeue_or_fail(&self, st: &mut State, seq: u64, at: Instant) {
         if st.pending[&seq].faults <= self.opts.retries {
             let tried = st.pending[&seq].tried.clone();
-            if let Some(next) = self.pick_replica(st, seq, &tried) {
+            let target = st.pending[&seq].target.clone();
+            let filter = target.as_ref().map(|t| t.as_str());
+            if let Some(next) = self.pick_replica(st, seq, &tried, filter) {
                 let job = {
                     let p = st.pending.get_mut(&seq).expect("pending job");
                     p.attempt += 1;
@@ -627,6 +696,7 @@ impl MeasureService {
         // for — a 4-replica sim-gpu farm produces sim-gpu records. The
         // farm shape is run metadata, reported via `report()`.
         let target = factory.board();
+        let replica_targets: Vec<String> = (0..n).map(|r| factory.target_of(r)).collect();
         let (ev_tx, ev_rx) = mpsc::channel::<Event>();
         let mut worker_txs = Vec::with_capacity(n);
         let mut job_rxs = Vec::with_capacity(n);
@@ -659,6 +729,7 @@ impl MeasureService {
             cv: Condvar::new(),
             opts,
             n,
+            replica_targets,
         });
         let workers: Vec<_> = job_rxs
             .into_iter()
@@ -695,8 +766,27 @@ impl MeasureService {
     /// batch's sequence numbers, to be redeemed with
     /// [`wait_batch`](Self::wait_batch).
     pub fn submit_batch(&self, task: &Task, batch: &[ConfigEntity]) -> Vec<u64> {
+        self.submit_batch_for(None, task, batch)
+    }
+
+    /// [`submit_batch`](Self::submit_batch) with a class-aware dispatch
+    /// filter: `Some(t)` restricts the batch — initial dispatch, fault
+    /// retries and stall relocations alike — to replicas whose
+    /// [`MeasurerFactory::target_of`] equals `t`. When no replica of
+    /// that class can accept work (all suspect, or no replica serves
+    /// `t` at all) the jobs complete as error results immediately:
+    /// routing elsewhere would measure on the wrong device, so the
+    /// class degrades rather than lies.
+    pub fn submit_batch_for(
+        &self,
+        target: Option<&str>,
+        task: &Task,
+        batch: &[ConfigEntity],
+    ) -> Vec<u64> {
         let task_key = Arc::new(task.key());
         let task = Arc::new(task.clone());
+        let target: Option<Arc<String>> = target.map(|t| Arc::new(t.to_string()));
+        let filter = target.as_ref().map(|t| t.as_str());
         let mut seqs = Vec::with_capacity(batch.len());
         let mut st = self.inner.state.lock().unwrap();
         for e in batch {
@@ -705,12 +795,16 @@ impl MeasureService {
             }
             let seq = st.next_seq;
             st.next_seq += 1;
-            // No responsive board at all (every replica wedged
-            // mid-measurement): fail the job now rather than queue it
+            // No responsive board serving this job (every candidate
+            // replica wedged mid-measurement, or none serves the
+            // requested target): fail the job now rather than queue it
             // where the timeout clock can never arm.
-            let Some(replica) = self.inner.pick_replica(&st, seq, &[]) else {
-                st.results
-                    .insert(seq, MeasureResult::err("no responsive board in the farm"));
+            let Some(replica) = self.inner.pick_replica(&st, seq, &[], filter) else {
+                let msg = match filter {
+                    Some(t) => format!("no responsive board serving {t}"),
+                    None => "no responsive board in the farm".to_string(),
+                };
+                st.results.insert(seq, MeasureResult::err(msg));
                 st.completed += 1;
                 seqs.push(seq);
                 continue;
@@ -724,6 +818,7 @@ impl MeasureService {
                     started: None,
                     last_fault: String::new(),
                     task_key: task_key.clone(),
+                    target: target.clone(),
                     task: task.clone(),
                     entity: e.clone(),
                 },
@@ -776,6 +871,7 @@ impl MeasureService {
         let st = self.inner.state.lock().unwrap();
         FarmStats {
             jobs: st.jobs.clone(),
+            targets: self.inner.replica_targets.clone(),
             busy_secs: st.busy.iter().map(|d| d.as_secs_f64()).collect(),
             completed: st.completed,
             retries: st.retries,
@@ -797,9 +893,10 @@ impl MeasureService {
     }
 
     /// One-line human summary of [`stats`](Self::stats) for CLI reports.
+    /// A heterogeneous fleet appends per-target job counts.
     pub fn report(&self) -> String {
         let s = self.stats();
-        format!(
+        let mut line = format!(
             "farm: {} jobs on {} replicas, utilization {:.2}x, peak task overlap {} \
              (retries {}, timeouts {}, other faults {}, quarantined {})",
             s.completed,
@@ -810,7 +907,54 @@ impl MeasureService {
             s.timeouts,
             s.panics,
             s.quarantined.iter().filter(|&&q| q).count(),
-        )
+        );
+        let classes = s.distinct_targets();
+        if classes.len() > 1 {
+            let per: Vec<String> =
+                classes.iter().map(|t| format!("{t}: {}", s.jobs_for(t))).collect();
+            line.push_str(&format!(", jobs by target [{}]", per.join(", ")));
+        }
+        line
+    }
+
+    /// A [`Measurer`] view of this service restricted to boards serving
+    /// `target`: every batch it submits carries the class filter, and
+    /// its [`Measurer::target`] reports `target` — so records streamed
+    /// into the tuning DB by a loop driving this view are stamped with
+    /// the device they were measured on, not the fleet-wide board name.
+    pub fn for_target(&self, target: &str) -> TargetedMeasurer<'_> {
+        TargetedMeasurer { service: self, target: target.to_string() }
+    }
+}
+
+/// Class-restricted [`Measurer`] view of a [`MeasureService`] — see
+/// [`MeasureService::for_target`]. One service can hand out several of
+/// these (one per device class), letting a multi-target scheduler run
+/// every class's loops over a single shared fleet.
+pub struct TargetedMeasurer<'a> {
+    service: &'a MeasureService,
+    target: String,
+}
+
+impl Measurer for TargetedMeasurer<'_> {
+    fn measure(&self, task: &Task, batch: &[ConfigEntity]) -> Vec<MeasureResult> {
+        let seqs = self.service.submit_batch_for(Some(&self.target), task, batch);
+        self.service.wait_batch(&seqs)
+    }
+
+    fn target(&self) -> String {
+        self.target.clone()
+    }
+
+    fn submit(&self, task: &Task, batch: &[ConfigEntity]) -> BatchTicket {
+        BatchTicket::pending(self.service.submit_batch_for(Some(&self.target), task, batch))
+    }
+
+    fn wait(&self, ticket: BatchTicket) -> Vec<MeasureResult> {
+        match ticket.into_parts() {
+            (Some(ready), _) => ready,
+            (None, seqs) => self.service.wait_batch(&seqs),
+        }
     }
 }
 
@@ -973,6 +1117,55 @@ mod tests {
         assert_eq!(s.peak_tasks_overlapped, 2, "both tasks were in flight at once");
         assert!(s.inflight_by_task.is_empty(), "accounting must drain: {:?}", s.inflight_by_task);
         assert!(svc.report().contains("peak task overlap 2"));
+    }
+
+    #[test]
+    fn targeted_dispatch_lands_only_on_matching_boards() {
+        use crate::measure::farm::{BoardClass, HeteroFarm};
+        use crate::sim::devices::sim_cpu;
+        let cpu_task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu);
+        let gpu_task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+        let farm = HeteroFarm::new(
+            vec![BoardClass::new(sim_cpu(), 2), BoardClass::new(sim_gpu(), 3)],
+            11,
+        );
+        let svc = MeasureService::with_defaults(Arc::new(farm));
+        let bc = batch(&cpu_task, 6, 1);
+        let bg = batch(&gpu_task, 9, 2);
+        let cpu_view = svc.for_target("sim-cpu");
+        let gpu_view = svc.for_target("sim-gpu");
+        assert_eq!(cpu_view.target(), "sim-cpu");
+        let rc = cpu_view.measure(&cpu_task, &bc);
+        let rg = gpu_view.measure(&gpu_task, &bg);
+        assert!(rc.iter().all(|r| r.is_ok()), "cpu jobs must succeed");
+        assert!(rg.iter().all(|r| r.is_ok()), "gpu jobs must succeed");
+        let s = svc.stats();
+        assert_eq!(s.targets, vec!["sim-cpu", "sim-cpu", "sim-gpu", "sim-gpu", "sim-gpu"]);
+        assert_eq!(s.jobs_for("sim-cpu"), 6, "cpu jobs only on cpu boards");
+        assert_eq!(s.jobs_for("sim-gpu"), 9, "gpu jobs only on gpu boards");
+        assert_eq!(s.distinct_targets(), vec!["sim-cpu", "sim-gpu"]);
+        assert!(svc.report().contains("jobs by target ["), "report: {}", svc.report());
+    }
+
+    #[test]
+    fn targeted_dispatch_fails_fast_for_unserved_target() {
+        use crate::measure::farm::{BoardClass, HeteroFarm};
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+        let farm = HeteroFarm::new(vec![BoardClass::new(sim_gpu(), 2)], 5);
+        let svc = MeasureService::with_defaults(Arc::new(farm));
+        let b = batch(&task, 3, 4);
+        let r = svc.for_target("sim-tpu-v6e").measure(&task, &b);
+        assert_eq!(r.len(), 3);
+        for res in &r {
+            let err = res.error.as_deref().unwrap_or("");
+            assert!(
+                err.contains("no responsive board serving sim-tpu-v6e"),
+                "unexpected error: {err:?}"
+            );
+        }
+        // the farm itself is untouched — real boards still serve
+        let ok = svc.for_target("sim-gpu").measure(&task, &b);
+        assert!(ok.iter().all(|x| x.is_ok()));
     }
 
     #[test]

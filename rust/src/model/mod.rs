@@ -232,6 +232,38 @@ fn erf(x: f64) -> f64 {
     sign * y
 }
 
+/// Relative gradient weight of cross-target source rows (tier 2) in a
+/// tiered warm start: records measured on *another* device rank below
+/// same-target sibling records (weight 1.0) but still shape the global
+/// model — [`Representation::ContextRelation`] features are
+/// target-invariant, so the *ordering* signal transfers even though
+/// absolute throughput does not.
+///
+/// [`Representation::ContextRelation`]: crate::features::Representation::ContextRelation
+pub const CROSS_TARGET_WEIGHT: f64 = 0.3;
+
+/// What a tiered warm start ([`TransferModel::warm_start_tiered`]) was
+/// built from — callers use it to log the provenance of the global
+/// model (the multi-target report greps for the cross-target line).
+#[derive(Clone, Debug)]
+pub struct WarmStartStats {
+    /// Same-target sibling tasks offered to tier 1.
+    pub same_target_tasks: usize,
+    /// Training rows contributed by tier 1 (same-target siblings).
+    pub same_target_rows: usize,
+    /// Other targets contributing tier-2 rows, in sorted order.
+    pub cross_targets: Vec<String>,
+    /// Training rows contributed by tier 2 (cross-target records).
+    pub cross_target_rows: usize,
+}
+
+impl WarmStartStats {
+    /// Whether any cross-target rows entered the global model.
+    pub fn used_cross_target(&self) -> bool {
+        self.cross_target_rows > 0
+    }
+}
+
 /// Transfer-learning model (Eq. 4): a frozen global model plus a local
 /// model trained on the current task. The local model is trained with
 /// the (linearly calibrated) global predictions as base margin, so
@@ -270,6 +302,29 @@ impl TransferModel {
         }
     }
 
+    /// [`from_source`](Self::from_source) with a weight per rank group
+    /// ([`Gbt::train_weighted`]) — the tiered warm start trains its
+    /// global model through this, same-target groups at 1.0 and
+    /// cross-target groups at [`CROSS_TARGET_WEIGHT`].
+    pub fn from_source_weighted(
+        x: &Matrix,
+        y: &[f64],
+        groups: &[usize],
+        group_weights: &[f64],
+        params: GbtParams,
+    ) -> TransferModel {
+        let global = Gbt::train_weighted(x, y, groups, group_weights, params.clone());
+        let global_plan = global.compile();
+        TransferModel {
+            global,
+            global_plan,
+            calib: (1.0, 0.0),
+            local: None,
+            local_plan: None,
+            params,
+        }
+    }
+
     /// The one warm-start entry point of the service layer: given the
     /// shared DB and an inventory of `candidates` the caller knows how
     /// to lower, build the Eq.-4 global model for `target_task` from
@@ -284,7 +339,12 @@ impl TransferModel {
     /// (`experiments::warm_start_model`, over the full known-task
     /// inventory) and the graph scheduler's (`LoopExecutor`, over the
     /// plan's sibling tasks) — are thin wrappers over this function;
-    /// they differ only in which inventory they pass.
+    /// they differ only in which inventory they pass. Since the
+    /// heterogeneous-fleet tier this delegates to
+    /// [`warm_start_tiered`](Self::warm_start_tiered), which
+    /// additionally folds in down-weighted records from *other*
+    /// targets; callers that want the provenance call the tiered entry
+    /// point directly.
     ///
     /// [`Representation::ContextRelation`]: crate::features::Representation::ContextRelation
     pub fn warm_start(
@@ -295,35 +355,122 @@ impl TransferModel {
         objective: crate::gbt::Objective,
         seed: u64,
     ) -> Option<TransferModel> {
+        Self::warm_start_tiered(db, candidates, target_task, target, objective, seed)
+            .map(|(m, _)| m)
+    }
+
+    /// [`warm_start`](Self::warm_start), reporting provenance — and the
+    /// home of the **cross-target source tier**. `D'` is assembled in
+    /// two tiers of rank groups:
+    ///
+    /// * **Tier 1 (weight 1.0)** — records of sibling candidates on
+    ///   `target` itself, exactly what [`warm_start`](Self::warm_start)
+    ///   always used.
+    /// * **Tier 2 (weight [`CROSS_TARGET_WEIGHT`])** — records of any
+    ///   candidate (including `target_task`'s own siblings under
+    ///   another template) on *other* targets present in the DB. The
+    ///   invariant representation makes these rows featurize
+    ///   byte-identically to same-target rows, and per-task label
+    ///   normalization plus the rank objective mean only within-task
+    ///   *order* is learned — the part that transfers across devices.
+    ///
+    /// With no cross-target rows in the DB the trained model is
+    /// bit-identical to the tier-1-only [`warm_start`](Self::warm_start)
+    /// of old (unit weights reproduce unweighted training exactly). A
+    /// CPU-warm-started GPU search — tier 1 empty because templates
+    /// differ per device class, tier 2 carrying the CPU records — is
+    /// the case the old single-tier path returned `None` for.
+    pub fn warm_start_tiered(
+        db: &crate::tuner::db::TuningDb,
+        candidates: &[crate::schedule::template::Task],
+        target_task: &crate::schedule::template::Task,
+        target: &str,
+        objective: crate::gbt::Objective,
+        seed: u64,
+    ) -> Option<(TransferModel, WarmStartStats)> {
         if db.is_empty() {
             return None;
         }
-        let have: std::collections::HashSet<String> =
-            db.task_keys(target).into_iter().collect();
-        if have.is_empty() {
-            return None;
-        }
+        let target = crate::tuner::db::canonical_target(target);
         let target_key = target_task.key();
-        let sources: Vec<&crate::schedule::template::Task> = candidates
+        let repr = crate::features::Representation::ContextRelation;
+        // Tier 1: same-target siblings.
+        let have: std::collections::HashSet<String> =
+            db.task_keys(&target).into_iter().collect();
+        let tier1: Vec<&crate::schedule::template::Task> = candidates
             .iter()
             .filter(|t| {
                 let k = t.key();
                 k != target_key && have.contains(&k)
             })
             .collect();
-        if sources.is_empty() {
+        let (x1, y1, g1) = if tier1.is_empty() {
+            (Matrix::default(), Vec::new(), Vec::new())
+        } else {
+            db.to_training(&tier1, &target, repr, usize::MAX)
+        };
+        let mut stats = WarmStartStats {
+            same_target_tasks: tier1.len(),
+            same_target_rows: x1.rows,
+            cross_targets: Vec::new(),
+            cross_target_rows: 0,
+        };
+        let mut rows = x1.rows;
+        let mut cols = x1.cols;
+        let mut data = x1.data;
+        let mut ys = y1;
+        let mut groups = g1;
+        let mut weights = vec![1.0; groups.len()];
+        // Tier 2: every other target in the DB, in sorted order for
+        // determinism. The target task's own key is *not* excluded
+        // here — its records on another device are the cross-device
+        // signal this tier exists for.
+        let mut others: Vec<String> =
+            db.shard_keys().into_iter().map(|(_, t)| t).filter(|t| *t != target).collect();
+        others.sort();
+        others.dedup();
+        for t2 in others {
+            let have2: std::collections::HashSet<String> =
+                db.task_keys(&t2).into_iter().collect();
+            let srcs: Vec<&crate::schedule::template::Task> =
+                candidates.iter().filter(|t| have2.contains(&t.key())).collect();
+            if srcs.is_empty() {
+                continue;
+            }
+            let (x2, y2, g2) = db.to_training(&srcs, &t2, repr, usize::MAX);
+            if x2.rows == 0 {
+                continue;
+            }
+            if cols == 0 {
+                cols = x2.cols;
+            }
+            if x2.cols != cols {
+                // representation widths must agree to concatenate; an
+                // incompatible source tier is skipped, not fatal
+                continue;
+            }
+            data.extend_from_slice(&x2.data);
+            rows += x2.rows;
+            ys.extend(y2);
+            weights.extend(std::iter::repeat(CROSS_TARGET_WEIGHT).take(g2.len()));
+            groups.extend(g2);
+            stats.cross_target_rows += x2.rows;
+            stats.cross_targets.push(t2);
+        }
+        if rows == 0 {
             return None;
         }
+        let x = Matrix::new(rows, cols, data);
         let params = GbtParams { objective, seed, ..Default::default() };
-        TransferModel::from_db(
-            db,
-            &sources,
-            &target_key,
-            target,
-            crate::features::Representation::ContextRelation,
-            usize::MAX,
-            params,
-        )
+        let model = if stats.used_cross_target() {
+            TransferModel::from_source_weighted(&x, &ys, &groups, &weights, params)
+        } else {
+            // unit weights ≡ unweighted training, but route through the
+            // plain path anyway: the tier-1-only result must stay
+            // bit-identical to the pre-tiering warm start
+            TransferModel::from_source(&x, &ys, &groups, params)
+        };
+        Some((model, stats))
     }
 
     /// Build the Eq.-4 global model straight from the tuning-DB service
@@ -527,6 +674,49 @@ mod tests {
             "transfer {acc_warm} much worse than cold {acc_cold}"
         );
         assert!(acc_warm > 0.8, "transfer model weak: {acc_warm}");
+    }
+
+    #[test]
+    fn tiered_warm_start_uses_cross_target_records() {
+        use crate::expr::ops;
+        use crate::measure::Measurer;
+        use crate::schedule::template::{Task, TemplateKind};
+        let cpu_task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu);
+        let gpu_task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+        let db = crate::tuner::db::TuningDb::new();
+        let m = crate::measure::SimMeasurer::with_seed(crate::sim::devices::sim_cpu(), 1);
+        let mut rng = Rng::seed_from_u64(2);
+        let batch: Vec<_> = (0..24).map(|_| cpu_task.space.sample(&mut rng)).collect();
+        let res = m.measure(&cpu_task, &batch);
+        let recs: Vec<crate::tuner::TrialRecord> = batch
+            .into_iter()
+            .zip(res)
+            .map(|(e, r)| crate::tuner::TrialRecord {
+                entity: e,
+                gflops: r.gflops,
+                seconds: r.seconds,
+                error: r.error,
+            })
+            .collect();
+        db.add_run(&cpu_task, "sim-cpu", &recs).unwrap();
+        // tier 1 is empty (no sim-gpu records, and the GPU template is a
+        // different task key) — the pre-tiering warm start had nothing;
+        // the cross-target tier warm-starts the GPU search from the CPU
+        // records
+        let candidates = vec![cpu_task.clone(), gpu_task.clone()];
+        let (model, stats) = TransferModel::warm_start_tiered(
+            &db,
+            &candidates,
+            &gpu_task,
+            "sim-gpu",
+            Objective::Rank,
+            0,
+        )
+        .expect("cross-target tier should produce a model");
+        assert!(stats.used_cross_target());
+        assert_eq!(stats.same_target_rows, 0);
+        assert_eq!(stats.cross_targets, vec!["sim-cpu".to_string()]);
+        assert!(model.ready());
     }
 
     #[test]

@@ -23,6 +23,20 @@ pub enum TemplateKind {
     Gpu,
 }
 
+impl TemplateKind {
+    /// The template a device class compiles under: CPUs take the CPU
+    /// template; everything else (server GPUs, Mali, TPU-style
+    /// accelerators) takes the GPU template, matching the per-device
+    /// constructors in [`crate::sim::devices`]. The heterogeneous
+    /// scheduler uses this to derive each fleet device's task set.
+    pub fn for_class(class: crate::sim::DeviceClass) -> TemplateKind {
+        match class {
+            crate::sim::DeviceClass::Cpu => TemplateKind::Cpu,
+            crate::sim::DeviceClass::Gpu => TemplateKind::Gpu,
+        }
+    }
+}
+
 /// A tunable operator: expression + template + knob space.
 #[derive(Clone, Debug)]
 pub struct Task {

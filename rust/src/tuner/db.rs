@@ -38,6 +38,12 @@
 //!   lowered+extracted feature rows per `(shard, representation)`, so
 //!   building `D'` for a transfer model re-featurizes only records it
 //!   has never seen, instead of re-lowering the whole log every call.
+//! * **Canonical target keys** — record targets and lookup targets are
+//!   both normalized through [`canonical_target`] at the DB boundary:
+//!   farm-topology / fault-injection wrappers (`farm(4xsim-gpu)`,
+//!   `flaky(sim-gpu)`) collapse to the board name, so records stamped
+//!   by a wrapped measurer are never silently invisible to warm-start
+//!   and serving lookups keyed by device.
 //! * **Thread-safe handle** — [`TuningDb`] is a cheap `Arc` clone
 //!   (`Send + Sync`); the tuner streams records in live through
 //!   [`crate::tuner::DbSink`] while other threads query.
@@ -419,6 +425,40 @@ fn swap_in_fresh_wal(path: &Path, gen: u64) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Canonical device identity of a target string: farm-topology and
+/// fault-injection wrappers (`farm(4xsim-gpu)`, `flaky(sim-gpu)`,
+/// nested combinations) are stripped, iteratively, down to the board
+/// name they decorate. A record is valid for a *device*, not a fleet
+/// shape — one stamped by a 4-replica farm wrapper must still be found
+/// by a warm-start lookup asking for `sim-gpu`. Applied to every record
+/// entering the index (and the WAL) and to every lookup's `target`
+/// argument, so the write and read sides can never silently drift.
+pub fn canonical_target(raw: &str) -> String {
+    let mut t = raw.trim();
+    loop {
+        if let Some(inner) = t.strip_prefix("flaky(").and_then(|s| s.strip_suffix(')')) {
+            t = inner;
+            continue;
+        }
+        if let Some(inner) = t.strip_prefix("farm(").and_then(|s| s.strip_suffix(')')) {
+            // farm(<replicas>x<board>)
+            let after_count = inner.find('x').and_then(|i| {
+                let (count, rest) = inner.split_at(i);
+                if !count.is_empty() && count.chars().all(|c| c.is_ascii_digit()) {
+                    Some(&rest[1..])
+                } else {
+                    None
+                }
+            });
+            if let Some(rest) = after_count {
+                t = rest;
+                continue;
+            }
+        }
+        return t.to_string();
+    }
+}
+
 fn shard_idx(task_key: &str, target: &str) -> usize {
     let mut h = DefaultHasher::new();
     task_key.hash(&mut h);
@@ -615,8 +655,13 @@ impl TuningDb {
         Ok(())
     }
 
-    /// Index one record (no WAL write).
-    fn insert(&self, rec: Record) {
+    /// Index one record (no WAL write). The record's target is
+    /// normalized to its canonical device identity
+    /// ([`canonical_target`]) — the single in-memory chokepoint, so
+    /// WAL replays of pre-normalization logs land in the right shard
+    /// too.
+    fn insert(&self, mut rec: Record) {
+        rec.target = canonical_target(&rec.target);
         let b = shard_idx(&rec.task_key, &rec.target);
         let mut bucket = self.inner.shards[b].lock().unwrap();
         bucket
@@ -635,7 +680,11 @@ impl TuningDb {
     /// disk, so the file is truncated back to its pre-write length; if
     /// even that fails the WAL is disabled rather than risk mid-file
     /// corruption on the next append.
-    pub fn append(&self, rec: Record) -> anyhow::Result<()> {
+    pub fn append(&self, mut rec: Record) -> anyhow::Result<()> {
+        // Normalize before the WAL write so the on-disk line already
+        // carries the canonical device identity (`insert` re-normalizes
+        // for replayed legacy lines — idempotent).
+        rec.target = canonical_target(&rec.target);
         // In-memory DBs never touch the WAL lock: writers to different
         // shards proceed fully in parallel.
         if !self.inner.wal_enabled.load(Ordering::Acquire) {
@@ -905,16 +954,20 @@ impl TuningDb {
     }
 
     /// Records belonging to one task+target, in insertion order.
+    /// (`target` is looked up by canonical device identity, like every
+    /// query below.)
     pub fn for_task(&self, task_key: &str, target: &str) -> Vec<Record> {
-        let bucket = self.inner.shards[shard_idx(task_key, target)].lock().unwrap();
+        let target = canonical_target(target);
+        let bucket = self.inner.shards[shard_idx(task_key, &target)].lock().unwrap();
         bucket
-            .get(&(task_key.to_string(), target.to_string()))
+            .get(&(task_key.to_string(), target))
             .map(|s| s.records.clone())
             .unwrap_or_default()
     }
 
     /// Sorted task keys with at least one record on `target`.
     pub fn task_keys(&self, target: &str) -> Vec<String> {
+        let target = canonical_target(target);
         let mut keys: Vec<String> = Vec::new();
         for bucket in &self.inner.shards {
             let bucket = bucket.lock().unwrap();
@@ -932,8 +985,9 @@ impl TuningDb {
     /// Best valid config per task — served from the incremental index
     /// in O(1), the graph-compiler hot path.
     pub fn best_config(&self, task_key: &str, target: &str) -> Option<(ConfigEntity, f64)> {
-        let bucket = self.inner.shards[shard_idx(task_key, target)].lock().unwrap();
-        let shard = bucket.get(&(task_key.to_string(), target.to_string()))?;
+        let target = canonical_target(target);
+        let bucket = self.inner.shards[shard_idx(task_key, &target)].lock().unwrap();
+        let shard = bucket.get(&(task_key.to_string(), target))?;
         let (idx, g) = shard.best?;
         Some((ConfigEntity { choices: shard.records[idx].choices.clone() }, g))
     }
@@ -947,8 +1001,9 @@ impl TuningDb {
         task_key: &str,
         target: &str,
     ) -> Option<(ConfigEntity, f64)> {
-        let bucket = self.inner.shards[shard_idx(task_key, target)].lock().unwrap();
-        let shard = bucket.get(&(task_key.to_string(), target.to_string()))?;
+        let target = canonical_target(target);
+        let bucket = self.inner.shards[shard_idx(task_key, &target)].lock().unwrap();
+        let shard = bucket.get(&(task_key.to_string(), target))?;
         shard
             .records
             .iter()
@@ -960,8 +1015,9 @@ impl TuningDb {
     /// Up to `k` best valid configs (descending gflops, ties earliest
     /// first) from the incremental index; `k` is capped at [`TOP_K`].
     pub fn top_k(&self, task_key: &str, target: &str, k: usize) -> Vec<(ConfigEntity, f64)> {
-        let bucket = self.inner.shards[shard_idx(task_key, target)].lock().unwrap();
-        let Some(shard) = bucket.get(&(task_key.to_string(), target.to_string())) else {
+        let target = canonical_target(target);
+        let bucket = self.inner.shards[shard_idx(task_key, &target)].lock().unwrap();
+        let Some(shard) = bucket.get(&(task_key.to_string(), target)) else {
             return Vec::new();
         };
         shard
@@ -995,6 +1051,7 @@ impl TuningDb {
         repr: Representation,
         limit_per_task: usize,
     ) -> (Matrix, Vec<f64>, Vec<usize>) {
+        let target = canonical_target(target);
         let mut sorted: Vec<&Task> = tasks.to_vec();
         sorted.sort_by_key(|t| t.key());
         sorted.dedup_by_key(|t| t.key());
@@ -1002,8 +1059,8 @@ impl TuningDb {
         let mut ys: Vec<f64> = Vec::new();
         let mut groups: Vec<usize> = Vec::new();
         for task in sorted {
-            let key = (task.key(), target.to_string());
-            let bucket_idx = shard_idx(&key.0, target);
+            let key = (task.key(), target.clone());
+            let bucket_idx = shard_idx(&key.0, &target);
             // Phase 1 (locked, cheap): pick the valid records and find
             // which of them the feature cache is missing.
             let (sel, epoch0, missing_idx, missing_ents) = {
@@ -1162,6 +1219,40 @@ mod tests {
         db.add_run(&task, "sim-cpu", &recs).unwrap();
         let (_, g) = db.best_config(&task.key(), "sim-cpu").unwrap();
         assert!(g < 1e12);
+    }
+
+    /// Regression (satellite): records stamped with a *wrapped* board
+    /// name — `farm(4xsim-gpu)` from the in-place [`Measurer`] path of
+    /// a `DeviceFarm`, `flaky(sim-gpu)` from a fault injector — used to
+    /// land in a shard no warm-start lookup keyed by `sim-gpu` could
+    /// see. Target keys are now canonicalized at the DB boundary on
+    /// both the write and read side.
+    #[test]
+    fn wrapped_target_names_hit_device_lookups() {
+        assert_eq!(canonical_target("sim-gpu"), "sim-gpu");
+        assert_eq!(canonical_target("farm(4xsim-gpu)"), "sim-gpu");
+        assert_eq!(canonical_target("flaky(sim-gpu)"), "sim-gpu");
+        assert_eq!(canonical_target("flaky(farm(12xsim-cpu))"), "sim-cpu");
+        // not a topology wrapper: left alone
+        assert_eq!(canonical_target("farm(sim-gpu)"), "farm(sim-gpu)");
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu);
+        let db = Database::new();
+        let recs = sample_records(&task, 12);
+        db.add_run(&task, "farm(4xsim-cpu)", &recs[..6]).unwrap();
+        db.add_run(&task, "flaky(sim-cpu)", &recs[6..]).unwrap();
+        // all 12 records land in — and are served from — the canonical
+        // device shard, whichever spelling the query uses
+        assert_eq!(db.for_task(&task.key(), "sim-cpu").len(), 12);
+        assert_eq!(db.for_task(&task.key(), "farm(2xsim-cpu)").len(), 12);
+        assert!(db.best_config(&task.key(), "sim-cpu").is_some());
+        assert_eq!(db.task_keys("sim-cpu"), vec![task.key()]);
+        assert_eq!(db.task_keys("flaky(sim-cpu)"), vec![task.key()]);
+        let (x, _, groups) =
+            db.to_training(&[&task], "farm(9xsim-cpu)", Representation::Config, usize::MAX);
+        assert!(x.rows > 0, "wrapped-target training lookup found nothing");
+        assert_eq!(groups.len(), 1);
+        // and the stored records themselves carry the canonical name
+        assert!(db.records().iter().all(|r| r.target == "sim-cpu"));
     }
 
     /// Regression (satellite): a NaN gflops record used to panic

@@ -34,9 +34,11 @@
 //! database — the global model makes the very first SA round informed
 //! instead of random, in either driver. The coordinator builds that
 //! model automatically from the shared [`db::TuningDb`] service layer
-//! (cross-workload warm starts), and every loop can stream its measured
-//! trials into the same DB live via [`DbSink`] ([`TuneOptions::sink`])
-//! instead of bulk-dumping at the end.
+//! (cross-workload warm starts; on a heterogeneous fleet also
+//! *cross-target* warm starts, with other targets' records
+//! down-weighted below same-target siblings), and every loop can
+//! stream its measured trials into the same DB live via [`DbSink`]
+//! ([`TuneOptions::sink`]) instead of bulk-dumping at the end.
 //!
 //! Both drivers are **incremental**: SA chains, the dedup set, the
 //! model and the training set persist across calls, so a budget can be

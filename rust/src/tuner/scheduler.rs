@@ -118,7 +118,7 @@ use crate::features::Representation;
 use crate::gbt::{GbtParams, Objective};
 use crate::graph::{task_salt, Graph};
 use crate::measure::Measurer;
-use crate::model::{CostModel, GbtModel, TransferModel};
+use crate::model::{CostModel, GbtModel, TransferModel, WarmStartStats};
 use crate::schedule::template::{Task, TemplateKind};
 use crate::sim::devices::{LatencyCurve, TaskCurve};
 use crate::sim::DeviceModel;
@@ -214,6 +214,12 @@ pub struct TaskPlan {
     /// toward the graph latency (node multiplicity; 1.0 for plain task
     /// lists).
     pub weight: f64,
+    /// Device target the plan's trials must run on (`None` means "the
+    /// executor's only target" — the single-device shape every
+    /// pre-multi-target caller builds). A heterogeneous plan
+    /// ([`TaskScheduler::from_graph_multi`]) carries one plan per
+    /// `(task, target)` pair, all drawing from the same global budget.
+    pub target: Option<String>,
 }
 
 /// Outcome of a scheduler run: where the budget went and where latency
@@ -374,17 +380,43 @@ struct ActiveLoopSlice {
     session: Option<(usize, SliceRun)>,
 }
 
+/// Stable per-target hash used to decorrelate seeds across *targets*
+/// of a heterogeneous plan, exactly as [`task_salt`] decorrelates
+/// across tasks. Single-target executors use salt `0` everywhere, so
+/// pre-multi-target runs stay bit-for-bit unchanged.
+fn target_salt(target: &str) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    target.hash(&mut h);
+    h.finish()
+}
+
 /// Drives the real incremental tuning loops: one persistent driver per
-/// task (created lazily at its first slice), every measured trial
+/// plan (created lazily at its first slice), every measured trial
 /// streamed into the shared [`TuningDb`], and — when the DB already
-/// holds records of *sibling* tasks on the same target — a transfer
-/// warm start under [`Representation::ContextRelation`], so the order
-/// the scheduler visits tasks in is also the order knowledge flows.
+/// holds usable sibling records — a transfer warm start under
+/// [`Representation::ContextRelation`], so the order the scheduler
+/// visits tasks in is also the order knowledge flows. Warm starts are
+/// **tiered** ([`TransferModel::warm_start_tiered`]): same-target
+/// sibling records at full weight, records measured on *other* targets
+/// down-weighted below them — a heterogeneous plan's CPU trials still
+/// inform its GPU searches.
+///
+/// Each plan carries its own measurer and target name; the
+/// single-measurer constructor ([`LoopExecutor::new`]) degenerates to
+/// the historical one-device executor bit-for-bit.
+///
+/// [`TransferModel::warm_start_tiered`]: crate::model::TransferModel::warm_start_tiered
 pub struct LoopExecutor<'a> {
     tasks: Vec<Task>,
-    measurer: &'a dyn Measurer,
+    /// One measurement back-end per plan (aliased to a single back-end
+    /// for single-target plans).
+    measurers: Vec<&'a dyn Measurer>,
     db: TuningDb,
-    target: String,
+    /// Record/lookup target name per plan.
+    targets: Vec<String>,
+    /// Per-plan seed salt (all zero for single-target executors).
+    salts: Vec<u64>,
     opts: TuneOptions,
     pipelined: bool,
     warm_start: bool,
@@ -412,19 +444,51 @@ impl<'a> LoopExecutor<'a> {
         pipelined: bool,
         warm_start: bool,
     ) -> Self {
-        let drivers = tasks.iter().map(|_| None).collect();
-        let baselines = tasks.iter().map(|_| None).collect();
+        let n = tasks.len();
         let target = measurer.target();
         LoopExecutor {
+            measurers: vec![measurer; n],
+            targets: vec![target; n],
+            salts: vec![0; n],
+            drivers: (0..n).map(|_| None).collect(),
+            baselines: vec![None; n],
             tasks,
-            measurer,
             db,
-            target,
             opts,
             pipelined,
             warm_start,
-            drivers,
-            baselines,
+            active: HashMap::new(),
+        }
+    }
+
+    /// Build a heterogeneous executor: one measurer per plan, each
+    /// dispatching to its own target (e.g. per-target
+    /// [`TargetedMeasurer`](crate::measure::service::TargetedMeasurer)
+    /// views of one shared farm service). Record targets come from each
+    /// measurer, and per-plan seed salts decorrelate the same operator
+    /// tuned on different devices.
+    pub fn with_measurers(
+        tasks: Vec<Task>,
+        measurers: Vec<&'a dyn Measurer>,
+        db: TuningDb,
+        opts: TuneOptions,
+        pipelined: bool,
+        warm_start: bool,
+    ) -> Self {
+        assert_eq!(tasks.len(), measurers.len(), "one measurer per plan");
+        let targets: Vec<String> = measurers.iter().map(|m| m.target()).collect();
+        let salts: Vec<u64> = targets.iter().map(|t| target_salt(t)).collect();
+        LoopExecutor {
+            drivers: (0..tasks.len()).map(|_| None).collect(),
+            baselines: vec![None; tasks.len()],
+            tasks,
+            measurers,
+            db,
+            targets,
+            salts,
+            opts,
+            pipelined,
+            warm_start,
             active: HashMap::new(),
         }
     }
@@ -434,15 +498,30 @@ impl<'a> LoopExecutor<'a> {
         &self.db
     }
 
-    /// Build the warm-start model for `task` from sibling records, if
-    /// the DB has any usable rows — the shared
-    /// [`TransferModel::warm_start`] service entry point, with this
-    /// plan's sibling tasks as the source inventory.
-    fn warm_model(&self, task: &Task, seed: u64) -> Option<TransferModel> {
+    /// Build the warm-start model for plan `idx` from sibling records,
+    /// if the DB has any usable rows — the shared
+    /// [`TransferModel::warm_start_tiered`] service entry point, with
+    /// this plan's sibling tasks as the source inventory and the plan's
+    /// own target as tier 1.
+    ///
+    /// [`TransferModel::warm_start_tiered`]: crate::model::TransferModel::warm_start_tiered
+    fn warm_model(
+        &self,
+        idx: usize,
+        task: &Task,
+        seed: u64,
+    ) -> Option<(TransferModel, WarmStartStats)> {
         if !self.warm_start {
             return None;
         }
-        TransferModel::warm_start(&self.db, &self.tasks, task, &self.target, Objective::Rank, seed)
+        TransferModel::warm_start_tiered(
+            &self.db,
+            &self.tasks,
+            task,
+            &self.targets[idx],
+            Objective::Rank,
+            seed,
+        )
     }
 
     fn ensure_driver(&mut self, idx: usize) {
@@ -451,15 +530,29 @@ impl<'a> LoopExecutor<'a> {
         }
         let task = self.tasks[idx].clone();
         let mut o = self.opts.clone();
-        o.seed ^= task_salt(&task);
-        o.sink = Some(DbSink::new(&self.db, &task, &self.target));
-        let model: Box<dyn CostModel + Send> = match self.warm_model(&task, o.seed) {
-            Some(warm) => {
+        o.seed ^= task_salt(&task) ^ self.salts[idx];
+        o.sink = Some(DbSink::new(&self.db, &task, &self.targets[idx]));
+        let model: Box<dyn CostModel + Send> = match self.warm_model(idx, &task, o.seed) {
+            Some((warm, stats)) => {
                 // features must match the representation the global
                 // model was trained on
                 o.repr = Representation::ContextRelation;
                 if o.verbose {
                     println!("# scheduler: warm-starting {} from sibling records", task.key());
+                }
+                if stats.used_cross_target() {
+                    // unconditional: the cross-target tier is the
+                    // multi-target feature's observable artifact (CI
+                    // greps for this line)
+                    println!(
+                        "# warm-start: cross-target D' for {} on {}: {} rows from [{}] at \
+                         weight {}",
+                        task.key(),
+                        self.targets[idx],
+                        stats.cross_target_rows,
+                        stats.cross_targets.join(", "),
+                        crate::model::CROSS_TARGET_WEIGHT,
+                    );
                 }
                 Box::new(warm)
             }
@@ -487,7 +580,7 @@ impl SliceExecutor for LoopExecutor<'_> {
         // slice-1 gain against.
         let task = &self.tasks[idx];
         let cfg = crate::baselines::vendor_config(task);
-        let r = self.measurer.measure(task, std::slice::from_ref(&cfg));
+        let r = self.measurers[idx].measure(task, std::slice::from_ref(&cfg));
         let s = match r.first() {
             Some(res) if res.is_ok() && res.gflops > 0.0 => {
                 task.def.total_flops() as f64 / (res.gflops * 1e9)
@@ -514,7 +607,7 @@ impl SliceExecutor for LoopExecutor<'_> {
 
     fn run_slice(&mut self, idx: usize, trials: usize) -> usize {
         self.ensure_driver(idx);
-        let measurer = self.measurer;
+        let measurer = self.measurers[idx];
         match self.drivers[idx].as_mut().expect("driver ensured") {
             Driver::Serial(t) => {
                 let before = t.trials();
@@ -545,7 +638,7 @@ impl SliceExecutor for LoopExecutor<'_> {
             let secs_after = self.best_secs(idx);
             return Some(SliceOutcome { spent, secs_after });
         }
-        let measurer = self.measurer;
+        let measurer = self.measurers[idx];
         let step = {
             let slot = self.active.get_mut(&no).expect("checked above");
             let driver = self.drivers[slot.idx].as_mut().expect("driver ensured at begin");
@@ -791,8 +884,10 @@ impl TaskScheduler {
     /// Scheduler over a plain task list with unit weights and no fixed
     /// cost (the `tune-all` shape: the "graph" is a sum of operators).
     pub fn for_tasks(tasks: Vec<Task>, opts: SchedulerOptions) -> Self {
-        let plans =
-            tasks.into_iter().map(|task| TaskPlan { task, weight: 1.0 }).collect();
+        let plans = tasks
+            .into_iter()
+            .map(|task| TaskPlan { task, weight: 1.0, target: None })
+            .collect();
         TaskScheduler::new(plans, 0.0, opts)
     }
 
@@ -811,9 +906,44 @@ impl TaskScheduler {
         let plans = graph
             .weighted_tasks(template)
             .into_iter()
-            .map(|(task, mult)| TaskPlan { task, weight: mult as f64 })
+            .map(|(task, mult)| TaskPlan { task, weight: mult as f64, target: None })
             .collect();
         let fixed = graph.fixed_latency(device, template)?;
+        Ok(TaskScheduler::new(plans, fixed, opts))
+    }
+
+    /// Scheduler for a network deployed across a **heterogeneous
+    /// fleet**: one plan per `(task, target)` pair — each device
+    /// contributes its task set under the template of its class
+    /// ([`TemplateKind::for_class`]) with plans tagged by device name —
+    /// all spending one global trial budget. The fixed glue cost sums
+    /// over the devices (each deployment pays its own untunable floor).
+    ///
+    /// Because [`Task::key`] embeds the template, CPU and GPU plans of
+    /// the same operator are distinct tasks to the allocator, while the
+    /// tiered warm start ([`TransferModel::warm_start_tiered`]) still
+    /// transfers their records across targets through the
+    /// target-invariant `ContextRelation` features.
+    ///
+    /// [`TransferModel::warm_start_tiered`]: crate::model::TransferModel::warm_start_tiered
+    pub fn from_graph_multi(
+        graph: &Graph,
+        devices: &[DeviceModel],
+        opts: SchedulerOptions,
+    ) -> anyhow::Result<Self> {
+        let mut plans = Vec::new();
+        let mut fixed = 0.0;
+        for device in devices {
+            let template = TemplateKind::for_class(device.class);
+            for (task, mult) in graph.weighted_tasks(template) {
+                plans.push(TaskPlan {
+                    task,
+                    weight: mult as f64,
+                    target: Some(device.name.to_string()),
+                });
+            }
+            fixed += graph.fixed_latency(device, template)?;
+        }
         Ok(TaskScheduler::new(plans, fixed, opts))
     }
 
@@ -924,6 +1054,43 @@ impl TaskScheduler {
         let tasks: Vec<Task> = self.plans.iter().map(|p| p.task.clone()).collect();
         let mut exec =
             LoopExecutor::new(tasks, measurer, db.clone(), opts, pipelined, warm_start);
+        self.run(&mut exec)
+    }
+
+    /// [`run_tuning`](Self::run_tuning) for heterogeneous plans: each
+    /// plan's trials run on the measurer registered for its target
+    /// (name → back-end, e.g. per-target
+    /// [`for_target`](crate::measure::service::MeasureService::for_target)
+    /// views of one shared farm service). Plans without a target — and
+    /// plans whose target has no registered measurer — fall back to the
+    /// first entry, so a single-device measurer list still drives a
+    /// multi-target plan (on one device).
+    ///
+    /// # Panics
+    /// Panics when `measurers` is empty.
+    pub fn run_tuning_multi(
+        &self,
+        measurers: &[(String, &dyn Measurer)],
+        db: &TuningDb,
+        opts: TuneOptions,
+        pipelined: bool,
+        warm_start: bool,
+    ) -> Allocation {
+        assert!(!measurers.is_empty(), "at least one measurer");
+        let tasks: Vec<Task> = self.plans.iter().map(|p| p.task.clone()).collect();
+        let per_plan: Vec<&dyn Measurer> = self
+            .plans
+            .iter()
+            .map(|p| match &p.target {
+                Some(t) => measurers
+                    .iter()
+                    .find(|(name, _)| name == t)
+                    .map_or(measurers[0].1, |(_, m)| *m),
+                None => measurers[0].1,
+            })
+            .collect();
+        let mut exec =
+            LoopExecutor::with_measurers(tasks, per_plan, db.clone(), opts, pipelined, warm_start);
         self.run(&mut exec)
     }
 
@@ -1238,7 +1405,10 @@ mod tests {
         let plans: Vec<TaskPlan> = tiny_tasks(2)
             .into_iter()
             .enumerate()
-            .map(|(i, task)| TaskPlan { task, weight: if i == 0 { 8.0 } else { 1.0 } })
+            .map(|(i, task)| {
+                let weight = if i == 0 { 8.0 } else { 1.0 };
+                TaskPlan { task, weight, target: None }
+            })
             .collect();
         let sched = TaskScheduler::new(
             plans,
@@ -1253,6 +1423,27 @@ mod tests {
         let mut exec = curves(&[(1.0, 2.0, 60.0), (1.0, 2.0, 60.0)]);
         let alloc = sched.run(&mut exec);
         assert!(alloc.trials[0] > alloc.trials[1], "{:?}", alloc.trials);
+    }
+
+    #[test]
+    fn multi_target_plans_tag_each_device() {
+        use crate::sim::devices::{sim_cpu, sim_gpu};
+        let graph = crate::workloads::dqn();
+        let devices = [sim_cpu(), sim_gpu()];
+        let opts = SchedulerOptions::default();
+        let sched = TaskScheduler::from_graph_multi(&graph, &devices, opts.clone()).unwrap();
+        let single =
+            TaskScheduler::from_graph(&graph, &devices[0], TemplateKind::Cpu, opts).unwrap();
+        // one plan per (task, target): each device contributes its full
+        // task set under its class's template
+        assert_eq!(sched.plans().len(), 2 * single.plans().len());
+        for plan in sched.plans() {
+            let t = plan.target.as_deref().expect("multi plans are targeted");
+            let want = if t == "sim-cpu" { TemplateKind::Cpu } else { TemplateKind::Gpu };
+            assert_eq!(plan.task.template, want, "{t}");
+        }
+        // each deployment pays its own untunable glue floor
+        assert!(sched.fixed_secs() >= single.fixed_secs());
     }
 
     #[test]

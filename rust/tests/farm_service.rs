@@ -2,8 +2,11 @@
 //! (`measure::service`): bit-for-bit equivalence of the 1-replica
 //! service with the direct measurer (serial and depth-1 pipelined),
 //! board-fault paths (worker panic mid-job, timeout → retry on another
-//! replica, all replicas broken, all replicas flaky), backpressure, and
-//! multi-replica utilization on a latency farm.
+//! replica, all replicas broken, all replicas flaky), class-aware
+//! fault paths on a heterogeneous fleet (sole board of a class
+//! degrading then recovering, a whole class suspect while its sibling
+//! class keeps serving), backpressure, and multi-replica utilization
+//! on a latency farm.
 
 use autotvm::expr::ops;
 use autotvm::measure::farm::DeviceFarm;
@@ -13,6 +16,7 @@ use autotvm::schedule::space::ConfigEntity;
 use autotvm::schedule::template::{Task, TemplateKind};
 use autotvm::sim::devices::{sim_cpu, sim_gpu};
 use autotvm::tuner::{tune_gbt, tune_gbt_pipelined, SaParams, TuneOptions, TuneResult};
+use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -346,4 +350,184 @@ fn latency_farm_utilization_exceeds_one_replica() {
     );
     // round-robin home dispatch spreads jobs across every board
     assert!(s.jobs.iter().all(|&j| j > 0), "idle replica: {:?}", s.jobs);
+}
+
+// ---------------------------------------------------------------------
+// Class-aware fault paths (heterogeneous fleet)
+// ---------------------------------------------------------------------
+
+/// Measurer that faults (panics) while the shared countdown is
+/// positive, then recovers and answers with a recognizable throughput.
+/// The countdown lives in an `Arc` so it survives the worker rebuilding
+/// the measurer after each panic.
+struct RecoveringMeasurer {
+    fails_left: Arc<AtomicI64>,
+    gflops: f64,
+}
+
+impl Measurer for RecoveringMeasurer {
+    fn measure(&self, _task: &Task, batch: &[ConfigEntity]) -> Vec<MeasureResult> {
+        if self.fails_left.fetch_sub(1, Ordering::SeqCst) > 0 {
+            panic!("injected recoverable fault");
+        }
+        batch.iter().map(|_| MeasureResult::ok(self.gflops, 1e-3)).collect()
+    }
+
+    fn target(&self) -> String {
+        "recovering-board".to_string()
+    }
+}
+
+/// Board wedged far past any reasonable timeout.
+struct HungMeasurer;
+
+impl Measurer for HungMeasurer {
+    fn measure(&self, _task: &Task, batch: &[ConfigEntity]) -> Vec<MeasureResult> {
+        std::thread::sleep(Duration::from_secs(5));
+        batch.iter().map(|_| MeasureResult::ok(1.0, 1e-3)).collect()
+    }
+
+    fn target(&self) -> String {
+        "hung-board".to_string()
+    }
+}
+
+/// Two-class heterogeneous test factory: each replica row names its
+/// board class (the dispatch target) and builds its own measurer.
+struct ClassedFactory {
+    boards: Vec<(&'static str, Box<dyn Fn() -> Box<dyn Measurer> + Send + Sync>)>,
+}
+
+impl MeasurerFactory for ClassedFactory {
+    fn make(&self, replica: usize) -> anyhow::Result<Box<dyn Measurer>> {
+        Ok((self.boards[replica].1)())
+    }
+
+    fn replicas(&self) -> usize {
+        self.boards.len()
+    }
+
+    fn board(&self) -> String {
+        self.boards[0].0.to_string()
+    }
+
+    fn target_of(&self, replica: usize) -> String {
+        self.boards[replica].0.to_string()
+    }
+}
+
+/// The *only* board of a class faults: class-aware dispatch makes
+/// route-elsewhere impossible, so jobs must degrade to error results —
+/// never deadlock, never leak onto the other class — and once the board
+/// answers again the quarantine (a soft preference, not a veto) is
+/// readmitted and lifted.
+#[test]
+fn sole_board_of_class_degrades_then_recovers() {
+    let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+    let fails = Arc::new(AtomicI64::new(2));
+    let fails_in = fails.clone();
+    let factory = ClassedFactory {
+        boards: vec![
+            (
+                "class-a",
+                Box::new(move || {
+                    Box::new(RecoveringMeasurer { fails_left: fails_in.clone(), gflops: 5.0 })
+                }),
+            ),
+            ("class-b", Box::new(|| Box::new(FastMeasurer { gflops: 9.0 }))),
+            ("class-b", Box::new(|| Box::new(FastMeasurer { gflops: 9.0 }))),
+        ],
+    };
+    let svc = MeasureService::new(
+        Arc::new(factory),
+        ServiceOptions { retries: 1, quarantine_after: 2, ..Default::default() },
+    );
+    let view = svc.for_target("class-a");
+    // Wave 1: the sole class-a board panics both jobs. No other board
+    // serves the class, so each job exhausts after its only possible
+    // attempt and completes as an error — degraded, not deadlocked.
+    let first = view.measure(&task, &sample_batch(&task, 2, 7));
+    assert_eq!(first.len(), 2);
+    for r in &first {
+        assert!(!r.is_ok(), "fault leaked into a success");
+        let msg = r.error.as_deref().unwrap_or("");
+        assert!(msg.contains("board fault"), "unexpected error: {msg}");
+    }
+    {
+        let s = svc.stats();
+        assert!(s.quarantined[0], "sole class board never quarantined: {s:?}");
+        assert_eq!(s.jobs_for("class-b"), 0, "class-a jobs leaked onto class-b");
+    }
+    // Wave 2: the board recovered. Quarantine must readmit the only
+    // board serving the class, and its first in-time answer lifts it.
+    let second = view.measure(&task, &sample_batch(&task, 4, 8));
+    assert_eq!(second.len(), 4);
+    for r in &second {
+        assert!(r.is_ok(), "recovered board still failing: {:?}", r.error);
+        assert_eq!(r.gflops, 5.0, "result must come from the class-a board");
+    }
+    let s = svc.stats();
+    assert!(!s.quarantined[0], "an in-time answer must lift quarantine: {s:?}");
+    assert_eq!(s.jobs_for("class-b"), 0, "class-a jobs leaked onto class-b");
+    assert_eq!(s.completed, 6);
+}
+
+/// Every board of one class suspect (wedged past the timeout): jobs
+/// already in flight exhaust as errors, new submissions for that class
+/// fail fast naming the unserved target — class-aware dispatch must not
+/// route them to the healthy class — and the sibling class keeps
+/// serving untouched.
+#[test]
+fn all_boards_of_class_suspect_fail_fast_other_class_unaffected() {
+    let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+    let factory = ClassedFactory {
+        boards: vec![
+            ("class-hung", Box::new(|| Box::new(HungMeasurer))),
+            ("class-hung", Box::new(|| Box::new(HungMeasurer))),
+            ("class-live", Box::new(|| Box::new(FastMeasurer { gflops: 9.0 }))),
+        ],
+    };
+    let svc = MeasureService::new(
+        Arc::new(factory),
+        ServiceOptions {
+            timeout: Some(Duration::from_millis(40)),
+            retries: 1,
+            quarantine_after: 1,
+            ..Default::default()
+        },
+    );
+    let hung = svc.for_target("class-hung");
+    let first = hung.measure(&task, &sample_batch(&task, 2, 9));
+    assert_eq!(first.len(), 2);
+    for r in &first {
+        assert!(!r.is_ok(), "wedged class produced a success");
+        let msg = r.error.as_deref().unwrap_or("");
+        assert!(msg.contains("board fault"), "unexpected error: {msg}");
+    }
+    {
+        let s = svc.stats();
+        assert!(s.timeouts >= 2, "timeouts not recorded: {s:?}");
+    }
+    // Both class-hung boards are now suspect: a fresh batch for the
+    // class completes immediately as errors naming the unserved target.
+    let more = hung.measure(&task, &sample_batch(&task, 3, 10));
+    assert_eq!(more.len(), 3);
+    for r in &more {
+        assert!(!r.is_ok(), "suspect class produced a success");
+        let msg = r.error.as_deref().unwrap_or("");
+        assert!(
+            msg.contains("no responsive board serving class-hung"),
+            "unexpected error: {msg}"
+        );
+    }
+    // The healthy class is untouched by its sibling class's collapse.
+    let live = svc.for_target("class-live");
+    let ok = live.measure(&task, &sample_batch(&task, 4, 11));
+    assert_eq!(ok.len(), 4);
+    for r in &ok {
+        assert!(r.is_ok(), "healthy class failed: {:?}", r.error);
+        assert_eq!(r.gflops, 9.0, "result must come from the class-live board");
+    }
+    let s = svc.stats();
+    assert_eq!(s.jobs_for("class-live"), 4);
 }

@@ -1,0 +1,354 @@
+//! Tier-1 tests for the heterogeneous device fleet and cross-target
+//! transfer tier: target-invariance of the `ContextRelation`
+//! representation (the property that makes cross-device transfer
+//! sound), chaos/equivalence of fixed-seed multi-target tuning under
+//! per-class replica counts and RTT skew, the single-class
+//! `HeteroFarm` ≡ `DeviceFarm` regression anchor, the headline
+//! multi-target-beats-sequential allocation claim on deterministic
+//! curve replays, and the CPU-warm-started GPU search reaching the
+//! cold-start best in fewer trials.
+
+use autotvm::coordinator::experiments::{
+    collect_source_db, run_method, run_method_warm, ExpOpts, Method,
+};
+use autotvm::features::Representation;
+use autotvm::gbt::Objective;
+use autotvm::measure::farm::{BoardClass, DeviceFarm, HeteroFarm};
+use autotvm::measure::service::MeasureService;
+use autotvm::measure::{Measurer, SimMeasurer};
+use autotvm::model::TransferModel;
+use autotvm::schedule::template::{Task, TemplateKind};
+use autotvm::sim::devices::{self, sim_cpu, sim_gpu, TaskCurve};
+use autotvm::tuner::db::{Database, Record};
+use autotvm::tuner::scheduler::{
+    Allocation, AllocPolicy, CurveExecutor, SchedulerOptions, TaskScheduler,
+};
+use autotvm::tuner::{tune_gbt, SaParams, TuneOptions};
+use autotvm::workloads;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn opts(n_trials: usize, batch: usize, seed: u64) -> TuneOptions {
+    TuneOptions {
+        n_trials,
+        batch,
+        sa: SaParams { n_chains: 16, n_steps: 25, ..Default::default() },
+        seed,
+        ..Default::default()
+    }
+}
+
+fn exp(trials: usize, seed: u64) -> ExpOpts {
+    ExpOpts {
+        trials,
+        batch: 32,
+        sa: SaParams { n_chains: 32, n_steps: 50, ..Default::default() },
+        seed,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Satellite: the invariant representation is target-invariant
+// ---------------------------------------------------------------------
+
+/// The property the whole cross-target tier rests on: featurizing the
+/// same `(task, config)` records under [`Representation::ContextRelation`]
+/// is byte-identical regardless of the target name the records are
+/// stamped with — the target never enters featurization. Randomized
+/// over tasks of both templates and sampled configs.
+#[test]
+fn prop_context_relation_featurization_is_target_invariant() {
+    let mut rng = autotvm::util::Rng::seed_from_u64(42);
+    let tasks: Vec<Task> = vec![
+        workloads::conv_task(2, TemplateKind::Cpu),
+        workloads::conv_task(6, TemplateKind::Gpu),
+        workloads::conv_task(9, TemplateKind::Gpu),
+        workloads::matmul_1024_task(TemplateKind::Cpu),
+    ];
+    for (i, task) in tasks.iter().enumerate() {
+        let db_a = Database::new();
+        let db_b = Database::new();
+        for j in 0..12usize {
+            let cfg = task.space.sample(&mut rng);
+            let gflops = 1.0 + (i * 12 + j) as f64;
+            for (db, target) in [(&db_a, "sim-cpu"), (&db_b, "mali-quad-board")] {
+                db.append(Record {
+                    task_key: task.key(),
+                    target: target.to_string(),
+                    choices: cfg.choices.clone(),
+                    gflops,
+                    seconds: 1e-3,
+                    error: None,
+                })
+                .unwrap();
+            }
+        }
+        let (xa, ya, ga) =
+            db_a.to_training(&[task], "sim-cpu", Representation::ContextRelation, usize::MAX);
+        let (xb, yb, gb) = db_b.to_training(
+            &[task],
+            "mali-quad-board",
+            Representation::ContextRelation,
+            usize::MAX,
+        );
+        assert!(xa.rows > 0, "no rows featurized for {}", task.key());
+        assert_eq!((xa.rows, xa.cols), (xb.rows, xb.cols), "{}", task.key());
+        assert_eq!(xa.data, xb.data, "features diverged across targets for {}", task.key());
+        assert_eq!(ya, yb, "labels diverged across targets for {}", task.key());
+        assert_eq!(ga, gb, "rank groups diverged across targets for {}", task.key());
+    }
+}
+
+// ---------------------------------------------------------------------
+// Chaos / equivalence
+// ---------------------------------------------------------------------
+
+/// Regression anchor: a single-class [`HeteroFarm`] behind the service
+/// reproduces today's [`DeviceFarm`] tuning results bit-for-bit (class
+/// 0 derives the identity board seeds).
+#[test]
+fn single_class_hetero_farm_matches_device_farm_tuning() {
+    let mk = || workloads::conv_task(6, TemplateKind::Gpu);
+    let o = opts(48, 16, 3);
+    let dsvc = MeasureService::with_defaults(Arc::new(DeviceFarm::new(sim_gpu(), 3, 11)));
+    let want = tune_gbt(mk(), &dsvc, o.clone());
+    let hsvc = MeasureService::with_defaults(Arc::new(HeteroFarm::new(
+        vec![BoardClass::new(sim_gpu(), 3)],
+        11,
+    )));
+    let got = tune_gbt(mk(), &hsvc, o);
+    assert_eq!(want.curve, got.curve, "single-class HeteroFarm diverged from DeviceFarm");
+    assert_eq!(want.records.len(), got.records.len());
+    for (a, b) in want.records.iter().zip(&got.records) {
+        assert_eq!(a.entity, b.entity);
+        assert_eq!(a.gflops, b.gflops);
+        assert_eq!(a.error, b.error);
+    }
+}
+
+/// One fixed-seed multi-target `tune-graph` run over a two-class
+/// `HeteroFarm`, parameterized by per-class replica counts and
+/// per-class RTT. Returns the allocation plus every DB shard's records
+/// in plan order — the full bit-for-bit artifact.
+#[allow(clippy::type_complexity)]
+fn multi_target_run(
+    replicas: (usize, usize),
+    latency_ms: (u64, u64),
+) -> (Allocation, Vec<Vec<(Vec<u32>, f64)>>, usize) {
+    let devs = [sim_cpu(), sim_gpu()];
+    let fused = workloads::dqn().fuse();
+    let sched = TaskScheduler::from_graph_multi(
+        &fused,
+        &devs,
+        SchedulerOptions {
+            budget: 0,
+            slice: 8,
+            policy: AllocPolicy::Gradient,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let budget = sched.plans().len() * 8 * 2;
+    let sched = sched.with_budget(budget);
+    let classes = vec![
+        BoardClass::new(sim_cpu(), replicas.0)
+            .with_latency(Duration::from_millis(latency_ms.0)),
+        BoardClass::new(sim_gpu(), replicas.1)
+            .with_latency(Duration::from_millis(latency_ms.1)),
+    ];
+    let svc = MeasureService::with_defaults(Arc::new(HeteroFarm::new(classes, 5)));
+    let views: Vec<_> = devs
+        .iter()
+        .map(|d| (d.name.to_string(), svc.for_target(d.name)))
+        .collect();
+    let measurers: Vec<(String, &dyn Measurer)> =
+        views.iter().map(|(n, v)| (n.clone(), v as &dyn Measurer)).collect();
+    let db = Database::new();
+    let alloc = sched.run_tuning_multi(&measurers, &db, opts(512, 8, 5), false, true);
+    let recs: Vec<Vec<(Vec<u32>, f64)>> = sched
+        .plans()
+        .iter()
+        .map(|p| {
+            let t = p.target.as_deref().expect("multi-target plans carry a target");
+            db.for_task(&p.task.key(), t)
+                .iter()
+                .map(|r| (r.choices.clone(), r.gflops))
+                .collect()
+        })
+        .collect();
+    assert_eq!(db.len(), budget, "streamed records lost");
+    (alloc, recs, budget)
+}
+
+fn assert_same_run(
+    a: &(Allocation, Vec<Vec<(Vec<u32>, f64)>>, usize),
+    b: &(Allocation, Vec<Vec<(Vec<u32>, f64)>>, usize),
+    what: &str,
+) {
+    assert_eq!(a.0.trials, b.0.trials, "{what}: trial allocation diverged");
+    assert_eq!(a.0.secs, b.0.secs, "{what}: per-task bests diverged");
+    assert_eq!(a.0.rounds, b.0.rounds, "{what}: round counts diverged");
+    assert_eq!(a.0.est_latency, b.0.est_latency, "{what}: latency estimates diverged");
+    assert_eq!(a.0.log, b.0.log, "{what}: allocation logs diverged");
+    assert_eq!(a.1, b.1, "{what}: measured records diverged");
+}
+
+/// The chaos/equivalence claim: a fixed-seed multi-target run is
+/// bit-for-bit reproducible, and per-class RTT skew (which shifts every
+/// completion time) changes nothing — dispatch is sequence-ordered and
+/// board noise streams never see the clock. Checked at one board per
+/// class and at asymmetric per-class replica counts.
+#[test]
+fn multi_target_run_is_bitwise_stable_under_rtt_and_reruns() {
+    // run-to-run reproducibility at (1, 1) boards, zero RTT
+    let a1 = multi_target_run((1, 1), (0, 0));
+    let a2 = multi_target_run((1, 1), (0, 0));
+    assert_same_run(&a1, &a2, "rerun at (1,1)");
+    // per-class RTT skew is invisible to the results
+    let b = multi_target_run((1, 1), (3, 1));
+    assert_same_run(&a1, &b, "RTT skew at (1,1)");
+    // asymmetric replica counts: RTT skew still invisible
+    let c1 = multi_target_run((2, 3), (0, 0));
+    let c2 = multi_target_run((2, 3), (5, 2));
+    assert_same_run(&c1, &c2, "RTT skew at (2,3)");
+    // the budget is fully spent and nobody starves, under every shape
+    for (alloc, _, budget) in [&a1, &b, &c1] {
+        assert_eq!(alloc.trials.iter().sum::<usize>(), *budget);
+        assert!(alloc.trials.iter().all(|&n| n > 0), "{:?}", alloc.trials);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: one global budget beats rigid per-target budgets
+// ---------------------------------------------------------------------
+
+/// The headline multi-target claim on deterministic curve replays: at
+/// equal *total* trial budget, one `from_graph_multi` scheduler
+/// spending a single global budget across tasks × targets ends at
+/// combined end-to-end latency ≤ two sequential per-target schedulers
+/// each given half the budget — the gradient allocator shifts trials
+/// toward whichever device's tasks still improve.
+#[test]
+fn multi_target_beats_sequential_per_target_at_equal_budget() {
+    let devs = [sim_cpu(), sim_gpu()];
+    let fused = workloads::dqn().fuse();
+    let sopts = |budget| SchedulerOptions {
+        budget,
+        slice: 8,
+        policy: AllocPolicy::Gradient,
+        ..Default::default()
+    };
+    let multi = TaskScheduler::from_graph_multi(&fused, &devs, sopts(0)).unwrap();
+    let k = multi.plans().len();
+    assert!(k >= 8, "two devices of dqn should expose ≥ 8 plans, got {k}");
+    let budget = k * 8 * 4;
+    let multi = multi.with_budget(budget);
+    let mut farm = CurveExecutor::new(
+        multi
+            .plans()
+            .iter()
+            .map(|p| {
+                let dev = devs
+                    .iter()
+                    .find(|d| p.target.as_deref() == Some(d.name))
+                    .expect("plan target names a fleet device");
+                TaskCurve::for_task(&p.task, dev)
+            })
+            .collect(),
+    );
+    let alloc = multi.run(&mut farm);
+    assert_eq!(alloc.trials.iter().sum::<usize>(), budget);
+    assert!(alloc.trials.iter().all(|&n| n > 0), "{:?}", alloc.trials);
+
+    // sequential baseline: one scheduler per device, half the budget each
+    let mut seq_total = 0.0;
+    for dev in &devs {
+        let template = TemplateKind::for_class(dev.class);
+        let s = TaskScheduler::from_graph(&fused, dev, template, sopts(budget / 2)).unwrap();
+        let mut f = CurveExecutor::new(
+            s.plans().iter().map(|p| TaskCurve::for_task(&p.task, dev)).collect(),
+        );
+        let a = s.run(&mut f);
+        assert_eq!(a.trials.iter().sum::<usize>(), budget / 2);
+        seq_total += a.est_latency;
+    }
+    assert!(
+        alloc.est_latency <= seq_total * (1.0 + 1e-12),
+        "one global budget {:.6}ms should beat rigid per-target halves {:.6}ms",
+        alloc.est_latency * 1e3,
+        seq_total * 1e3
+    );
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: CPU records warm-start a GPU search
+// ---------------------------------------------------------------------
+
+/// Cross-target transfer acceptance: with *only* CPU records in the DB
+/// (tier 1 empty — the old single-tier warm start returned `None`
+/// here), the tiered warm start engages through the cross-target tier,
+/// and the warm-started GPU search reaches the cold start's best in
+/// fewer trials, summed over fixed seeds.
+#[test]
+fn cpu_records_warm_start_gpu_search_in_fewer_trials() {
+    let cpu = sim_cpu();
+    let gpu = sim_gpu();
+    let db = collect_source_db(&[6], TemplateKind::Cpu, &cpu, 128, 0);
+    assert!(!db.is_empty(), "source run streamed nothing");
+    assert!(db.task_keys(gpu.name).is_empty(), "DB must hold no same-target rows");
+    let target_task = workloads::conv_task(6, TemplateKind::Gpu);
+
+    // the tier API itself: provenance must show a pure tier-2 build
+    let candidates =
+        vec![workloads::conv_task(6, TemplateKind::Cpu), target_task.clone()];
+    let (_model, stats) = TransferModel::warm_start_tiered(
+        &db,
+        &candidates,
+        &target_task,
+        gpu.name,
+        Objective::Rank,
+        0,
+    )
+    .expect("cross-target records must engage the tiered warm start");
+    assert_eq!(stats.same_target_rows, 0);
+    assert!(stats.used_cross_target(), "{stats:?}");
+    assert_eq!(stats.cross_targets, vec![cpu.name.to_string()], "{stats:?}");
+
+    // the search-level claim, seed-summed: trials to reach the cold
+    // best (never reaching counts as budget + cold's own)
+    let mut warm_sum = 0usize;
+    let mut cold_sum = 0usize;
+    let mut reached = 0usize;
+    for seed in 0..3u64 {
+        let o = exp(64, seed);
+        let m = SimMeasurer::with_seed(gpu.clone(), 700 + seed);
+        let warm = run_method_warm(&target_task, &m, Method::GbtRank, &o, &db, gpu.name, false)
+            .expect("CPU records must engage the warm path for a GPU search");
+        let m2 = SimMeasurer::with_seed(gpu.clone(), 700 + seed);
+        let cold = run_method(&target_task, &m2, Method::GbtRank, &o);
+        assert_eq!(warm.curve.len(), cold.curve.len(), "unequal trial budgets");
+        let cold_best = cold.best_gflops();
+        let tc = cold.trials_to_reach(cold_best).expect("cold run reaches its own best");
+        let tw = warm.trials_to_reach(cold_best);
+        if tw.is_some() {
+            reached += 1;
+        }
+        warm_sum += tw.unwrap_or(o.trials + tc);
+        cold_sum += tc;
+    }
+    assert!(reached >= 2, "warm start reached the cold best in only {reached}/3 seeds");
+    assert!(
+        warm_sum < cold_sum,
+        "warm start took {warm_sum} trials (sum over seeds) to reach the cold best vs \
+         {cold_sum} cold"
+    );
+}
+
+// keep the namespace import exercised even if device lists change shape
+#[test]
+fn fleet_devices_resolve_by_name() {
+    for name in ["sim-cpu", "sim-gpu"] {
+        assert!(devices::by_name(name).is_some(), "{name} must resolve");
+    }
+}
