@@ -5,7 +5,10 @@
 //! The incremental cases time what the fast paths actually replace: a
 //! full lower+analyze+extract per SA neighbor vs the Config-repr
 //! skip-lower path and the per-knob slice update
-//! ([`Featurizer::neighbor_features`]). Emits `BENCH_features.json`.
+//! ([`Featurizer::neighbor_features`]), plus the structure-cached delta
+//! replay for the program-derived `Full`/`ContextRelation`
+//! representations (recorded as `speedup_delta_vs_fresh`). Emits
+//! `BENCH_features.json`.
 //!
 //! [`Featurizer::neighbor_features`]: autotvm::tuner::Featurizer::neighbor_features
 mod harness;
@@ -71,7 +74,32 @@ fn main() {
     let speedup = full_batch.mean_ns / incremental.mean_ns;
     println!("features/incremental_speedup_128                  {speedup:.2}x");
 
+    // --- program-derived reprs: structure-cached delta vs fresh ---
+    // Fresh pays a full lower + analyze + extract per row; the delta
+    // path lowers one donor per loop structure and replays only the
+    // extent-derived quantities for every other row. Both featurizers
+    // start cold each iteration, so the donor cost is included.
+    let mut ctx_speedup = 0.0;
+    for (name, repr) in [
+        ("context", Representation::ContextRelation),
+        ("full", Representation::Full),
+    ] {
+        let fresh = b.run(&format!("{name}_batch_128_fresh_extract"), || {
+            Featurizer::with_fast(repr, false).features(&task, &proposals)
+        });
+        let delta = b.run(&format!("{name}_batch_128_delta"), || {
+            Featurizer::new(repr).features(&task, &proposals)
+        });
+        let sp = fresh.mean_ns / delta.mean_ns;
+        println!("features/{name}_delta_speedup_128                 {sp:.2}x");
+        report.field(&format!("{name}_delta_speedup_128"), sp.into());
+        if repr == Representation::ContextRelation {
+            ctx_speedup = sp;
+        }
+    }
+
     report.import(&b);
     report.field("incremental_speedup_128", speedup.into());
+    report.field("speedup_delta_vs_fresh", ctx_speedup.into());
     report.write();
 }

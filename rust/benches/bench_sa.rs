@@ -5,7 +5,10 @@
 //! batch with a trained GBT under the Config representation, scalar
 //! reference (full re-extraction + scalar tree walk) vs fast paths
 //! (incremental per-knob featurization + compiled [`PredictPlan`]).
-//! Both are asserted to pick identical candidates before timing.
+//! A second model-bound configuration runs under `ContextRelation`,
+//! pitting structure-cached delta featurization against the
+//! memoize-only baseline (`speedup_delta_vs_fresh`). Every pairing is
+//! asserted to pick bit-identical candidates before timing.
 //! Emits `BENCH_sa.json`.
 //!
 //! [`PredictPlan`]: autotvm::gbt::PredictPlan
@@ -109,7 +112,50 @@ fn main() {
     let speedup = scalar.mean_ns / fast.mean_ns;
     println!("sa/fast_collect_speedup                           {speedup:.2}x");
 
+    // --- model-bound ContextRelation collect: delta vs memoize-only ---
+    // Same plan-compiled model on both sides; only featurization
+    // differs. `fast=false` is the pre-delta baseline (full extraction
+    // with whole-row memoization), `fast=true` replays the structure
+    // cache per neighbor. Featurizers are rebuilt per run, so each
+    // timed iteration starts with cold caches, like a fresh tune.
+    let ctx_repr = autotvm::features::Representation::ContextRelation;
+    let cx = Featurizer::new(ctx_repr).features(&task, &configs);
+    let mut ctx_model = GbtModel::with_fast_paths(Default::default(), true);
+    ctx_model.fit(&cx, &y, &[]);
+    let run_ctx = |fast_feat: bool, seed: u64| {
+        let scorer = ModelScorer {
+            task: &task,
+            feat: Featurizer::with_fast(ctx_repr, fast_feat),
+            model: &ctx_model,
+        };
+        let mut sa = ParallelSa::new(sa_params.clone());
+        let mut r = Rng::seed_from_u64(seed);
+        sa.collect(&task.space, &scorer, 128, &mut r)
+    };
+    // Bit-identical trial sequence before any timing.
+    let m = run_ctx(false, 77);
+    let d = run_ctx(true, 77);
+    assert_eq!(m.len(), d.len());
+    for ((em, sm), (ed, sd)) in m.iter().zip(&d) {
+        assert_eq!(em, ed, "delta SA path picked different candidates");
+        assert_eq!(sm.to_bits(), sd.to_bits(), "delta SA path changed scores");
+    }
+    let memo = b.run("sa_collect_context_memoized", || run_ctx(false, 5));
+    let delta = b.run("sa_collect_context_delta", || run_ctx(true, 5));
+    let delta_speedup = memo.mean_ns / delta.mean_ns;
+    println!("sa/speedup_delta_vs_fresh                         {delta_speedup:.2}x");
+    // Full-scale runs must clear 2x; short CI smokes (tiny
+    // BENCH_MEASURE_SECS budgets) only gate on >= 1 via the recorded
+    // JSON field, so the hard assert is opt-in.
+    if std::env::var("BENCH_ASSERT_FULL_SCALE").is_ok() {
+        assert!(
+            delta_speedup >= 2.0,
+            "delta featurization speedup {delta_speedup:.2}x < 2x at full scale"
+        );
+    }
+
     report.import(&b);
     report.field("fast_collect_speedup", speedup.into());
+    report.field("speedup_delta_vs_fresh", delta_speedup.into());
     report.write();
 }

@@ -22,7 +22,7 @@ pub struct LoopLevel {
 }
 
 /// Per-(access, chain) analysis.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct AccessInfo {
     /// Name of the accessed buffer.
     pub buffer: String,
@@ -55,7 +55,7 @@ impl AccessInfo {
 }
 
 /// One store statement with its loop context.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct StoreChain {
     /// Enclosing loops, outermost first.
     pub loops: Vec<LoopLevel>,
@@ -83,7 +83,7 @@ impl StoreChain {
 }
 
 /// Full program analysis.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ProgramAnalysis {
     /// One entry per store statement, in program order.
     pub chains: Vec<StoreChain>,
@@ -110,6 +110,52 @@ fn flat_stride(indices: &[IndexExpr], dim_strides: &[i64], var: VarId) -> i64 {
         .zip(dim_strides.iter())
         .map(|(e, s)| e.coeff(var) * s)
         .sum()
+}
+
+/// Fill `top_down` / `bottom_up` extent products for a loop chain and
+/// return the trip count. Shared by the fresh walker and the delta
+/// replay so both produce bit-identical floats (same operation order).
+fn fill_products(loops: &[LoopLevel], top_down: &mut Vec<f64>, bottom_up: &mut Vec<f64>) -> f64 {
+    let n = loops.len();
+    top_down.clear();
+    top_down.resize(n, 1.0);
+    for l in 1..n {
+        top_down[l] = top_down[l - 1] * loops[l - 1].extent as f64;
+    }
+    bottom_up.clear();
+    bottom_up.resize(n, 1.0);
+    for l in (0..n).rev() {
+        bottom_up[l] = loops[l].extent as f64 * bottom_up.get(l + 1).copied().unwrap_or(1.0);
+    }
+    bottom_up.first().copied().unwrap_or(1.0)
+}
+
+/// Fill per-level `touch` / `reuse` for one access from its strides and
+/// footprint cap. Shared by the fresh walker and the delta replay
+/// (bit-identical float sequence in both paths).
+fn fill_touch_reuse(
+    loops: &[LoopLevel],
+    strides: &[i64],
+    cap: f64,
+    bottom_up: &[f64],
+    touch: &mut Vec<f64>,
+    reuse: &mut Vec<f64>,
+) {
+    let n = loops.len();
+    touch.clear();
+    touch.resize(n, 0.0);
+    let mut acc = 1f64;
+    for l in (0..n).rev() {
+        if strides[l] != 0 {
+            acc *= loops[l].extent as f64;
+        }
+        touch[l] = acc.min(cap);
+    }
+    reuse.clear();
+    reuse.resize(n, 0.0);
+    for l in 0..n {
+        reuse[l] = (bottom_up[l] / touch[l].max(1.0)).max(1.0);
+    }
 }
 
 struct Walker<'p> {
@@ -151,7 +197,6 @@ impl<'p> Walker<'p> {
             .buffer(buffer)
             .unwrap_or_else(|| panic!("unknown buffer {buffer}"));
         let dim_strides = decl.strides();
-        let n = self.loops.len();
         let strides: Vec<i64> = self
             .loops
             .iter()
@@ -160,16 +205,9 @@ impl<'p> Walker<'p> {
         // touch[l]: product over loops j >= l of extent_j when the loop
         // moves this access, capped at the buffer footprint.
         let cap = decl.numel() as f64;
-        let mut touch = vec![0f64; n];
-        let mut acc = 1f64;
-        for l in (0..n).rev() {
-            if strides[l] != 0 {
-                acc *= self.loops[l].extent as f64;
-            }
-            touch[l] = acc.min(cap);
-        }
-        let reuse: Vec<f64> =
-            (0..n).map(|l| (bottom_up[l] / touch[l].max(1.0)).max(1.0)).collect();
+        let mut touch = Vec::new();
+        let mut reuse = Vec::new();
+        fill_touch_reuse(&self.loops, &strides, cap, bottom_up, &mut touch, &mut reuse);
         AccessInfo { buffer: buffer.to_string(), scope: decl.scope, is_write, strides, touch, reuse }
     }
 
@@ -180,17 +218,9 @@ impl<'p> Walker<'p> {
         value: &Value,
         accumulate: bool,
     ) -> StoreChain {
-        let n = self.loops.len();
-        let mut top_down = vec![1f64; n];
-        for l in 1..n {
-            top_down[l] = top_down[l - 1] * self.loops[l - 1].extent as f64;
-        }
-        let mut bottom_up = vec![1f64; n];
-        for l in (0..n).rev() {
-            bottom_up[l] =
-                self.loops[l].extent as f64 * bottom_up.get(l + 1).copied().unwrap_or(1.0);
-        }
-        let trip = bottom_up.first().copied().unwrap_or(1.0);
+        let mut top_down = Vec::new();
+        let mut bottom_up = Vec::new();
+        let trip = fill_products(&self.loops, &mut top_down, &mut bottom_up);
 
         let mut accesses =
             vec![self.access_info(buffer, indices, true, &bottom_up)];
@@ -242,6 +272,308 @@ pub fn analyze_into(program: &Program, out: &mut ProgramAnalysis) {
     }
     assert!(!w.chains.is_empty(), "program {} has no store", program.name);
     out.chains = w.chains;
+}
+
+/// Counters of a [`StructureCache`] — exposed through the tuner's
+/// featurizer stats and asserted by the hot-path property tests.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StructureStats {
+    /// Distinct structure keys seen (each cost one donor lower+analyze).
+    pub structures: usize,
+    /// Analyses served by delta replay, with no lowering at all.
+    pub delta_hits: u64,
+    /// Full lower+analyze fallbacks on structures whose recipe failed
+    /// its build-time self-verification.
+    pub fallbacks: u64,
+}
+
+/// Per-structure [`ProgramAnalysis`] cache with delta replay.
+///
+/// Under a fixed template, a knob mutation usually preserves the
+/// lowered program's *structure* — same store chains, loop kinds and
+/// buffer topology, changed loop extents. The first config seen for a
+/// [`Task::structure_key`] pays the full `lower` + [`analyze`] (the
+/// *donor*) and derives a replay recipe; every later config with the
+/// same key is analyzed by [`StructureCache::analyze_delta`] without
+/// lowering: clone the donor's static facts, set extents from the
+/// config's split sizes, and recompute the extent-derived quantities
+/// (products, strides, touch, reuse) through the same helpers the
+/// fresh walker uses — so the result is bit-for-bit identical.
+///
+/// The recipe build self-verifies by replaying the donor's own config
+/// and comparing against the fresh analysis; any mismatch permanently
+/// routes that structure through the full lower+analyze fallback
+/// (counted in [`StructureStats::fallbacks`]). A cache instance is
+/// per-[`Task`]: keys from different tasks must not share a cache.
+///
+/// [`Task`]: crate::schedule::template::Task
+/// [`Task::structure_key`]: crate::schedule::template::Task::structure_key
+#[derive(Default)]
+pub struct StructureCache {
+    entries: std::collections::HashMap<u64, StructureEntry>,
+    scratch: ReplayScratch,
+    delta_hits: u64,
+    fallbacks: u64,
+}
+
+struct StructureEntry {
+    analysis: ProgramAnalysis,
+    recipe: Option<StructureRecipe>,
+}
+
+/// Reused per-replay table: `ip[axis][part]` = product of the axis's
+/// split sizes strictly inner to `part` under the config being
+/// replayed (the change of basis from template-fixed axis weights to
+/// per-leaf strides).
+#[derive(Default)]
+struct ReplayScratch {
+    ip: Vec<Vec<i64>>,
+}
+
+use crate::schedule::space::ConfigEntity;
+use crate::schedule::template::Task;
+
+impl StructureCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Analyze `task.lower(e)` into `out`, by delta replay when the
+    /// config's structure is cached, by full lower+analyze otherwise
+    /// (first sighting of a structure, or a structure whose recipe
+    /// failed self-verification).
+    pub fn analyze_delta(
+        &mut self,
+        task: &Task,
+        e: &ConfigEntity,
+        out: &mut ProgramAnalysis,
+    ) -> anyhow::Result<()> {
+        let key = task.structure_key(e);
+        let Self { entries, scratch, delta_hits, fallbacks } = self;
+        if let Some(entry) = entries.get(&key) {
+            if let Some(recipe) = &entry.recipe {
+                *delta_hits += 1;
+                recipe.replay(task, e, &entry.analysis, scratch, out);
+            } else {
+                *fallbacks += 1;
+                let program = task.lower(e)?;
+                analyze_into(&program, out);
+            }
+            return Ok(());
+        }
+        let program = task.lower(e)?;
+        analyze_into(&program, out);
+        let recipe = StructureRecipe::build(task, &program, out, e);
+        entries.insert(key, StructureEntry { analysis: out.clone(), recipe });
+        Ok(())
+    }
+
+    /// Cache counters.
+    pub fn stats(&self) -> StructureStats {
+        StructureStats {
+            structures: self.entries.len(),
+            delta_hits: self.delta_hits,
+            fallbacks: self.fallbacks,
+        }
+    }
+}
+
+/// How one access's per-loop strides and footprint cap are recomputed
+/// for a new config sharing the donor's structure key.
+enum AccessRecipe {
+    /// Fixed-shape global tensor: the stride of chain loop `l` holding
+    /// split part `(a, p)` is `w · Π_{q>p} splits[a][q]`, where `w` is
+    /// the template-fixed flattened weight of axis `a` in this access
+    /// (recovered from the donor by exact division); `None` marks loops
+    /// whose axis does not appear in the tensor's index (stride 0 under
+    /// every config).
+    Global { per_loop: Vec<Option<(usize, usize, i64)>>, cap: f64 },
+    /// Scratch buffer (`.acc` / `.shared`) addressed by a mixed-radix
+    /// index over `members` (chain-loop positions, outermost first):
+    /// stride at member `j` is the product of later member extents and
+    /// the footprint is the product of all member extents.
+    Radix { members: Vec<usize> },
+}
+
+struct ChainRecipe {
+    /// `(axis, part)` split provenance of each chain loop, parsed from
+    /// the donor's leaf variable names.
+    loop_leaf: Vec<(usize, usize)>,
+    accesses: Vec<AccessRecipe>,
+}
+
+struct StructureRecipe {
+    chains: Vec<ChainRecipe>,
+}
+
+impl StructureRecipe {
+    /// Derive the replay recipe from a donor lowering. Every claim the
+    /// recipe encodes is verified against the donor analysis — exact
+    /// stride divisibility for globals, suffix-product strides and
+    /// footprint for scratch buffers, and finally a full replay of the
+    /// donor's own config compared bit-for-bit. Returns `None` if any
+    /// check fails (that structure then always takes the full path).
+    fn build(
+        task: &Task,
+        program: &Program,
+        analysis: &ProgramAnalysis,
+        e: &ConfigEntity,
+    ) -> Option<Self> {
+        let mut axis_of = std::collections::HashMap::new();
+        for (i, ax) in task.def.all_axes().enumerate() {
+            axis_of.insert(ax.name.clone(), i);
+        }
+        let mut chains = Vec::with_capacity(analysis.chains.len());
+        for chain in &analysis.chains {
+            let mut loop_leaf = Vec::with_capacity(chain.loops.len());
+            for l in &chain.loops {
+                let name = program.vars.name(l.var);
+                let (base, part) = name.rsplit_once('.')?;
+                let part: usize = part.parse().ok()?;
+                let &axis = axis_of.get(base)?;
+                let sizes = task.split_sizes(e, axis);
+                if part >= sizes.len() || sizes[part] != l.extent {
+                    return None;
+                }
+                loop_leaf.push((axis, part));
+            }
+            let mut accesses = Vec::with_capacity(chain.accesses.len());
+            for a in &chain.accesses {
+                let decl = program.buffer(&a.buffer)?;
+                accesses.push(if decl.scope == MemScope::Global {
+                    let mut per_loop = Vec::with_capacity(loop_leaf.len());
+                    for (l, &(axis, part)) in loop_leaf.iter().enumerate() {
+                        let s = a.strides[l];
+                        if s == 0 {
+                            per_loop.push(None);
+                            continue;
+                        }
+                        let sizes = task.split_sizes(e, axis);
+                        let ip: i64 = sizes[part + 1..].iter().product();
+                        if ip == 0 || s % ip != 0 {
+                            return None;
+                        }
+                        per_loop.push(Some((axis, part, s / ip)));
+                    }
+                    AccessRecipe::Global { per_loop, cap: decl.numel() as f64 }
+                } else {
+                    let members: Vec<usize> =
+                        (0..loop_leaf.len()).filter(|&l| a.strides[l] != 0).collect();
+                    // the flattened index must be exactly mixed-radix
+                    // over the members, covering the whole buffer
+                    let mut acc = 1i64;
+                    for &m in members.iter().rev() {
+                        if a.strides[m] != acc {
+                            return None;
+                        }
+                        acc *= chain.loops[m].extent;
+                    }
+                    if acc.max(1) != decl.numel() {
+                        return None;
+                    }
+                    AccessRecipe::Radix { members }
+                });
+            }
+            chains.push(ChainRecipe { loop_leaf, accesses });
+        }
+        let recipe = StructureRecipe { chains };
+        // Final gate: replaying the donor's own config must reproduce
+        // the donor analysis bit-for-bit.
+        let mut scratch = ReplayScratch::default();
+        let mut probe = ProgramAnalysis { chains: Vec::new() };
+        recipe.replay(task, e, analysis, &mut scratch, &mut probe);
+        if probe != *analysis {
+            return None;
+        }
+        Some(recipe)
+    }
+
+    /// Re-derive the donor analysis for config `e` without lowering:
+    /// static facts copied from the donor, extents set from `e`'s split
+    /// sizes, every extent-derived quantity recomputed through the same
+    /// helpers [`analyze`] uses.
+    fn replay(
+        &self,
+        task: &Task,
+        e: &ConfigEntity,
+        donor: &ProgramAnalysis,
+        scratch: &mut ReplayScratch,
+        out: &mut ProgramAnalysis,
+    ) {
+        let n_axes = task.def.axes.len() + task.def.reduce_axes.len();
+        if scratch.ip.len() < n_axes {
+            scratch.ip.resize(n_axes, Vec::new());
+        }
+        for axis in 0..n_axes {
+            let sizes = task.split_sizes(e, axis);
+            let ip = &mut scratch.ip[axis];
+            ip.clear();
+            ip.resize(sizes.len(), 1);
+            let mut acc = 1i64;
+            for p in (0..sizes.len()).rev() {
+                ip[p] = acc;
+                acc *= sizes[p];
+            }
+        }
+        if out.chains.len() != donor.chains.len() {
+            out.chains.clear();
+            out.chains.extend(donor.chains.iter().cloned());
+        }
+        for ((oc, dc), rc) in out.chains.iter_mut().zip(&donor.chains).zip(&self.chains) {
+            if oc.loops.len() != dc.loops.len() || oc.accesses.len() != dc.accesses.len() {
+                *oc = dc.clone();
+            }
+            let StoreChain {
+                loops,
+                accesses,
+                value_flops,
+                accumulate,
+                has_guard,
+                trip,
+                top_down,
+                bottom_up,
+            } = oc;
+            *value_flops = dc.value_flops;
+            *accumulate = dc.accumulate;
+            *has_guard = dc.has_guard;
+            for ((ol, dl), &(axis, part)) in
+                loops.iter_mut().zip(&dc.loops).zip(&rc.loop_leaf)
+            {
+                ol.var = dl.var;
+                ol.kind = dl.kind;
+                ol.extent = task.split_sizes(e, axis)[part];
+            }
+            *trip = fill_products(loops, top_down, bottom_up);
+            let n = loops.len();
+            for ((oa, da), ra) in accesses.iter_mut().zip(&dc.accesses).zip(&rc.accesses) {
+                oa.buffer.clone_from(&da.buffer);
+                oa.scope = da.scope;
+                oa.is_write = da.is_write;
+                oa.strides.clear();
+                oa.strides.resize(n, 0);
+                let cap = match ra {
+                    AccessRecipe::Global { per_loop, cap } => {
+                        for (l, w) in per_loop.iter().enumerate() {
+                            if let Some((axis, part, w)) = w {
+                                oa.strides[l] = w * scratch.ip[*axis][*part];
+                            }
+                        }
+                        *cap
+                    }
+                    AccessRecipe::Radix { members } => {
+                        let mut acc = 1i64;
+                        for &m in members.iter().rev() {
+                            oa.strides[m] = acc;
+                            acc *= loops[m].extent;
+                        }
+                        acc.max(1) as f64
+                    }
+                };
+                fill_touch_reuse(loops, &oa.strides, cap, bottom_up, &mut oa.touch, &mut oa.reuse);
+            }
+        }
+    }
 }
 
 #[cfg(test)]

@@ -49,6 +49,13 @@ pub struct ExpOpts {
     /// featurization — see [`TuneOptions::fast_paths`]); `false` is the
     /// `--no-fast-paths` scalar reference.
     pub fast_paths: bool,
+    /// Feature representation override (`--repr`); `None` keeps the
+    /// [`TuneOptions`] default.
+    pub repr: Option<crate::features::Representation>,
+    /// Worker-thread pin (`--threads N`): exported as `PALLAS_THREADS`
+    /// by the CLI so every parallel helper (featurization, GBT predict,
+    /// measurement fan-out) runs at this width.
+    pub threads: Option<usize>,
 }
 
 impl Default for ExpOpts {
@@ -64,6 +71,8 @@ impl Default for ExpOpts {
             sink: None,
             verbose: false,
             fast_paths: true,
+            repr: None,
+            threads: None,
         }
     }
 }
@@ -81,7 +90,7 @@ impl ExpOpts {
     }
 
     pub(crate) fn tune_options(&self) -> TuneOptions {
-        TuneOptions {
+        let mut o = TuneOptions {
             n_trials: self.trials,
             batch: self.batch,
             sa: self.sa.clone(),
@@ -91,7 +100,11 @@ impl ExpOpts {
             verbose: self.verbose,
             fast_paths: self.fast_paths,
             ..Default::default()
+        };
+        if let Some(r) = self.repr {
+            o.repr = r;
         }
+        o
     }
 
     fn workloads(&self, representative: &[usize]) -> Vec<usize> {

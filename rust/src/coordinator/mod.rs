@@ -251,7 +251,21 @@ impl FarmOrBoard {
     }
 }
 
-fn exp_opts(args: &Args) -> ExpOpts {
+/// `--repr config|flat|context|full` overrides the feature
+/// representation of the tuning loop; absent keeps the default.
+fn repr_of(args: &Args) -> Result<Option<crate::features::Representation>> {
+    use crate::features::Representation;
+    Ok(match args.get("repr") {
+        None => None,
+        Some("config") => Some(Representation::Config),
+        Some("flat") | Some("flat_ast") => Some(Representation::FlatAst),
+        Some("context") | Some("context_relation") => Some(Representation::ContextRelation),
+        Some("full") => Some(Representation::Full),
+        Some(other) => bail!("unknown --repr {other}; try config/flat/context/full"),
+    })
+}
+
+fn exp_opts(args: &Args) -> Result<ExpOpts> {
     let mut o = if args.has("full") { ExpOpts::paper_scale() } else { ExpOpts::default() };
     o.trials = args.get_usize("trials", o.trials);
     o.all_workloads = args.has("all-workloads");
@@ -260,7 +274,16 @@ fn exp_opts(args: &Args) -> ExpOpts {
     // Fast paths are bit-exact, so on by default; --no-fast-paths is
     // the scalar reference for perf A/B runs.
     o.fast_paths = !args.has("no-fast-paths");
-    o
+    o.repr = repr_of(args)?;
+    // --threads N pins every parallel helper's width for this process
+    // (benches and CI smokes want run-to-run comparable wall-clock).
+    if let Some(v) = args.get("threads") {
+        let n: usize = v.parse().with_context(|| format!("--threads {v} is not a count"))?;
+        anyhow::ensure!(n >= 1, "--threads must be >= 1");
+        o.threads = Some(n);
+        std::env::set_var("PALLAS_THREADS", n.to_string());
+    }
+    Ok(o)
 }
 
 /// `--auto-compact-bytes N` arms threshold-triggered WAL folding on a
@@ -302,7 +325,7 @@ pub fn run(argv: &[String]) -> Result<()> {
             let dev = device_of(&args)?;
             let wl = workload_of(&args)?;
             let method = method_of(&args)?;
-            let mut opts = exp_opts(&args);
+            let mut opts = exp_opts(&args)?;
             let task = workloads::conv_task(wl, template_of(&dev));
             // --db FILE opens (or creates) the WAL-backed service DB;
             // every measured trial is streamed in live by the trial
@@ -381,7 +404,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         }
         "tune-all" => {
             let dev = device_of(&args)?;
-            let mut opts = exp_opts(&args);
+            let mut opts = exp_opts(&args)?;
             opts.verbose = true;
             let base_seed = opts.seed;
             let path = args.get("db").unwrap_or("tuning_db.jsonl").to_string();
@@ -484,7 +507,7 @@ pub fn run(argv: &[String]) -> Result<()> {
             let graph = workloads::network(&name).with_context(|| {
                 format!("unknown network {name}; try resnet18/mobilenet/dqn/lstm/dcgan")
             })?;
-            let opts = exp_opts(&args);
+            let opts = exp_opts(&args)?;
             let policy = alloc_of(&args, AllocPolicy::Gradient)?;
             let (overlap, gain_ema) = overlap_of(&args)?;
             // AutoTVM compiles the fused graph (§6.3)
@@ -668,7 +691,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         }
         "e2e" => {
             let dev = device_of(&args)?;
-            let opts = exp_opts(&args);
+            let opts = exp_opts(&args)?;
             let net = args.get("network").unwrap_or("resnet18").to_string();
             experiments::fig11(&opts, &dev, &[net.as_str()]);
         }
@@ -678,7 +701,7 @@ pub fn run(argv: &[String]) -> Result<()> {
                 .first()
                 .and_then(|s| s.parse::<u32>().ok())
                 .context("usage: autotvm fig <4..11> [--full] [--all-workloads]")?;
-            let opts = exp_opts(&args);
+            let opts = exp_opts(&args)?;
             let neural = args.has("neural");
             match n {
                 4 => {
@@ -819,6 +842,7 @@ USAGE:
                     [--pipeline] [--depth D] [--replicas R] \\
                     [--measure-timeout MS] [--farm-latency-ms MS] [--flaky P] \\
                     [--warm-start] [--no-warm-start] [--no-fast-paths] \\
+                    [--repr config|flat|context|full] [--threads N] \\
                     [--auto-compact-bytes N]
   autotvm tune-all  --device sim-gpu [--trials N] [--db file.jsonl] \\
                     [--pipeline] [--no-warm-start] [--alloc uniform|gradient] \\
@@ -852,8 +876,13 @@ append pushes the tail past N bytes (keep-all: nothing is evicted, and
 fixed-seed results are bit-identical with or without it).
 
 --no-fast-paths disables the bit-exact hot paths (compiled GBT predict
-plan, incremental SA featurization) and runs the scalar reference —
-same results, more wall-clock; the perf A/B toggle of bench_e2e_tune.
+plan, incremental Config featurization, structure-cached delta
+featurization for the program-derived representations) and runs the
+scalar reference — same results, more wall-clock; the perf A/B toggle
+of bench_e2e_tune. --repr picks the feature representation (default
+full); --threads N pins the worker width of every parallel helper
+(exported as PALLAS_THREADS, which also works directly as an env
+override).
 
 --replicas R measures through the asynchronous device-farm service: R
 per-replica workers, sequence-ordered jobs (fixed-seed runs stay

@@ -26,11 +26,13 @@ pub trait Scorer {
 
     /// Score single-knob SA neighbors: `proposals[i]` differs from
     /// `parents[i]` in knob `knobs[i]` only. Scorers with an
-    /// incremental featurization path (the tuner's, under
-    /// `Representation::Config`) override this to patch just the
-    /// mutated knob's feature slice; the default falls back to the
-    /// full [`Scorer::score`] path. Must return the identical scores
-    /// as `score(proposals)` — SA acceptance (and therefore fixed-seed
+    /// incremental featurization path (the tuner's: per-knob slice
+    /// patching under `Representation::Config`, structure-cached delta
+    /// replay of the lowered-program analysis under the program-derived
+    /// representations) override this to skip the full re-extraction
+    /// per mutation; the default falls back to the full
+    /// [`Scorer::score`] path. Must return the identical scores as
+    /// `score(proposals)` — SA acceptance (and therefore fixed-seed
     /// determinism) depends on it.
     fn score_neighbors(
         &self,

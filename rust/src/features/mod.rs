@@ -136,76 +136,123 @@ fn global_features(analysis: &ProgramAnalysis) -> [f64; GLOBAL_DIM] {
     ]
 }
 
-/// Flat-AST representation: padded/truncated context rows of the
-/// longest chain.
-pub fn flat_ast(analysis: &ProgramAnalysis) -> Vec<f64> {
+/// Flat-AST representation into a `FLAT_DIM` slice: padded/truncated
+/// context rows of the longest chain.
+pub fn flat_ast_into(analysis: &ProgramAnalysis, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), FLAT_DIM);
+    out.fill(0.0);
     let rows = context_rows(analysis.longest_chain());
-    let mut out = vec![0f64; FLAT_DIM];
     for (l, row) in rows.iter().take(MAX_LOOPS).enumerate() {
         out[l * CONTEXT_DIM..(l + 1) * CONTEXT_DIM].copy_from_slice(row);
     }
+}
+
+/// Flat-AST representation: padded/truncated context rows of the
+/// longest chain.
+pub fn flat_ast(analysis: &ProgramAnalysis) -> Vec<f64> {
+    let mut out = vec![0f64; FLAT_DIM];
+    flat_ast_into(analysis, &mut out);
     out
 }
 
-/// Relation features over the context matrix of the longest chain:
+/// Relation features over one precomputed context matrix:
 /// for pair (i, j) and threshold t, `R_t = max_{k: Z_kj < β_t} Z_ki`.
 ///
 /// Column i = touch count (log2), column j ∈ {reuse ratio, top-down}.
 /// Thresholds are log2-spaced: β_t = t · 2 in log2 space (i.e. 4^t).
-fn relation_pairs(chain: &StoreChain) -> Vec<f64> {
-    let rows = context_rows(chain);
-    // Aggregate per loop: total touch, mean reuse, top-down (log space
-    // values already).
+/// Taking the rows (instead of the chain) lets [`context_relation_into`]
+/// compute the context matrix once for both the relation and the pooled
+/// features.
+fn relation_pairs_into(rows: &[[f64; CONTEXT_DIM]], out: &mut [f64]) {
     let touch_col = 1 + ForKind::COUNT + 2; // first buffer's touch
     let reuse_col = touch_col + 1;
     let td_col = 1 + ForKind::COUNT;
-    let z: Vec<(f64, f64, f64)> = rows
-        .iter()
-        .map(|r| (r[touch_col], r[reuse_col], r[td_col]))
-        .collect();
-    let mut out = Vec::with_capacity(N_PAIRS * N_THRESHOLDS);
     for pair in 0..N_PAIRS {
         for t in 0..N_THRESHOLDS {
             let beta = (t as f64 + 1.0) * 2.0; // log2-spaced thresholds
-            let val = z
+            let val = rows
                 .iter()
-                .filter(|(_, re, td)| {
-                    let zj = if pair == 0 { *re } else { *td };
+                .filter(|r| {
+                    let zj = if pair == 0 { r[reuse_col] } else { r[td_col] };
                     zj < beta
                 })
-                .map(|(to, _, _)| *to)
+                .map(|r| r[touch_col])
                 .fold(0.0, f64::max);
-            out.push(val);
+            out[pair * N_THRESHOLDS + t] = val;
         }
     }
-    out
+}
+
+/// Context-relation representation into a `RELATION_DIM` slice:
+/// relation pairs + per-dim max/mean pooled context rows + globals.
+/// The context matrix of the longest chain is computed once and shared
+/// by the relation and pooled sections.
+pub fn context_relation_into(analysis: &ProgramAnalysis, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), RELATION_DIM);
+    let chain = analysis.longest_chain();
+    let rows = context_rows(chain);
+    relation_pairs_into(&rows, &mut out[..N_PAIRS * N_THRESHOLDS]);
+    // pooled context: max and mean per dim
+    let mut i = N_PAIRS * N_THRESHOLDS;
+    for d in 0..CONTEXT_DIM {
+        out[i + d] = rows.iter().map(|r| r[d]).fold(0.0, f64::max);
+    }
+    i += CONTEXT_DIM;
+    for d in 0..CONTEXT_DIM {
+        let s: f64 = rows.iter().map(|r| r[d]).sum();
+        out[i + d] = s / rows.len().max(1) as f64;
+    }
+    i += CONTEXT_DIM;
+    out[i..].copy_from_slice(&global_features(analysis));
 }
 
 /// Context-relation representation: relation pairs + per-dim max/mean
 /// pooled context rows + globals. Invariant to loop count and order.
 pub fn context_relation(analysis: &ProgramAnalysis) -> Vec<f64> {
-    let chain = analysis.longest_chain();
-    let rows = context_rows(chain);
-    let mut out = relation_pairs(chain);
-    // pooled context: max and mean per dim
-    for d in 0..CONTEXT_DIM {
-        out.push(rows.iter().map(|r| r[d]).fold(0.0, f64::max));
-    }
-    for d in 0..CONTEXT_DIM {
-        let s: f64 = rows.iter().map(|r| r[d]).sum();
-        out.push(s / rows.len().max(1) as f64);
-    }
-    out.extend_from_slice(&global_features(analysis));
-    debug_assert_eq!(out.len(), RELATION_DIM);
+    let mut out = vec![0f64; RELATION_DIM];
+    context_relation_into(analysis, &mut out);
     out
+}
+
+/// Full in-domain representation into a `FULL_DIM` slice.
+pub fn full_into(analysis: &ProgramAnalysis, out: &mut [f64]) {
+    debug_assert_eq!(out.len(), FULL_DIM);
+    let (flat, rel) = out.split_at_mut(FLAT_DIM);
+    flat_ast_into(analysis, flat);
+    context_relation_into(analysis, rel);
 }
 
 /// Full in-domain representation.
 pub fn full(analysis: &ProgramAnalysis) -> Vec<f64> {
-    let mut out = flat_ast(analysis);
-    out.extend(context_relation(analysis));
-    debug_assert_eq!(out.len(), FULL_DIM);
+    let mut out = vec![0f64; FULL_DIM];
+    full_into(analysis, &mut out);
     out
+}
+
+/// Config-space features padded/truncated to a [`CONFIG_DIM`] slice,
+/// same truncation semantics as resizing
+/// [`config_features`](crate::schedule::space::ConfigSpace::config_features)
+/// (a knob slice straddling the boundary is cut mid-knob).
+pub fn config_padded_into(
+    space: &crate::schedule::space::ConfigSpace,
+    e: &crate::schedule::space::ConfigEntity,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(out.len(), CONFIG_DIM);
+    out.fill(0.0);
+    let mut tmp = [0f64; CONFIG_DIM];
+    for j in 0..space.num_knobs() {
+        let off = space.knob_feature_offset(j);
+        if off >= CONFIG_DIM {
+            break;
+        }
+        let dim = space.knob_feature_dim(j);
+        let take = dim.min(CONFIG_DIM - off);
+        let slice = &mut tmp[..dim.min(CONFIG_DIM)];
+        slice.fill(0.0);
+        space.knob_features_into(j, e.choices[j], slice);
+        out[off..off + take].copy_from_slice(&slice[..take]);
+    }
 }
 
 /// Config-space features padded/truncated to [`CONFIG_DIM`].
@@ -213,8 +260,8 @@ pub fn config_padded(
     space: &crate::schedule::space::ConfigSpace,
     e: &crate::schedule::space::ConfigEntity,
 ) -> Vec<f64> {
-    let mut f = space.config_features(e);
-    f.resize(CONFIG_DIM, 0.0);
+    let mut f = vec![0f64; CONFIG_DIM];
+    config_padded_into(space, e, &mut f);
     f
 }
 
@@ -233,6 +280,26 @@ pub fn context_matrix_padded(analysis: &ProgramAnalysis) -> Vec<f32> {
     out
 }
 
+/// Extract features for a task + config into a `repr.dim()` slice.
+/// `analysis` must be the analysis of the lowered program for `e`.
+/// The single emission point of every representation — the fresh batch
+/// path and the delta-replay path both end here, so their rows cannot
+/// drift.
+pub fn extract_into(
+    repr: Representation,
+    task: &crate::schedule::template::Task,
+    e: &crate::schedule::space::ConfigEntity,
+    analysis: &ProgramAnalysis,
+    out: &mut [f64],
+) {
+    match repr {
+        Representation::Config => config_padded_into(&task.space, e, out),
+        Representation::FlatAst => flat_ast_into(analysis, out),
+        Representation::ContextRelation => context_relation_into(analysis, out),
+        Representation::Full => full_into(analysis, out),
+    }
+}
+
 /// Extract features for a task + config under a representation.
 /// `analysis` must be the analysis of the lowered program for `e`.
 pub fn extract(
@@ -241,41 +308,93 @@ pub fn extract(
     e: &crate::schedule::space::ConfigEntity,
     analysis: &ProgramAnalysis,
 ) -> Vec<f64> {
-    match repr {
-        Representation::Config => config_padded(&task.space, e),
-        Representation::FlatAst => flat_ast(analysis),
-        Representation::ContextRelation => context_relation(analysis),
-        Representation::Full => full(analysis),
+    let mut out = vec![0f64; repr.dim()];
+    extract_into(repr, task, e, analysis, &mut out);
+    out
+}
+
+/// One contiguous row-major feature matrix from [`featurize_batch`]:
+/// `rows × dim` values in a single allocation (no per-row `Vec`s), with
+/// a per-row validity flag for entities that failed to lower.
+pub struct FeatureBatch {
+    /// Row width — the representation's [`Representation::dim`].
+    pub dim: usize,
+    data: Vec<f64>,
+    ok: Vec<bool>,
+}
+
+impl FeatureBatch {
+    /// Number of rows (valid or not).
+    pub fn rows(&self) -> usize {
+        self.ok.len()
+    }
+
+    /// Row `i`, or `None` if its entity failed to lower.
+    pub fn row(&self, i: usize) -> Option<&[f64]> {
+        self.ok[i].then(|| &self.data[i * self.dim..(i + 1) * self.dim])
     }
 }
 
 /// Shared featurization hook: lower + analyze + extract rows for a
-/// batch of entities in parallel. One implementation feeds both the
-/// tuner's [`Featurizer`](crate::tuner::Featurizer) memo cache and the
-/// tuning DB's per-task feature cache. Entities that fail to lower
-/// yield `None` — that happens only for foreign/corrupt configs
-/// replayed from a persisted DB; configs sampled from the task's own
-/// space always lower.
+/// batch of entities, in parallel over contiguous chunks of one
+/// preallocated SoA matrix. One implementation feeds both the tuner's
+/// [`Featurizer`](crate::tuner::Featurizer) memo cache and the tuning
+/// DB's per-task feature cache. Entities that fail to lower leave a
+/// `None` row — that happens only for foreign/corrupt configs replayed
+/// from a persisted DB; configs sampled from the task's own space
+/// always lower. Row values are independent of the thread count and
+/// chunking.
 pub fn featurize_batch(
     repr: Representation,
     task: &crate::schedule::template::Task,
     entities: &[crate::schedule::space::ConfigEntity],
-) -> Vec<Option<Vec<f64>>> {
-    // Per-thread scratch analysis: `analyze_into` reuses the chains
-    // allocation across the thousands of (entity × SA step) calls of a
-    // proposal round instead of re-allocating per neighbor.
-    thread_local! {
-        static SCRATCH: std::cell::RefCell<ProgramAnalysis> =
-            std::cell::RefCell::new(ProgramAnalysis { chains: Vec::new() });
+) -> FeatureBatch {
+    let dim = repr.dim();
+    let n = entities.len();
+    let mut data = vec![0f64; n * dim];
+    let mut ok = vec![false; n];
+    let threads = crate::util::default_threads().min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        fill_rows(repr, task, entities, &mut data, &mut ok);
+    } else {
+        let chunk = n.div_ceil(threads);
+        std::thread::scope(|s| {
+            let mut data_rest: &mut [f64] = &mut data;
+            let mut ok_rest: &mut [bool] = &mut ok;
+            let mut start = 0;
+            while start < n {
+                let len = chunk.min(n - start);
+                let (d, dr) = data_rest.split_at_mut(len * dim);
+                let (o, or) = ok_rest.split_at_mut(len);
+                data_rest = dr;
+                ok_rest = or;
+                let ents = &entities[start..start + len];
+                s.spawn(move || fill_rows(repr, task, ents, d, o));
+                start += len;
+            }
+        });
     }
-    crate::util::parallel_map(entities, crate::util::default_threads(), |e| {
-        let program = task.lower(e).ok()?;
-        SCRATCH.with(|sc| {
-            let mut analysis = sc.borrow_mut();
+    FeatureBatch { dim, data, ok }
+}
+
+/// Lower + analyze + extract one chunk of rows into its slice of the
+/// batch matrix, reusing one scratch analysis across the chunk.
+fn fill_rows(
+    repr: Representation,
+    task: &crate::schedule::template::Task,
+    entities: &[crate::schedule::space::ConfigEntity],
+    data: &mut [f64],
+    ok: &mut [bool],
+) {
+    let dim = repr.dim();
+    let mut analysis = ProgramAnalysis { chains: Vec::new() };
+    for (i, e) in entities.iter().enumerate() {
+        if let Ok(program) = task.lower(e) {
             crate::ast::analysis::analyze_into(&program, &mut analysis);
-            Some(extract(repr, task, e, &analysis))
-        })
-    })
+            extract_into(repr, task, e, &analysis, &mut data[i * dim..(i + 1) * dim]);
+            ok[i] = true;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -397,12 +516,14 @@ mod tests {
         let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
         let mut rng = Rng::seed_from_u64(11);
         let ents: Vec<_> = (0..6).map(|_| task.space.sample(&mut rng)).collect();
-        let rows = featurize_batch(Representation::ContextRelation, &task, &ents);
-        assert_eq!(rows.len(), ents.len());
-        for (e, row) in ents.iter().zip(&rows) {
-            let row = row.as_ref().expect("space configs lower");
+        let batch = featurize_batch(Representation::ContextRelation, &task, &ents);
+        assert_eq!(batch.rows(), ents.len());
+        assert_eq!(batch.dim, Representation::ContextRelation.dim());
+        for (i, e) in ents.iter().enumerate() {
+            let row = batch.row(i).expect("space configs lower");
             let a = analyze(&task.lower(e).unwrap());
-            assert_eq!(row, &extract(Representation::ContextRelation, &task, e, &a));
+            let fresh = extract(Representation::ContextRelation, &task, e, &a);
+            assert_eq!(row, fresh.as_slice());
         }
     }
 

@@ -10,8 +10,13 @@
 //! 1. keeps only feature columns referenced by ≥1 split (`used`),
 //! 2. bins each row's used columns once per batch block (`u8` bins when
 //!    every used feature has ≤255 cuts, `u16` otherwise),
-//! 3. walks the arena tree-at-a-time over the block with a branchless
-//!    child select (`bin > t` indexes a `[left, right]` pair),
+//! 3. walks the arena tree-at-a-time over the block
+//!    *level-synchronously*: every row of the block advances one level
+//!    per sweep with a branchless child select (`bin > t` indexes a
+//!    `[left, right]` pair), for exactly the tree's compiled depth —
+//!    leaves are compiled as self-loops, so rows that bottom out early
+//!    just hold position. The inner loop has a fixed trip count and no
+//!    data-dependent branches, which is what the autovectorizer needs,
 //! 4. accumulates eta-pre-scaled leaf values per row in tree order.
 //!
 //! Bit-exactness: `Binner::bin_value` returns the first cut index `lo`
@@ -32,8 +37,15 @@ use super::{Gbt, Matrix};
 /// streams through once per tree.
 const BLOCK_ROWS: usize = 64;
 
-/// Marker in [`PredictPlan::feat`] for leaf nodes.
-const LEAF: u32 = u32::MAX;
+/// Depth of a tree rooted at local node `i` (leaves are depth 0).
+fn depth_of(nodes: &[Node], i: usize) -> u32 {
+    match &nodes[i] {
+        Node::Leaf { .. } => 0,
+        Node::Split { left, right, .. } => {
+            1 + depth_of(nodes, *left as usize).max(depth_of(nodes, *right as usize))
+        }
+    }
+}
 
 /// A compiled, immutable batch-prediction plan for one [`Gbt`].
 #[derive(Clone, Debug)]
@@ -48,7 +60,10 @@ pub struct PredictPlan {
     base: f64,
     /// Arena index of each tree's root, in boosting order.
     roots: Vec<u32>,
-    /// Dense used-feature index per node; [`LEAF`] marks a leaf.
+    /// Depth of each tree — the fixed trip count of its level sweep.
+    depths: Vec<u32>,
+    /// Dense used-feature index per node (0 for leaves, whose
+    /// self-loop children make the value irrelevant but in-bounds).
     feat: Vec<u32>,
     /// Cut index per split node: go left iff `row_bin <= bin[n]`.
     bin: Vec<u16>,
@@ -94,6 +109,7 @@ impl Gbt {
         // Flatten every tree into the shared arena. Child indices are
         // tree-local in `Tree::nodes`, so offset them by the tree base.
         let mut roots = Vec::with_capacity(self.trees.len());
+        let mut depths = Vec::with_capacity(self.trees.len());
         let mut feat = Vec::new();
         let mut bin = Vec::new();
         let mut children = Vec::new();
@@ -101,12 +117,19 @@ impl Gbt {
         for t in &self.trees {
             let off = feat.len() as u32;
             roots.push(off);
-            for n in t.nodes() {
+            depths.push(depth_of(t.nodes(), 0));
+            for (i, n) in t.nodes().iter().enumerate() {
                 match n {
                     Node::Leaf { value: v } => {
-                        feat.push(LEAF);
+                        // Leaves self-loop: the level sweep runs a fixed
+                        // per-tree depth, and a row that bottoms out
+                        // early must hold position. `feat` 0 keeps the
+                        // bin read in bounds (any tree with depth > 0
+                        // has ≥1 used feature).
+                        let s = off + i as u32;
+                        feat.push(0);
                         bin.push(0);
-                        children.push([0, 0]);
+                        children.push([s, s]);
                         value.push(self.params.eta * v);
                     }
                     Node::Split { feature, threshold, left, right } => {
@@ -129,6 +152,7 @@ impl Gbt {
             min_features,
             base: self.base,
             roots,
+            depths,
             feat,
             bin,
             children,
@@ -229,24 +253,30 @@ impl PredictPlan {
         acc
     }
 
-    /// Tree-at-a-time arena walk over row-major binned rows of width
-    /// `w`, accumulating eta-scaled leaf values into `acc` (pre-seeded
-    /// with `base`). Generic over the bin width so the narrow path
-    /// walks `u8` rows without widening them in memory.
+    /// Tree-at-a-time, level-synchronous arena walk over row-major
+    /// binned rows of width `w`, accumulating eta-scaled leaf values
+    /// into `acc` (pre-seeded with `base`). Every row of the block
+    /// advances one level per sweep; the sweep count is the tree's
+    /// compiled depth and the inner row loop is branchless (leaves
+    /// self-loop), so the hot loop has a fixed trip count and no
+    /// data-dependent control flow. Accumulation stays in tree order
+    /// per row — bit-identical to the scalar walk. Generic over the bin
+    /// width so the narrow path walks `u8` rows without widening them
+    /// in memory.
     fn walk_rows<T: Copy + Into<u16>>(&self, bins: &[T], w: usize, acc: &mut [f64]) {
-        for &root in &self.roots {
-            for (r, a) in acc.iter_mut().enumerate() {
-                let rowb = &bins[r * w..r * w + self.used.len()];
-                let mut n = root as usize;
-                loop {
-                    let f = self.feat[n];
-                    if f == LEAF {
-                        break;
-                    }
-                    let go_right = (rowb[f as usize].into() > self.bin[n]) as usize;
-                    n = self.children[n][go_right] as usize;
+        let rows = acc.len();
+        let mut idx: Vec<u32> = vec![0; rows];
+        for (t, &root) in self.roots.iter().enumerate() {
+            idx.fill(root);
+            for _ in 0..self.depths[t] {
+                for r in 0..rows {
+                    let n = idx[r] as usize;
+                    let b: u16 = bins[r * w + self.feat[n] as usize].into();
+                    idx[r] = self.children[n][(b > self.bin[n]) as usize];
                 }
-                *a += self.value[n];
+            }
+            for (r, a) in acc.iter_mut().enumerate() {
+                *a += self.value[idx[r] as usize];
             }
         }
     }

@@ -78,6 +78,109 @@ impl Task {
         let sched = self.schedule(e);
         crate::lower::lower(&self.def, &sched)
     }
+
+    /// [`Task::lower`] plus the config's [`Task::structure_key`] — the
+    /// entry point of the structure-cached analysis path
+    /// ([`crate::ast::analysis::StructureCache`]).
+    pub fn lower_keyed(
+        &self,
+        e: &ConfigEntity,
+    ) -> anyhow::Result<(crate::ast::Program, u64)> {
+        Ok((self.lower(e)?, self.structure_key(e)))
+    }
+
+    /// Split sizes of `axis` (spatial axes first, then reduce axes)
+    /// under config `e`, read straight from the knob options without
+    /// allocating — the delta-featurization hot path calls this per
+    /// chain loop.
+    pub fn split_sizes(&self, e: &ConfigEntity, axis: usize) -> &[i64] {
+        match &self.space.knobs[axis] {
+            Knob::Split { options, .. } => &options[e.choices[axis] as usize],
+            _ => unreachable!("knob {axis} must be a split"),
+        }
+    }
+
+    /// Key identifying the *structure* of the program `lower(e)` emits:
+    /// two configs with equal keys lower to programs differing only in
+    /// loop extents and index coefficients (identical chain topology,
+    /// loop kinds, buffer set and guards). Hashes, in leaf order, the
+    /// raw annotation kinds (which on CPU depend on whether the outer
+    /// tile is > 1) and the effective kinds after vectorize-inner /
+    /// auto-unroll (which depend on extents and the unroll knob), plus
+    /// the `cache_write` flag. Everything else the lowering emits is
+    /// fixed by the template. Extents themselves are excluded — that is
+    /// the whole point: configs sharing a key can reuse one donor
+    /// analysis through delta replay.
+    pub fn structure_key(&self, e: &ConfigEntity) -> u64 {
+        let ns = self.def.axes.len();
+        let nr = self.def.reduce_axes.len();
+        let get_choice = |name: &str| -> i64 {
+            let i = self.space.knob_index(name).unwrap();
+            match &self.space.knobs[i] {
+                Knob::Choice { options, .. } => options[e.choices[i] as usize],
+                _ => unreachable!(),
+            }
+        };
+        let unroll = get_choice("unroll");
+        let vec = get_choice("vec") != 0;
+        let cache_write = match self.template {
+            TemplateKind::Cpu => get_choice("cache_write") != 0,
+            TemplateKind::Gpu => true,
+        };
+
+        let order = leaf_order(ns, nr, spatial_parts(self.template));
+        let mut kinds = Vec::with_capacity(order.len());
+        let mut extents = Vec::with_capacity(order.len());
+        for rf in &order {
+            let sizes = self.split_sizes(e, rf.axis);
+            // mirror of the annotation block in `instantiate`
+            let kind = match self.template {
+                TemplateKind::Cpu if rf.axis < ns && rf.part == 0 && sizes[0] > 1 => {
+                    ForKind::Parallel
+                }
+                TemplateKind::Gpu if rf.axis < ns && rf.part == 0 => ForKind::BlockBind,
+                TemplateKind::Gpu if rf.axis < ns && rf.part == 1 => ForKind::ThreadBind,
+                _ => ForKind::Serial,
+            };
+            kinds.push(kind);
+            extents.push(sizes[rf.part]);
+        }
+
+        let mut h = 0xcbf29ce484222325u64;
+        mix(&mut h, cache_write as u64);
+        mix(&mut h, kinds.len() as u64);
+        for k in &kinds {
+            mix(&mut h, *k as u64);
+        }
+        // mirror of `Lowering::effective_kinds`
+        if vec {
+            if let Some(last) = kinds.last_mut() {
+                if *last == ForKind::Serial {
+                    *last = ForKind::Vectorized;
+                }
+            }
+        }
+        let mut cum = 1i64;
+        for i in (0..kinds.len()).rev() {
+            cum = cum.saturating_mul(extents[i]);
+            if cum > unroll {
+                break;
+            }
+            if kinds[i] == ForKind::Serial {
+                kinds[i] = ForKind::Unrolled;
+            }
+        }
+        for k in &kinds {
+            mix(&mut h, *k as u64);
+        }
+        h
+    }
+}
+
+/// One FNV-1a step.
+fn mix(h: &mut u64, x: u64) {
+    *h ^= x;
+    *h = h.wrapping_mul(0x100000001b3);
 }
 
 /// How many tile levels each axis gets.
@@ -132,6 +235,30 @@ pub fn build_space(def: &ComputeDef, t: TemplateKind) -> ConfigSpace {
     ConfigSpace { knobs }
 }
 
+/// Canonical interleaved leaf order `S0.. R0.. S1.. R1.. S2..` shared
+/// by [`instantiate`] and [`Task::structure_key`] — R0 sits between
+/// the outer and middle spatial tiles, R1 just outside the innermost
+/// spatial tiles.
+fn leaf_order(ns: usize, nr: usize, sp: usize) -> Vec<LeafRef> {
+    let mut order = Vec::with_capacity(ns * sp + 2 * nr);
+    for part in 0..sp {
+        if part == 1 {
+            for ri in 0..nr {
+                order.push(LeafRef { axis: ns + ri, part: 0 });
+            }
+        }
+        if part == sp - 1 && nr > 0 {
+            for ri in 0..nr {
+                order.push(LeafRef { axis: ns + ri, part: 1 });
+            }
+        }
+        for ax in 0..ns {
+            order.push(LeafRef { axis: ax, part });
+        }
+    }
+    order
+}
+
 /// Instantiate a schedule from a config entity.
 pub fn instantiate(
     def: &ComputeDef,
@@ -164,27 +291,7 @@ pub fn instantiate(
         TemplateKind::Gpu => true,
     };
 
-    // Canonical interleaved order: S0.. R0.. S1.. R1.. S2..
-    let sp = spatial_parts(t);
-    let mut order = Vec::new();
-    // S0, then (for the reduce blocks) the pattern below.
-    for part in 0..sp {
-        if part == 1 {
-            // R0 between outer and middle spatial tiles.
-            for (ri, _) in def.reduce_axes.iter().enumerate() {
-                order.push(LeafRef { axis: ns + ri, part: 0 });
-            }
-        }
-        if part == sp - 1 && nr > 0 {
-            // R1 just outside the innermost spatial tiles.
-            for (ri, _) in def.reduce_axes.iter().enumerate() {
-                order.push(LeafRef { axis: ns + ri, part: 1 });
-            }
-        }
-        for ax in 0..ns {
-            order.push(LeafRef { axis: ax, part });
-        }
-    }
+    let order = leaf_order(ns, nr, spatial_parts(t));
 
     let mut annotations = HashMap::new();
     match t {

@@ -1121,10 +1121,11 @@ impl TuningDb {
             // Appends never renumber existing records, so the selected
             // indices stay valid unless a compaction evicts (detected
             // below via the shard epoch).
-            let computed = if missing_ents.is_empty() {
+            let computed: Vec<Option<Vec<f64>>> = if missing_ents.is_empty() {
                 Vec::new()
             } else {
-                crate::features::featurize_batch(repr, task, &missing_ents)
+                let batch = crate::features::featurize_batch(repr, task, &missing_ents);
+                (0..batch.rows()).map(|i| batch.row(i).map(|r| r.to_vec())).collect()
             };
             // Phase 3 (locked, cheap): install the new cache rows, then
             // emit the training rows in selection order.

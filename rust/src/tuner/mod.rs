@@ -112,13 +112,19 @@ pub struct TuneOptions {
     pub sink: Option<DbSink>,
     /// Use the bit-exact fast paths on the model-query loop: compiled
     /// [`PredictPlan`](crate::gbt::PredictPlan) batch inference instead
-    /// of the scalar tree walk, and (under
-    /// [`Representation::Config`]) incremental per-knob SA neighbor
-    /// featurization instead of a full re-extraction per mutation.
-    /// Both paths produce bit-identical scores, so this toggle exists
-    /// only for A/B timing (`--no-fast-paths`, the perf harness) —
-    /// fixed-seed results are unchanged either way.
+    /// of the scalar tree walk, incremental per-knob SA neighbor
+    /// featurization under [`Representation::Config`], and
+    /// structure-cached delta featurization (donor analysis replay, no
+    /// lowering) under the program-derived representations. All paths
+    /// produce bit-identical scores, so this toggle exists only for A/B
+    /// timing (`--no-fast-paths`, the perf harness) — fixed-seed
+    /// results are unchanged either way.
     pub fast_paths: bool,
+    /// Row-cache bound of every [`Featurizer`] the loop builds; `None`
+    /// uses [`FEAT_CACHE_CAP`]. Capping changes wall-clock only (rows
+    /// are recomputed after eviction, never approximated), so
+    /// fixed-seed results are identical at any capacity.
+    pub feat_cache_cap: Option<usize>,
 }
 
 impl Default for TuneOptions {
@@ -138,6 +144,7 @@ impl Default for TuneOptions {
             pipeline_depth: 2,
             sink: None,
             fast_paths: true,
+            feat_cache_cap: None,
         }
     }
 }
@@ -232,28 +239,65 @@ impl TuneResult {
     }
 }
 
+/// Default bound of the [`Featurizer`] row cache (rows, not bytes).
+pub const FEAT_CACHE_CAP: usize = 16384;
+
+/// Snapshot of a [`Featurizer`]'s cache and delta-path counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FeaturizerStats {
+    /// Memoized feature rows currently held.
+    pub cached: usize,
+    /// Row-cache capacity (oldest-epoch generations are evicted at the
+    /// bound).
+    pub capacity: usize,
+    /// Rows evicted so far.
+    pub evictions: u64,
+    /// Distinct program structures seen by the delta path.
+    pub structures: usize,
+    /// Analyses served by delta replay without lowering.
+    pub delta_hits: u64,
+    /// Full lower+analyze fallbacks on recipe-less structures.
+    pub fallbacks: u64,
+}
+
 /// Shared feature extraction with a per-owner memo cache keyed by the
 /// config's flat space index (`u64` — cheaper to hash and compare than
 /// a full choices vector). One implementation serves the serial loop,
 /// the pipelined proposal stage and the pipelined model stage — each
 /// stage owns its own `Featurizer`, so no locks sit on the SA hot path.
+/// The row cache is bounded: every `features`/`neighbor_features` call
+/// opens a new epoch, inserts stamp the current epoch, and crossing the
+/// capacity evicts the oldest epoch's rows wholesale (values are
+/// unchanged by eviction, only recomputed — fixed-seed results are
+/// bit-identical at any capacity).
 ///
 /// With `fast` on (the default) two bit-exact shortcuts apply:
 ///
 /// * [`Representation::Config`] rows are computed directly from the
 ///   knob choices ([`config_padded`](crate::features::config_padded))
-///   without lowering the program — the Config arm of
-///   [`extract`](crate::features::extract) never reads the analysis.
-/// * [`neighbor_features`](Self::neighbor_features) updates only the
-///   mutated knob's feature slice of the cached parent row for
-///   single-knob SA moves (Config representation only — the other
-///   representations flow every knob through the lowered-program
-///   analysis, so they get memoization but no slice reuse).
+///   without lowering the program, and
+///   [`neighbor_features`](Self::neighbor_features) rewrites only the
+///   mutated knob's feature slice of the cached parent row.
+/// * The program-derived representations ([`Representation::Full`],
+///   [`Representation::ContextRelation`], [`Representation::FlatAst`])
+///   skip lowering through the structure-cached delta path
+///   ([`StructureCache`](crate::ast::analysis::StructureCache)): one
+///   donor lower+analyze per [`structure
+///   key`](crate::schedule::template::Task::structure_key), then every
+///   config sharing the structure replays the donor analysis with its
+///   own extents and re-emits the row — bit-identical to the fresh
+///   path, which remains both the `fast = false` A/B reference and the
+///   fallback for structures whose replay recipe fails verification.
 pub struct Featurizer {
     /// Representation rows are extracted under.
     pub repr: Representation,
     fast: bool,
-    cache: RefCell<HashMap<u64, Vec<f64>>>,
+    capacity: usize,
+    epoch: std::cell::Cell<u64>,
+    evictions: std::cell::Cell<u64>,
+    cache: RefCell<HashMap<u64, (u64, Vec<f64>)>>,
+    structures: RefCell<crate::ast::analysis::StructureCache>,
+    scratch: RefCell<crate::ast::analysis::ProgramAnalysis>,
 }
 
 impl Featurizer {
@@ -266,7 +310,25 @@ impl Featurizer {
     /// (`fast = false` forces the reference full-extraction path; see
     /// [`TuneOptions::fast_paths`]).
     pub fn with_fast(repr: Representation, fast: bool) -> Self {
-        Featurizer { repr, fast, cache: RefCell::new(HashMap::new()) }
+        Featurizer::with_capacity(repr, fast, FEAT_CACHE_CAP)
+    }
+
+    /// Featurizer with an explicit row-cache capacity (≥ 1). Capping
+    /// the cache changes wall-clock only — rows are recomputed, never
+    /// approximated — so results stay bit-for-bit identical.
+    pub fn with_capacity(repr: Representation, fast: bool, capacity: usize) -> Self {
+        Featurizer {
+            repr,
+            fast,
+            capacity: capacity.max(1),
+            epoch: std::cell::Cell::new(0),
+            evictions: std::cell::Cell::new(0),
+            cache: RefCell::new(HashMap::new()),
+            structures: RefCell::new(crate::ast::analysis::StructureCache::new()),
+            scratch: RefCell::new(crate::ast::analysis::ProgramAnalysis {
+                chains: Vec::new(),
+            }),
+        }
     }
 
     /// Whether the bit-exact fast paths are enabled.
@@ -274,52 +336,102 @@ impl Featurizer {
         self.fast
     }
 
-    /// Feature matrix for `entities`, computing missing rows in
-    /// parallel and memoizing them.
+    /// Insert a row, evicting the oldest epoch's rows when the cache is
+    /// at capacity (wholesale — a generation at a time; if every entry
+    /// shares the current epoch the whole cache turns over, which still
+    /// guarantees progress).
+    fn insert_row(&self, cache: &mut HashMap<u64, (u64, Vec<f64>)>, key: u64, row: Vec<f64>) {
+        if cache.len() >= self.capacity && !cache.contains_key(&key) {
+            let min = cache.values().map(|(ep, _)| *ep).min().unwrap_or(0);
+            let before = cache.len();
+            cache.retain(|_, (ep, _)| *ep != min);
+            self.evictions.set(self.evictions.get() + (before - cache.len()) as u64);
+        }
+        cache.insert(key, (self.epoch.get(), row));
+    }
+
+    /// One program-repr row via the structure-cached delta path.
+    fn delta_row(&self, task: &Task, e: &ConfigEntity) -> Vec<f64> {
+        let mut analysis = self.scratch.borrow_mut();
+        self.structures
+            .borrow_mut()
+            .analyze_delta(task, e, &mut analysis)
+            .expect("template configs must lower");
+        let mut row = vec![0.0; self.repr.dim()];
+        crate::features::extract_into(self.repr, task, e, &analysis, &mut row);
+        row
+    }
+
+    /// Feature matrix for `entities`, computing missing rows (in
+    /// parallel on the reference path, through the delta path when the
+    /// fast paths are on) and memoizing them.
     pub fn features(&self, task: &Task, entities: &[ConfigEntity]) -> Matrix {
+        self.epoch.set(self.epoch.get() + 1);
         let keys: Vec<u64> = entities.iter().map(|e| task.space.index_of(e)).collect();
-        let missing: Vec<(u64, ConfigEntity)> = {
+        // Snapshot cached rows up front: the inserts below may evict
+        // older generations (and, when the capacity is smaller than the
+        // batch, even this call's), so the output rows must not rely on
+        // re-reading the cache after computing.
+        let mut rows: Vec<Option<Vec<f64>>> = {
             let c = self.cache.borrow();
-            keys.iter()
-                .zip(entities)
-                .filter(|(k, _)| !c.contains_key(*k))
-                .map(|(&k, e)| (k, e.clone()))
-                .collect()
+            keys.iter().map(|k| c.get(k).map(|(_, r)| r.clone())).collect()
         };
+        let missing: Vec<(usize, ConfigEntity)> = rows
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.is_none())
+            .map(|(i, _)| (i, entities[i].clone()))
+            .collect();
         if !missing.is_empty() {
-            let rows: Vec<Option<Vec<f64>>> =
-                if self.fast && self.repr == Representation::Config {
-                    // Config features depend only on the knob choices:
-                    // identical to extract(Config, ..) minus the lower +
-                    // analyze the Config arm ignores anyway.
-                    missing
-                        .iter()
-                        .map(|(_, e)| Some(crate::features::config_padded(&task.space, e)))
-                        .collect()
-                } else {
-                    let es: Vec<ConfigEntity> =
-                        missing.iter().map(|(_, e)| e.clone()).collect();
-                    crate::features::featurize_batch(self.repr, task, &es)
-                };
-            let mut c = self.cache.borrow_mut();
-            for ((k, _), r) in missing.into_iter().zip(rows) {
-                c.insert(k, r.expect("template configs must lower"));
+            if self.fast && self.repr == Representation::Config {
+                // Config features depend only on the knob choices:
+                // identical to extract(Config, ..) minus the lower +
+                // analyze the Config arm ignores anyway.
+                for (i, e) in missing {
+                    let row = crate::features::config_padded(&task.space, &e);
+                    self.insert_row(&mut self.cache.borrow_mut(), keys[i], row.clone());
+                    rows[i] = Some(row);
+                }
+            } else if self.fast {
+                // Program-derived representations: delta replay per row
+                // (serial — the replay is allocation-light and far
+                // cheaper than a parallel fresh lower+analyze).
+                for (i, e) in missing {
+                    let row = self.delta_row(task, &e);
+                    self.insert_row(&mut self.cache.borrow_mut(), keys[i], row.clone());
+                    rows[i] = Some(row);
+                }
+            } else {
+                let es: Vec<ConfigEntity> =
+                    missing.iter().map(|(_, e)| e.clone()).collect();
+                let batch = crate::features::featurize_batch(self.repr, task, &es);
+                for (bi, (i, _)) in missing.into_iter().enumerate() {
+                    let row = batch.row(bi).expect("template configs must lower");
+                    self.insert_row(&mut self.cache.borrow_mut(), keys[i], row.to_vec());
+                    rows[i] = Some(row.to_vec());
+                }
             }
         }
-        let c = self.cache.borrow();
-        let rows: Vec<Vec<f64>> = keys.iter().map(|k| c[k].clone()).collect();
+        let rows: Vec<Vec<f64>> = rows.into_iter().map(|r| r.unwrap()).collect();
         Matrix::from_rows(&rows)
     }
 
     /// Feature matrix for single-knob SA neighbors: each `proposals[i]`
-    /// differs from `parents[i]` in (at most) knob `knobs[i]`, so the
-    /// row is the cached parent row with only that knob's feature slice
-    /// rewritten — bit-identical to a fresh extraction (the slice
-    /// helpers on [`ConfigSpace`](crate::schedule::space::ConfigSpace)
-    /// are the single source of truth for both paths). Computed rows
-    /// are memoized like any other. Returns `None` (caller falls back
-    /// to the full path) when a parent row is not cached or the
-    /// representation is not [`Representation::Config`].
+    /// differs from `parents[i]` in (at most) knob `knobs[i]`.
+    ///
+    /// Under [`Representation::Config`] the row is the cached parent
+    /// row with only that knob's feature slice rewritten — bit-identical
+    /// to a fresh extraction (the slice helpers on
+    /// [`ConfigSpace`](crate::schedule::space::ConfigSpace) are the
+    /// single source of truth for both paths). Under the program-derived
+    /// representations the row comes from the structure-cached delta
+    /// path: the proposal's structure key picks a cached donor analysis,
+    /// the donor is replayed with the proposal's extents (no lowering),
+    /// and the row is re-emitted through the same
+    /// [`extract_into`](crate::features::extract_into) the fresh path
+    /// uses. Computed rows are memoized like any other. Returns `None`
+    /// (caller falls back to the full path) when the fast paths are off,
+    /// or when a Config-repr parent row is not cached.
     pub fn neighbor_features(
         &self,
         task: &Task,
@@ -327,21 +439,38 @@ impl Featurizer {
         proposals: &[ConfigEntity],
         knobs: &[usize],
     ) -> Option<Matrix> {
-        if !self.fast || self.repr != Representation::Config {
+        if !self.fast {
             return None;
         }
+        self.epoch.set(self.epoch.get() + 1);
         debug_assert_eq!(parents.len(), proposals.len());
         debug_assert_eq!(parents.len(), knobs.len());
         let space = &task.space;
         let mut rows: Vec<Vec<f64>> = Vec::with_capacity(proposals.len());
+        if self.repr != Representation::Config {
+            // Program-derived representations: delta replay per missing
+            // row (the parent row is not needed — the donor analysis of
+            // the proposal's structure is).
+            for e in proposals {
+                let key = space.index_of(e);
+                if let Some((_, r)) = self.cache.borrow().get(&key) {
+                    rows.push(r.clone());
+                    continue;
+                }
+                let row = self.delta_row(task, e);
+                self.insert_row(&mut self.cache.borrow_mut(), key, row.clone());
+                rows.push(row);
+            }
+            return Some(Matrix::from_rows(&rows));
+        }
         let mut cache = self.cache.borrow_mut();
         for ((p, e), &j) in parents.iter().zip(proposals).zip(knobs) {
             let key = space.index_of(e);
-            if let Some(r) = cache.get(&key) {
+            if let Some((_, r)) = cache.get(&key) {
                 rows.push(r.clone());
                 continue;
             }
-            let mut row = cache.get(&space.index_of(p))?.clone();
+            let mut row = cache.get(&space.index_of(p))?.1.clone();
             let off = space.knob_feature_offset(j);
             // Rows are padded/truncated to CONFIG_DIM; a slice past the
             // end was truncated away by the full path too.
@@ -352,7 +481,7 @@ impl Featurizer {
                 let end = (off + d).min(row.len());
                 row[off..end].copy_from_slice(&buf[..end - off]);
             }
-            cache.insert(key, row.clone());
+            self.insert_row(&mut cache, key, row.clone());
             rows.push(row);
         }
         Some(Matrix::from_rows(&rows))
@@ -361,6 +490,19 @@ impl Featurizer {
     /// Number of memoized feature rows.
     pub fn cached(&self) -> usize {
         self.cache.borrow().len()
+    }
+
+    /// Cache and delta-path counters.
+    pub fn stats(&self) -> FeaturizerStats {
+        let s = self.structures.borrow().stats();
+        FeaturizerStats {
+            cached: self.cache.borrow().len(),
+            capacity: self.capacity,
+            evictions: self.evictions.get(),
+            structures: s.structures,
+            delta_hits: s.delta_hits,
+            fallbacks: s.fallbacks,
+        }
     }
 }
 
@@ -400,9 +542,11 @@ impl Scorer for TunerScorer<'_> {
         proposals: &[ConfigEntity],
         knobs: &[usize],
     ) -> Vec<f64> {
-        // Incremental per-knob featurization (Config representation,
-        // fast paths on); the feature rows are bit-identical to a fresh
-        // extraction, so this changes wall-clock only, never scores.
+        // Incremental featurization (fast paths on): per-knob slice
+        // patching under Config, structure-cached delta replay under the
+        // program-derived representations. The feature rows are
+        // bit-identical to a fresh extraction either way, so this
+        // changes wall-clock only, never scores.
         if let Some(x) =
             self.feat.neighbor_features(self.task, parents, proposals, knobs)
         {
@@ -505,7 +649,11 @@ impl BatchProposer {
     /// Fresh proposer (SA chains, RNG stream, dedup set) for a run.
     pub fn new(options: &TuneOptions) -> Self {
         BatchProposer {
-            feat: Featurizer::with_fast(options.repr, options.fast_paths),
+            feat: Featurizer::with_capacity(
+                options.repr,
+                options.fast_paths,
+                options.feat_cache_cap.unwrap_or(FEAT_CACHE_CAP),
+            ),
             sa: ParallelSa::new(options.sa.clone()),
             rng: Rng::seed_from_u64(options.seed ^ 0x7u64.wrapping_mul(0x9E3779B97F4A7C15)),
             proposed: HashSet::new(),
@@ -1041,6 +1189,72 @@ mod tests {
         // a fast featurizer without cached parents falls back cleanly
         let cold = Featurizer::new(Representation::Config);
         assert!(cold.neighbor_features(&task, &parents, &proposals, &knobs).is_none());
+    }
+
+    #[test]
+    fn program_repr_neighbor_features_match_fresh_extraction() {
+        for repr in [Representation::Full, Representation::ContextRelation] {
+            let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+            let feat = Featurizer::new(repr);
+            let mut rng = Rng::seed_from_u64(23);
+            let parents: Vec<ConfigEntity> =
+                (0..16).map(|_| task.space.sample(&mut rng)).collect();
+            feat.features(&task, &parents);
+            let mut knobs = Vec::new();
+            let proposals: Vec<ConfigEntity> = parents
+                .iter()
+                .map(|p| {
+                    let (e, j) = task.space.mutate_knob(p, &mut rng);
+                    knobs.push(j);
+                    e
+                })
+                .collect();
+            let inc = feat
+                .neighbor_features(&task, &parents, &proposals, &knobs)
+                .expect("program representations take the delta path");
+            let fresh = Featurizer::with_fast(repr, false).features(&task, &proposals);
+            assert_eq!(inc.rows, fresh.rows);
+            for i in 0..inc.rows {
+                assert_eq!(inc.row(i), fresh.row(i), "row {i} diverged under {repr:?}");
+            }
+            assert!(feat.stats().structures >= 1);
+        }
+    }
+
+    #[test]
+    fn delta_path_counts_structure_replays() {
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+        let feat = Featurizer::new(Representation::ContextRelation);
+        let mut rng = Rng::seed_from_u64(9);
+        let e = task.space.sample(&mut rng);
+        // A duplicated entity is computed twice within one call (both
+        // occurrences miss the row cache) — the second analysis must be
+        // served by replaying the structure cached by the first.
+        feat.features(&task, &[e.clone(), e]);
+        let s = feat.stats();
+        assert_eq!(s.structures, 1);
+        assert!(s.delta_hits + s.fallbacks >= 1);
+    }
+
+    #[test]
+    fn row_cache_eviction_is_bounded_and_bit_exact() {
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+        let mut rng = Rng::seed_from_u64(31);
+        let ents: Vec<ConfigEntity> =
+            (0..16).map(|_| task.space.sample(&mut rng)).collect();
+        let capped = Featurizer::with_capacity(Representation::Config, true, 4);
+        let unbounded = Featurizer::new(Representation::Config);
+        let a = capped.features(&task, &ents);
+        let b = unbounded.features(&task, &ents);
+        assert_eq!(a.rows, b.rows);
+        for i in 0..a.rows {
+            assert_eq!(a.row(i), b.row(i), "row {i} diverged under eviction");
+        }
+        let s = capped.stats();
+        assert!(s.evictions > 0, "a 16-row batch must evict at capacity 4");
+        assert!(s.cached <= 4);
+        assert_eq!(s.capacity, 4);
+        assert_eq!(unbounded.stats().evictions, 0);
     }
 
     #[test]

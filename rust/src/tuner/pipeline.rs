@@ -71,7 +71,7 @@
 
 use super::{
     serial_steps, slice_step, BatchProposer, Featurizer, LoopState, SliceRun, SliceStep,
-    TuneOptions, TuneResult,
+    TuneOptions, TuneResult, FEAT_CACHE_CAP,
 };
 use crate::measure::Measurer;
 use crate::model::CostModel;
@@ -235,7 +235,11 @@ impl PipelinedTuner {
             {
                 None
             }
-            _ => Some(Featurizer::with_fast(self.options.repr, self.options.fast_paths)),
+            _ => Some(Featurizer::with_capacity(
+                self.options.repr,
+                self.options.fast_paths,
+                self.options.feat_cache_cap.unwrap_or(FEAT_CACHE_CAP),
+            )),
         };
         if let Some(f) = fresh {
             self.fit_feat = Some(f);
@@ -321,7 +325,11 @@ impl PipelinedTuner {
         // the representation changed between calls).
         let fit_feat = match self.fit_feat.take() {
             Some(f) if f.repr == opts.repr && f.is_fast() == opts.fast_paths => f,
-            _ => Featurizer::with_fast(opts.repr, opts.fast_paths),
+            _ => Featurizer::with_capacity(
+                opts.repr,
+                opts.fast_paths,
+                opts.feat_cache_cap.unwrap_or(FEAT_CACHE_CAP),
+            ),
         };
         let state = &mut self.state;
         // The persistent training set moves into the model stage for

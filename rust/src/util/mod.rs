@@ -86,7 +86,20 @@ pub fn parallel_map_range<R: Send>(
 }
 
 /// Number of worker threads to use by default.
+///
+/// A `PALLAS_THREADS` environment override (any positive integer) wins
+/// over the detected hardware parallelism, so benches and CI smokes run
+/// at a pinned width regardless of the runner; the coordinator's
+/// `--threads N` flag sets the same variable. Unset, unparsable or zero
+/// values fall back to [`std::thread::available_parallelism`].
 pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("PALLAS_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 

@@ -2,8 +2,12 @@
 //! vendored): the compiled [`PredictPlan`] must be bit-identical to the
 //! scalar tree walk on random models and batches (including rows with
 //! out-of-range and non-finite values), incremental SA featurization
-//! must equal fresh extraction, and fixed-seed tuning runs must be
-//! bit-for-bit unchanged by the fast paths and by mid-tune WAL
+//! must equal fresh extraction, structure-cached delta analysis must
+//! equal fresh `analyze` over random templates × knob-mutation chains
+//! (including structure-changing knobs, which must take the full
+//! lower+analyze path via a new donor entry), and fixed-seed tuning
+//! runs must be bit-for-bit unchanged by the fast paths (under every
+//! representation), by a capped feature row cache, and by mid-tune WAL
 //! auto-compaction.
 //!
 //! [`PredictPlan`]: autotvm::gbt::PredictPlan
@@ -145,7 +149,77 @@ fn prop_incremental_featurization_matches_fresh() {
     });
 }
 
-fn fixed_seed_run(fast: bool, sink: Option<DbSink>) -> TuneResult {
+/// Delta analysis (donor replay per structure) must be bit-identical to
+/// a fresh lower+analyze at every step of a random knob-mutation chain.
+/// Every call resolves to exactly one of: a new donor entry (first
+/// sighting of a structure key — the full path), a delta replay, or a
+/// recipe-less fallback (also the full path), so the counters must
+/// account for the whole chain.
+#[test]
+fn prop_delta_analysis_matches_fresh() {
+    use autotvm::ast::analysis::{analyze, ProgramAnalysis, StructureCache};
+    let mut total_delta_hits = 0u64;
+    forall(10, |rng, seed| {
+        let wl = 1 + (seed as usize % 12);
+        let template = if rng.gen_bool(0.5) { TemplateKind::Gpu } else { TemplateKind::Cpu };
+        let task = workloads::conv_task(wl, template);
+        let mut cache = StructureCache::new();
+        let mut out = ProgramAnalysis { chains: Vec::new() };
+        let mut e = task.space.sample(rng);
+        let steps = 40;
+        for step in 0..steps {
+            cache.analyze_delta(&task, &e, &mut out).unwrap();
+            let fresh = analyze(&task.lower(&e).unwrap());
+            assert_eq!(out, fresh, "seed {seed} step {step}: delta analysis diverged");
+            let (n, _) = task.space.mutate_knob(&e, rng);
+            e = n;
+        }
+        let s = cache.stats();
+        assert!(s.structures >= 1, "seed {seed}: no structures cached");
+        assert_eq!(
+            s.structures as u64 + s.delta_hits + s.fallbacks,
+            steps,
+            "seed {seed}: every call must be a donor build, a replay or a fallback"
+        );
+        total_delta_hits += s.delta_hits;
+
+        // A structure-changing mutation (new structure key) must create
+        // a new donor entry — i.e. take the full lower+analyze path —
+        // and still match a fresh analysis exactly.
+        let e0 = task.space.sample(rng);
+        cache.analyze_delta(&task, &e0, &mut out).unwrap();
+        let k0 = task.structure_key(&e0);
+        for _ in 0..64 {
+            let (n, _) = task.space.mutate_knob(&e0, rng);
+            if task.structure_key(&n) == k0 {
+                continue;
+            }
+            let before = cache.stats().structures;
+            cache.analyze_delta(&task, &n, &mut out).unwrap();
+            assert!(
+                cache.stats().structures > before,
+                "seed {seed}: structure-key change did not build a new donor"
+            );
+            assert_eq!(
+                out,
+                analyze(&task.lower(&n).unwrap()),
+                "seed {seed}: post-fallback analysis diverged"
+            );
+            break;
+        }
+    });
+    // The chains must actually exercise the replay path somewhere —
+    // all-fallback (every recipe failing verification) would make the
+    // equality above vacuous.
+    assert!(total_delta_hits > 0, "no delta replays across any seed");
+}
+
+fn fixed_seed_run_with(
+    repr: autotvm::features::Representation,
+    fast: bool,
+    sink: Option<DbSink>,
+    cap: Option<usize>,
+) -> TuneResult {
     let task = workloads::conv_task(6, TemplateKind::Gpu);
     let measurer = SimMeasurer::with_seed(autotvm::sim::devices::sim_gpu(), 17);
     let opts = TuneOptions {
@@ -153,11 +227,17 @@ fn fixed_seed_run(fast: bool, sink: Option<DbSink>) -> TuneResult {
         batch: 16,
         sa: SaParams { n_chains: 16, n_steps: 25, ..Default::default() },
         seed: 5,
+        repr,
         fast_paths: fast,
+        feat_cache_cap: cap,
         sink,
         ..Default::default()
     };
     tune_gbt(task, &measurer, opts)
+}
+
+fn fixed_seed_run(fast: bool, sink: Option<DbSink>) -> TuneResult {
+    fixed_seed_run_with(autotvm::features::Representation::Full, fast, sink, None)
 }
 
 fn assert_bit_identical(a: &TuneResult, b: &TuneResult, what: &str) {
@@ -176,6 +256,34 @@ fn fixed_seed_tune_bit_identical_with_fast_paths_off() {
     let fast = fixed_seed_run(true, None);
     let scalar = fixed_seed_run(false, None);
     assert_bit_identical(&fast, &scalar, "fast vs scalar");
+}
+
+/// The program-derived representations route SA scoring through the
+/// structure-cached delta path when the fast paths are on; the whole
+/// fixed-seed run must be bit-identical to the scalar reference.
+#[test]
+fn fixed_seed_tune_bit_identical_under_program_reprs() {
+    use autotvm::features::Representation;
+    for repr in [Representation::Full, Representation::ContextRelation] {
+        let fast = fixed_seed_run_with(repr, true, None, None);
+        let scalar = fixed_seed_run_with(repr, false, None, None);
+        assert_bit_identical(&fast, &scalar, &format!("{repr:?}: fast vs scalar"));
+    }
+}
+
+/// Satellite regression: a row cache far smaller than the run's working
+/// set (capacity 12 vs batches of 16 and a training set that grows to
+/// 48) evicts constantly, and must still reproduce the uncapped
+/// fixed-seed results bit-for-bit — eviction only ever forces
+/// recomputation, never approximation.
+#[test]
+fn capped_feature_cache_preserves_fixed_seed_results() {
+    use autotvm::features::Representation;
+    for repr in [Representation::Config, Representation::ContextRelation] {
+        let base = fixed_seed_run_with(repr, true, None, None);
+        let capped = fixed_seed_run_with(repr, true, None, Some(12));
+        assert_bit_identical(&base, &capped, &format!("{repr:?}: capped row cache"));
+    }
 }
 
 /// Satellite regression: auto-compaction kicking in mid-tune (tiny WAL

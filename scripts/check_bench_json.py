@@ -14,6 +14,11 @@ BENCH_e2e_tune.json must additionally record the fast-vs-scalar
 trajectory: "trials_per_sec_scalar", "trials_per_sec_fast" and
 "speedup_trials_per_sec", all positive numbers.
 
+BENCH_features.json and BENCH_sa.json must record the program-repr
+delta-featurization trajectory: a positive "speedup_delta_vs_fresh"
+(plus the per-representation "context_delta_speedup_128" /
+"full_delta_speedup_128" ratios for the features area).
+
 BENCH_serve.json predates the harness and keeps its own shape (see
 benches/bench_serve.rs); it is only required to be a JSON object.
 
@@ -31,6 +36,12 @@ E2E_EXTRA_KEYS = (
     "trials_per_sec_fast",
     "speedup_trials_per_sec",
 )
+FEATURES_EXTRA_KEYS = (
+    "speedup_delta_vs_fresh",
+    "context_delta_speedup_128",
+    "full_delta_speedup_128",
+)
+SA_EXTRA_KEYS = ("speedup_delta_vs_fresh",)
 
 
 def fail(path, msg):
@@ -60,8 +71,8 @@ def check_harness_shape(path, doc):
             fail(path, f'case "{name}" missing positive "iters"')
 
 
-def check_e2e_extras(path, doc):
-    for key in E2E_EXTRA_KEYS:
+def check_extras(path, doc, keys):
+    for key in keys:
         v = doc.get(key)
         if not is_num(v) or v <= 0:
             fail(path, f'missing positive "{key}" (perf trajectory not recorded)')
@@ -85,7 +96,11 @@ def main(paths):
         if name != "BENCH_serve.json":
             check_harness_shape(path, doc)
         if name == "BENCH_e2e_tune.json":
-            check_e2e_extras(path, doc)
+            check_extras(path, doc, E2E_EXTRA_KEYS)
+        if name == "BENCH_features.json":
+            check_extras(path, doc, FEATURES_EXTRA_KEYS)
+        if name == "BENCH_sa.json":
+            check_extras(path, doc, SA_EXTRA_KEYS)
         print(f"check_bench_json: {path}: ok")
 
 
