@@ -9,7 +9,7 @@
 //! end-to-end). `ExpOpts::full` switches from CI-scale budgets to the
 //! paper's (800 trials, 128×500 SA).
 
-use crate::explore::SaParams;
+use crate::explore::{SaParams, SearchKind};
 use crate::features::Representation;
 use crate::gbt::{GbtParams, Objective};
 use crate::measure::{Measurer, SimMeasurer};
@@ -31,6 +31,8 @@ pub struct ExpOpts {
     pub batch: usize,
     /// Simulated-annealing exploration budget.
     pub sa: SaParams,
+    /// Exploration strategy over the cost model (`--search sa|evo`).
+    pub search: SearchKind,
     /// Seed of every RNG stream.
     pub seed: u64,
     /// Paper-scale budgets (800 trials, full SA).
@@ -64,6 +66,7 @@ impl Default for ExpOpts {
             trials: 256,
             batch: 64,
             sa: SaParams { n_chains: 64, n_steps: 120, ..Default::default() },
+            search: SearchKind::Sa,
             seed: 0,
             full: false,
             all_workloads: false,
@@ -94,6 +97,7 @@ impl ExpOpts {
             n_trials: self.trials,
             batch: self.batch,
             sa: self.sa.clone(),
+            search: self.search,
             seed: self.seed,
             pipeline_depth: self.pipeline_depth,
             sink: self.sink.clone(),

@@ -275,6 +275,12 @@ fn exp_opts(args: &Args) -> Result<ExpOpts> {
     // the scalar reference for perf A/B runs.
     o.fast_paths = !args.has("no-fast-paths");
     o.repr = repr_of(args)?;
+    // --search sa|evo selects the model-guided exploration strategy
+    // (parallel simulated annealing vs the evolutionary refiner).
+    if let Some(v) = args.get("search") {
+        o.search = crate::explore::SearchKind::parse(v)
+            .ok_or_else(|| anyhow::anyhow!("unknown --search {v}; try sa/evo"))?;
+    }
     // --threads N pins every parallel helper's width for this process
     // (benches and CI smokes want run-to-run comparable wall-clock).
     if let Some(v) = args.get("threads") {
@@ -326,7 +332,15 @@ pub fn run(argv: &[String]) -> Result<()> {
             let wl = workload_of(&args)?;
             let method = method_of(&args)?;
             let mut opts = exp_opts(&args)?;
-            let task = workloads::conv_task(wl, template_of(&dev));
+            // --sketch swaps the hand template's space for the generated
+            // sketch space (multi-level tiling / cache-stage / fusion
+            // derivations); the template point stays reachable inside it.
+            let task = if args.has("sketch") {
+                let base = workloads::conv_task(wl, template_of(&dev));
+                crate::schedule::template::Task::with_sketches(base.def, base.template)
+            } else {
+                workloads::conv_task(wl, template_of(&dev))
+            };
             // --db FILE opens (or creates) the WAL-backed service DB;
             // every measured trial is streamed in live by the trial
             // accountant, so a crash loses at most one record.
@@ -344,9 +358,10 @@ pub fn run(argv: &[String]) -> Result<()> {
             let farm = FarmOrBoard::new(&args, &dev, opts.seed + 1);
             let measurer = farm.measurer();
             println!(
-                "tuning C{wl} on {} with {}{} ({} trials, |S_e| = {:.2e})",
+                "tuning C{wl} on {} with {}{}{} ({} trials, |S_e| = {:.2e})",
                 measurer.target(),
                 method.name(),
+                if opts.search == crate::explore::SearchKind::Evo { " [evo]" } else { "" },
                 if args.has("pipeline") { " [pipelined]" } else { "" },
                 opts.trials,
                 task.space.size() as f64
@@ -843,6 +858,7 @@ USAGE:
                     [--measure-timeout MS] [--farm-latency-ms MS] [--flaky P] \\
                     [--warm-start] [--no-warm-start] [--no-fast-paths] \\
                     [--repr config|flat|context|full] [--threads N] \\
+                    [--search sa|evo] [--sketch] \\
                     [--auto-compact-bytes N]
   autotvm tune-all  --device sim-gpu [--trials N] [--db file.jsonl] \\
                     [--pipeline] [--no-warm-start] [--alloc uniform|gradient] \\
@@ -883,6 +899,15 @@ of bench_e2e_tune. --repr picks the feature representation (default
 full); --threads N pins the worker width of every parallel helper
 (exported as PALLAS_THREADS, which also works directly as an env
 override).
+
+--search picks the exploration strategy over the cost model: sa
+(default) is persistent parallel simulated annealing, evo is the
+evolutionary refiner (elite survival, knob-wise crossover, mutation —
+ranked by the model, not by measurements, unlike the ga method).
+--sketch replaces the hand template's space with the generated sketch
+space: derivation rules enumerate multi-level tiling depths,
+cache-stage insertion and accumulator decisions, and knobs fill the
+free extents; the hand template remains one point of the space.
 
 --replicas R measures through the asynchronous device-farm service: R
 per-replica workers, sequence-ordered jobs (fixed-seed runs stay

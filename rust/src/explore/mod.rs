@@ -17,7 +17,55 @@
 
 use crate::schedule::space::{ConfigEntity, ConfigSpace};
 use crate::util::Rng;
+use std::cmp::Ordering;
 use std::collections::HashMap;
+
+/// Which model-guided explorer collects candidates each round:
+/// simulated annealing (the paper's §3.3 default) or the Ansor-style
+/// evolutionary refiner. Selected via
+/// [`TuneOptions`](crate::tuner::TuneOptions) / `--search sa|evo`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SearchKind {
+    /// Persistent parallel simulated annealing ([`ParallelSa`]).
+    #[default]
+    Sa,
+    /// Cost-model-ranked evolutionary search ([`Evolutionary`]).
+    Evo,
+}
+
+impl SearchKind {
+    /// Parse a CLI token (`sa` / `evo`).
+    pub fn parse(s: &str) -> Option<SearchKind> {
+        match s {
+            "sa" => Some(SearchKind::Sa),
+            "evo" | "evolutionary" => Some(SearchKind::Evo),
+            _ => None,
+        }
+    }
+
+    /// CLI / report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SearchKind::Sa => "sa",
+            SearchKind::Evo => "evo",
+        }
+    }
+}
+
+/// Descending-score total order with every NaN ranked strictly last.
+/// The exploration sorts used to call `partial_cmp().unwrap()`, so one
+/// NaN model score panicked the tuning loop; `f64::total_cmp` alone
+/// would instead rank positive NaN *above* +∞ and let it win selection.
+/// This comparator does neither: NaN never panics and never beats a
+/// real score.
+pub fn cmp_score_desc(a: f64, b: f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => b.total_cmp(&a),
+    }
+}
 
 /// Batch scorer: maps candidate configs to predicted scores
 /// (higher = better). Implemented by the tuner as featurize + model.
@@ -133,7 +181,20 @@ impl ParallelSa {
             for i in 0..n {
                 visited.entry(proposals[i].clone()).or_insert(scores[i]);
                 let delta = (scores[i] - self.chain_scores[i]) / spread;
-                if delta >= 0.0 || rng.gen_f64() < (delta / temp).exp() {
+                // NaN policy: a NaN proposal is always rejected; a chain
+                // whose *current* score is NaN (possible when the model
+                // emits NaN for its seed state) accepts any non-NaN
+                // proposal so the chain can escape instead of computing
+                // `delta = NaN` forever. The non-NaN path is unchanged —
+                // fixed-seed runs keep their exact RNG stream.
+                let accept = if scores[i].is_nan() {
+                    false
+                } else if self.chain_scores[i].is_nan() {
+                    true
+                } else {
+                    delta >= 0.0 || rng.gen_f64() < (delta / temp).exp()
+                };
+                if accept {
                     self.chains[i] = proposals[i].clone();
                     self.chain_scores[i] = scores[i];
                 }
@@ -147,8 +208,7 @@ impl ParallelSa {
         // order, or runs with the same seed diverge (the pipelined
         // tuner's reproducibility guarantee builds on this).
         out.sort_by(|a, b| {
-            b.1.partial_cmp(&a.1)
-                .unwrap()
+            cmp_score_desc(a.1, b.1)
                 .then_with(|| space.index_of(&a.0).cmp(&space.index_of(&b.0)))
         });
         out.truncate(top_k);
@@ -199,7 +259,15 @@ pub fn diverse_select(
             let novel = (0..num_knobs)
                 .filter(|&j| !covered[j].contains(&cand.component(j)))
                 .count() as f64;
-            let gain = score / spread + alpha * novel / num_knobs as f64;
+            // A NaN score must never be selected while finite candidates
+            // remain: the formula would make the whole gain NaN, and the
+            // `map_or(true, ..)` seed pick would lock it in (NaN never
+            // compares greater, so nothing could displace it).
+            let gain = if score.is_nan() {
+                f64::NEG_INFINITY
+            } else {
+                score / spread + alpha * novel / num_knobs as f64
+            };
             if best.map_or(true, |(_, g)| gain > g) {
                 best = Some((i, gain));
             }
@@ -221,6 +289,15 @@ pub fn top_select(ranked: &[(ConfigEntity, f64)], b: usize) -> Vec<ConfigEntity>
 
 /// Random-search baseline: `b` fresh uniform samples, avoiding
 /// duplicates within the batch and against `seen`.
+///
+/// Contract: for spaces with `size() <= RANDOM_BATCH_ENUMERATE_MAX`
+/// the batch is **exact** — if at least `b` unseen configs remain, `b`
+/// are returned (rejection sampling first, then the unseen remainder is
+/// enumerated, shuffled, and drained). For larger spaces the fill is
+/// best-effort: rejection sampling gives up after `b * 100` attempts,
+/// so a nearly-exhausted large space may return fewer than `b` configs
+/// (enumerating billions of entities to find the stragglers would cost
+/// more than the measurements they buy).
 pub fn random_batch(
     space: &ConfigSpace,
     b: usize,
@@ -237,8 +314,24 @@ pub fn random_batch(
             out.push(e);
         }
     }
+    if out.len() < b && space.size() <= RANDOM_BATCH_ENUMERATE_MAX {
+        // Small space: rejection sampling stalled but unseen configs may
+        // remain. Enumerate them, shuffle for unbiasedness, top up.
+        let mut remainder: Vec<ConfigEntity> = (0..space.size())
+            .map(|i| space.entity(i))
+            .filter(|e| !seen.contains(e) && !local.contains(e))
+            .collect();
+        rng.shuffle(&mut remainder);
+        for e in remainder.into_iter().take(b - out.len()) {
+            out.push(e);
+        }
+    }
     out
 }
+
+/// Spaces at or below this size get the exact [`random_batch`]
+/// enumeration fallback.
+pub const RANDOM_BATCH_ENUMERATE_MAX: u64 = 4096;
 
 /// Genetic-algorithm baseline (Fig. 4 "GA"): elite survival, tournament
 /// parent selection, knob-wise crossover + mutation. Each generation
@@ -264,7 +357,7 @@ impl Genetic {
         if self.pool.is_empty() {
             return (0..self.population).map(|_| space.sample(rng)).collect();
         }
-        self.pool.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        self.pool.sort_by(|a, b| cmp_score_desc(a.1, b.1));
         let parents: Vec<&ConfigEntity> =
             self.pool.iter().take(self.elite.max(2)).map(|(c, _)| c).collect();
         let mut next = Vec::with_capacity(self.population);
@@ -285,11 +378,131 @@ impl Genetic {
         for (c, &f) in batch.iter().zip(fitness) {
             self.pool.push((c.clone(), f));
         }
-        // keep the pool bounded
+        // keep the pool bounded (NaN fitness sorts last, so truncation
+        // evicts NaN individuals first)
         if self.pool.len() > 4 * self.population {
-            self.pool.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            self.pool.sort_by(|a, b| cmp_score_desc(a.1, b.1));
             self.pool.truncate(2 * self.population);
         }
+    }
+}
+
+/// Evolutionary-search parameters (Ansor §5: sampled initial
+/// population evolved by mutation + crossover, ranked by the learned
+/// cost model).
+#[derive(Clone, Debug)]
+pub struct EvoParams {
+    /// Individuals per generation.
+    pub population: usize,
+    /// Generations per collect pass.
+    pub generations: usize,
+    /// Top individuals preserved unchanged across generations.
+    pub elite: usize,
+    /// Probability a crossover child is additionally mutated.
+    pub mutation_prob: f64,
+}
+
+impl Default for EvoParams {
+    fn default() -> Self {
+        EvoParams { population: 128, generations: 24, elite: 16, mutation_prob: 0.5 }
+    }
+}
+
+/// Ansor-style evolutionary refiner: elite survival + tournament parent
+/// selection + knob-wise crossover + mutation, with the **cost model**
+/// as fitness. Distinct from [`Genetic`], whose fitness is *measured*
+/// throughput (the paper's Fig. 4 black-box baseline): `Evolutionary`
+/// burns cheap model evaluations between measurement batches, exactly
+/// like [`ParallelSa`] — it is the `--search evo` alternative to SA and
+/// is drop-in compatible with [`ParallelSa::collect`].
+///
+/// The population persists across cost-model updates (mirroring SA's
+/// chain persistence), so each refit continues from the best designs
+/// found so far rather than restarting from uniform samples.
+pub struct Evolutionary {
+    /// The evolution schedule.
+    pub params: EvoParams,
+    pool: Vec<ConfigEntity>,
+    initialized: bool,
+}
+
+impl Evolutionary {
+    /// Fresh (uninitialized) population; the first pass samples it
+    /// uniformly.
+    pub fn new(params: EvoParams) -> Self {
+        Evolutionary { params, pool: Vec::new(), initialized: false }
+    }
+
+    /// Run one evolution pass with the current model as fitness;
+    /// returns the distinct candidates visited, best-first, up to
+    /// `top_k`. Same contract and determinism discipline as
+    /// [`ParallelSa::collect`]: all randomness from `rng`, ties broken
+    /// by config index.
+    pub fn collect(
+        &mut self,
+        space: &ConfigSpace,
+        scorer: &dyn Scorer,
+        top_k: usize,
+        rng: &mut Rng,
+    ) -> Vec<(ConfigEntity, f64)> {
+        let pop = self.params.population.max(2);
+        if !self.initialized {
+            self.pool = (0..pop).map(|_| space.sample(rng)).collect();
+            self.initialized = true;
+        }
+
+        let mut visited: HashMap<ConfigEntity, f64> = HashMap::new();
+        for _ in 0..self.params.generations {
+            let scores = scorer.score(&self.pool);
+            for (c, &s) in self.pool.iter().zip(&scores) {
+                visited.entry(c.clone()).or_insert(s);
+            }
+            // Rank the current generation: best-first, NaN last, ties by
+            // config index so results are seed-deterministic.
+            let mut ranked: Vec<usize> = (0..self.pool.len()).collect();
+            ranked.sort_by(|&a, &b| {
+                cmp_score_desc(scores[a], scores[b]).then_with(|| {
+                    space.index_of(&self.pool[a]).cmp(&space.index_of(&self.pool[b]))
+                })
+            });
+            let n_elite = self.params.elite.min(self.pool.len());
+            let mut next: Vec<ConfigEntity> =
+                ranked.iter().take(n_elite).map(|&i| self.pool[i].clone()).collect();
+            while next.len() < pop {
+                // Tournament of two: `ranked` is best-first, so the
+                // smaller position wins.
+                let pa = {
+                    let x = rng.gen_range(0..ranked.len());
+                    let y = rng.gen_range(0..ranked.len());
+                    &self.pool[ranked[x.min(y)]]
+                };
+                let pb = {
+                    let x = rng.gen_range(0..ranked.len());
+                    let y = rng.gen_range(0..ranked.len());
+                    &self.pool[ranked[x.min(y)]]
+                };
+                let mut child = space.crossover(pa, pb, rng);
+                if rng.gen_bool(self.params.mutation_prob) {
+                    child = space.mutate(&child, rng);
+                }
+                next.push(child);
+            }
+            self.pool = next;
+        }
+        // Score the final generation too, so the returned ranking sees
+        // the newest children.
+        let scores = scorer.score(&self.pool);
+        for (c, &s) in self.pool.iter().zip(&scores) {
+            visited.entry(c.clone()).or_insert(s);
+        }
+
+        let mut out: Vec<(ConfigEntity, f64)> = visited.into_iter().collect();
+        out.sort_by(|a, b| {
+            cmp_score_desc(a.1, b.1)
+                .then_with(|| space.index_of(&a.0).cmp(&space.index_of(&b.0)))
+        });
+        out.truncate(top_k);
+        out
     }
 }
 
@@ -444,5 +657,236 @@ mod tests {
             last_best >= first_best,
             "GA got worse: {last_best} < {first_best}"
         );
+    }
+
+    #[test]
+    fn evo_finds_high_score_region() {
+        let sp = space();
+        let scorer = toy_scorer(&sp);
+        let mut evo = Evolutionary::new(EvoParams {
+            population: 32,
+            generations: 20,
+            elite: 4,
+            mutation_prob: 0.5,
+        });
+        let mut rng = Rng::seed_from_u64(0);
+        let top = evo.collect(&sp, &scorer, 8, &mut rng);
+        assert!(!top.is_empty());
+        assert!(top[0].1 > -0.5, "best score {}", top[0].1);
+        for w in top.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+
+    #[test]
+    fn evo_population_persists_across_passes() {
+        let sp = space();
+        let scorer = toy_scorer(&sp);
+        let mut evo = Evolutionary::new(EvoParams {
+            population: 16,
+            generations: 6,
+            elite: 4,
+            mutation_prob: 0.5,
+        });
+        let mut rng = Rng::seed_from_u64(2);
+        let first = evo.collect(&sp, &scorer, 4, &mut rng);
+        let pool_after_first = evo.pool.clone();
+        let second = evo.collect(&sp, &scorer, 4, &mut rng);
+        assert_eq!(pool_after_first.len(), evo.pool.len());
+        // the second pass starts from the evolved pool, not fresh
+        // uniform samples, so it cannot regress below the first best
+        assert!(second[0].1 >= first[0].1 - 1e-12);
+    }
+
+    /// Scorer that emits NaN whenever the choice knob picks option 0.
+    fn nan_scorer(space: &ConfigSpace) -> impl Scorer + '_ {
+        let inner = toy_scorer(space);
+        move |es: &[ConfigEntity]| {
+            es.iter()
+                .map(|e| {
+                    if e.choices[2] == 0 {
+                        f64::NAN
+                    } else {
+                        inner.score(std::slice::from_ref(e))[0]
+                    }
+                })
+                .collect()
+        }
+    }
+
+    #[test]
+    fn cmp_score_desc_ranks_nan_last() {
+        let mut v = vec![f64::NAN, 1.0, f64::INFINITY, -2.0, f64::NAN, f64::NEG_INFINITY];
+        v.sort_by(|a, b| cmp_score_desc(*a, *b));
+        assert_eq!(v[0], f64::INFINITY);
+        assert_eq!(v[1], 1.0);
+        assert_eq!(v[2], -2.0);
+        assert_eq!(v[3], f64::NEG_INFINITY);
+        assert!(v[4].is_nan() && v[5].is_nan());
+    }
+
+    #[test]
+    fn nan_scores_neither_panic_nor_win_sa() {
+        let sp = space();
+        let scorer = nan_scorer(&sp);
+        let mut sa = ParallelSa::new(SaParams {
+            n_chains: 16,
+            n_steps: 80,
+            ..Default::default()
+        });
+        let mut rng = Rng::seed_from_u64(11);
+        let top = sa.collect(&sp, &scorer, 8, &mut rng);
+        assert!(!top.is_empty());
+        // a NaN candidate must never outrank real scores
+        assert!(!top[0].1.is_nan(), "NaN won SA selection");
+        // and the persistent chains must all have escaped NaN states
+        for &s in &sa.chain_scores {
+            assert!(!s.is_nan(), "SA chain stuck on a NaN score");
+        }
+    }
+
+    #[test]
+    fn nan_scores_neither_panic_nor_win_ga() {
+        let sp = space();
+        let scorer = nan_scorer(&sp);
+        let mut ga = Genetic::new(16);
+        let mut rng = Rng::seed_from_u64(12);
+        for _ in 0..8 {
+            let batch = ga.propose(&sp, &mut rng);
+            let fit = scorer.score(&batch);
+            ga.update(&batch, &fit);
+        }
+        // pool is sorted NaN-last inside update/propose; the elite
+        // parents drawn next generation must be real-scored when any
+        // real score exists
+        let batch = ga.propose(&sp, &mut rng);
+        assert!(!batch.is_empty());
+    }
+
+    #[test]
+    fn nan_scores_neither_panic_nor_win_evo() {
+        let sp = space();
+        let scorer = nan_scorer(&sp);
+        let mut evo = Evolutionary::new(EvoParams {
+            population: 16,
+            generations: 8,
+            elite: 4,
+            mutation_prob: 0.5,
+        });
+        let mut rng = Rng::seed_from_u64(13);
+        let top = evo.collect(&sp, &scorer, 8, &mut rng);
+        assert!(!top.is_empty());
+        assert!(!top[0].1.is_nan(), "NaN won evolutionary selection");
+    }
+
+    #[test]
+    fn diverse_select_never_picks_nan_over_real() {
+        let sp = space();
+        // NaN candidate listed first — the old seed-pick bug locked it in
+        let ranked = vec![(sp.entity(0), f64::NAN), (sp.entity(1), 1.0), (sp.entity(2), 0.5)];
+        let sel = diverse_select(sp.num_knobs(), &ranked, 2, 1.0);
+        assert_eq!(sel.len(), 2);
+        assert!(!sel.contains(&sp.entity(0)), "NaN-scored candidate selected");
+    }
+
+    fn degenerate_space() -> ConfigSpace {
+        ConfigSpace {
+            knobs: vec![
+                Knob::Split {
+                    name: "a".into(),
+                    extent: 1,
+                    parts: 2,
+                    options: factorizations(1, 2),
+                },
+                Knob::Choice { name: "c".into(), options: vec![7] },
+            ],
+        }
+    }
+
+    #[test]
+    fn sa_terminates_on_all_cardinality_one_space() {
+        let sp = degenerate_space();
+        assert_eq!(sp.size(), 1);
+        let scorer = |es: &[ConfigEntity]| vec![1.0; es.len()];
+        let mut sa = ParallelSa::new(SaParams { n_chains: 4, n_steps: 20, ..Default::default() });
+        let mut rng = Rng::seed_from_u64(21);
+        let top = sa.collect(&sp, &scorer, 4, &mut rng);
+        // mutate returns the parent on cardinality-1 knobs, so exactly
+        // one distinct config exists
+        assert_eq!(top.len(), 1);
+    }
+
+    #[test]
+    fn evo_terminates_on_all_cardinality_one_space() {
+        let sp = degenerate_space();
+        let scorer = |es: &[ConfigEntity]| vec![1.0; es.len()];
+        let mut evo = Evolutionary::new(EvoParams {
+            population: 4,
+            generations: 5,
+            elite: 2,
+            mutation_prob: 0.5,
+        });
+        let mut rng = Rng::seed_from_u64(22);
+        let top = evo.collect(&sp, &scorer, 4, &mut rng);
+        assert_eq!(top.len(), 1);
+    }
+
+    #[test]
+    fn single_knob_space_explores_all_options() {
+        let sp = ConfigSpace {
+            knobs: vec![Knob::Choice { name: "only".into(), options: vec![0, 1, 2, 3, 4] }],
+        };
+        let scorer =
+            |es: &[ConfigEntity]| es.iter().map(|e| e.choices[0] as f64).collect::<Vec<_>>();
+        let mut sa = ParallelSa::new(SaParams { n_chains: 4, n_steps: 40, ..Default::default() });
+        let mut rng = Rng::seed_from_u64(23);
+        let top = sa.collect(&sp, &scorer, 5, &mut rng);
+        assert_eq!(top[0].0.choices[0], 4, "SA missed the single-knob optimum");
+        let mut evo = Evolutionary::new(EvoParams {
+            population: 16,
+            generations: 10,
+            elite: 2,
+            mutation_prob: 0.9,
+        });
+        let top = evo.collect(&sp, &scorer, 5, &mut rng);
+        assert_eq!(top[0].0.choices[0], 4, "evo missed the single-knob optimum");
+    }
+
+    #[test]
+    fn diverse_select_with_b_larger_than_ranked() {
+        let sp = space();
+        let ranked = vec![(sp.entity(0), 1.0), (sp.entity(1), 0.5)];
+        let sel = diverse_select(sp.num_knobs(), &ranked, 10, 1.0);
+        assert_eq!(sel.len(), 2);
+    }
+
+    #[test]
+    fn random_batch_fills_nearly_exhausted_small_space() {
+        // 64 × 64 = 4096 — the largest space still under the exact
+        // contract. With one unseen config left, rejection sampling
+        // (b * 100 = 100 attempts at p = 1/4096) all but certainly
+        // stalls, so this exercises the enumeration fallback.
+        let sp = ConfigSpace {
+            knobs: vec![
+                Knob::Choice { name: "x".into(), options: (0..64).collect() },
+                Knob::Choice { name: "y".into(), options: (0..64).collect() },
+            ],
+        };
+        assert_eq!(sp.size(), RANDOM_BATCH_ENUMERATE_MAX);
+        let hole = sp.size() - 1;
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..sp.size() {
+            if i != hole {
+                seen.insert(sp.entity(i));
+            }
+        }
+        let mut rng = Rng::seed_from_u64(31);
+        let batch = random_batch(&sp, 2, &seen, &mut rng);
+        assert_eq!(batch.len(), 1, "under-filled batch on a small space");
+        assert_eq!(batch[0], sp.entity(hole));
+        // and an exhausted space returns empty, not an infinite loop
+        seen.insert(sp.entity(hole));
+        let batch = random_batch(&sp, 2, &seen, &mut rng);
+        assert!(batch.is_empty());
     }
 }

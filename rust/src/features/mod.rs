@@ -499,6 +499,26 @@ mod tests {
     }
 
     #[test]
+    fn sketch_id_is_first_config_feature() {
+        // On a sketch task, knob 0 is the sketch-id Choice, so the
+        // leading Config feature is log2(sid + 1) and distinguishes
+        // sketches that share every tiling knob value.
+        let task = Task::with_sketches(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+        let n_sketches = task.sketches.as_ref().unwrap().len() as u64;
+        assert!(n_sketches > 1);
+        let mut e = task.space.entity(0);
+        for sid in 0..n_sketches.min(4) {
+            e.choices[0] = sid as u32;
+            let f = config_padded(&task.space, &e);
+            assert!(
+                (f[0] - ((sid + 1) as f64).log2()).abs() < 1e-12,
+                "feature {} for sketch id {sid}",
+                f[0]
+            );
+        }
+    }
+
+    #[test]
     fn context_matrix_padded_is_f32_flat() {
         let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Gpu);
         let a = sample_analysis(&task, 9);

@@ -50,7 +50,7 @@ pub fn matmul_variant_task() -> Task {
             Knob::Choice { name: "vec".into(), options: vec![0] },
         ],
     };
-    Task { def, template: TemplateKind::Gpu, space }
+    Task { def, template: TemplateKind::Gpu, space, sketches: None }
 }
 
 /// Tile sizes selected by an entity of [`matmul_variant_task`].

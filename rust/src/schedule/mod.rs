@@ -12,6 +12,7 @@
 //! [`template`] map an operator to its space and a config to a
 //! `Schedule`.
 
+pub mod sketch;
 pub mod space;
 pub mod template;
 

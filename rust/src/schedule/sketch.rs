@@ -1,0 +1,469 @@
+//! Ansor-style sketch generation: derivation rules → sketch set →
+//! one merged config space (ROADMAP item 3).
+//!
+//! The hand template in [`super::template`] fixes every structural
+//! decision (tile depth, loop interleaving, cache staging) and tunes
+//! only the extents. Ansor's insight is to *derive* the structure too:
+//! apply a small set of rules (multi-level tiling depth, reduce-tiling
+//! depth, cache-read staging, accumulator staging) to the tensor
+//! expression, producing a set of [`Sketch`]es — program structures
+//! with free tile extents — and let the search fill the extents.
+//!
+//! Representation: rather than one `ConfigSpace` per sketch, the module
+//! builds **one** space whose first knob selects the sketch and whose
+//! split knobs are sized for the *deepest* sketch
+//! ([`MAX_SPATIAL_PARTS`] / [`MAX_REDUCE_PARTS`]); shallower sketches
+//! fold the surplus tail factors into their innermost tile
+//! ([`merge_tail`]). This keeps every existing consumer working — SA
+//! mutation, crossover, `Representation::Config` featurization (the
+//! sketch id lands as the first config feature) — while multiplying
+//! the space size by orders of magnitude.
+//!
+//! **Containment guarantee:** the current hand template is one point of
+//! every sketch space — [`embed_template_config`] maps any template
+//! config to a sketch config with an *identical* [`Schedule`], proved
+//! by `tests/sketch_evo.rs` on conv2d and matmul.
+
+use super::space::{factorizations, ConfigEntity, ConfigSpace, Knob};
+use super::template::TemplateKind;
+use super::{CacheRead, LeafRef, Schedule};
+use crate::ast::ForKind;
+use crate::expr::ComputeDef;
+use std::collections::HashMap;
+
+/// Deepest spatial tiling any sketch uses; spatial split knobs carry
+/// this many parts and shallower sketches merge the tail.
+pub const MAX_SPATIAL_PARTS: usize = 4;
+/// Deepest reduce tiling any sketch uses.
+pub const MAX_REDUCE_PARTS: usize = 3;
+
+/// One derivation step in a sketch's trace. The trace is explanatory
+/// (reports, debugging, docs) — [`Sketch`]'s structural fields are what
+/// instantiation consumes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rule {
+    /// Tile every spatial axis into `parts` levels.
+    MultiLevelTiling {
+        /// Tile levels per spatial axis.
+        parts: usize,
+    },
+    /// Tile every reduce axis into `parts` levels, interleaved with the
+    /// spatial levels.
+    ReduceTiling {
+        /// Tile levels per reduce axis.
+        parts: usize,
+    },
+    /// Stage input tiles into shared memory inside the outer reduce
+    /// loops (GPU).
+    CacheReadStage {
+        /// Whether the stage is inserted.
+        on: bool,
+    },
+    /// Accumulate into a register/local tile, write back once.
+    AccumulatorStage {
+        /// Whether the accumulator is staged.
+        staged: bool,
+    },
+}
+
+/// One derived program structure with free tile extents.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Sketch {
+    /// Tile levels per spatial axis (≤ [`MAX_SPATIAL_PARTS`]).
+    pub spatial_parts: usize,
+    /// Tile levels per reduce axis (≤ [`MAX_REDUCE_PARTS`]).
+    pub reduce_parts: usize,
+    /// Stage input tiles into shared memory (GPU, reductions only).
+    pub cache_read: bool,
+    /// Stage the accumulator in a register/local tile.
+    pub cache_write: bool,
+    /// The derivation trace that produced this structure.
+    pub rules: Vec<Rule>,
+}
+
+/// Enumerate the sketch set for an operator under a template: the
+/// cross product of the derivation rules that apply to it. The first
+/// sketch is always the hand template's structure (3-level spatial,
+/// 2-level reduce, template-default staging), so index 0 is the
+/// template-compatible anchor.
+pub fn generate(def: &ComputeDef, t: TemplateKind) -> Vec<Sketch> {
+    let nr = def.reduce_axes.len();
+    let mut out = Vec::new();
+    for sp in [3usize, 4] {
+        let rps: &[usize] = if nr > 0 { &[2, 3] } else { &[2] };
+        for &rp in rps {
+            let crs: &[bool] =
+                if t == TemplateKind::Gpu && nr > 0 { &[true, false] } else { &[false] };
+            for &cr in crs {
+                for cw in [true, false] {
+                    out.push(Sketch {
+                        spatial_parts: sp,
+                        reduce_parts: rp,
+                        cache_read: cr,
+                        cache_write: cw,
+                        rules: vec![
+                            Rule::MultiLevelTiling { parts: sp },
+                            Rule::ReduceTiling { parts: rp },
+                            Rule::CacheReadStage { on: cr },
+                            Rule::AccumulatorStage { staged: cw },
+                        ],
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Build the merged config space over a sketch set.
+///
+/// Knob layout (consumed positionally by [`instantiate_sketch`]):
+/// knob 0 is the `sketch` selector, then one [`MAX_SPATIAL_PARTS`]-part
+/// `Split` per spatial axis and one [`MAX_REDUCE_PARTS`]-part `Split`
+/// per reduce axis (extent-1 axes get a degenerate single option), then
+/// the `unroll` and `vec` choices. There is no `cache_write` knob —
+/// accumulator staging is structural (a sketch decision).
+pub fn sketch_space(def: &ComputeDef, t: TemplateKind, sketches: &[Sketch]) -> ConfigSpace {
+    let mut knobs = vec![Knob::Choice {
+        name: "sketch".into(),
+        options: (0..sketches.len() as i64).collect(),
+    }];
+    for ax in def.axes.iter() {
+        let opts = if ax.extent == 1 {
+            vec![vec![1; MAX_SPATIAL_PARTS]]
+        } else {
+            factorizations(ax.extent, MAX_SPATIAL_PARTS)
+        };
+        knobs.push(Knob::Split {
+            name: format!("tile_{}", ax.name),
+            extent: ax.extent,
+            parts: MAX_SPATIAL_PARTS,
+            options: opts,
+        });
+    }
+    for ax in def.reduce_axes.iter() {
+        let opts = if ax.extent == 1 {
+            vec![vec![1; MAX_REDUCE_PARTS]]
+        } else {
+            factorizations(ax.extent, MAX_REDUCE_PARTS)
+        };
+        knobs.push(Knob::Split {
+            name: format!("tile_{}", ax.name),
+            extent: ax.extent,
+            parts: MAX_REDUCE_PARTS,
+            options: opts,
+        });
+    }
+    let unroll_opts = match t {
+        TemplateKind::Cpu => vec![0, 4, 16, 64],
+        TemplateKind::Gpu => vec![0, 16, 64, 512],
+    };
+    knobs.push(Knob::Choice { name: "unroll".into(), options: unroll_opts });
+    knobs.push(Knob::Choice { name: "vec".into(), options: vec![0, 1] });
+    ConfigSpace { knobs }
+}
+
+/// Fold a max-depth factorization down to `parts` levels: keep the
+/// first `parts - 1` factors, multiply the tail into the innermost.
+/// `merge_tail(&[a, b, c, 1], 3) == [a, b, c]`, which is what makes
+/// the template's 3-part splits exactly reachable from 4-part knobs.
+pub(crate) fn merge_tail(sizes: &[i64], parts: usize) -> Vec<i64> {
+    debug_assert!(parts >= 1 && sizes.len() >= parts);
+    let mut out = sizes[..parts - 1].to_vec();
+    out.push(sizes[parts - 1..].iter().product());
+    out
+}
+
+/// Canonical interleaved leaf order for `sp` spatial and `rp` reduce
+/// tile levels: reduce level `r` is emitted just before spatial level
+/// `min(r + 1, sp - 1)` (the last reduce level always sits just outside
+/// the innermost spatial tiles). For `(sp, rp) = (3, 2)` this is
+/// exactly the hand template's `S0.. R0.. S1.. R1.. S2..` — the
+/// template's `leaf_order` delegates here.
+pub(crate) fn interleaved_order(ns: usize, nr: usize, sp: usize, rp: usize) -> Vec<LeafRef> {
+    let mut order = Vec::with_capacity(ns * sp + nr * rp);
+    for part in 0..sp {
+        for r in 0..rp {
+            let at = if r + 1 >= rp { sp - 1 } else { (r + 1).min(sp - 1) };
+            if at == part {
+                for ri in 0..nr {
+                    order.push(LeafRef { axis: ns + ri, part: r });
+                }
+            }
+        }
+        for ax in 0..ns {
+            order.push(LeafRef { axis: ax, part });
+        }
+    }
+    order
+}
+
+/// Instantiate a schedule from a sketch-space config: knob 0 picks the
+/// sketch (the structure), the split knobs fill its free extents.
+/// Annotation policy matches the hand template — CPU parallelizes outer
+/// spatial tiles with extent > 1, GPU binds spatial parts 0/1 to
+/// blocks/threads — so a sketch config that reproduces the template's
+/// structure reproduces its schedule exactly.
+pub fn instantiate_sketch(
+    def: &ComputeDef,
+    t: TemplateKind,
+    sketches: &[Sketch],
+    space: &ConfigSpace,
+    e: &ConfigEntity,
+) -> Schedule {
+    let ns = def.axes.len();
+    let nr = def.reduce_axes.len();
+    let sk = &sketches[e.choices[0] as usize];
+
+    let mut splits: Vec<Vec<i64>> = Vec::with_capacity(ns + nr);
+    for i in 0..ns + nr {
+        let full = match &space.knobs[i + 1] {
+            Knob::Split { options, .. } => &options[e.choices[i + 1] as usize],
+            _ => unreachable!("knob {} must be a split", i + 1),
+        };
+        let parts = if i < ns { sk.spatial_parts } else { sk.reduce_parts };
+        splits.push(merge_tail(full, parts));
+    }
+    let get_choice = |name: &str| -> i64 {
+        let i = space.knob_index(name).unwrap();
+        match &space.knobs[i] {
+            Knob::Choice { options, .. } => options[e.choices[i] as usize],
+            _ => unreachable!(),
+        }
+    };
+    let unroll = get_choice("unroll");
+    let vec = get_choice("vec") != 0;
+
+    let order = interleaved_order(ns, nr, sk.spatial_parts, sk.reduce_parts);
+
+    let mut annotations = HashMap::new();
+    match t {
+        TemplateKind::Cpu => {
+            for (ax, sizes) in splits.iter().enumerate().take(ns) {
+                if sizes[0] > 1 {
+                    annotations.insert(LeafRef { axis: ax, part: 0 }, ForKind::Parallel);
+                }
+            }
+        }
+        TemplateKind::Gpu => {
+            for ax in 0..ns {
+                annotations.insert(LeafRef { axis: ax, part: 0 }, ForKind::BlockBind);
+                annotations.insert(LeafRef { axis: ax, part: 1 }, ForKind::ThreadBind);
+            }
+        }
+    }
+
+    // Cache-read staging: input tiles land in shared memory just inside
+    // the second-to-innermost reduce level (part rp−1), mirroring the
+    // template's "before R1" placement.
+    let mut cache_reads = Vec::new();
+    if t == TemplateKind::Gpu && nr > 0 && sk.cache_read {
+        let pos = order
+            .iter()
+            .position(|l| l.axis >= ns && l.part == sk.reduce_parts - 1)
+            .expect("reduce leaves exist");
+        let mut seen = std::collections::HashSet::new();
+        for acc in def.body.accesses() {
+            if seen.insert(acc.tensor.clone()) {
+                cache_reads.push(CacheRead { tensor: acc.tensor.clone(), at: pos });
+            }
+        }
+    }
+
+    Schedule {
+        splits,
+        order,
+        annotations,
+        cache_reads,
+        copy_kind: match t {
+            TemplateKind::Cpu => ForKind::Serial,
+            TemplateKind::Gpu => ForKind::ThreadBind,
+        },
+        cache_write: sk.cache_write,
+        unroll_max_step: unroll,
+        vectorize_inner: vec,
+    }
+}
+
+/// Map a hand-template config to the sketch-space config with the
+/// identical [`Schedule`]: pick the template-structured sketch (3-level
+/// spatial, 2-level reduce, the template's effective staging), pad each
+/// split with trailing 1s up to the sketch knob depth, and copy the
+/// annotation choices. This is the constructive proof of the
+/// containment guarantee.
+pub fn embed_template_config(
+    tpl: &super::template::Task,
+    sk_task: &super::template::Task,
+    e: &ConfigEntity,
+) -> ConfigEntity {
+    let def = &tpl.def;
+    let ns = def.axes.len();
+    let nr = def.reduce_axes.len();
+    let sketches = sk_task.sketches.as_ref().expect("embed target must be a sketch task");
+
+    let tpl_choice = |name: &str| -> i64 {
+        let i = tpl.space.knob_index(name).unwrap();
+        match &tpl.space.knobs[i] {
+            Knob::Choice { options, .. } => options[e.choices[i] as usize],
+            _ => unreachable!(),
+        }
+    };
+    let cw = match tpl.template {
+        TemplateKind::Gpu => true,
+        TemplateKind::Cpu => tpl_choice("cache_write") != 0,
+    };
+    let want_cr = tpl.template == TemplateKind::Gpu && nr > 0;
+    let sid = sketches
+        .iter()
+        .position(|s| {
+            s.spatial_parts == 3
+                && s.reduce_parts == 2
+                && s.cache_read == want_cr
+                && s.cache_write == cw
+        })
+        .expect("template-equivalent sketch present");
+
+    let mut choices = vec![0u32; sk_task.space.num_knobs()];
+    choices[0] = sid as u32;
+    for ax in 0..ns + nr {
+        let tpl_sizes = match &tpl.space.knobs[ax] {
+            Knob::Split { options, .. } => &options[e.choices[ax] as usize],
+            _ => unreachable!("knob {ax} must be a split"),
+        };
+        let target = if ax < ns { MAX_SPATIAL_PARTS } else { MAX_REDUCE_PARTS };
+        let mut padded = tpl_sizes.clone();
+        padded.resize(target, 1);
+        let pos = match &sk_task.space.knobs[ax + 1] {
+            Knob::Split { options, .. } => options
+                .iter()
+                .position(|o| o == &padded)
+                .expect("padded factorization present in sketch knob"),
+            _ => unreachable!("knob {} must be a split", ax + 1),
+        };
+        choices[ax + 1] = pos as u32;
+    }
+    for name in ["unroll", "vec"] {
+        let ti = tpl.space.knob_index(name).unwrap();
+        let si = sk_task.space.knob_index(name).unwrap();
+        choices[si] = e.choices[ti];
+    }
+    ConfigEntity { choices }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::expr::ops;
+    use crate::schedule::template::Task;
+    use crate::util::Rng;
+
+    #[test]
+    fn merge_tail_folds_into_innermost() {
+        assert_eq!(merge_tail(&[2, 4, 8, 1], 3), vec![2, 4, 8]);
+        assert_eq!(merge_tail(&[2, 4, 8, 2], 3), vec![2, 4, 16]);
+        assert_eq!(merge_tail(&[3, 5, 7], 2), vec![3, 35]);
+        assert_eq!(merge_tail(&[3, 5], 2), vec![3, 5]);
+    }
+
+    #[test]
+    fn interleaved_order_matches_template_shape() {
+        // (sp=3, rp=2): S0 S0' R0 S1 S1' R1 S2 S2' for ns=2, nr=1
+        let order = interleaved_order(2, 1, 3, 2);
+        let expect = vec![
+            LeafRef { axis: 0, part: 0 },
+            LeafRef { axis: 1, part: 0 },
+            LeafRef { axis: 2, part: 0 },
+            LeafRef { axis: 0, part: 1 },
+            LeafRef { axis: 1, part: 1 },
+            LeafRef { axis: 2, part: 1 },
+            LeafRef { axis: 0, part: 2 },
+            LeafRef { axis: 1, part: 2 },
+        ];
+        assert_eq!(order, expect);
+    }
+
+    #[test]
+    fn interleaved_order_covers_all_leaves() {
+        for (ns, nr) in [(2, 1), (4, 3), (1, 0)] {
+            for sp in [3, 4] {
+                for rp in [2, 3] {
+                    let order = interleaved_order(ns, nr, sp, rp);
+                    assert_eq!(order.len(), ns * sp + nr * rp);
+                    let set: std::collections::HashSet<_> = order.iter().collect();
+                    assert_eq!(set.len(), order.len(), "duplicate leaf");
+                    // last reduce level precedes the innermost spatial
+                    if nr > 0 {
+                        let last_r = order
+                            .iter()
+                            .position(|l| l.axis >= ns && l.part == rp - 1)
+                            .unwrap();
+                        let last_s = order
+                            .iter()
+                            .position(|l| l.axis < ns && l.part == sp - 1)
+                            .unwrap();
+                        assert!(last_r < last_s);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn first_sketch_is_template_shaped() {
+        let def = ops::matmul(64, 64, 64);
+        for t in [TemplateKind::Cpu, TemplateKind::Gpu] {
+            let sks = generate(&def, t);
+            assert_eq!(sks[0].spatial_parts, 3);
+            assert_eq!(sks[0].reduce_parts, 2);
+            assert_eq!(sks[0].cache_read, t == TemplateKind::Gpu);
+            assert!(sks[0].cache_write);
+        }
+    }
+
+    #[test]
+    fn sketch_schedules_validate() {
+        let def = ops::matmul(128, 128, 128);
+        for t in [TemplateKind::Cpu, TemplateKind::Gpu] {
+            let task = Task::with_sketches(def.clone(), t);
+            let extents: Vec<i64> = def.all_axes().map(|a| a.extent).collect();
+            let mut rng = Rng::seed_from_u64(17);
+            for _ in 0..60 {
+                let e = task.space.sample(&mut rng);
+                task.schedule(&e).validate(&extents).unwrap();
+                let p = task.lower(&e).unwrap();
+                assert!(p.flops > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn embedded_template_config_schedules_identically() {
+        let def = ops::matmul(64, 64, 64);
+        for t in [TemplateKind::Cpu, TemplateKind::Gpu] {
+            let tpl = Task::new(def.clone(), t);
+            let skt = Task::with_sketches(def.clone(), t);
+            let mut rng = Rng::seed_from_u64(23);
+            for _ in 0..40 {
+                let e = tpl.space.sample(&mut rng);
+                let emb = embed_template_config(&tpl, &skt, &e);
+                assert!(skt.space.contains(&emb));
+                assert_eq!(tpl.schedule(&e), skt.schedule(&emb));
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_space_is_strictly_larger() {
+        let def = ops::matmul(64, 64, 64);
+        for t in [TemplateKind::Cpu, TemplateKind::Gpu] {
+            let tpl = Task::new(def.clone(), t);
+            let skt = Task::with_sketches(def.clone(), t);
+            assert!(
+                skt.space.size() > tpl.space.size(),
+                "{t:?}: sketch {} !> template {}",
+                skt.space.size(),
+                tpl.space.size()
+            );
+        }
+    }
+}

@@ -132,7 +132,17 @@ impl ConfigSpace {
     }
 
     /// Decode a flat index (mixed radix, first knob most significant).
+    ///
+    /// `index` must be `< size()`: out-of-range indices used to wrap
+    /// silently (breaking the [`ConfigSpace::index_of`] roundtrip), so
+    /// debug builds now assert. Callers with an arbitrary integer in
+    /// hand must clamp explicitly (`index % size()`).
     pub fn entity(&self, mut index: u64) -> ConfigEntity {
+        debug_assert!(
+            index < self.size(),
+            "entity index {index} out of range for space of size {}",
+            self.size()
+        );
         let mut choices = vec![0u32; self.knobs.len()];
         for (i, k) in self.knobs.iter().enumerate().rev() {
             let c = k.cardinality() as u64;
@@ -317,6 +327,27 @@ mod tests {
             let e = s.entity(i);
             assert_eq!(s.index_of(&e), i);
         }
+    }
+
+    #[test]
+    fn entity_boundary_roundtrip() {
+        let s = space();
+        let last = s.size() - 1;
+        assert_eq!(s.index_of(&s.entity(0)), 0);
+        assert_eq!(s.index_of(&s.entity(last)), last);
+        // the last entity picks the last option of every knob
+        let e = s.entity(last);
+        for (k, &c) in s.knobs.iter().zip(&e.choices) {
+            assert_eq!(c as usize, k.cardinality() - 1);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    #[cfg(debug_assertions)]
+    fn entity_out_of_range_asserts_in_debug() {
+        let s = space();
+        let _ = s.entity(s.size());
     }
 
     #[test]

@@ -46,6 +46,11 @@ pub struct Task {
     pub template: TemplateKind,
     /// The enumerable knob space `S_e`.
     pub space: ConfigSpace,
+    /// When set, the task searches the Ansor-style sketch space
+    /// ([`super::sketch`]) instead of the hand template: the space's
+    /// first knob selects a sketch and [`Task::schedule`] dispatches to
+    /// [`super::sketch::instantiate_sketch`]. `None` = hand template.
+    pub sketches: Option<std::sync::Arc<Vec<super::sketch::Sketch>>>,
 }
 
 impl Task {
@@ -53,12 +58,39 @@ impl Task {
     /// template.
     pub fn new(def: ComputeDef, template: TemplateKind) -> Self {
         let space = build_space(&def, template);
-        Task { def, template, space }
+        Task { def, template, space, sketches: None }
     }
 
-    /// Short identity for the database / transfer learning.
+    /// Build the task over the rule-derived sketch space instead of the
+    /// hand template. The template space is strictly contained: every
+    /// template config maps to a sketch config with the identical
+    /// schedule via [`super::sketch::embed_template_config`].
+    pub fn with_sketches(def: ComputeDef, template: TemplateKind) -> Self {
+        let sketches = super::sketch::generate(&def, template);
+        let space = super::sketch::sketch_space(&def, template, &sketches);
+        Task { def, template, space, sketches: Some(std::sync::Arc::new(sketches)) }
+    }
+
+    /// Short identity for the database / transfer learning. Sketch
+    /// tasks get a `+sketch` suffix: their choice indices are
+    /// meaningless in the template space (and vice versa), so the two
+    /// must never share DB records.
     pub fn key(&self) -> String {
-        Task::key_for(&self.def, self.template)
+        let base = Task::key_for(&self.def, self.template);
+        if self.sketches.is_some() {
+            format!("{base}+sketch")
+        } else {
+            base
+        }
+    }
+
+    /// Whether the structure-cached delta featurization path applies.
+    /// Sketch tasks opt out: their knob layout (leading sketch
+    /// selector) doesn't match the positional contract of
+    /// [`Task::split_sizes`] / [`Task::structure_key`], so the
+    /// featurizer falls back to full featurization for them.
+    pub fn delta_capable(&self) -> bool {
+        self.sketches.is_none()
     }
 
     /// The [`Task::key`] an operator would get under `template`,
@@ -70,7 +102,16 @@ impl Task {
 
     /// Map a config to a schedule.
     pub fn schedule(&self, e: &ConfigEntity) -> Schedule {
-        instantiate(&self.def, self.template, &self.space, e)
+        match &self.sketches {
+            Some(sk) => super::sketch::instantiate_sketch(
+                &self.def,
+                self.template,
+                sk,
+                &self.space,
+                e,
+            ),
+            None => instantiate(&self.def, self.template, &self.space, e),
+        }
     }
 
     /// `g(e, s)` — convenience wrapper over [`crate::lower::lower`].
@@ -112,6 +153,10 @@ impl Task {
     /// the whole point: configs sharing a key can reuse one donor
     /// analysis through delta replay.
     pub fn structure_key(&self, e: &ConfigEntity) -> u64 {
+        debug_assert!(
+            self.delta_capable(),
+            "structure_key is template-only; gate on Task::delta_capable first"
+        );
         let ns = self.def.axes.len();
         let nr = self.def.reduce_axes.len();
         let get_choice = |name: &str| -> i64 {
@@ -238,25 +283,11 @@ pub fn build_space(def: &ComputeDef, t: TemplateKind) -> ConfigSpace {
 /// Canonical interleaved leaf order `S0.. R0.. S1.. R1.. S2..` shared
 /// by [`instantiate`] and [`Task::structure_key`] — R0 sits between
 /// the outer and middle spatial tiles, R1 just outside the innermost
-/// spatial tiles.
+/// spatial tiles. Delegates to the sketch module's generalized
+/// interleaving with the template's fixed 2-level reduce tiling, so
+/// the two stay a single source of truth.
 fn leaf_order(ns: usize, nr: usize, sp: usize) -> Vec<LeafRef> {
-    let mut order = Vec::with_capacity(ns * sp + 2 * nr);
-    for part in 0..sp {
-        if part == 1 {
-            for ri in 0..nr {
-                order.push(LeafRef { axis: ns + ri, part: 0 });
-            }
-        }
-        if part == sp - 1 && nr > 0 {
-            for ri in 0..nr {
-                order.push(LeafRef { axis: ns + ri, part: 1 });
-            }
-        }
-        for ax in 0..ns {
-            order.push(LeafRef { axis: ax, part });
-        }
-    }
-    order
+    super::sketch::interleaved_order(ns, nr, sp, 2)
 }
 
 /// Instantiate a schedule from a config entity.

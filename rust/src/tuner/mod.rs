@@ -57,7 +57,9 @@ pub mod pipeline;
 pub mod scheduler;
 pub mod serve;
 
-use crate::explore::{diverse_select, random_batch, ParallelSa, Scorer};
+use crate::explore::{
+    diverse_select, random_batch, Evolutionary, ParallelSa, Scorer, SearchKind,
+};
 use crate::features::Representation;
 use crate::gbt::Matrix;
 use crate::measure::{BatchTicket, MeasureResult, Measurer};
@@ -69,7 +71,7 @@ use db::{Record, TuningDb};
 use std::cell::RefCell;
 use std::collections::{HashMap, HashSet, VecDeque};
 
-pub use crate::explore::SaParams;
+pub use crate::explore::{EvoParams, SaParams};
 
 /// Tuning options (defaults follow the paper's experiment configuration:
 /// b = 64, ε = 0.05, 128 SA chains × 500 steps).
@@ -92,8 +94,16 @@ pub struct TuneOptions {
     pub acquisition: Acquisition,
     /// Program representation used for featurization.
     pub repr: Representation,
-    /// Simulated-annealing exploration budget.
+    /// Which model-guided explorer proposes candidates: persistent
+    /// parallel SA (the paper's §3.3 default) or the Ansor-style
+    /// evolutionary refiner (`--search evo`). Both are model-fitness
+    /// searches sharing the round structure, dedup contract and
+    /// determinism discipline, so they are interchangeable per run.
+    pub search: SearchKind,
+    /// Simulated-annealing exploration budget (`search = Sa`).
     pub sa: SaParams,
+    /// Evolutionary-search budget (`search = Evo`).
+    pub evo: EvoParams,
     /// Seed of every RNG stream in the loop.
     pub seed: u64,
     /// Print per-round progress.
@@ -138,7 +148,9 @@ impl Default for TuneOptions {
             diversity: true,
             acquisition: Acquisition::Mean,
             repr: Representation::Full,
+            search: SearchKind::Sa,
             sa: SaParams::default(),
+            evo: EvoParams::default(),
             seed: 0,
             verbose: false,
             pipeline_depth: 2,
@@ -392,10 +404,13 @@ impl Featurizer {
                     self.insert_row(&mut self.cache.borrow_mut(), keys[i], row.clone());
                     rows[i] = Some(row);
                 }
-            } else if self.fast {
+            } else if self.fast && task.delta_capable() {
                 // Program-derived representations: delta replay per row
                 // (serial — the replay is allocation-light and far
-                // cheaper than a parallel fresh lower+analyze).
+                // cheaper than a parallel fresh lower+analyze). Sketch
+                // tasks skip this arm — their leading sketch knob breaks
+                // the positional split contract the replay keys on — and
+                // take the reference batch path below instead.
                 for (i, e) in missing {
                     let row = self.delta_row(task, &e);
                     self.insert_row(&mut self.cache.borrow_mut(), keys[i], row.clone());
@@ -448,6 +463,11 @@ impl Featurizer {
         let space = &task.space;
         let mut rows: Vec<Vec<f64>> = Vec::with_capacity(proposals.len());
         if self.repr != Representation::Config {
+            if !task.delta_capable() {
+                // Sketch tasks have no structure-cached delta path;
+                // fall back to the full score path (slower, identical).
+                return None;
+            }
             // Program-derived representations: delta replay per missing
             // row (the parent row is not needed — the donor analysis of
             // the proposal's structure is).
@@ -633,20 +653,46 @@ impl TrialAccountant {
     }
 }
 
-/// Batch proposal per Algorithm 1: SA pool → dedup against everything
-/// already proposed → diversity (or top-b) selection → ε-greedy random
-/// tail. Owns the persistent SA chains, the proposal RNG stream and a
-/// [`Featurizer`]; shared verbatim by the serial and pipelined loops.
+/// The model-guided candidate collector a [`BatchProposer`] runs each
+/// round: persistent-chain SA or the evolutionary refiner, both
+/// exposing the same `collect` contract (distinct candidates,
+/// best-first, all randomness from the caller's [`Rng`]).
+enum Explorer {
+    Sa(ParallelSa),
+    Evo(Evolutionary),
+}
+
+impl Explorer {
+    fn collect(
+        &mut self,
+        space: &crate::schedule::space::ConfigSpace,
+        scorer: &dyn Scorer,
+        top_k: usize,
+        rng: &mut Rng,
+    ) -> Vec<(ConfigEntity, f64)> {
+        match self {
+            Explorer::Sa(sa) => sa.collect(space, scorer, top_k, rng),
+            Explorer::Evo(evo) => evo.collect(space, scorer, top_k, rng),
+        }
+    }
+}
+
+/// Batch proposal per Algorithm 1: explorer pool (SA chains or the
+/// evolutionary population, per [`TuneOptions::search`]) → dedup
+/// against everything already proposed → diversity (or top-b) selection
+/// → ε-greedy random tail. Owns the persistent explorer state, the
+/// proposal RNG stream and a [`Featurizer`]; shared verbatim by the
+/// serial and pipelined loops.
 pub struct BatchProposer {
     /// Shared feature extraction + memo cache.
     pub feat: Featurizer,
-    sa: ParallelSa,
+    explorer: Explorer,
     rng: Rng,
     proposed: HashSet<ConfigEntity>,
 }
 
 impl BatchProposer {
-    /// Fresh proposer (SA chains, RNG stream, dedup set) for a run.
+    /// Fresh proposer (explorer state, RNG stream, dedup set) for a run.
     pub fn new(options: &TuneOptions) -> Self {
         BatchProposer {
             feat: Featurizer::with_capacity(
@@ -654,7 +700,10 @@ impl BatchProposer {
                 options.fast_paths,
                 options.feat_cache_cap.unwrap_or(FEAT_CACHE_CAP),
             ),
-            sa: ParallelSa::new(options.sa.clone()),
+            explorer: match options.search {
+                SearchKind::Sa => Explorer::Sa(ParallelSa::new(options.sa.clone())),
+                SearchKind::Evo => Explorer::Evo(Evolutionary::new(options.evo.clone())),
+            },
             rng: Rng::seed_from_u64(options.seed ^ 0x7u64.wrapping_mul(0x9E3779B97F4A7C15)),
             proposed: HashSet::new(),
         }
@@ -675,7 +724,7 @@ impl BatchProposer {
         b: usize,
         best_y: f64,
     ) -> Vec<ConfigEntity> {
-        let BatchProposer { feat, sa, rng, proposed } = self;
+        let BatchProposer { feat, explorer, rng, proposed } = self;
         let mut batch: Vec<ConfigEntity> = Vec::with_capacity(b);
         if model.ready() {
             let scorer = TunerScorer {
@@ -685,7 +734,7 @@ impl BatchProposer {
                 acquisition: options.acquisition,
                 best: best_y,
             };
-            let pool = sa.collect(&task.space, &scorer, options.lambda * b, rng);
+            let pool = explorer.collect(&task.space, &scorer, options.lambda * b, rng);
             let fresh: Vec<(ConfigEntity, f64)> =
                 pool.into_iter().filter(|(e, _)| !proposed.contains(e)).collect();
             let n_rand = ((b as f64 * options.eps).round() as usize).min(b);
@@ -1277,5 +1326,66 @@ mod tests {
         let res = acct.into_result();
         assert_eq!(res.best_gflops(), 10.0);
         assert_eq!(res.records.iter().filter(|r| r.error.is_some()).count(), 2);
+    }
+
+    #[test]
+    fn evo_search_is_deterministic_and_improves() {
+        let mk_task = || Task::new(ops::matmul(128, 128, 128), TemplateKind::Gpu);
+        let mut o = small_options(64);
+        o.search = crate::explore::SearchKind::Evo;
+        o.evo = EvoParams { population: 32, generations: 8, ..Default::default() };
+        let a = tune_gbt(mk_task(), &SimMeasurer::with_seed(sim_gpu(), 41), o.clone());
+        let b = tune_gbt(mk_task(), &SimMeasurer::with_seed(sim_gpu(), 41), o);
+        assert_eq!(a.curve, b.curve, "evo search not seed-deterministic");
+        let ea: Vec<_> = a.records.iter().map(|r| r.entity.clone()).collect();
+        let eb: Vec<_> = b.records.iter().map(|r| r.entity.clone()).collect();
+        assert_eq!(ea, eb);
+        assert!(a.best_gflops() > 0.0);
+        assert!(a.best_at(64) >= a.best_at(16));
+    }
+
+    #[test]
+    fn evo_search_never_remeasures_configs() {
+        let task = Task::new(ops::matmul(64, 64, 64), TemplateKind::Cpu);
+        let m = SimMeasurer::with_seed(crate::sim::devices::sim_cpu(), 43);
+        let mut o = small_options(64);
+        o.search = crate::explore::SearchKind::Evo;
+        o.evo = EvoParams { population: 32, generations: 8, ..Default::default() };
+        let res = tune_gbt(task, &m, o);
+        let mut uniq = HashSet::new();
+        for r in &res.records {
+            assert!(uniq.insert(r.entity.clone()), "config measured twice");
+        }
+    }
+
+    #[test]
+    fn sketch_task_tunes_end_to_end() {
+        // Sketch spaces flow through the whole loop: the leading sketch
+        // knob disables the delta path (delta_capable gating), Config
+        // rows carry the sketch id, and every proposed config lowers.
+        for repr in [Representation::Config, Representation::Full] {
+            let task = Task::with_sketches(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+            assert!(!task.delta_capable());
+            assert!(task.key().ends_with("+sketch"));
+            let m = SimMeasurer::with_seed(sim_gpu(), 47);
+            let mut o = small_options(32);
+            o.repr = repr;
+            let res = tune_gbt(task, &m, o);
+            assert_eq!(res.curve.len(), 32);
+            assert!(res.best_gflops() > 0.0, "no successful trial under {repr:?}");
+        }
+    }
+
+    #[test]
+    fn sketch_task_evo_search_works() {
+        let task = Task::with_sketches(ops::matmul(64, 64, 64), TemplateKind::Gpu);
+        let m = SimMeasurer::with_seed(sim_gpu(), 53);
+        let mut o = small_options(32);
+        o.repr = Representation::Config;
+        o.search = crate::explore::SearchKind::Evo;
+        o.evo = EvoParams { population: 32, generations: 6, ..Default::default() };
+        let res = tune_gbt(task, &m, o);
+        assert_eq!(res.curve.len(), 32);
+        assert!(res.best_gflops() > 0.0);
     }
 }

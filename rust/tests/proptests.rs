@@ -223,6 +223,11 @@ fn prop_config_entity_index_roundtrip() {
         let idx = task.space.index_of(&e);
         assert_eq!(task.space.entity(idx), e);
         assert!(idx < task.space.size());
+        // boundary: first and last valid indices roundtrip too (the
+        // last used to be where silent wrapping hid off-by-ones)
+        assert_eq!(task.space.index_of(&task.space.entity(0)), 0);
+        let last = task.space.size() - 1;
+        assert_eq!(task.space.index_of(&task.space.entity(last)), last);
     });
 }
 

@@ -135,8 +135,10 @@ fn pjrt_measurer_times_variants() {
     let rt = PjrtRuntime::cpu().unwrap();
     let m = PjrtMeasurer::new(rt).unwrap();
     let task = matmul_variant_task();
-    // measure three distinct variants
-    let batch: Vec<_> = [0u64, 13, 26].iter().map(|&i| task.space.entity(i)).collect();
+    // measure three distinct variants (the 27-point grid makes 26 the
+    // last valid index; clamp explicitly — entity() asserts in-range)
+    let batch: Vec<_> =
+        [0u64, 13, 26].iter().map(|&i| task.space.entity(i % task.space.size())).collect();
     let results = m.measure(&task, &batch);
     for r in &results {
         assert!(r.is_ok(), "variant failed: {:?}", r.error);

@@ -1,0 +1,97 @@
+//! Sketch-space containment and evolutionary-search acceptance tests
+//! (ISSUE 10 / ROADMAP item 3).
+//!
+//! * `sketch_contains_template_*`: the generated sketch space strictly
+//!   contains the hand template — every template config maps (via
+//!   [`embed_template_config`]) to a sketch config with the *identical*
+//!   lowered `Schedule`, and the sketch space is strictly larger.
+//! * `evo_matches_or_beats_sa_*`: at an equal measurement-trial budget
+//!   on the deterministic simulator, the model-guided evolutionary
+//!   refiner is no worse than parallel SA, summed over seeds (the
+//!   seed-summing idiom of the hetero-fleet tests damps per-seed noise).
+//!
+//! [`embed_template_config`]: autotvm::schedule::sketch::embed_template_config
+
+use autotvm::explore::{EvoParams, SaParams, SearchKind};
+use autotvm::expr::ops;
+use autotvm::measure::SimMeasurer;
+use autotvm::schedule::sketch::embed_template_config;
+use autotvm::schedule::template::{Task, TemplateKind};
+use autotvm::sim::devices;
+use autotvm::tuner::{tune_gbt, TuneOptions};
+use autotvm::util::Rng;
+use autotvm::workloads;
+
+/// Assert the containment guarantee for one task pair: sampled template
+/// configs (plus the index-space corners) embed into the sketch space
+/// with bit-identical schedules, and the sketch space is strictly
+/// larger than the template's.
+fn assert_contains(tpl: Task, samples: usize, seed: u64) {
+    let skt = Task::with_sketches(tpl.def.clone(), tpl.template);
+    assert!(
+        skt.space.size() > tpl.space.size(),
+        "sketch space {} not strictly larger than template space {}",
+        skt.space.size(),
+        tpl.space.size()
+    );
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut configs: Vec<_> = (0..samples).map(|_| tpl.space.sample(&mut rng)).collect();
+    configs.push(tpl.space.entity(0));
+    configs.push(tpl.space.entity(tpl.space.size() - 1));
+    for e in &configs {
+        let emb = embed_template_config(&tpl, &skt, e);
+        assert_eq!(
+            skt.schedule(&emb),
+            tpl.schedule(e),
+            "embedded schedule differs for template config {e:?}"
+        );
+    }
+}
+
+#[test]
+fn sketch_contains_template_conv2d() {
+    for t in [TemplateKind::Gpu, TemplateKind::Cpu] {
+        assert_contains(workloads::conv_task(6, t), 50, 0xC6);
+    }
+}
+
+#[test]
+fn sketch_contains_template_matmul() {
+    for t in [TemplateKind::Gpu, TemplateKind::Cpu] {
+        assert_contains(Task::new(ops::matmul(128, 128, 128), t), 50, 0x88);
+    }
+}
+
+/// One tuning run at a fixed measurement budget; only the exploration
+/// strategy differs between the SA and evo arms.
+fn run(search: SearchKind, seed: u64) -> f64 {
+    let task = Task::new(ops::matmul(128, 128, 128), TemplateKind::Gpu);
+    let m = SimMeasurer::with_seed(devices::sim_gpu(), seed);
+    let o = TuneOptions {
+        n_trials: 96,
+        batch: 16,
+        seed,
+        search,
+        sa: SaParams { n_chains: 16, n_steps: 40, ..Default::default() },
+        evo: EvoParams { population: 64, generations: 20, ..Default::default() },
+        ..Default::default()
+    };
+    let res = tune_gbt(task, &m, o);
+    assert_eq!(res.curve.len(), 96);
+    res.best_gflops()
+}
+
+#[test]
+fn evo_matches_or_beats_sa_at_equal_trial_budget() {
+    let mut sa_sum = 0.0;
+    let mut evo_sum = 0.0;
+    for seed in [11u64, 23, 37] {
+        sa_sum += run(SearchKind::Sa, seed);
+        evo_sum += run(SearchKind::Evo, seed);
+    }
+    assert!(sa_sum > 0.0 && evo_sum > 0.0);
+    assert!(
+        evo_sum >= sa_sum - 1e-9,
+        "evolutionary refiner ({evo_sum:.2} summed GFLOPS) lost to SA ({sa_sum:.2})"
+    );
+}
